@@ -1,0 +1,141 @@
+"""Ablation — calibrated PerfDatabase vs pure speed-of-light roofline.
+
+The paper's §6 differentiation from Vidur/APEX: "these rely on analytical
+roofline models ... AIConfigurator differs through its data-driven
+foundation".  What we can and cannot adjudicate without silicon:
+
+1. **SoL consistency check** — our SoL fallback agrees with the
+   roofline of the compiled dry-run artifacts to ~1% (it must: both are
+   max(flops/peak, bytes/bw) over the same program).  The calibrated
+   estimates sit a median 1.5-1.6x ABOVE that floor: that margin (launch
+   overheads, sub-peak utilization, efficiency curves) is precisely the
+   quantity only real profiling can validate — i.e. the stake of the
+   paper's data-driven claim, quantified.  The real-silicon benchmark
+   (cpu_silicon_fidelity) independently finds measured wall-clock sits
+   1.5-2x above SoL-grade estimates, consistent with the margin.
+
+2. **End-to-end TPOT vs the step-accurate simulator** — the simulator
+   runs on the calibrated DB, so this slice isolates Algorithm 2's
+   *scheduling* error in aggressive regimes (large concurrency); SoL's
+   systematic optimism can even cancel scheduling pessimism here, which
+   is why per-operator fidelity and scheduling fidelity must be measured
+   separately (as the paper does: Fig. 6 per-request metrics vs Table 1
+   per-step database).
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+
+from benchmarks.common import mape, sim_latency_fn, write_csv
+from repro.core import ClusterSpec, PerfDatabase, SLA, WorkloadDescriptor
+from repro.core.config import CandidateConfig, ParallelismConfig, RuntimeFlags
+from repro.core.session import InferenceSession
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.sim import ServingSimulator, StepSpec
+
+DRYRUN = os.environ.get("REPRO_DRYRUN", "results/dryrun.jsonl")
+
+DECODE_ARCHS = ["qwen3-14b", "qwen2-7b", "internlm2-1.8b",
+                "qwen3-moe-30b-a3b", "mixtral-8x22b", "h2o-danube-3-4b"]
+
+
+def _hlo_floor_ms(rec) -> float:
+    PEAK, HBM, ICI = 197e12, 819e9, 100e9
+    from benchmarks.roofline import operator_bytes_per_chip
+    t_c = rec["flops_corrected"] / PEAK
+    t_m = operator_bytes_per_chip(rec["arch"], rec["shape"], rec["mesh"]) / HBM
+    return 1e3 * max(t_c, t_m)
+
+
+def run(quick: bool = False):
+    rows = []
+    out = {}
+    # ---- part 1: per-step vs compiled HLO floor ------------------------
+    if os.path.exists(DRYRUN):
+        recs = {}
+        for line in open(DRYRUN):
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+        db_cal = PerfDatabase("tpu_v5e", "repro-jax")
+        db_sol = PerfDatabase("tpu_v5e", "repro-jax", use_grid=False)
+        ratios_cal, ratios_sol = [], []
+        for arch in (DECODE_ARCHS[:2] if quick else DECODE_ARCHS):
+            rec = recs.get((arch, "decode_32k", "16x16"))
+            if not rec or not rec.get("ok"):
+                continue
+            w = WorkloadDescriptor(
+                model=arch, isl=32768, osl=1, sla=SLA(ttft_ms=1e9),
+                cluster=ClusterSpec(n_chips=16), backend="repro-jax",
+                dtype="bf16")
+            par = ParallelismConfig(tp=16)
+            flags = RuntimeFlags()
+            spec = StepSpec(prefill=(), decode=(32768,) * 8)  # per-chip rows
+            t_cal = InferenceSession(w, db_cal).spec_latency_ms(par, spec,
+                                                                flags)
+            t_sol = InferenceSession(w, db_sol).spec_latency_ms(par, spec,
+                                                                flags)
+            floor = _hlo_floor_ms(rec)
+            ratios_cal.append(t_cal / floor)
+            ratios_sol.append(t_sol / floor)
+            rows.append(["step_vs_hlo", arch, f"{t_cal:.2f}", f"{t_sol:.2f}",
+                         f"{floor:.2f}"])
+        med_cal = statistics.median(ratios_cal)
+        med_sol = statistics.median(ratios_sol)
+        out.update(step_ratio_calibrated=med_cal, step_ratio_sol=med_sol)
+        print(f"  per-step estimate / compiled-artifact roofline floor "
+              f"(median over {len(ratios_cal)} decode archs):")
+        print(f"    pure SoL {med_sol:.2f}x (consistency check: ~1.0 by "
+              f"construction)")
+        print(f"    calibrated {med_cal:.2f}x — the margin above the floor "
+              f"is the efficiency/overhead model, the exact quantity the "
+              f"paper's silicon profiling exists to pin down")
+
+    # ---- part 2: end-to-end TPOT vs simulator --------------------------
+    db_cal = PerfDatabase("tpu_v5e", "repro-jax")
+    db_sol = PerfDatabase("tpu_v5e", "repro-jax", use_grid=False)
+    preds = {"calibrated": [], "sol": []}
+    trues = []
+    for isl, osl, conc in ([(512, 128, 16)] if quick
+                           else [(512, 128, 16), (2048, 128, 64),
+                                 (4096, 512, 32)]):
+        w = WorkloadDescriptor(model="qwen3-32b", isl=isl, osl=osl,
+                               sla=SLA(ttft_ms=1e9),
+                               cluster=ClusterSpec(n_chips=8),
+                               backend="repro-jax", dtype="fp8")
+        par = ParallelismConfig(tp=8)
+        flags = RuntimeFlags()
+        cand = CandidateConfig(parallel=par, batch_size=conc, flags=flags)
+        s_cal = InferenceSession(w, db_cal)
+        p_cal = s_cal.evaluate_aggregated(cand)
+        p_sol = InferenceSession(w, db_sol).evaluate_aggregated(cand)
+        if p_cal is None or p_sol is None:
+            continue
+        sim = ServingSimulator(
+            SchedulerConfig(max_batch=conc,
+                            max_num_tokens=flags.max_num_tokens),
+            sim_latency_fn(s_cal, par, flags))
+        m = sim.run(isl=isl, osl=osl, concurrency=conc,
+                    max_requests=max(12, conc), warmup=4)
+        preds["calibrated"].append(p_cal.tpot_ms)
+        preds["sol"].append(p_sol.tpot_ms)
+        trues.append(m.tpot_ms)
+        rows.append(["tpot_vs_sim", f"{isl}/{osl}/{conc}",
+                     f"{p_cal.tpot_ms:.3f}", f"{p_sol.tpot_ms:.3f}",
+                     f"{m.tpot_ms:.3f}"])
+    out.update(calibrated_mape=mape(preds["calibrated"], trues),
+               sol_mape=mape(preds["sol"], trues))
+    print(f"  end-to-end TPOT MAPE vs simulator (scheduling-error slice, "
+          f"aggressive regimes): calibrated {out['calibrated_mape']:.1f}% / "
+          f"SoL {out['sol_mape']:.1f}% — SoL's optimism partially cancels "
+          f"Alg-2 pessimism here; per-operator and scheduling fidelity must "
+          f"be validated separately")
+    out["csv"] = write_csv("ablation_sol.csv",
+                           ["part", "case", "calibrated", "sol", "reference"],
+                           rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

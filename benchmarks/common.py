@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: CSV emission, MAPE, simulator adapters."""
+from __future__ import annotations
+
+import csv
+import os
+import statistics
+import time
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+def mape(pred: Sequence[float], true: Sequence[float]) -> float:
+    pairs = [(p, t) for p, t in zip(pred, true) if t > 0]
+    if not pairs:
+        return float("nan")
+    return 100.0 * statistics.mean(abs(p - t) / t for p, t in pairs)
+
+
+def pearson(a: Sequence[float], b: Sequence[float]) -> float:
+    a, b = np.asarray(a, float), np.asarray(b, float)
+    if len(a) < 2 or a.std() == 0 or b.std() == 0:
+        return float("nan")
+    return float(np.corrcoef(a, b)[0, 1])
+
+
+def sim_latency_fn(session, par, flags):
+    """StepSpec -> seconds latency callback for the discrete-event simulator
+    (ground truth shares the operator DB; it differs in *scheduling*)."""
+    def fn(spec):
+        return session.spec_latency_ms(par, spec, flags) / 1e3
+    return fn
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,104 @@
+"""Fig. 6 — aggregated-serving prediction fidelity.
+
+Sweeps the paper's §5.1 grid (ISL 128–4096, OSL 128–512, concurrency
+4–128, TP 1–8) for Qwen3-32B (dense, fp8) and Qwen3-235B (MoE, fp8) on the
+repro-jax backend plus Qwen3-32B on the vllm backend, predicting TPOT/TTFT
+with Algorithm 2 and validating against the step-accurate discrete-event
+simulator (the silicon stand-in).  Reports MAPE + Pearson r per
+(model, metric), mirroring the paper's panels.
+"""
+from __future__ import annotations
+
+from benchmarks.common import mape, pearson, sim_latency_fn, write_csv
+from repro.core import ClusterSpec, PerfDatabase, SLA, WorkloadDescriptor
+from repro.core.config import CandidateConfig, ParallelismConfig, RuntimeFlags
+from repro.core.session import InferenceSession
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.sim import ServingSimulator
+
+PANELS = [
+    ("qwen3-32b", "repro-jax", "fp8"),
+    ("qwen3-235b", "repro-jax", "fp8"),
+    ("qwen3-32b", "vllm", "fp8"),
+]
+
+ISLS = (128, 512, 2048, 4096)
+OSLS = (128, 512)
+CONCURRENCY = (4, 16, 64, 128)
+TPS = (4, 8, 16)
+
+
+def run(quick: bool = False):
+    isls = ISLS[:2] if quick else ISLS
+    oslr = OSLS[:1] if quick else OSLS
+    concs = CONCURRENCY[:2] if quick else CONCURRENCY
+    tps = TPS[:2] if quick else TPS
+
+    rows, summary = [], []
+    for model, backend, dtype in (PANELS[:1] if quick else PANELS):
+        db = PerfDatabase("tpu_v5e", backend)
+        preds_tpot, trues_tpot, preds_ttft, trues_ttft = [], [], [], []
+        n_cfg = 0
+        for tp in tps:
+            w = WorkloadDescriptor(
+                model=model, isl=max(isls), osl=max(oslr),
+                sla=SLA(ttft_ms=1e9), cluster=ClusterSpec(n_chips=tp),
+                backend=backend, dtype=dtype)
+            session = InferenceSession(w, db)
+            par = ParallelismConfig(tp=tp)
+            flags = RuntimeFlags()
+            for isl in isls:
+                for osl in oslr:
+                    for conc in concs:
+                        w2 = WorkloadDescriptor(
+                            model=model, isl=isl, osl=osl,
+                            sla=SLA(ttft_ms=1e9),
+                            cluster=ClusterSpec(n_chips=tp),
+                            backend=backend, dtype=dtype)
+                        s2 = InferenceSession(w2, db)
+                        cand = CandidateConfig(parallel=par, batch_size=conc,
+                                               flags=flags)
+                        proj = s2.evaluate_aggregated(cand)
+                        if proj is None:
+                            continue            # doesn't fit HBM
+                        sim = ServingSimulator(
+                            SchedulerConfig(max_batch=conc,
+                                            max_num_tokens=flags.max_num_tokens),
+                            sim_latency_fn(s2, par, flags))
+                        m = sim.run(isl=isl, osl=osl, concurrency=conc,
+                                    max_requests=max(2 * conc, 12),
+                                    warmup=max(conc // 2, 2))
+                        if m.tpot_ms <= 0:
+                            continue
+                        n_cfg += 1
+                        preds_tpot.append(proj.tpot_ms)
+                        trues_tpot.append(m.tpot_ms)
+                        # paper filters TTFT > 1000ms as pathological queuing
+                        if m.ttft_ms <= 1000.0:
+                            preds_ttft.append(proj.ttft_ms)
+                            trues_ttft.append(m.ttft_ms)
+                        rows.append([model, backend, tp, isl, osl, conc,
+                                     f"{proj.tpot_ms:.3f}", f"{m.tpot_ms:.3f}",
+                                     f"{proj.ttft_ms:.1f}", f"{m.ttft_ms:.1f}"])
+        mt = mape(preds_tpot, trues_tpot)
+        rt = pearson(preds_tpot, trues_tpot)
+        mf = mape(preds_ttft, trues_ttft)
+        rf = pearson(preds_ttft, trues_ttft)
+        summary.append([model, backend, n_cfg, f"{mt:.1f}", f"{rt:.3f}",
+                        f"{mf:.1f}", f"{rf:.3f}"])
+        print(f"  {model}/{backend}: {n_cfg} cfgs  "
+              f"TPOT MAPE {mt:.1f}% (r={rt:.2f})  "
+              f"TTFT MAPE {mf:.1f}% (r={rf:.2f})")
+
+    write_csv("fig6_fidelity_points.csv",
+              ["model", "backend", "tp", "isl", "osl", "concurrency",
+               "tpot_pred_ms", "tpot_true_ms", "ttft_pred_ms", "ttft_true_ms"],
+              rows)
+    path = write_csv("fig6_fidelity_summary.csv",
+                     ["model", "backend", "n_configs", "tpot_mape_pct",
+                      "tpot_r", "ttft_mape_pct", "ttft_r"], summary)
+    return {"csv": path, "summary": summary}
+
+
+if __name__ == "__main__":
+    run()

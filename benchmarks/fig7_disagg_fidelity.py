@@ -1,0 +1,191 @@
+"""Fig. 7 — disaggregated-serving prediction fidelity (DeepSeek-V3).
+
+The configurator's Algorithm 3 projections (rate-matched (x)P(y)D with
+α/β correction constants) are validated against a step-accurate two-pool
+discrete-event simulation: prefill workers batch-prefill from a queue,
+finished prefills transfer KV (P2P cost from the operator DB) and wait for
+decode slots; decode workers step token by token.  Queueing, transfer and
+tail effects that Algorithm 3 folds into constants emerge naturally — the
+MAPE between the two reproduces the paper's Fig. 7 methodology.
+
+Adaptation: DeepSeek-V3 fp8 weights (~671 GB) need >=64 v5e chips (16 GiB
+HBM each); the paper's 2x8 H100 node pair is replaced by a 128-chip slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List
+
+from benchmarks.common import mape, pearson, write_csv
+from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
+                        WorkloadDescriptor)
+from repro.core import operators as ops
+from repro.core.config import RuntimeFlags
+from repro.core.modes import DisaggBest
+from repro.core.session import InferenceSession
+from repro.serving.sim import StepSpec
+
+
+def simulate_disagg(session: InferenceSession, d: DisaggBest, isl: int,
+                    osl: int, n_requests: int = 48) -> dict:
+    """Event-driven two-pool ground truth."""
+    flags = RuntimeFlags()
+    pre_par = d.prefill.config.parallel
+    dec_par = d.decode.config.parallel
+    b_pre = d.prefill.config.batch_size
+    b_dec = d.decode.config.batch_size
+
+    t_prefill = session.spec_latency_ms(
+        pre_par, StepSpec(prefill=tuple((isl, 0) for _ in range(b_pre)),
+                          decode=()), flags) / 1e3
+    # KV transfer: full cache for one request over the interconnect
+    cfg = session.cfg
+    kv_bytes = (cfg.num_layers * 2 * isl * 576 * 1
+                if cfg.attention_kind == "mla" else
+                cfg.num_layers * 2 * isl * cfg.num_kv_heads * cfg.head_dim)
+    t_xfer = session.db.op_latency(
+        ops.Comm("p2p", float(kv_bytes), 2, inter_pod=True))
+
+    def t_decode_step(n_active: int, kv_len: int) -> float:
+        return session.spec_latency_ms(
+            dec_par, StepSpec(prefill=(),
+                              decode=(kv_len,) * max(n_active, 1)),
+            flags) / 1e3
+
+    # events: prefill workers cycle batches; decode pool steps continuously
+    queue_ready: List[float] = []     # times KV arrives at decode pool
+    t = 0.0
+    done_batches = 0
+    per_worker_next = [0.0] * d.x
+    produced = 0
+    while produced < n_requests:
+        w = min(range(d.x), key=lambda i: per_worker_next[i])
+        start = per_worker_next[w]
+        finish = start + t_prefill
+        per_worker_next[w] = finish
+        for _ in range(min(b_pre, n_requests - produced)):
+            queue_ready.append(finish + t_xfer)
+            produced += 1
+    queue_ready.sort()
+
+    # decode pool: y workers, each with b_dec slots, synchronized steps
+    slots = d.y * b_dec
+    ttfts, finish_times = [], []
+    active: List[int] = []            # remaining tokens per active request
+    waiting = list(queue_ready)
+    t = waiting[0] if waiting else 0.0
+    gen_total = 0
+    tpot_samples = []
+    while waiting or active:
+        while waiting and waiting[0] <= t and len(active) < slots:
+            ttfts.append(waiting.pop(0))
+            active.append(osl - 1)
+        if not active:
+            t = waiting[0]
+            continue
+        # step-accurate KV growth: mean generated so far across active rows
+        mean_gen = osl - sum(active) / len(active)
+        dt = t_decode_step(len(active), isl + int(mean_gen))
+        t += dt
+        gen_total += len(active)
+        if len(active) >= min(slots, n_requests) // 2:
+            tpot_samples.append(dt)     # steady-state region
+        active = [r - 1 for r in active if r > 1]
+    total_tokens = n_requests * osl
+    wall = t - (queue_ready[0] - t_prefill - t_xfer if queue_ready else 0.0)
+    sys_thru = total_tokens / max(wall, 1e-9)
+    mean_tpot = (sum(tpot_samples) / len(tpot_samples)) if tpot_samples \
+        else t_decode_step(min(slots, n_requests), isl + osl // 2)
+    speed = 1.0 / max(mean_tpot, 1e-9)
+    return {"throughput_tok_s": sys_thru,
+            "tok_s_per_chip": sys_thru / d.total_chips,
+            "speed_tok_s_user": speed,
+            "ttft_s": (ttfts[0] - 0.0) if ttfts else 0.0}
+
+
+def run(quick: bool = False):
+    db = PerfDatabase("tpu_v5e", "trtllm")
+    rows = []
+    preds_t, trues_t, preds_s, trues_s = [], [], [], []
+    for isl in ((5000,) if quick else (5000, 6000)):
+        w = WorkloadDescriptor(
+            model="deepseek-v3", isl=isl, osl=1000,
+            sla=SLA(ttft_ms=5000.0),
+            cluster=ClusterSpec(n_chips=128), backend="trtllm", dtype="fp8",
+            modes=("disaggregated",))
+        res = TaskRunner(w, db).run(keep_all_disagg=True)
+        session = InferenceSession(w, db)
+        # validate the Pareto-optimal configs (paper: each frontier point)
+        cands = sorted({(d.x, d.y, id(d)): d for d in
+                        ([res.disagg_best] if res.disagg_best else [])
+                        }.values(), key=lambda d: -d.tokens_per_s_per_chip)
+        extra = [p for p in res.projections if p.mode == "disaggregated"]
+        seen = set()
+        frontier = []
+        for d in ([res.disagg_best] if res.disagg_best else []):
+            frontier.append(d)
+        # sample more configs from the kept composite list via projections
+        for d in frontier + _sample_composites(res, 6 if quick else 12):
+            key = (d.x, d.y, d.prefill.config.describe(),
+                   d.decode.config.describe())
+            if key in seen:
+                continue
+            seen.add(key)
+            gt = simulate_disagg(session, d, isl, 1000,
+                                 n_requests=16 if quick else 48)
+            pred_thru = d.tokens_per_s_per_chip
+            pred_speed = 1000.0 / d.tpot_ms
+            preds_t.append(pred_thru)
+            trues_t.append(gt["tok_s_per_chip"])
+            preds_s.append(pred_speed)
+            trues_s.append(gt["speed_tok_s_user"])
+            rows.append([isl, f"{d.x}P{d.y}D",
+                         d.prefill.config.describe(),
+                         d.decode.config.describe(),
+                         f"{pred_thru:.1f}", f"{gt['tok_s_per_chip']:.1f}",
+                         f"{pred_speed:.1f}",
+                         f"{gt['speed_tok_s_user']:.1f}"])
+    m_t, m_s = mape(preds_t, trues_t), mape(preds_s, trues_s)
+    print(f"  disagg fidelity: throughput MAPE {m_t:.1f}% "
+          f"(paper 25.5%), speed MAPE {m_s:.1f}% (paper 14.9%), "
+          f"n={len(rows)}")
+    path = write_csv("fig7_disagg_fidelity.csv",
+                     ["isl", "xPyD", "prefill_cfg", "decode_cfg",
+                      "thru_pred", "thru_true", "speed_pred", "speed_true"],
+                     rows)
+    return {"csv": path, "thru_mape": m_t, "speed_mape": m_s}
+
+
+def _sample_composites(res, k):
+    """Rebuild a few DisaggBest records from kept projections."""
+    from repro.core import modes as md
+    out = []
+    for p in res.projections:
+        if p.mode != "disaggregated" or len(out) >= k:
+            continue
+        pre, dec = p.config.get("prefill"), p.config.get("decode")
+        if not pre or not dec:
+            continue
+        from repro.core.config import CandidateConfig, ParallelismConfig
+        pre_c = CandidateConfig(
+            parallel=ParallelismConfig(**{k2: pre["parallel"][k2]
+                                          for k2 in ("tp", "pp", "ep", "dp")}),
+            batch_size=pre["batch"])
+        dec_c = CandidateConfig(
+            parallel=ParallelismConfig(**{k2: dec["parallel"][k2]
+                                          for k2 in ("tp", "pp", "ep", "dp")}),
+            batch_size=dec["batch"])
+        out.append(md.DisaggBest(
+            prefill=md.PoolCandidate(pre_c, pre_c.parallel.chips_per_instance,
+                                     0.0, 0.0),
+            decode=md.PoolCandidate(dec_c, dec_c.parallel.chips_per_instance,
+                                    p.tpot_ms, 0.0),
+            x=pre["x"], y=dec["y"], ttft_ms=p.ttft_ms, tpot_ms=p.tpot_ms,
+            total_chips=p.chips, req_per_s=0.0,
+            tokens_per_s_per_chip=p.tokens_per_s_per_chip))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # full
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized
+
+Prints one ``name,us_per_call,derived`` CSV line per benchmark and writes
+detailed CSVs under results/.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import (ablation_sol, cpu_silicon_fidelity,
+                        engine_calibration, fig1_pareto, fig5_powerlaw,
+                        fig6_fidelity, fig7_disagg_fidelity, roofline,
+                        spec_decode, table1_search_efficiency,
+                        table2_case_study)
+
+BENCHES = [
+    ("table1_search_efficiency", table1_search_efficiency.run,
+     lambda r: f"median_ms_per_config={r.get('per_config_ms', 0):.2f}"),
+    ("fig6_aggregated_fidelity", fig6_fidelity.run,
+     lambda r: ";".join(f"{s[0]}/{s[1]}:tpot_mape={s[3]}%"
+                        for s in r.get("summary", []))),
+    ("fig7_disagg_fidelity", fig7_disagg_fidelity.run,
+     lambda r: f"thru_mape={r.get('thru_mape', 0):.1f}%"
+               f";speed_mape={r.get('speed_mape', 0):.1f}%"),
+    ("fig1_pareto_qwen235b", fig1_pareto.run,
+     lambda r: f"disagg_gain={r.get('gain_pct', float('nan')):.1f}%"),
+    ("table2_case_study", table2_case_study.run,
+     lambda r: f"disagg_gain={r.get('gain_pct', float('nan')):.1f}%"),
+    ("fig5_powerlaw_alpha", fig5_powerlaw.run, lambda r: "see csv"),
+    ("roofline_from_dryrun", roofline.run,
+     lambda r: str(r.get("dominants", ""))),
+    ("engine_overhead_calibration", engine_calibration.run,
+     lambda r: f"overhead_us={r.get('overhead_us', 0):.0f}"),
+    ("spec_decode_extension", spec_decode.run,
+     lambda r: f"best_speedup={r.get('best_speedup', 0):.2f}x"),
+    ("cpu_silicon_fidelity", cpu_silicon_fidelity.run,
+     lambda r: f"tpot_mape={r.get('tpot_mape', 0):.1f}%"
+               f";ttft_mape={r.get('ttft_mape', 0):.1f}%"),
+    ("ablation_calibrated_vs_sol", ablation_sol.run,
+     lambda r: f"step_margin={r.get('step_ratio_calibrated', 0):.2f}x"
+               f";sol_check={r.get('step_ratio_sol', 0):.2f}x"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn, derive in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            print(f"# --- {name} ---", flush=True)
+            result = fn(quick=args.quick) or {}
+            us = 1e6 * (time.perf_counter() - t0)
+            print(f"{name},{us:.0f},{derive(result)}", flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            failures += 1
+            us = 1e6 * (time.perf_counter() - t0)
+            print(f"{name},{us:.0f},ERROR:{type(e).__name__}:{e}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

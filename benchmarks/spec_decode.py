@@ -1,0 +1,42 @@
+"""Beyond-paper: speculative-decoding design sweep (the paper's §7 future
+work).  Projects the draft-γ trade-off for qwen3-32b with a llama3.1-8b
+draft on 8 chips across acceptance rates."""
+from __future__ import annotations
+
+from benchmarks.common import write_csv
+from repro.core import ClusterSpec, PerfDatabase, SLA, WorkloadDescriptor
+from repro.core.config import ParallelismConfig
+from repro.core.speculative import SpeculativeEstimator
+
+
+def run(quick: bool = False):
+    w = WorkloadDescriptor(
+        model="qwen3-32b", isl=2048, osl=256,
+        sla=SLA(ttft_ms=5000), cluster=ClusterSpec(n_chips=8),
+        backend="repro-jax", dtype="fp8")
+    est = SpeculativeEstimator(w, draft_model="llama3.1-8b",
+                               db=PerfDatabase("tpu_v5e", "repro-jax"))
+    par = ParallelismConfig(tp=8)
+    rows = []
+    best_overall = None
+    for acc in ((0.8,) if quick else (0.5, 0.7, 0.8, 0.9)):
+        best, projs = est.best_gamma(par, batch=8, acceptance=acc)
+        for p in projs:
+            rows.append([acc, p.gamma, f"{p.tpot_ms:.3f}",
+                         f"{p.speedup_vs_autoregressive:.2f}",
+                         f"{p.accepted_per_round:.2f}"])
+        print(f"  acceptance {acc:.2f}: best gamma={best.gamma} "
+              f"speedup {best.speedup_vs_autoregressive:.2f}x "
+              f"({best.tokens_per_s_user:.0f} tok/s/user)")
+        if best_overall is None or (best.speedup_vs_autoregressive
+                                    > best_overall.speedup_vs_autoregressive):
+            best_overall = best
+    path = write_csv("spec_decode.csv",
+                     ["acceptance", "gamma", "tpot_ms", "speedup",
+                      "accepted_per_round"], rows)
+    return {"csv": path,
+            "best_speedup": best_overall.speedup_vs_autoregressive}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Aggregated vs disaggregated across workload shapes (Fig. 1-style sweep).
+
+    PYTHONPATH=src python examples/agg_vs_disagg_sweep.py
+
+Shows the paper's §2.2 point: disaggregation is NOT universally superior —
+the winner flips with ISL/OSL mix and generation-speed targets.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
+                        WorkloadDescriptor)
+
+SHAPES = [
+    (4000, 200, 60),     # prefill-heavy chat, strict speed
+    (4000, 2000, 20),    # long generations, relaxed speed
+    (512, 1024, 30),     # decode-heavy
+    (8000, 256, 40),     # document summarization
+]
+
+
+def main():
+    db = PerfDatabase("tpu_v5e", "repro-jax")
+    print(f"{'ISL':>6} {'OSL':>6} {'speed>=':>8} | "
+          f"{'best agg':>12} {'best disagg':>12} {'winner':>14}")
+    for isl, osl, speed in SHAPES:
+        w = WorkloadDescriptor(
+            model="qwen3-32b", isl=isl, osl=osl,
+            sla=SLA(ttft_ms=1500, min_tokens_per_s_user=speed),
+            cluster=ClusterSpec(n_chips=16), backend="repro-jax",
+            dtype="fp8")
+        res = TaskRunner(w, db).run()
+        best = {}
+        for mode in ("aggregated", "disaggregated"):
+            ok = [p for p in res.projections
+                  if p.mode == mode and p.meets(w.sla)]
+            best[mode] = max((p.tokens_per_s_per_chip for p in ok),
+                             default=float("nan"))
+        a, d = best["aggregated"], best["disaggregated"]
+        winner = "disaggregated" if d == d and d > a else "aggregated"
+        print(f"{isl:>6} {osl:>6} {speed:>8} | {a:>12.1f} {d:>12.1f} "
+              f"{winner:>14}")
+
+
+if __name__ == "__main__":
+    main()

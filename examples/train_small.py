@@ -1,0 +1,29 @@
+"""Train a reduced model end-to-end for a few hundred steps on CPU.
+
+    PYTHONPATH=src python examples/train_small.py --arch xlstm-350m --steps 200
+
+Uses the same train_step the production dry-run lowers on the 512-chip
+mesh — synthetic data pipeline, AdamW with warmup+cosine, checkpointing.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    sys.argv = ["train", "--arch", args.arch, "--steps", str(args.steps),
+                "--batch", "8", "--seq", "64", "--lr", "1e-3",
+                "--checkpoint", "results/example_ckpt.npz"]
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

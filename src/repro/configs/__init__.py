@@ -1,0 +1,66 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the exact assigned full-size config;
+``list_archs()`` enumerates the dry-run matrix archs (perf-model-only
+configs like the paper's eval models are excluded from the matrix).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES, ShardingRules
+
+_ARCH_MODULES = {
+    # assigned pool (dry-run matrix)
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "whisper-small": "repro.configs.whisper_small",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    # the paper's own evaluation models (perf-model benchmarks only)
+    "llama3.1-8b": "repro.configs.llama31_8b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "qwen3-235b": "repro.configs.qwen3_235b",
+    "deepseek-v3": "repro.configs.deepseek_v3",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.CONFIG
+
+
+def list_archs(include_perf_only: bool = False) -> List[str]:
+    out = []
+    for name in _ARCH_MODULES:
+        cfg = get_config(name)
+        if cfg.perf_model_only and not include_perf_only:
+            continue
+        out.append(name)
+    return out
+
+
+def dryrun_pairs() -> List[tuple]:
+    """The (arch, shape) dry-run matrix with the documented long_500k skips."""
+    pairs = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name, shape in INPUT_SHAPES.items():
+            if shape_name == "long_500k" and not cfg.sub_quadratic:
+                continue  # full-attention arch: skip per DESIGN.md §5
+            pairs.append((arch, shape_name))
+    return pairs
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "INPUT_SHAPES", "ShardingRules",
+    "get_config", "list_archs", "dryrun_pairs",
+]

@@ -1,0 +1,271 @@
+"""Shared architecture-config dataclasses.
+
+Every assigned architecture gets one ``<arch>.py`` in this package exporting
+``CONFIG`` (the exact full-size config from the assignment) built on
+:class:`ModelConfig`.  ``ModelConfig.reduced()`` derives the smoke-test
+variant (2 layers, d_model<=512, <=4 experts) used by CPU tests; the full
+configs are exercised only through the dry-run (ShapeDtypeStruct, no
+allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis -> mesh-axis mapping knobs (the hillclimb surface).
+
+    The dry-run/launch layer turns these into NamedShardings.  ``model``
+    here always refers to the mesh axis named 'model'; batch is sharded on
+    ('pod', 'data') when present.
+    """
+    # How to shard the MoE expert weights: 'expert' = expert-parallel on the
+    # model axis (requires num_experts % model_axis == 0), 'ffn' = tensor-
+    # parallel on the per-expert FFN dim, 'expert_ffn' = split model axis
+    # between both (requires both divisibility).
+    moe_mode: str = "expert"
+    # Shard attention heads on the model axis (megatron TP).
+    shard_heads: bool = True
+    # Shard vocab/embedding on the model axis.
+    shard_vocab: bool = True
+    # Shard the dense-FFN hidden dim on the model axis.
+    shard_ffn: bool = True
+    # Shard long-context decode KV cache sequence dim on the data axis
+    # (context-parallel decode for batch==1 shapes).
+    shard_kv_seq: bool = False
+    # Activation remat policy for training: 'none' | 'full' | 'dots'
+    remat: str = "full"
+    # Compute cross-entropy loss in vocab chunks of this size (0 = one shot).
+    loss_chunk: int = 0
+    # Gradient-accumulation microbatches per train step (1 = none).
+    microbatches: int = 1
+    # Pin decode-attention q/logits shardings to the KV-cache layout,
+    # eliminating GSPMD's involuntary per-step cache rematerialization
+    # (perf-iteration knob; see EXPERIMENTS.md §Perf).
+    decode_attn_pin: bool = False
+    # Blockwise (prefill/train) attention: shard the q-block row dim on the
+    # model axis with K/V model-replicated — removes the per-block partial-
+    # logit all-reduces GSPMD emits when head counts don't divide the axis.
+    blockwise_q_shard: bool = False
+    # ffn-TP MoE: keep the down-proj output D-sharded so the partial-sum
+    # combine lowers to reduce-scatter (half the all-reduce wire bytes).
+    moe_down_rs: bool = False
+    # On the 3-axis expert mesh: TP the per-expert FFN over the residual
+    # 'model' axis (True) or keep experts whole per device (False — trades
+    # MoE flops for zero partial-sum all-reduces).
+    moe_ffn_tp: bool = True
+    # Store the decode KV cache in int8 with per-(token, head) scales —
+    # halves the decode memory term (dense/vlm families).
+    kv_quant: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    source: str = ""                 # citation from the assignment
+
+    # ---- attention variants ----
+    qk_norm: bool = False            # qwen3-style per-head RMSNorm on q,k
+    qkv_bias: bool = False           # qwen2-style bias on qkv projections
+    sliding_window: int = 0          # 0 = full attention; else SWA width
+    swa_every: int = 1               # apply SWA on layers where i % swa_every != swa_full_idx
+    rope_theta: float = 1_000_000.0
+
+    # ---- MoE ----
+    num_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim (0 -> d_ff)
+    capacity_factor: float = 1.25    # GShard expert-capacity factor
+    n_shared_experts: int = 0        # DeepSeek-style always-on experts
+
+    # ---- hybrid (RG-LRU / Griffin) ----
+    block_pattern: Tuple[str, ...] = ()   # per-layer kinds, len == num_layers
+    lru_width: int = 0                    # RG-LRU recurrence width (0 -> d_model)
+    conv_width: int = 4
+    local_window: int = 2048              # local-attention window for hybrid
+
+    # ---- ssm (xLSTM) ----
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+
+    # ---- encoder-decoder (whisper) ----
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    num_source_positions: int = 1500      # whisper: 30s audio -> 1500 frames
+
+    # ---- vlm ----
+    mrope: bool = False
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    num_image_tokens: int = 256           # stub ViT patch-embedding count
+
+    # ---- misc ----
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    sharding: ShardingRules = dataclasses.field(default_factory=ShardingRules)
+
+    # Architectures that only exist for the perf-model benchmarks (the
+    # paper's own eval models); they are not part of the dry-run matrix.
+    perf_model_only: bool = False
+    attention_kind: str = "gqa"           # mha | gqa | mla (perf DB operator kind)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_experts and self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.family == "hybrid" and not self.block_pattern:
+            # Griffin/RecurrentGemma pattern: (rec, rec, attn) repeating.
+            pat = []
+            for i in range(self.num_layers):
+                pat.append("attn" if i % 3 == 2 else "rec")
+            object.__setattr__(self, "block_pattern", tuple(pat))
+        if self.family == "ssm" and not self.block_pattern:
+            # xLSTM: alternate mLSTM / sLSTM blocks.
+            pat = tuple("m" if i % 2 == 0 else "s" for i in range(self.num_layers))
+            object.__setattr__(self, "block_pattern", pat)
+        if self.family == "hybrid" and self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+
+    # ------------------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff if self.num_experts else self.d_ff
+
+    def kv_cache_len(self, seq_len: int, layer_kind: str = "attn") -> int:
+        """Per-layer KV length a decode cache actually stores."""
+        if layer_kind == "rec" or self.family == "ssm":
+            return 0
+        win = self.local_window if self.family == "hybrid" else self.sliding_window
+        if win:
+            return min(seq_len, win)
+        return seq_len
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if long-context decode state is bounded (SWA/recurrent)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (for roofline MODEL_FLOPS)."""
+        d, hd = self.d_model, self.head_dim
+        attn = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) \
+            + (self.num_heads * hd) * d
+        if self.num_experts:
+            ffn = ((self.num_experts + self.n_shared_experts) * 3 * d
+                   * self.moe_d_ff + d * self.num_experts)
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn
+        if self.family == "hybrid":
+            # recurrent layers replace attention with LRU block (~4*d*lru).
+            n_attn = sum(1 for k in self.block_pattern if k == "attn")
+            n_rec = self.num_layers - n_attn
+            per_layer = 0
+            total = n_attn * (attn + ffn) + n_rec * (4 * d * self.lru_width + ffn)
+        elif self.family == "ssm":
+            up_m = int(self.d_model * self.mlstm_proj_factor)
+            m_blk = 2 * d * up_m + 3 * up_m * up_m // 4 + up_m * d
+            s_blk = 4 * d * d + int(2 * d * d * self.slstm_proj_factor)
+            n_m = sum(1 for k in self.block_pattern if k == "m")
+            total = n_m * m_blk + (self.num_layers - n_m) * s_blk
+        else:
+            total = self.num_layers * per_layer
+        if self.is_encoder_decoder:
+            total += self.encoder_layers * (2 * attn + ffn)  # self+cross enc approx
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return int(total + emb)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE uses top_k of num_experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        d = self.d_model
+        dense_part = self.param_count() - self.num_layers * 3 * d * self.moe_d_ff * self.num_experts
+        return int(dense_part + self.num_layers * 3 * d * self.moe_d_ff * self.top_k)
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: tiny but same family/topology knobs."""
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.num_heads, 4)
+        head_dim = min(self.head_dim, 64)
+        n_kv = max(1, min(self.num_kv_heads, n_heads))
+        n_layers = 4 if self.family in ("hybrid", "ssm") else 2
+        kw = dict(
+            name=self.name + "-reduced",
+            family=self.family,
+            num_layers=n_layers,
+            d_model=d_model,
+            num_heads=n_heads,
+            num_kv_heads=n_kv,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 1024),
+            head_dim=head_dim,
+            qk_norm=self.qk_norm,
+            qkv_bias=self.qkv_bias,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            rope_theta=self.rope_theta,
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            moe_d_ff=min(self.moe_d_ff, 128) if self.num_experts else 0,
+            # tiny random routers are heavily imbalanced; avoid drops so the
+            # smoke tests can assert decode == forward exactly
+            capacity_factor=8.0,
+            block_pattern=(),
+            lru_width=0,
+            local_window=16,
+            conv_width=self.conv_width,
+            is_encoder_decoder=self.is_encoder_decoder,
+            encoder_layers=2 if self.is_encoder_decoder else 0,
+            num_source_positions=8 if self.is_encoder_decoder else self.num_source_positions,
+            mrope=self.mrope,
+            mrope_sections=(8, 12, 12) if self.mrope else self.mrope_sections,
+            num_image_tokens=4 if self.family == "vlm" else self.num_image_tokens,
+            tie_embeddings=self.tie_embeddings,
+            norm_eps=self.norm_eps,
+            dtype="float32",
+            attention_kind=self.attention_kind,
+        )
+        return ModelConfig(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned (seq_len, global_batch) workload shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

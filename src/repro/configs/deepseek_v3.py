@@ -1,0 +1,25 @@
+"""DeepSeek-V3 — paper §5.2 disaggregated-fidelity model (671B MoE, MLA)
+[arXiv:2412.19437]. Perf-model-only: MLA enters the perf DB as its own
+attention-operator kind."""
+from repro.configs.base import ModelConfig, ShardingRules
+
+CONFIG = ModelConfig(
+    name="deepseek-v3",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,          # MLA: latent cache, kv head count nominal
+    d_ff=2048,
+    moe_d_ff=2048,
+    vocab_size=129_280,
+    head_dim=128,
+    rope_theta=10_000.0,
+    num_experts=256,
+    top_k=8,
+    n_shared_experts=1,
+    attention_kind="mla",
+    perf_model_only=True,
+    source="arXiv:2412.19437",
+    sharding=ShardingRules(moe_mode="expert"),
+)

@@ -1,0 +1,16 @@
+"""H2O-Danube-3-4B — dense, llama+mistral mix with SWA [arXiv:2401.16818]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    num_layers=24,
+    d_model=3840,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=10_240,
+    vocab_size=32_000,
+    sliding_window=4096,      # mistral-style SWA -> long_500k eligible
+    rope_theta=10_000.0,
+    source="arXiv:2401.16818",
+)

@@ -1,0 +1,17 @@
+"""Llama-3.1-8B — paper Table 1 search-efficiency model [arXiv:2407.21783].
+Perf-model-only: used by the configurator benchmarks, not the dry-run matrix."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.1-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    perf_model_only=True,
+    source="arXiv:2407.21783",
+)

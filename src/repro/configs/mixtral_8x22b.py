@@ -1,0 +1,24 @@
+"""Mixtral-8x22B — MoE 8 experts top-2, SWA [arXiv:2401.04088]."""
+from repro.configs.base import ModelConfig, ShardingRules
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16_384,
+    moe_d_ff=16_384,
+    vocab_size=32_768,
+    sliding_window=4096,      # per assignment -> long_500k eligible
+    rope_theta=1_000_000.0,
+    num_experts=8,
+    top_k=2,
+    source="arXiv:2401.04088",
+    # 8 experts cannot split over a 16-wide model axis -> TP the expert FFN
+    # dim as the baseline (hillclimb explores expert x ffn hybrid).
+    # 141B params + AdamW on 256 v5e chips is memory-tight: accumulate
+    # gradients over 4 microbatches to bound the dispatch transients.
+    sharding=ShardingRules(moe_mode="ffn", microbatches=4),
+)

@@ -1,0 +1,16 @@
+"""Qwen2-7B — dense GQA with QKV bias [arXiv:2407.10671]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18_944,
+    vocab_size=152_064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    source="arXiv:2407.10671",
+)

@@ -1,0 +1,21 @@
+"""Qwen2-VL-2B — VLM decoder with M-RoPE; ViT frontend is a STUB
+(input_specs provides precomputed patch embeddings) [arXiv:2409.12191]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151_936,
+    qkv_bias=True,
+    mrope=True,
+    mrope_sections=(16, 24, 24),   # t/h/w frequency sections (head_dim/2 = 64)
+    num_image_tokens=256,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="arXiv:2409.12191",
+)

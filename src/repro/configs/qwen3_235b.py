@@ -1,0 +1,23 @@
+"""Qwen3-235B-A22B — paper §5.1 MoE fidelity model (128 experts top-8)
+[hf:Qwen/Qwen3-235B-A22B]. Perf-model-only."""
+from repro.configs.base import ModelConfig, ShardingRules
+
+CONFIG = ModelConfig(
+    name="qwen3-235b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    d_ff=1536,
+    moe_d_ff=1536,
+    vocab_size=151_936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    num_experts=128,
+    top_k=8,
+    perf_model_only=True,
+    source="hf:Qwen/Qwen3-235B-A22B",
+    sharding=ShardingRules(moe_mode="expert"),
+)

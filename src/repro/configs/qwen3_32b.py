@@ -1,0 +1,19 @@
+"""Qwen3-32B — paper §5.1/§5.4 fidelity + case-study model [hf:Qwen/Qwen3-32B].
+Perf-model-only."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=25_600,
+    vocab_size=151_936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    perf_model_only=True,
+    source="hf:Qwen/Qwen3-32B",
+)

@@ -1,0 +1,22 @@
+"""Qwen3-30B-A3B — MoE, 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B]."""
+from repro.configs.base import ModelConfig, ShardingRules
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=768,                 # per-expert moe_intermediate_size
+    moe_d_ff=768,
+    vocab_size=151_936,
+    head_dim=128,             # Qwen3 MoE uses head_dim 128 (q_dim 4096 > d_model)
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    num_experts=128,
+    top_k=8,
+    source="hf:Qwen/Qwen3-30B-A3B",
+    # 128 experts % 16 model-axis == 0 -> expert-parallel baseline.
+    sharding=ShardingRules(moe_mode="expert"),
+)

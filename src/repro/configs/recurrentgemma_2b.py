@@ -1,0 +1,23 @@
+"""RecurrentGemma-2B — Griffin hybrid: RG-LRU + local attention, pattern
+(rec, rec, attn) [arXiv:2402.19427]."""
+from repro.configs.base import ModelConfig, ShardingRules
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,           # MQA on the local-attention layers
+    d_ff=7680,
+    vocab_size=256_000,
+    lru_width=2560,
+    conv_width=4,
+    local_window=2048,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    source="arXiv:2402.19427",
+    # 256k vocab: compute CE over sequence chunks to bound the fp32 logits;
+    # associative-scan states at B=256 x S=4096 need 2-way grad accumulation
+    sharding=ShardingRules(loss_chunk=512, microbatches=2),
+)

@@ -1,0 +1,23 @@
+"""Whisper-small — enc-dec audio; conv frontend is a STUB (input_specs
+provides precomputed frame embeddings) [arXiv:2212.04356]."""
+from repro.configs.base import ModelConfig, ShardingRules
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,            # decoder layers
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,          # MHA (kv=12)
+    d_ff=3072,
+    vocab_size=51_865,
+    rope_theta=10_000.0,      # (whisper uses learned abs pos; we use sinusoidal-equiv)
+    is_encoder_decoder=True,
+    encoder_layers=12,
+    num_source_positions=1500,
+    attention_kind="mha",
+    source="arXiv:2212.04356",
+    # enc(1500 frames) + dec(4k) at global batch 256 needs microbatching
+    # to fit v5e HBM at train_4k
+    sharding=ShardingRules(microbatches=4),
+)

@@ -1,0 +1,17 @@
+"""xLSTM-350M — sLSTM + mLSTM blocks, d_ff=0 (projections inside blocks)
+[arXiv:2405.04517]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    mlstm_proj_factor=2.0,
+    slstm_proj_factor=4.0 / 3.0,
+    source="arXiv:2405.04517",
+)

@@ -1,0 +1,28 @@
+"""AIConfigurator core — the paper's contribution.
+
+Public API:
+
+    from repro.core import (WorkloadDescriptor, SLA, ClusterSpec, TaskRunner,
+                            PerfDatabase, generate)
+
+    w = WorkloadDescriptor(model="qwen3-32b", isl=4000, osl=500,
+                           sla=SLA(ttft_ms=1200, min_tokens_per_s_user=60),
+                           cluster=ClusterSpec(n_chips=8))
+    result = TaskRunner(w).run()
+    launch = generate(w, result.best)
+"""
+from repro.core.config import (CandidateConfig, ClusterSpec, DisaggConfig,
+                               ParallelismConfig, Projection, RuntimeFlags,
+                               SLA, WorkloadDescriptor)
+from repro.core.generator import LaunchConfig, generate
+from repro.core.hardware import PLATFORMS, Platform, get_platform
+from repro.core.perf_database import PerfDatabase
+from repro.core.session import InferenceSession
+from repro.core.task_runner import SearchResult, TaskRunner
+
+__all__ = [
+    "CandidateConfig", "ClusterSpec", "DisaggConfig", "ParallelismConfig",
+    "Projection", "RuntimeFlags", "SLA", "WorkloadDescriptor",
+    "LaunchConfig", "generate", "PLATFORMS", "Platform", "get_platform",
+    "PerfDatabase", "InferenceSession", "SearchResult", "TaskRunner",
+]

@@ -1,0 +1,163 @@
+"""Analytical executor — the silicon stand-in behind the PerfDatabase.
+
+The paper fills its database by profiling kernels on real GPUs.  This
+container has no accelerator, so the "offline collection" step queries this
+executor instead: a calibrated-efficiency-curve model of TPU v5e-class
+hardware (MXU alignment effects, memory-bound small-M GEMMs, flash-attention
+utilization, ring-collective factors, per-launch overheads).  The
+PerfDatabase machinery on top (grids + interpolation + speed-of-light
+fallback) is exactly the paper's; only the data source differs — see
+DESIGN.md §2.
+
+``sol_latency`` is the *pure roofline* (no efficiency curves, no overhead):
+it is both the paper's fallback for unprofiled operators and our ablation
+baseline standing in for Vidur/APEX-style simulators.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core import operators as ops
+from repro.core.hardware import Platform
+
+# ---------------------------------------------------------------------------
+# Efficiency curves ("calibration")
+# ---------------------------------------------------------------------------
+
+MXU_TILE_N = 128      # lane tiling
+MXU_TILE_M = 8        # sublane tiling
+BASE_GEMM_EFF = 0.88
+FLASH_EFF = 0.52      # fused-attention MXU utilization (causal, fp32 softmax)
+DECODE_ATTN_BW_EFF = 0.85
+HBM_STREAM_EFF = 0.80
+GATHER_EFF = 0.55     # embedding/gather HBM efficiency
+VPU_FRACTION = 1 / 16  # elementwise throughput relative to MXU peak
+
+
+def _align_eff(dim: int, tile: int) -> float:
+    padded = math.ceil(dim / tile) * tile
+    return dim / padded
+
+
+def gemm_eff(m: int, n: int, k: int, tile_m: int = MXU_TILE_M,
+             tile_n: int = MXU_TILE_N) -> float:
+    eff = BASE_GEMM_EFF
+    eff *= _align_eff(max(m, 1), tile_m)
+    eff *= _align_eff(max(n, 1), tile_n)
+    eff *= _align_eff(max(k, 1), tile_n)
+    # very skinny K or N can't keep the compute units busy (scaled to tile)
+    skinny = 4.0 * tile_n
+    eff *= min(1.0, (k / skinny) ** 0.25, (n / skinny) ** 0.25)
+    return max(eff, 0.02)
+
+
+# ---------------------------------------------------------------------------
+# Per-operator latency
+# ---------------------------------------------------------------------------
+
+def _gemm(p: Platform, g: ops.GEMM) -> float:
+    peak = p.matmul_peak(g.dtype)
+    t_c = g.flops() / (peak * gemm_eff(g.m, g.n, g.k, p.tile_m, p.tile_n))
+    t_m = g.bytes() / (p.hbm_bw * HBM_STREAM_EFF)
+    return max(t_c, t_m) + p.launch_overhead
+
+
+def _attention(p: Platform, a: ops.Attention) -> float:
+    if a.phase == "prefill":
+        eff = FLASH_EFF * _align_eff(a.head_dim, MXU_TILE_N)
+        t_c = a.flops() / (p.peak_flops_bf16 * eff)
+        t_m = a.bytes() / (p.hbm_bw * HBM_STREAM_EFF)
+        return max(t_c, t_m) + 2 * p.launch_overhead
+    # decode: stream the KV cache
+    t_m = a.bytes() / (p.hbm_bw * DECODE_ATTN_BW_EFF)
+    t_c = a.flops() / (p.peak_flops_bf16 * 0.35)   # skinny matmuls
+    extra = 2 * p.launch_overhead
+    if a.kind == "mla":
+        # latent decompression matmuls
+        t_c *= 1.6
+        extra += p.launch_overhead
+    return max(t_m, t_c) + extra
+
+
+def _moe(p: Platform, m: ops.MoEOp) -> float:
+    toks = max(m.rank_tokens(), 1.0)
+    g = ops.GEMM(m=int(toks), n=m.d_ff, k=m.d_model, dtype=m.dtype)
+    peak = p.matmul_peak(m.dtype)
+    t_c = 3 * g.flops() / (peak * gemm_eff(g.m, g.n, g.k, p.tile_m, p.tile_n))
+    t_m = m.bytes() / (p.hbm_bw * HBM_STREAM_EFF)
+    # dispatch/scatter bookkeeping
+    return max(t_c, t_m) + 3 * p.launch_overhead
+
+
+def _recurrent(p: Platform, r: ops.RecurrentOp) -> float:
+    t_c = r.flops() / (p.peak_flops_bf16 * VPU_FRACTION)
+    t_m = r.bytes() / (p.hbm_bw * 0.7)
+    return max(t_c, t_m) + p.launch_overhead
+
+
+def _comm(p: Platform, c: ops.Comm) -> float:
+    n = max(c.n_chips, 1)
+    if n <= 1:
+        return 0.0
+    axis_bw = (p.inter_pod_bw if c.inter_pod
+               else p.link_bw * p.links_per_axis)
+    b = c.bytes_per_chip
+    if c.kind == "all_reduce":
+        vol = 2.0 * (n - 1) / n * b
+        hops = 2 * (n - 1)
+    elif c.kind in ("all_gather", "reduce_scatter"):
+        vol = (n - 1) / n * b
+        hops = n - 1
+    elif c.kind == "all_to_all":
+        # torus all-to-all: each chip exchanges b*(n-1)/n, average n/4 hops
+        # of path sharing on a ring halves the effective bandwidth
+        vol = (n - 1) / n * b * max(n / 8.0, 1.0)
+        hops = n // 2
+    elif c.kind == "p2p":
+        vol = b
+        hops = 1
+    else:
+        raise ValueError(c.kind)
+    return vol / axis_bw + hops * p.hop_latency
+
+
+def _embedding(p: Platform, e: ops.Embedding) -> float:
+    return e.bytes() / (p.hbm_bw * GATHER_EFF) + p.launch_overhead
+
+
+def _mem(p: Platform, m: ops.MemOp) -> float:
+    return m.nbytes / (p.hbm_bw * HBM_STREAM_EFF) + p.launch_overhead
+
+
+_DISPATCH = {
+    ops.GEMM: _gemm,
+    ops.Attention: _attention,
+    ops.MoEOp: _moe,
+    ops.RecurrentOp: _recurrent,
+    ops.Comm: _comm,
+    ops.Embedding: _embedding,
+    ops.MemOp: _mem,
+}
+
+
+def latency(platform: Platform, op) -> float:
+    """Calibrated latency estimate (the profiling stand-in)."""
+    return _DISPATCH[type(op)](platform, op)
+
+
+def sol_latency(platform: Platform, op) -> float:
+    """Pure speed-of-light roofline: max(flops/peak, bytes/bw), no
+    efficiency curves, no launch overhead.  Fallback + ablation baseline."""
+    if isinstance(op, ops.Comm):
+        n = max(op.n_chips, 1)
+        if n <= 1:
+            return 0.0
+        bw = (platform.inter_pod_bw if op.inter_pod
+              else platform.link_bw * platform.links_per_axis)
+        return op.bytes_per_chip / bw
+    peak = platform.peak_flops_bf16
+    if hasattr(op, "dtype"):
+        peak = platform.matmul_peak(getattr(op, "dtype"))
+    t_c = op.flops() / peak
+    t_m = op.bytes() / platform.hbm_bw
+    return max(t_c, t_m)

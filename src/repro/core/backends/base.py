@@ -1,0 +1,63 @@
+"""Backend abstraction (§4: "unified backend abstraction").
+
+Each backend contributes: scheduling-overhead constants (the
+framework-specific dynamics the paper insists generic models miss), default
+runtime-flag values, memory-overhead factors, flag vocabulary for the
+Generator, and its EP collective pattern (consumed by decompose via the
+backend name).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendProfile:
+    name: str
+    # host/scheduler overhead added to every iteration (s)
+    step_overhead: float
+    # extra per prefill chunk scheduled in an iteration (s)
+    chunk_overhead: float
+    # fraction of HBM reserved by the runtime itself
+    runtime_mem_overhead: float
+    # default per-iteration token capacity
+    default_max_num_tokens: int
+    # graph-capture analogue removes this much of step_overhead for decode
+    graph_capture_saving: float
+    # base of the paper's piecewise-linear TTFT correction F_corr
+    # (= min(base + (T_ctx - 3)/20, 4)); empirical per framework (§4.2.2)
+    f_corr_base: float = 2.0
+    # engine runs each prompt's prefill as a SEPARATE kernel launch instead
+    # of batching context tokens into one iteration (repro-jax engine on
+    # CPU does; TRT-LLM-style engines don't) — prices chunks sequentially
+    sequential_prefill: bool = False
+    # flag vocabulary: canonical knob -> backend flag string
+    flags: Dict[str, str] = dataclasses.field(default_factory=dict)
+    launcher: str = "custom"
+
+    def iteration_overhead(self, n_chunks: int, decode_rows: int,
+                           graph_capture: bool) -> float:
+        ov = self.step_overhead + n_chunks * self.chunk_overhead
+        if graph_capture and decode_rows and not n_chunks:
+            ov -= self.graph_capture_saving * self.step_overhead
+        return max(ov, 1e-6)
+
+
+_REGISTRY: Dict[str, BackendProfile] = {}
+
+
+def register(profile: BackendProfile) -> BackendProfile:
+    _REGISTRY[profile.name] = profile
+    return profile
+
+
+def get_backend(name: str) -> BackendProfile:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; known: {sorted(_REGISTRY)}")
+
+
+def all_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,101 @@
+"""AIConfigurator command-line interface — the paper's user workflow
+(Fig. 2) as one command:
+
+    PYTHONPATH=src python -m repro.core.cli \\
+        --model qwen3-32b --isl 4000 --osl 500 \\
+        --ttft 1200 --min-speed 60 --chips 16 --dtype fp8 \\
+        --backend repro-jax --save-launch launch.json
+
+Prints the Pareto frontier and the top configurations, emits the launch
+artifact for the chosen backend, and (optionally) the speculative-decoding
+projection when a draft model is supplied.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.configs import list_archs
+from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
+                        WorkloadDescriptor, generate)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="repro.core.cli",
+        description="AIConfigurator: find the optimal serving configuration")
+    ap.add_argument("--model", required=True,
+                    help=f"one of {', '.join(list_archs(True))}")
+    ap.add_argument("--isl", type=int, required=True)
+    ap.add_argument("--osl", type=int, required=True)
+    ap.add_argument("--ttft", type=float, default=1000.0,
+                    help="TTFT SLA in ms")
+    ap.add_argument("--min-speed", type=float, default=None,
+                    help="min tokens/s/user SLA")
+    ap.add_argument("--chips", type=int, default=8)
+    ap.add_argument("--platform", default="tpu_v5e")
+    ap.add_argument("--backend", default="repro-jax",
+                    choices=["repro-jax", "trtllm", "vllm", "sglang"])
+    ap.add_argument("--dtype", default="bf16",
+                    choices=["bf16", "fp16", "fp8"])
+    ap.add_argument("--modes", default="aggregated,disaggregated")
+    ap.add_argument("--prefix-len", type=int, default=0)
+    ap.add_argument("--moe-alpha", type=float, default=1.2)
+    ap.add_argument("--top", type=int, default=5)
+    ap.add_argument("--save-launch", default="")
+    ap.add_argument("--draft-model", default="",
+                    help="also project speculative decoding with this draft")
+    ap.add_argument("--acceptance", type=float, default=0.8)
+    args = ap.parse_args(argv)
+
+    workload = WorkloadDescriptor(
+        model=args.model, isl=args.isl, osl=args.osl,
+        sla=SLA(ttft_ms=args.ttft, min_tokens_per_s_user=args.min_speed),
+        cluster=ClusterSpec(n_chips=args.chips, platform=args.platform),
+        backend=args.backend, dtype=args.dtype,
+        prefix_len=args.prefix_len,
+        modes=tuple(args.modes.split(",")),
+        moe_alpha=args.moe_alpha)
+
+    db = PerfDatabase(args.platform, args.backend)
+    result = TaskRunner(workload, db).run()
+    print(result.summary())
+
+    from repro.core import pareto
+    print(f"\ntop {args.top} SLA-valid configurations:")
+    for p in pareto.top_k(result.projections, workload.sla, args.top):
+        print(f"  [{p.mode:13s}] {p.tokens_per_s_per_chip:9.1f} tok/s/chip  "
+              f"{p.tokens_per_s_user:7.1f} tok/s/user  "
+              f"TTFT {p.ttft_ms:8.1f}ms  {p.config.get('describe', '')}")
+
+    if result.best is None:
+        print("\nno configuration satisfies the SLA on this cluster")
+        return 1
+    launch = generate(workload, result.best)
+    print(f"\nlaunch command:\n  {launch.command}")
+    if args.save_launch:
+        with open(args.save_launch, "w") as f:
+            f.write(launch.to_json())
+        print(f"launch config -> {args.save_launch}")
+
+    if args.draft_model:
+        from repro.core.config import ParallelismConfig
+        from repro.core.speculative import SpeculativeEstimator
+        est = SpeculativeEstimator(workload, args.draft_model, db)
+        par = ParallelismConfig(
+            **{k: result.best.config.get("parallel", {}).get(k, 1)
+               for k in ("tp", "pp", "ep", "dp")}) \
+            if result.best.mode != "disaggregated" else ParallelismConfig(
+                tp=min(args.chips, 8))
+        best, _ = est.best_gamma(par, batch=result.best.batch_size,
+                                 acceptance=args.acceptance)
+        print(f"\nspeculative decoding ({args.draft_model}, "
+              f"acceptance {args.acceptance}): best gamma={best.gamma} -> "
+              f"{best.speedup_vs_autoregressive:.2f}x "
+              f"({best.tokens_per_s_user:.0f} tok/s/user)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

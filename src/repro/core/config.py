@@ -1,0 +1,136 @@
+"""Configurator input/output types: workload descriptor, SLA, cluster spec,
+parallelism and serving-candidate configs (the search space elements)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SLA:
+    ttft_ms: float = 1000.0
+    tpot_ms: Optional[float] = None          # cap on TPOT, or
+    min_tokens_per_s_user: Optional[float] = None  # floor on 1000/TPOT
+
+    def tpot_limit_ms(self) -> float:
+        lims = []
+        if self.tpot_ms is not None:
+            lims.append(self.tpot_ms)
+        if self.min_tokens_per_s_user:
+            lims.append(1000.0 / self.min_tokens_per_s_user)
+        return min(lims) if lims else float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    n_chips: int = 8
+    chips_per_host: int = 8                  # TP kept within a host/pod axis
+    platform: str = "tpu_v5e"
+
+    def valid_instance_sizes(self) -> List[int]:
+        out = []
+        g = 1
+        while g <= self.n_chips:
+            out.append(g)
+            g *= 2
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadDescriptor:
+    """User-supplied description of the serving problem (§4.1 TaskRunner)."""
+    model: str                               # arch id from repro.configs
+    isl: int
+    osl: int
+    sla: SLA
+    cluster: ClusterSpec
+    backend: str = "repro-jax"               # repro-jax | trtllm | vllm | sglang
+    prefix_len: int = 0                      # cached prefix (Alg. 1 "P")
+    modes: Tuple[str, ...] = ("aggregated", "disaggregated")
+    moe_alpha: float = 1.2                   # expert-load power-law skew
+    dtype: str = "bf16"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelismConfig:
+    tp: int = 1
+    pp: int = 1
+    ep: int = 1                              # divides tp for MoE layers
+    dp: int = 1                              # replicas of this instance
+
+    @property
+    def chips_per_instance(self) -> int:
+        return self.tp * self.pp
+
+    @property
+    def chips(self) -> int:
+        return self.tp * self.pp * self.dp
+
+    def describe(self) -> str:
+        parts = [f"TP{self.tp}"]
+        if self.pp > 1:
+            parts.append(f"PP{self.pp}")
+        if self.ep > 1:
+            parts.append(f"EP{self.ep}")
+        if self.dp > 1:
+            parts = [f"{self.dp}x"] + parts
+        return "".join(parts) if len(parts) == 1 else parts[0] + "".join(parts[1:])
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeFlags:
+    """Framework runtime knobs the Generator resolves (§1, §4.1)."""
+    max_num_tokens: int = 8192               # per-iteration context capacity
+    kv_cache_mem_fraction: float = 0.90
+    enable_chunked_context: bool = True
+    enable_graph_capture: bool = True        # CUDA-graph / fixed-shape decode
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateConfig:
+    """One point in the search space (aggregated/static) or one pool side
+    of a disaggregated deployment."""
+    parallel: ParallelismConfig
+    batch_size: int
+    flags: RuntimeFlags = dataclasses.field(default_factory=RuntimeFlags)
+
+    def describe(self) -> str:
+        return f"{self.parallel.describe()} b{self.batch_size}"
+
+
+@dataclasses.dataclass
+class Projection:
+    """InferenceSession output for one candidate."""
+    ttft_ms: float
+    tpot_ms: float
+    tokens_per_s_user: float
+    tokens_per_s_per_chip: float
+    chips: int
+    batch_size: int
+    mode: str
+    config: Dict
+    mem_bytes_per_chip: float = 0.0
+    notes: str = ""
+
+    def meets(self, sla: SLA) -> bool:
+        if self.ttft_ms > sla.ttft_ms:
+            return False
+        return self.tpot_ms <= sla.tpot_limit_ms()
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggConfig:
+    """(x)P(y)D composite server."""
+    prefill: CandidateConfig
+    decode: CandidateConfig
+    x: int                                   # prefill worker count
+    y: int                                   # decode worker count
+
+    @property
+    def chips(self) -> int:
+        return (self.x * self.prefill.parallel.chips_per_instance
+                + self.y * self.decode.parallel.chips_per_instance)
+
+    def describe(self) -> str:
+        return (f"{self.x}P({self.prefill.describe()})"
+                f"{self.y}D({self.decode.describe()})")

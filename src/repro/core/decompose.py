@@ -1,0 +1,324 @@
+"""Iteration -> operator decomposition (§4.3).
+
+An inference iteration is a fixed operator sequence repeated per layer;
+parallelism rescales operator shapes and inserts well-defined collectives
+(Fig. 4).  ``iteration_ops`` builds the operator list for one iteration
+described by a ``StepSpec`` (prefill chunks + decode rows — the same spec
+the discrete-event simulator emits), under a ParallelismConfig, for any
+architecture family in the registry.
+
+Backend differences (§4.3: "the exact pair [of EP collectives] depends on
+the inference engine backend"):
+  repro-jax : GSPMD-style all-gather dispatch + reduce-scatter combine
+              (matches what our real lowering emits)
+  trtllm    : all-to-all dispatch/combine
+  sglang    : all-to-all dispatch/combine
+  vllm      : all-gather + reduce-scatter
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core import operators as ops
+from repro.core import powerlaw
+from repro.core.config import ParallelismConfig
+from repro.serving.sim import StepSpec
+
+EP_A2A_BACKENDS = {"trtllm", "sglang"}
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# per-layer operator builders (token counts are per pipeline microbatch)
+# ---------------------------------------------------------------------------
+
+def _attn_ops(cfg: ModelConfig, par: ParallelismConfig, spec: StepSpec,
+              dtype: str, window: int, mb: int) -> List:
+    """QKV/out GEMMs + fused attention for one layer."""
+    tp = par.tp
+    hd = cfg.head_dim
+    h_loc = _ceil(cfg.num_heads, tp)
+    kv_loc = _ceil(cfg.num_kv_heads, tp) if cfg.num_kv_heads >= tp else 1
+    T = _tokens(spec, mb)
+    out: List = []
+    if T == 0:
+        return out
+    out.append(ops.GEMM(T, (h_loc + 2 * kv_loc) * hd, cfg.d_model, dtype))
+    for (clen, past) in spec.prefill[:: max(mb, 1)] if mb > 1 else spec.prefill:
+        out.append(ops.Attention(
+            "prefill", 1, clen, past + clen, h_loc, kv_loc, hd,
+            cfg.attention_kind, window, dtype, q_offset=past))
+    dec = spec.decode[:: mb] if mb > 1 else spec.decode
+    if dec:
+        kv_mean = int(sum(dec) / len(dec))
+        out.append(ops.Attention(
+            "decode", len(dec), 1, kv_mean, h_loc, kv_loc, hd,
+            cfg.attention_kind, window, dtype))
+        # KV write-out for the new tokens
+        out.append(ops.MemOp(len(dec) * 2 * kv_loc * hd * ops.BYTES[dtype]))
+    out.append(ops.GEMM(T, cfg.d_model, h_loc * hd, dtype))
+    if tp > 1:
+        out.append(ops.Comm("all_reduce",
+                            T * cfg.d_model * ops.BYTES[dtype], tp))
+    return out
+
+
+def _dense_ffn_ops(cfg, par, T, dtype, d_ff=None) -> List:
+    tp = par.tp
+    f_loc = _ceil(d_ff or cfg.d_ff, tp)
+    out = [
+        ops.GEMM(T, 2 * f_loc, cfg.d_model, dtype),       # gate+up fused
+        ops.GEMM(T, cfg.d_model, f_loc, dtype),           # down
+    ]
+    if tp > 1:
+        out.append(ops.Comm("all_reduce", T * cfg.d_model * ops.BYTES[dtype], tp))
+    return out
+
+
+def _moe_ops(cfg, par, T, dtype, alpha, backend, seed) -> List:
+    tp, ep = par.tp, min(par.ep, par.tp)
+    b = ops.BYTES[dtype]
+    out: List = [ops.GEMM(T, cfg.num_experts, cfg.d_model, dtype)]  # router
+    # dispatch + combine
+    payload = T * cfg.top_k * cfg.d_model * b / max(ep, 1)
+    if ep > 1:
+        kind = "all_to_all" if backend in EP_A2A_BACKENDS else "all_gather"
+        out.append(ops.Comm(kind, payload, ep))
+    hot = powerlaw.hot_rank_tokens(T, cfg.top_k, cfg.num_experts, ep,
+                                   alpha, seed)
+    tp_in_expert = max(tp // ep, 1)
+    out.append(ops.MoEOp(
+        tokens=T, d_model=cfg.d_model,
+        d_ff=_ceil(cfg.moe_d_ff, tp_in_expert),
+        num_experts=cfg.num_experts, top_k=cfg.top_k, ep=ep,
+        hot_rank_tokens=hot, dtype=dtype))
+    if cfg.n_shared_experts:
+        out += _dense_ffn_ops(cfg, par, T, dtype,
+                              d_ff=cfg.n_shared_experts * cfg.moe_d_ff)[:-1]
+    if ep > 1:
+        kind = "all_to_all" if backend in EP_A2A_BACKENDS else "reduce_scatter"
+        out.append(ops.Comm(kind, payload, ep))
+    if tp > 1:
+        out.append(ops.Comm("all_reduce", T * cfg.d_model * b, tp))
+    return out
+
+
+def _rec_ops(cfg, par, spec: StepSpec, dtype, mb, kind: str) -> List:
+    """RG-LRU temporal block (in/gate proj, conv, scan, out proj)."""
+    tp = par.tp
+    T = _tokens(spec, mb)
+    if T == 0:
+        return []
+    w_loc = _ceil(cfg.lru_width, tp)
+    b = ops.BYTES[dtype]
+    batch = max(len(spec.decode[:: mb] if mb > 1 else spec.decode), 1) \
+        if not spec.prefill else 1
+    seq = T if spec.prefill else 1
+    out = [
+        ops.GEMM(T, 2 * w_loc, cfg.d_model, dtype),
+        ops.MemOp(T * w_loc * b * cfg.conv_width),
+        ops.RecurrentOp(kind, batch, seq, w_loc, cfg.num_heads, dtype),
+        ops.GEMM(T, cfg.d_model, w_loc, dtype),
+    ]
+    if tp > 1:
+        out.append(ops.Comm("all_reduce", T * cfg.d_model * b, tp))
+    return out
+
+
+def _mlstm_ops(cfg, par, spec, dtype, mb) -> List:
+    from repro.models.xlstm import up_dim
+    tp = par.tp
+    T = _tokens(spec, mb)
+    if T == 0:
+        return []
+    u = up_dim(cfg)
+    u_loc = _ceil(u, tp)
+    b = ops.BYTES[dtype]
+    batch = max(len(spec.decode), 1) if not spec.prefill else 1
+    seq = T if spec.prefill else 1
+    out = [
+        ops.GEMM(T, 2 * u_loc, cfg.d_model, dtype),       # up + gate
+        ops.MemOp(T * u_loc * b * cfg.conv_width),
+        ops.GEMM(T, 3 * u_loc, u, dtype),                 # q,k,v
+        ops.RecurrentOp("mlstm", batch, seq, u_loc, cfg.num_heads, dtype),
+        ops.GEMM(T, cfg.d_model, u_loc, dtype),
+    ]
+    if tp > 1:
+        out.append(ops.Comm("all_reduce", T * cfg.d_model * b, tp))
+    return out
+
+
+def _slstm_ops(cfg, par, spec, dtype, mb) -> List:
+    tp = par.tp
+    T = _tokens(spec, mb)
+    if T == 0:
+        return []
+    d = cfg.d_model
+    b = ops.BYTES[dtype]
+    f = int(d * cfg.slstm_proj_factor)
+    batch = max(len(spec.decode), 1) if not spec.prefill else 1
+    seq = T if spec.prefill else 1
+    out = [
+        ops.GEMM(T, _ceil(4 * d, tp), d, dtype),
+        ops.RecurrentOp("slstm", batch, seq, _ceil(d, tp), cfg.num_heads, dtype),
+        ops.GEMM(T, _ceil(2 * f, tp), d, dtype),
+        ops.GEMM(T, d, _ceil(f, tp), dtype),
+    ]
+    if tp > 1:
+        out.append(ops.Comm("all_reduce", T * d * b, tp))
+    return out
+
+
+def _tokens(spec: StepSpec, mb: int) -> int:
+    t = sum(c for c, _ in spec.prefill) + len(spec.decode)
+    return _ceil(t, mb) if mb > 1 else t
+
+
+# ---------------------------------------------------------------------------
+# whole-iteration decomposition
+# ---------------------------------------------------------------------------
+
+def iteration_ops(cfg: ModelConfig, par: ParallelismConfig, spec: StepSpec,
+                  *, alpha: float = 1.2, backend: str = "repro-jax",
+                  dtype: str = "bf16", seed: int = 0) -> List:
+    """Weighted (operator, count) list for ONE iteration (one pipeline
+    microbatch's full pass + inter-stage P2P).  Identical layers share one
+    operator entry with a count — that is why per-config search time stays
+    ~constant in model size (paper Table 1: ~1.5 ms/config regardless of
+    parameter count).  Latency = PerfDatabase.sequence_latency(result)."""
+    mb = par.pp                       # microbatch split factor
+    T = _tokens(spec, mb)
+    if T == 0:
+        return []
+    b = ops.BYTES[dtype]
+    out: List = [(ops.Embedding(T, cfg.vocab_size, cfg.d_model, dtype), 1)]
+    window = cfg.sliding_window
+
+    # encoder pass (whisper): runs once per request, charged to the
+    # iteration where the request's first chunk appears
+    if cfg.is_encoder_decoder:
+        new_reqs = sum(1 for c, past in spec.prefill if past == 0)
+        if new_reqs:
+            F = cfg.num_source_positions * new_reqs
+            enc_spec = StepSpec(prefill=((F, 0),), decode=())
+            enc_layer = (_attn_ops(cfg, par, enc_spec, dtype, 0, 1)
+                         + _dense_ffn_ops(cfg, par, F, dtype))
+            out.extend((op, cfg.encoder_layers) for op in enc_layer)
+            # cross-KV projection for every decoder layer
+            out.append((ops.GEMM(
+                F * cfg.num_layers,
+                2 * _ceil(cfg.num_heads, par.tp) * cfg.head_dim,
+                cfg.d_model, dtype), 1))
+
+    # Layers of the same kind produce identical operator lists -> build each
+    # kind ONCE and emit (op, count) pairs; keeps per-config search cost at
+    # the paper's ~1.5 ms scale.
+    def emit(layer_ops: List, count: int):
+        out.extend((op, count) for op in layer_ops)
+
+    if cfg.family == "hybrid":
+        n_attn = sum(1 for k in cfg.block_pattern if k == "attn")
+        n_rec = cfg.num_layers - n_attn
+        emit(_rec_ops(cfg, par, spec, dtype, mb, "rglru"), n_rec)
+        emit(_attn_ops(cfg, par, spec, dtype, cfg.local_window, mb), n_attn)
+        emit(_dense_ffn_ops(cfg, par, T, dtype), cfg.num_layers)
+    elif cfg.family == "ssm":
+        n_m = sum(1 for k in cfg.block_pattern if k == "m")
+        emit(_mlstm_ops(cfg, par, spec, dtype, mb), n_m)
+        emit(_slstm_ops(cfg, par, spec, dtype, mb), cfg.num_layers - n_m)
+    else:
+        emit(_attn_ops(cfg, par, spec, dtype, window, mb), cfg.num_layers)
+        if cfg.is_encoder_decoder:
+            # cross attention (KV = encoder frames, precomputed)
+            h_loc = _ceil(cfg.num_heads, par.tp)
+            emit([ops.GEMM(T, h_loc * cfg.head_dim, cfg.d_model, dtype),
+                  ops.Attention(
+                      "decode" if not spec.prefill else "prefill",
+                      max(len(spec.decode), 1), 1 if not spec.prefill else T,
+                      cfg.num_source_positions, h_loc, h_loc, cfg.head_dim,
+                      "mha", 0, dtype),
+                  ops.GEMM(T, cfg.d_model, h_loc * cfg.head_dim, dtype)],
+                 cfg.num_layers)
+        if cfg.num_experts:
+            emit(_moe_ops(cfg, par, T, dtype, alpha, backend, seed),
+                 cfg.num_layers)
+        else:
+            emit(_dense_ffn_ops(cfg, par, T, dtype), cfg.num_layers)
+
+    # LM head for rows that emit a token this iteration
+    n_emit = len(spec.decode) + sum(1 for _ in spec.prefill)
+    if n_emit:
+        v_loc = _ceil(cfg.vocab_size, par.tp)
+        out.append((ops.GEMM(n_emit, v_loc, cfg.d_model, dtype), 1))
+        if par.tp > 1:
+            out.append((ops.Comm("all_gather", n_emit * v_loc * 4, par.tp), 1))
+
+    # pipeline-parallel inter-stage transfers
+    if par.pp > 1:
+        out.append((ops.Comm("p2p", T * cfg.d_model * b, 2), par.pp - 1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# memory model (per chip) — used by TaskRunner pruning and the Generator's
+# kv_cache_mem_fraction resolution
+# ---------------------------------------------------------------------------
+
+def param_bytes_per_chip(cfg: ModelConfig, par: ParallelismConfig,
+                         dtype: str = "bf16") -> float:
+    b = ops.BYTES[dtype]
+    total = cfg.param_count() * b
+    if cfg.num_experts:
+        expert = cfg.num_layers * cfg.num_experts * 3 * cfg.d_model * cfg.moe_d_ff * b
+        dense = total - expert
+        ep = min(par.ep, par.tp)
+        shard = expert / max(ep * max(par.tp // ep, 1), 1)
+        return (dense / par.tp + shard) / par.pp
+    return total / (par.tp * par.pp)
+
+
+def kv_bytes_per_chip(cfg: ModelConfig, par: ParallelismConfig, batch: int,
+                      seq: int, dtype: str = "bf16") -> float:
+    b = ops.BYTES[dtype]
+    if cfg.family == "ssm":
+        from repro.models.xlstm import up_dim
+        u = up_dim(cfg)
+        per_tok_indep = cfg.num_layers / 2 * (u // cfg.num_heads * u + 4 * cfg.d_model)
+        return batch * per_tok_indep * 4 / (par.tp * par.pp)
+    kv_loc = max(_ceil(cfg.num_kv_heads, par.tp), 1)
+    total = 0.0
+    for li in range(cfg.num_layers):
+        kind = cfg.block_pattern[li] if cfg.block_pattern else "attn"
+        W = cfg.kv_cache_len(seq, kind)
+        if kind == "rec":
+            total += cfg.lru_width * 4 + cfg.lru_width * cfg.conv_width * b
+        else:
+            total += 2 * W * kv_loc * cfg.head_dim * b
+    if cfg.is_encoder_decoder:
+        total += (cfg.num_layers * 2 * cfg.num_source_positions
+                  * _ceil(cfg.num_heads, par.tp) * cfg.head_dim * b)
+    return batch * total / par.pp
+
+
+def activation_bytes_per_chip(cfg: ModelConfig, par: ParallelismConfig,
+                              max_tokens: int, dtype: str = "bf16") -> float:
+    b = ops.BYTES[dtype]
+    width = max(cfg.d_ff or cfg.d_model, cfg.moe_d_ff * cfg.top_k if cfg.num_experts else 0)
+    return max_tokens * (cfg.d_model + _ceil(2 * width, par.tp)) * b * 2
+
+
+def fits_memory(cfg: ModelConfig, par: ParallelismConfig, batch: int,
+                seq: int, platform, flags=None, dtype: str = "bf16"):
+    """Returns (fits, bytes_per_chip)."""
+    kv_frac = flags.kv_cache_mem_fraction if flags else 0.9
+    p = param_bytes_per_chip(cfg, par, dtype)
+    a = activation_bytes_per_chip(cfg, par,
+                                  flags.max_num_tokens if flags else 8192, dtype)
+    k = kv_bytes_per_chip(cfg, par, batch, seq, dtype)
+    free_for_kv = (platform.hbm_capacity - p - a) * kv_frac
+    return k <= max(free_for_kv, 0.0), p + a + k

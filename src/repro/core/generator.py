@@ -1,0 +1,120 @@
+"""Generator (§4.1): converts a Pareto-selected Projection into a
+version-compatible launch artifact for the chosen backend, resolving the
+optimal runtime flags (graph capture, KV-cache memory fraction, max token
+capacity) from the memory model.
+
+For the repro-jax backend the artifact is directly consumable by
+``python -m repro.launch.serve`` (and by serving.engine.EngineConfig) —
+the configurator's output drives the real engine end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.core import decompose
+from repro.core.backends.base import get_backend
+from repro.core.config import Projection, RuntimeFlags, ParallelismConfig, WorkloadDescriptor
+from repro.core.hardware import get_platform
+
+
+def resolve_kv_fraction(workload: WorkloadDescriptor,
+                        par: ParallelismConfig, batch: int) -> float:
+    """Pick the KV fraction that exactly covers the needed cache + margin."""
+    cfg = get_config(workload.model)
+    platform = get_platform(workload.cluster.platform)
+    backend = get_backend(workload.backend)
+    p = decompose.param_bytes_per_chip(cfg, par, workload.dtype)
+    a = decompose.activation_bytes_per_chip(cfg, par, 8192, workload.dtype)
+    need = decompose.kv_bytes_per_chip(cfg, par, batch,
+                                       workload.isl + workload.osl,
+                                       workload.dtype)
+    free = platform.hbm_capacity * (1 - backend.runtime_mem_overhead) - p - a
+    if free <= 0:
+        return 0.9
+    frac = min(0.95, 1.1 * need / free)          # 10% headroom
+    return round(max(frac, 0.05), 3)
+
+
+def _parallel_of(d: Dict) -> ParallelismConfig:
+    return ParallelismConfig(**{k: d[k] for k in ("tp", "pp", "ep", "dp")})
+
+
+@dataclasses.dataclass
+class LaunchConfig:
+    backend: str
+    command: str
+    env: Dict[str, str]
+    raw: Dict
+
+    def to_json(self) -> str:
+        return json.dumps(self.raw, indent=2)
+
+
+def generate(workload: WorkloadDescriptor, proj: Projection) -> LaunchConfig:
+    backend = get_backend(workload.backend)
+    if proj.mode == "disaggregated":
+        return _generate_disagg(workload, proj, backend)
+    par = _parallel_of(proj.config["parallel"])
+    kv_frac = resolve_kv_fraction(workload, par, proj.batch_size)
+    flags = proj.config.get("flags", dataclasses.asdict(RuntimeFlags()))
+    knobs = {
+        "max_num_tokens": flags["max_num_tokens"],
+        "kv_cache_mem_fraction": kv_frac,
+        "enable_chunked_context": flags["enable_chunked_context"],
+        "enable_graph_capture": flags["enable_graph_capture"],
+    }
+    parts = [backend.launcher, f"--model {workload.model}",
+             f"--tp {par.tp}", f"--pp {par.pp}"]
+    if par.ep > 1:
+        parts.append(f"--ep {par.ep}")
+    parts.append(f"--max-batch {proj.batch_size}")
+    for knob, val in knobs.items():
+        flag = backend.flags.get(knob)
+        if flag is None:
+            continue
+        if isinstance(val, bool):
+            if val:
+                parts.append(flag)
+        else:
+            parts.append(f"{flag} {val}")
+    raw = {
+        "backend": backend.name, "mode": proj.mode,
+        "model": workload.model,
+        "parallel": dataclasses.asdict(par),
+        "batch_size": proj.batch_size,
+        "runtime_flags": knobs,
+        "projection": {
+            "ttft_ms": proj.ttft_ms, "tpot_ms": proj.tpot_ms,
+            "tokens_per_s_per_chip": proj.tokens_per_s_per_chip,
+        },
+    }
+    return LaunchConfig(backend=backend.name, command=" ".join(parts),
+                        env={}, raw=raw)
+
+
+def _generate_disagg(workload, proj, backend) -> LaunchConfig:
+    pre, dec = proj.config["prefill"], proj.config["decode"]
+    pre_par, dec_par = _parallel_of(pre["parallel"]), _parallel_of(dec["parallel"])
+    kv_frac = resolve_kv_fraction(workload, dec_par, dec["batch"])
+    raw = {
+        "backend": backend.name, "mode": "disaggregated",
+        "model": workload.model,
+        "prefill_workers": {"count": pre["x"],
+                            "parallel": dataclasses.asdict(pre_par),
+                            "batch_size": pre["batch"]},
+        "decode_workers": {"count": dec["y"],
+                           "parallel": dataclasses.asdict(dec_par),
+                           "batch_size": dec["batch"],
+                           "kv_cache_mem_fraction": kv_frac},
+        "projection": {"ttft_ms": proj.ttft_ms, "tpot_ms": proj.tpot_ms,
+                       "tokens_per_s_per_chip": proj.tokens_per_s_per_chip},
+    }
+    cmd = (f"{backend.launcher} --model {workload.model} --disaggregated "
+           f"--prefill {pre['x']}xTP{pre_par.tp} "
+           f"--decode {dec['y']}xTP{dec_par.tp} "
+           f"--decode-batch {dec['batch']} "
+           f"{backend.flags.get('kv_cache_mem_fraction', '--kv-frac')} {kv_frac}")
+    return LaunchConfig(backend=backend.name, command=cmd, env={}, raw=raw)

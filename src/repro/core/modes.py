@@ -1,0 +1,168 @@
+"""The paper's three serving-mode estimators (§4.2, Algorithms 1–3).
+
+Implemented to match the pseudocode constant-for-constant:
+  Alg. 1  static        — stride-32 decode interpolation
+  Alg. 2  aggregated    — mixed/generation phases, rate-matching throttle,
+                          F_corr = min(2 + (T_ctx-3)/20, 4), 3-step jitter
+                          offset in the TPOT weighting
+  Alg. 3  disaggregated — α_pre=0.9, α_dec=0.92, β_TTFT=1.8, x∈[1,32],
+                          y∈[1,64] rate matching maximizing per-chip
+                          throughput
+
+All latencies in milliseconds (the paper's unit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+# Paper constants
+STRIDE = 32
+ALPHA_PRE = 0.9
+ALPHA_DEC = 0.92
+BETA_TTFT = 1.8
+F_CORR_CAP = 4.0
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — static mode
+# ---------------------------------------------------------------------------
+
+def static_mode(get_step_latency_ms: Callable[[int, int, str], float],
+                isl: int, osl: int, batch: int, prefix: int = 0,
+                stride: int = STRIDE) -> Tuple[float, float]:
+    """Returns (TTFT_ms, TPOT_ms)."""
+    isl_eff = isl - prefix
+    ttft = get_step_latency_ms(batch, isl_eff, "prefill")
+    t_gen = 0.0
+    if osl > 1:
+        k = 0
+        while k < osl - 1:
+            s_seq = isl + k + 1
+            t_step = get_step_latency_ms(batch, s_seq, "decode")
+            r = min(stride, osl - 1 - k)
+            t_gen += t_step * r
+            k += stride
+        tpot = t_gen / (osl - 1)
+    else:
+        tpot = 0.0
+    return ttft, tpot
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — aggregated (continuous batching) mode
+# ---------------------------------------------------------------------------
+
+def aggregated_mode(get_mix_lat_ms: Callable[[int, int, int, int], float],
+                    get_gen_lat_ms: Callable[[int, int, int], float],
+                    isl: int, osl: int, batch: int,
+                    c_ctx: int, f_corr_base: float = 2.0) -> Tuple[float, float]:
+    """Returns (TTFT_ms, TPOT_ms).  c_ctx = per-iteration context capacity."""
+    t_total_ctx = math.ceil(isl * batch / c_ctx)
+    # Paper line 9/15/22 sets N_ctx <- C_ctx (saturated steady state).  When
+    # the whole context backlog is smaller than C_ctx the scheduler can only
+    # fill ceil(ISL*B / T_total_ctx) tokens per mixed step; without this
+    # correction the estimator prices phantom context tokens and TTFT
+    # explodes for small workloads (documented deviation, EXPERIMENTS.md).
+    fill = min(c_ctx, math.ceil(isl * batch / t_total_ctx))
+
+    if batch > 1:
+        if t_total_ctx >= osl:
+            # context dominates: throttle decode streams (rate matching)
+            t_mix = t_total_ctx
+            t_gen = 0
+            n_ctx = fill
+            n_gen = max(1, int(batch / (t_total_ctx / osl)))
+        else:
+            t_mix = t_total_ctx
+            t_gen = osl - t_mix
+            n_ctx = fill
+            n_gen = max(1, batch - math.ceil(fill / isl))    # paper: assert >= 1
+    else:
+        t_mix, t_gen = 1, osl - 1
+        n_ctx, n_gen = min(c_ctx, isl), 0
+
+    l_mix = get_mix_lat_ms(n_ctx, n_gen, isl, osl)
+    l_gen = get_gen_lat_ms(batch, isl, osl)
+
+    f_corr = min(f_corr_base + (t_total_ctx - 3) / 20.0, F_CORR_CAP)
+    f_corr = max(f_corr, 0.5)
+    ttft = l_mix * math.ceil(isl / c_ctx) * f_corr
+
+    t_mix_p = max(1, t_mix - 3)                              # jitter offset
+    if batch > 1:
+        tpot = (l_mix * t_mix_p + l_gen * t_gen) / (t_mix_p + t_gen)
+    else:
+        tpot = l_gen
+    return ttft, tpot
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — disaggregated mode
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PoolCandidate:
+    """One evaluated static candidate for a prefill or decode pool."""
+    config: object                  # CandidateConfig
+    chips: int
+    latency_ms: float               # prefill: TTFT; decode: TPOT
+    req_throughput: float           # requests/s of ONE instance
+
+
+@dataclasses.dataclass
+class DisaggBest:
+    prefill: PoolCandidate
+    decode: PoolCandidate
+    x: int
+    y: int
+    ttft_ms: float
+    tpot_ms: float
+    total_chips: int
+    req_per_s: float
+    tokens_per_s_per_chip: float
+
+
+def disaggregated_mode(prefill_cands: Sequence[PoolCandidate],
+                       decode_cands: Sequence[PoolCandidate],
+                       ttft_limit_ms: float, tpot_limit_ms: float,
+                       valid_totals: Iterable[int], osl: int,
+                       x_range: Tuple[int, int] = (1, 32),
+                       y_range: Tuple[int, int] = (1, 64),
+                       beta_ttft: float = BETA_TTFT,
+                       keep_all: bool = False):
+    """Rate matching over (x)P(y)D composites.  Returns (best, all) where
+    all is populated when keep_all (for Pareto plots)."""
+    valid = set(valid_totals)
+    cp = [c for c in prefill_cands if c.latency_ms * beta_ttft <= ttft_limit_ms]
+    cd = [c for c in decode_cands if c.latency_ms <= tpot_limit_ms]
+    best: Optional[DisaggBest] = None
+    everything: List[DisaggBest] = []
+    for dec in cd:
+        for pre in cp:
+            for x in range(x_range[0], x_range[1] + 1):
+                g_pre = x * pre.chips
+                if g_pre > max(valid):
+                    break
+                for y in range(y_range[0], y_range[1] + 1):
+                    g_total = g_pre + y * dec.chips
+                    if g_total not in valid:
+                        if g_total > max(valid):
+                            break
+                        continue
+                    r_pre = pre.req_throughput * x * ALPHA_PRE
+                    r_dec = dec.req_throughput * y * ALPHA_DEC
+                    r_sys = min(r_pre, r_dec)
+                    thru_chip = r_sys * osl / g_total
+                    cand = DisaggBest(
+                        prefill=pre, decode=dec, x=x, y=y,
+                        ttft_ms=pre.latency_ms * beta_ttft,
+                        tpot_ms=dec.latency_ms,
+                        total_chips=g_total, req_per_s=r_sys,
+                        tokens_per_s_per_chip=thru_chip)
+                    if keep_all:
+                        everything.append(cand)
+                    if best is None or thru_chip > best.tokens_per_s_per_chip:
+                        best = cand
+    return best, everything

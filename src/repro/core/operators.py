@@ -1,0 +1,193 @@
+"""Operator taxonomy (§4.3.1): the primitives an inference iteration
+decomposes into.  Every operator knows its FLOPs and bytes moved; latency
+comes from the PerfDatabase (grid + interpolation) or the analytical
+executor (speed-of-light fallback).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+BYTES = {"bf16": 2, "fp16": 2, "fp32": 4, "fp8": 1, "int8": 1, "int4": 0.5}
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMM:
+    """C[m,n] = A[m,k] @ B[k,n]."""
+    m: int
+    n: int
+    k: int
+    dtype: str = "bf16"
+
+    def flops(self) -> float:
+        return 2.0 * self.m * self.n * self.k
+
+    def bytes(self) -> float:
+        b = BYTES[self.dtype]
+        return b * (self.m * self.k + self.k * self.n + self.m * self.n)
+
+    def grid_key(self) -> Tuple:
+        return ("gemm", self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention:
+    """Fused attention; phase 'prefill' (compute-bound, causal flash) or
+    'decode' (memory-bound, 1 query token vs kv_len cache)."""
+    phase: str                      # prefill | decode
+    batch: int
+    q_len: int
+    kv_len: int
+    heads: int
+    kv_heads: int
+    head_dim: int
+    kind: str = "gqa"               # mha | gqa | mla
+    window: int = 0                 # sliding-window clamp on kv_len
+    dtype: str = "bf16"
+    q_offset: int = 0               # past tokens already cached (chunked prefill)
+
+    def effective_kv(self) -> int:
+        kv = self.kv_len
+        return min(kv, self.window) if self.window else kv
+
+    def flops(self) -> float:
+        kv = self.effective_kv()
+        if self.phase == "prefill":
+            # causal: each query attends ~ (q_offset + (i+1)) keys
+            avg_kv = min(self.q_offset + (self.q_len + 1) / 2.0, kv)
+            return 4.0 * self.batch * self.heads * self.q_len * avg_kv * self.head_dim
+        return 4.0 * self.batch * self.heads * kv * self.head_dim
+
+    def bytes(self) -> float:
+        b = BYTES[self.dtype]
+        kv = self.effective_kv()
+        if self.kind == "mla":
+            kv_row = 576               # compressed latent + rope dims
+        else:
+            kv_row = 2 * self.kv_heads * self.head_dim
+        io = self.batch * self.q_len * self.heads * self.head_dim * 2  # q + out
+        cache = self.batch * kv * kv_row
+        return b * (io + cache)
+
+    def grid_key(self) -> Tuple:
+        return ("attn", self.phase, self.kind, self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEOp:
+    """Grouped expert FFN with dispatch/combine.  ``loads`` is the per-rank
+    token count after power-law skew + EP placement: latency follows the
+    hottest rank (§4.4.1 'tail latency ... determines overall throughput')."""
+    tokens: int                     # tokens entering the MoE layer (global)
+    d_model: int
+    d_ff: int
+    num_experts: int
+    top_k: int
+    ep: int = 1                     # expert-parallel ways
+    hot_rank_tokens: Optional[int] = None   # tokens on the hottest EP rank
+    dtype: str = "bf16"
+
+    def rank_tokens(self) -> float:
+        if self.hot_rank_tokens is not None:
+            return self.hot_rank_tokens
+        return self.tokens * self.top_k / self.ep
+
+    def flops(self) -> float:
+        # hottest rank: 3 GEMMs (gate/up/down) over its token load
+        return 2.0 * 3 * self.rank_tokens() * self.d_model * self.d_ff
+
+    def bytes(self) -> float:
+        b = BYTES[self.dtype]
+        w = 3 * (self.num_experts / self.ep) * self.d_model * self.d_ff
+        acts = self.rank_tokens() * (2 * self.d_model + 2 * self.d_ff)
+        return b * (w + acts)
+
+    def grid_key(self) -> Tuple:
+        return ("moe", self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentOp:
+    """RG-LRU / mLSTM / sLSTM temporal mixing — memory-bound elementwise
+    recurrence + small per-step GEMMs (state update)."""
+    kind: str                       # rglru | mlstm | slstm
+    batch: int
+    seq: int                        # tokens processed (1 for decode)
+    width: int                      # recurrence width
+    heads: int = 1
+    dtype: str = "bf16"
+
+    def flops(self) -> float:
+        per_tok = 8.0 * self.width
+        if self.kind == "mlstm":
+            dh = self.width // max(self.heads, 1)
+            per_tok += 4.0 * self.heads * dh * dh     # matrix memory update
+        if self.kind == "slstm":
+            dh = self.width // max(self.heads, 1)
+            per_tok += 2.0 * self.heads * dh * 4 * dh  # recurrent R matmul
+        return self.batch * self.seq * per_tok
+
+    def bytes(self) -> float:
+        b = BYTES[self.dtype]
+        state = self.width
+        if self.kind == "mlstm":
+            dh = self.width // max(self.heads, 1)
+            state += self.heads * dh * dh
+        return b * self.batch * (self.seq * 4 * self.width + 2 * state * 4)
+
+    def grid_key(self) -> Tuple:
+        return ("recurrent", self.kind, self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Comm:
+    """Collective / point-to-point communication."""
+    kind: str                       # all_reduce | all_gather | reduce_scatter
+    #                                 | all_to_all | p2p
+    bytes_per_chip: float
+    n_chips: int
+    inter_pod: bool = False         # crosses the pod/node boundary
+
+    def flops(self) -> float:
+        return 0.0
+
+    def bytes(self) -> float:
+        return self.bytes_per_chip
+
+    def grid_key(self) -> Tuple:
+        return ("comm", self.kind, self.inter_pod)
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    tokens: int
+    vocab: int
+    d_model: int
+    dtype: str = "bf16"
+
+    def flops(self) -> float:
+        return 0.0
+
+    def bytes(self) -> float:
+        return BYTES[self.dtype] * self.tokens * self.d_model * 2
+
+    def grid_key(self) -> Tuple:
+        return ("embedding", self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemOp:
+    """Bulk HBM traffic with no compute (KV write-out, cache transpose)."""
+    nbytes: float
+
+    def flops(self) -> float:
+        return 0.0
+
+    def bytes(self) -> float:
+        return self.nbytes
+
+    def grid_key(self) -> Tuple:
+        return ("mem",)
+
+
+Operator = object  # GEMM | Attention | MoEOp | RecurrentOp | Comm | Embedding | MemOp

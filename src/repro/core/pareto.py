@@ -1,0 +1,36 @@
+"""Pareto analyzer (§4.1): filter SLA-valid projections, compute the
+throughput-vs-speed Pareto frontier, rank the winners."""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.config import Projection, SLA
+
+
+def sla_filter(projs: Sequence[Projection], sla: SLA) -> List[Projection]:
+    return [p for p in projs if p.meets(sla)]
+
+
+def frontier(projs: Sequence[Projection]) -> List[Projection]:
+    """Non-dominated set over (tokens/s/user ↑, tokens/s/chip ↑),
+    sorted by speed descending."""
+    pts = sorted(projs, key=lambda p: (-p.tokens_per_s_user,
+                                       -p.tokens_per_s_per_chip))
+    out: List[Projection] = []
+    best_thru = -1.0
+    for p in pts:
+        if p.tokens_per_s_per_chip > best_thru:
+            out.append(p)
+            best_thru = p.tokens_per_s_per_chip
+    return out
+
+
+def top_k(projs: Sequence[Projection], sla: SLA, k: int = 5) -> List[Projection]:
+    """Highest per-chip throughput among SLA-compliant configs."""
+    ok = sla_filter(projs, sla)
+    return sorted(ok, key=lambda p: -p.tokens_per_s_per_chip)[:k]
+
+
+def best(projs: Sequence[Projection], sla: SLA) -> Optional[Projection]:
+    ranked = top_k(projs, sla, 1)
+    return ranked[0] if ranked else None

@@ -1,0 +1,269 @@
+"""PerfDatabase (§4.4): per-operator latency grids + interpolation +
+speed-of-light fallback, per (hardware platform × framework backend).
+
+Data collection sweeps the operator parameter grids the paper profiles
+(batch, sequence, GEMM dims, message sizes) and stores latencies from the
+calibrated analytical executor (the silicon stand-in; see analytical.py).
+Queries snap onto the grid with multilinear interpolation in log space —
+exactly the paper's "interpolation of real system data".  Operators outside
+any grid fall back to Speed-of-Light estimation (§4.4 'Data Collection').
+
+Grids for shape-rich operators (attention, MoE, recurrent) are built lazily
+per head-config/expert-config the first time a model needs them — mirroring
+the paper's per-model coverage ("popular open-weights models").
+
+The database can be exported/imported as JSON so the "offline" artifact is
+a real file (src/repro/core/data/<platform>_<backend>.json).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import analytical
+from repro.core import operators as ops
+from repro.core.hardware import Platform, get_platform
+
+# Grid axes ------------------------------------------------------------------
+
+_POW2 = lambda lo, hi: [2 ** i for i in range(int(math.log2(lo)), int(math.log2(hi)) + 1)]
+
+GEMM_M = _POW2(1, 1 << 20)
+GEMM_N = _POW2(128, 1 << 15)
+GEMM_K = _POW2(128, 1 << 15)
+ATTN_BATCH = _POW2(1, 512)
+ATTN_SEQ = _POW2(16, 1 << 20)
+MOE_TOKENS = _POW2(1, 1 << 20)
+COMM_BYTES = _POW2(1 << 10, 1 << 34)
+REC_TOKENS = _POW2(1, 1 << 20)
+
+
+class OpGrid:
+    """N-dimensional latency table with multilinear interpolation in
+    log(parameter) space.  Exact on grid hits; clamped at the edges."""
+
+    def __init__(self, axes: Sequence[Sequence[float]], table: np.ndarray):
+        self.axes = [np.asarray(a, np.float64) for a in axes]
+        self.table = np.asarray(table, np.float64)
+        assert self.table.shape == tuple(len(a) for a in self.axes)
+
+    @classmethod
+    def build(cls, axes: Sequence[Sequence[float]], fn) -> "OpGrid":
+        shape = tuple(len(a) for a in axes)
+        table = np.empty(shape, np.float64)
+        for idx in np.ndindex(shape):
+            coords = [axes[d][i] for d, i in enumerate(idx)]
+            table[idx] = fn(*coords)
+        return cls(axes, table)
+
+    def query(self, coords: Sequence[float]) -> float:
+        """Multilinear interpolation in log-space of coords AND latency."""
+        lo_idx, weights = [], []
+        for a, c in zip(self.axes, coords):
+            c = min(max(c, a[0]), a[-1])
+            j = int(np.searchsorted(a, c, side="right")) - 1
+            j = min(max(j, 0), len(a) - 2)
+            la, lb, lc = math.log(a[j]), math.log(a[j + 1]), math.log(max(c, 1e-12))
+            w = (lc - la) / (lb - la)
+            lo_idx.append(j)
+            weights.append(min(max(w, 0.0), 1.0))
+        acc = 0.0
+        for corner in range(1 << len(coords)):
+            wgt, idx = 1.0, []
+            for d in range(len(coords)):
+                hi = (corner >> d) & 1
+                wgt *= weights[d] if hi else (1.0 - weights[d])
+                idx.append(lo_idx[d] + hi)
+            if wgt > 0:
+                acc += wgt * math.log(max(self.table[tuple(idx)], 1e-12))
+        return math.exp(acc)
+
+    def to_json(self) -> Dict:
+        return {"axes": [a.tolist() for a in self.axes],
+                "table": self.table.ravel().tolist()}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "OpGrid":
+        axes = d["axes"]
+        shape = tuple(len(a) for a in axes)
+        return cls(axes, np.asarray(d["table"]).reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DatabaseStats:
+    grid_hits: int = 0
+    sol_fallbacks: int = 0
+    grids_built: int = 0
+
+
+class PerfDatabase:
+    """Operator latency oracle for one (platform, backend)."""
+
+    def __init__(self, platform: str | Platform = "tpu_v5e",
+                 backend: str = "repro-jax", use_grid: bool = True):
+        self.platform = (platform if isinstance(platform, Platform)
+                         else get_platform(platform))
+        self.backend = backend
+        self.use_grid = use_grid
+        self._grids: Dict[Tuple, OpGrid] = {}
+        self._memo: Dict = {}
+        self.stats = DatabaseStats()
+        if use_grid:
+            self._collect_static()
+
+    # -- offline collection -------------------------------------------------
+    def _measure(self, op) -> float:
+        """Profiling stand-in (real hardware in the paper)."""
+        return analytical.latency(self.platform, op)
+
+    def _collect_static(self) -> None:
+        """Eagerly build the model-independent grids (GEMM, comm)."""
+        for dtype in ("bf16", "fp8"):
+            key = ("gemm", dtype)
+            self._grids[key] = OpGrid.build(
+                (GEMM_M, GEMM_N, GEMM_K),
+                lambda m, n, k, dt=dtype: self._measure(
+                    ops.GEMM(int(m), int(n), int(k), dt)))
+            self.stats.grids_built += 1
+
+    def _comm_grid(self, kind: str, n_chips: int, inter_pod: bool) -> OpGrid:
+        key = ("comm", kind, n_chips, inter_pod)
+        if key not in self._grids:
+            self._grids[key] = OpGrid.build(
+                (COMM_BYTES,),
+                lambda b: self._measure(ops.Comm(kind, float(b), n_chips,
+                                                 inter_pod)))
+            self.stats.grids_built += 1
+        return self._grids[key]
+
+    def _attn_grid(self, a: ops.Attention) -> OpGrid:
+        key = ("attn", a.phase, a.kind, a.heads, a.kv_heads, a.head_dim, a.dtype)
+        if key not in self._grids:
+            if a.phase == "prefill":
+                def fn(q_len, kv_len):
+                    return self._measure(dataclasses.replace(
+                        a, batch=1, q_len=int(q_len), kv_len=int(kv_len),
+                        q_offset=0, window=0))
+                self._grids[key] = OpGrid.build((ATTN_SEQ, ATTN_SEQ), fn)
+            else:
+                def fn(batch, kv_len):
+                    return self._measure(dataclasses.replace(
+                        a, batch=int(batch), q_len=1, kv_len=int(kv_len),
+                        window=0))
+                self._grids[key] = OpGrid.build((ATTN_BATCH, ATTN_SEQ), fn)
+            self.stats.grids_built += 1
+        return self._grids[key]
+
+    def _moe_grid(self, m: ops.MoEOp) -> OpGrid:
+        key = ("moe", m.d_model, m.d_ff, m.num_experts, m.ep, m.dtype)
+        if key not in self._grids:
+            def fn(rank_tokens):
+                return self._measure(dataclasses.replace(
+                    m, tokens=int(rank_tokens), hot_rank_tokens=int(rank_tokens)))
+            self._grids[key] = OpGrid.build((MOE_TOKENS,), fn)
+            self.stats.grids_built += 1
+        return self._grids[key]
+
+    def _rec_grid(self, r: ops.RecurrentOp) -> OpGrid:
+        key = ("recurrent", r.kind, r.width, r.heads, r.dtype)
+        if key not in self._grids:
+            def fn(tokens):
+                return self._measure(dataclasses.replace(
+                    r, batch=1, seq=int(tokens)))
+            self._grids[key] = OpGrid.build((REC_TOKENS,), fn)
+            self.stats.grids_built += 1
+        return self._grids[key]
+
+    # -- queries -------------------------------------------------------------
+    def op_latency(self, op) -> float:
+        cached = self._memo.get(op)
+        if cached is not None:
+            return cached
+        t = self._op_latency_uncached(op)
+        if len(self._memo) < 1_000_000:
+            self._memo[op] = t
+        return t
+
+    def _op_latency_uncached(self, op) -> float:
+        if not self.use_grid:
+            self.stats.sol_fallbacks += 1
+            return analytical.sol_latency(self.platform, op)
+
+        if isinstance(op, ops.GEMM):
+            g = self._grids.get(("gemm", op.dtype))
+            if g is None:
+                self.stats.sol_fallbacks += 1
+                return analytical.sol_latency(self.platform, op)
+            self.stats.grid_hits += 1
+            return g.query((op.m, op.n, op.k))
+
+        if isinstance(op, ops.Attention):
+            grid = self._attn_grid(op)
+            self.stats.grid_hits += 1
+            kv = op.effective_kv()
+            if op.phase == "prefill":
+                # batch folds linearly (flash tiles over batch)
+                return op.batch * grid.query((op.q_len, max(kv, 1)))
+            return grid.query((op.batch, max(kv, 1)))
+
+        if isinstance(op, ops.MoEOp):
+            grid = self._moe_grid(op)
+            self.stats.grid_hits += 1
+            return grid.query((max(op.rank_tokens(), 1),))
+
+        if isinstance(op, ops.RecurrentOp):
+            grid = self._rec_grid(op)
+            self.stats.grid_hits += 1
+            return op.batch * grid.query((max(op.seq, 1),))
+
+        if isinstance(op, ops.Comm):
+            if op.n_chips <= 1:
+                return 0.0
+            grid = self._comm_grid(op.kind, op.n_chips, op.inter_pod)
+            self.stats.grid_hits += 1
+            return grid.query((max(op.bytes_per_chip, 1.0),))
+
+        # embedding / mem ops: speed-of-light path (paper: unprofiled ops)
+        self.stats.sol_fallbacks += 1
+        return analytical.latency(self.platform, op)
+
+    def sequence_latency(self, op_list: List) -> float:
+        """Accepts plain operators or (operator, count) pairs."""
+        total = 0.0
+        for item in op_list:
+            if isinstance(item, tuple):
+                op, count = item
+                total += count * self.op_latency(op)
+            else:
+                total += self.op_latency(item)
+        return total
+
+    # -- persistence ----------------------------------------------------------
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or os.path.join(
+            os.path.dirname(__file__), "data",
+            f"{self.platform.name}_{self.backend}.json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        blob = {"platform": self.platform.name, "backend": self.backend,
+                "grids": {json.dumps(k): g.to_json()
+                          for k, g in self._grids.items()}}
+        with open(path, "w") as f:
+            json.dump(blob, f)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "PerfDatabase":
+        with open(path) as f:
+            blob = json.load(f)
+        db = cls(blob["platform"], blob["backend"], use_grid=False)
+        db.use_grid = True
+        db._grids = {tuple(json.loads(k)): OpGrid.from_json(g)
+                     for k, g in blob["grids"].items()}
+        return db

@@ -1,0 +1,80 @@
+"""Power-law expert-load correction (§4.4.1, eq. 3–4).
+
+Step 1: sample per-expert load weights from a bounded power law by inverse
+transform sampling; normalize to integer token counts.
+Step 2: build a synthetic router assignment matrix that deterministically
+routes exactly N_i tokens to expert i (bypassing the learned router), so a
+benchmark executes the precise workload shape — and the model captures the
+tail latency of the hottest expert.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+DEFAULT_ALPHA = 1.2       # matches Qwen3-235B observations in the paper
+X_MIN, X_MAX = 1.0, 100.0
+
+
+def sample_weights(num_experts: int, alpha: float,
+                   rng: np.random.Generator,
+                   x_min: float = X_MIN, x_max: float = X_MAX) -> np.ndarray:
+    """Eq. 3: x_i = [ (x_max^{1-a} - x_min^{1-a}) U + x_min^{1-a} ]^{1/(1-a)}."""
+    u = rng.uniform(0.0, 1.0, size=num_experts)
+    if abs(alpha - 1.0) < 1e-9:
+        # limit case: log-uniform
+        return np.exp(np.log(x_min) + u * (np.log(x_max) - np.log(x_min)))
+    e = 1.0 - alpha
+    return (u * (x_max ** e - x_min ** e) + x_min ** e) ** (1.0 / e)
+
+
+def token_counts(total_tokens: int, top_k: int, num_experts: int,
+                 alpha: float, seed: int = 0,
+                 rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """Eq. 4: N_i = round(x_i / Σx_j * T_total * K), residuals rebalanced."""
+    rng = rng or np.random.default_rng(seed)
+    x = sample_weights(num_experts, alpha, rng)
+    target = total_tokens * top_k
+    n = np.round(x / x.sum() * target).astype(np.int64)
+    # distribute rounding residue to keep Σ N_i == T_total * K exactly
+    resid = int(target - n.sum())
+    order = np.argsort(-x)
+    i = 0
+    while resid != 0:
+        j = order[i % num_experts]
+        step = 1 if resid > 0 else -1
+        if n[j] + step >= 0:
+            n[j] += step
+            resid -= step
+        i += 1
+    return n
+
+
+def assignment_matrix(total_tokens: int, counts: np.ndarray) -> np.ndarray:
+    """Step 2: deterministic one-hot-ish routing matrix L (T_total x E) with
+    exactly counts[e] tokens assigned to expert e (column sums == counts).
+    Tokens are striped round-robin so every token gets sum(counts)/T slots."""
+    E = len(counts)
+    L = np.zeros((total_tokens, E), dtype=np.int32)
+    tok = 0
+    for e in np.argsort(-counts):
+        for _ in range(int(counts[e])):
+            L[tok % total_tokens, e] += 1
+            tok += 1
+    return L
+
+
+def hot_rank_tokens(total_tokens: int, top_k: int, num_experts: int,
+                    ep: int, alpha: float, seed: int = 0) -> int:
+    """Expected token count on the hottest EP rank under round-robin expert
+    placement — the quantity the MoE operator's latency follows."""
+    counts = token_counts(total_tokens, top_k, num_experts, alpha, seed)
+    if ep <= 1:
+        return int(counts.sum())
+    # contiguous expert->rank placement; expert identities are exchangeable
+    # under iid sampling, so this is an unbiased placement draw
+    pad = (-len(counts)) % ep
+    padded = np.concatenate([counts, np.zeros(pad, counts.dtype)])
+    per_rank = padded.reshape(ep, -1).sum(axis=1)
+    return int(per_rank.max())

@@ -1,0 +1,181 @@
+"""InferenceSession (§4.1): estimates TTFT/TPOT/throughput for one candidate
+serving configuration by composing iteration-level modeling (decompose) with
+operator latencies from the PerfDatabase, through the mode algorithms.
+
+Throughput follows the paper's steady-state request view:
+
+    GenerationSpeed   = 1000 / TPOT                               (eq. 1)
+    SystemThroughput  = 1000/(TTFT + (OSL-1)*TPOT) * B * OSL / N  (eq. 2)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core import decompose, modes
+from repro.core.backends import profiles  # noqa: F401  (registers backends)
+from repro.core.backends.base import get_backend
+from repro.core.config import (CandidateConfig, ParallelismConfig, Projection,
+                               RuntimeFlags, SLA, WorkloadDescriptor)
+from repro.core.hardware import get_platform
+from repro.core.perf_database import PerfDatabase
+from repro.serving.sim import StepSpec
+
+
+class InferenceSession:
+    def __init__(self, workload: WorkloadDescriptor,
+                 db: Optional[PerfDatabase] = None,
+                 cfg: Optional[ModelConfig] = None):
+        self.w = workload
+        # cfg override supports unregistered variants (e.g. the reduced
+        # models the CPU-silicon fidelity benchmark serves for real)
+        self.cfg: ModelConfig = cfg or get_config(workload.model)
+        self.platform = (db.platform if db is not None
+                         else get_platform(workload.cluster.platform))
+        self.db = db or PerfDatabase(self.platform, workload.backend)
+        self.backend = get_backend(workload.backend)
+
+    # ------------------------------------------------------------------
+    # iteration latencies (ms) — the GETSTEPLATENCY / GETMIXLAT /
+    # GETGENLAT oracles of Algorithms 1–2
+    # ------------------------------------------------------------------
+    def spec_latency_ms(self, par: ParallelismConfig, spec: StepSpec,
+                        flags: RuntimeFlags) -> float:
+        if self.backend.sequential_prefill and len(spec.prefill) > 1:
+            # engine launches one kernel per prompt: no cross-prompt GEMM
+            # batching — price each chunk as its own mini-iteration
+            t = 0.0
+            for chunk in spec.prefill:
+                t += self.spec_latency_ms(
+                    par, StepSpec(prefill=(chunk,), decode=()), flags)
+            if spec.decode:
+                t += self.spec_latency_ms(
+                    par, StepSpec(prefill=(), decode=spec.decode), flags)
+            return t
+        op_list = decompose.iteration_ops(
+            self.cfg, par, spec, alpha=self.w.moe_alpha,
+            backend=self.w.backend, dtype=self.w.dtype)
+        t = self.db.sequence_latency(op_list)
+        t += self.backend.iteration_overhead(
+            len(spec.prefill), len(spec.decode), flags.enable_graph_capture)
+        return 1e3 * t
+
+    def step_latency_ms(self, par: ParallelismConfig, flags: RuntimeFlags,
+                        batch: int, seq: int, phase: str) -> float:
+        if phase == "prefill":
+            spec = StepSpec(prefill=tuple((seq, 0) for _ in range(batch)),
+                            decode=())
+        else:
+            spec = StepSpec(prefill=(), decode=(seq,) * batch)
+        return self.spec_latency_ms(par, spec, flags)
+
+    def mix_lat_ms(self, par, flags, n_ctx: int, n_gen: int,
+                   isl: int, osl: int) -> float:
+        chunks: List[Tuple[int, int]] = []
+        remaining = n_ctx
+        while remaining > 0:
+            take = min(isl, remaining)
+            chunks.append((take, 0))
+            remaining -= take
+        kv = isl + osl // 2
+        spec = StepSpec(prefill=tuple(chunks), decode=(kv,) * n_gen)
+        return self.spec_latency_ms(par, spec, flags)
+
+    def gen_lat_ms(self, par, flags, batch: int, isl: int, osl: int) -> float:
+        kv = isl + osl // 2
+        return self.spec_latency_ms(
+            par, StepSpec(prefill=(), decode=(kv,) * batch), flags)
+
+    # ------------------------------------------------------------------
+    # candidate evaluation
+    # ------------------------------------------------------------------
+    def _throughput(self, ttft_ms: float, tpot_ms: float, batch: int,
+                    chips: int) -> float:
+        osl = self.w.osl
+        denom = ttft_ms + (osl - 1) * tpot_ms
+        if denom <= 0:
+            return 0.0
+        return 1000.0 / denom * batch * osl / chips
+
+    def _mem_ok(self, cand: CandidateConfig) -> Tuple[bool, float]:
+        return decompose.fits_memory(
+            self.cfg, cand.parallel, cand.batch_size,
+            self.w.isl + self.w.osl, self.platform, cand.flags, self.w.dtype)
+
+    def evaluate_static(self, cand: CandidateConfig) -> Optional[Projection]:
+        ok, mem = self._mem_ok(cand)
+        if not ok:
+            return None
+        ttft, tpot = modes.static_mode(
+            lambda b, s, ph: self.step_latency_ms(cand.parallel, cand.flags,
+                                                  b, s, ph),
+            self.w.isl, self.w.osl, cand.batch_size, self.w.prefix_len)
+        chips = cand.parallel.chips_per_instance
+        return Projection(
+            ttft_ms=ttft, tpot_ms=tpot,
+            tokens_per_s_user=1000.0 / tpot if tpot else float("inf"),
+            tokens_per_s_per_chip=self._throughput(ttft, tpot,
+                                                   cand.batch_size, chips),
+            chips=chips, batch_size=cand.batch_size, mode="static",
+            config={"parallel": dataclasses.asdict(cand.parallel),
+                    "flags": dataclasses.asdict(cand.flags),
+                    "describe": cand.describe()},
+            mem_bytes_per_chip=mem)
+
+    def evaluate_aggregated(self, cand: CandidateConfig) -> Optional[Projection]:
+        ok, mem = self._mem_ok(cand)
+        if not ok:
+            return None
+        c_ctx = (cand.flags.max_num_tokens if cand.flags.enable_chunked_context
+                 else max(cand.flags.max_num_tokens, self.w.isl))
+        ttft, tpot = modes.aggregated_mode(
+            lambda nc, ng, i, o: self.mix_lat_ms(cand.parallel, cand.flags,
+                                                 nc, ng, i, o),
+            lambda b, i, o: self.gen_lat_ms(cand.parallel, cand.flags, b, i, o),
+            self.w.isl, self.w.osl, cand.batch_size, c_ctx,
+            f_corr_base=self.backend.f_corr_base)
+        chips = cand.parallel.chips_per_instance
+        return Projection(
+            ttft_ms=ttft, tpot_ms=tpot,
+            tokens_per_s_user=1000.0 / tpot if tpot else float("inf"),
+            tokens_per_s_per_chip=self._throughput(ttft, tpot,
+                                                   cand.batch_size, chips),
+            chips=chips, batch_size=cand.batch_size, mode="aggregated",
+            config={"parallel": dataclasses.asdict(cand.parallel),
+                    "flags": dataclasses.asdict(cand.flags),
+                    "describe": cand.describe()},
+            mem_bytes_per_chip=mem)
+
+    # -- disaggregated pool candidates ----------------------------------
+    def prefill_pool_candidate(self, cand: CandidateConfig
+                               ) -> Optional[modes.PoolCandidate]:
+        """Prefill instance: batches of cand.batch prompts, latency = TTFT."""
+        ok, _ = self._mem_ok(dataclasses.replace(cand, batch_size=cand.batch_size))
+        if not ok:
+            return None
+        lat = self.step_latency_ms(cand.parallel, cand.flags,
+                                   cand.batch_size, self.w.isl, "prefill")
+        rate = cand.batch_size / (lat / 1e3)        # requests/s
+        return modes.PoolCandidate(config=cand,
+                                   chips=cand.parallel.chips_per_instance,
+                                   latency_ms=lat, req_throughput=rate)
+
+    def decode_pool_candidate(self, cand: CandidateConfig
+                              ) -> Optional[modes.PoolCandidate]:
+        ok, _ = self._mem_ok(cand)
+        if not ok:
+            return None
+        _, tpot = modes.static_mode(
+            lambda b, s, ph: self.step_latency_ms(cand.parallel, cand.flags,
+                                                  b, s, ph),
+            self.w.isl, self.w.osl, cand.batch_size)
+        if tpot <= 0:
+            return None
+        # one instance completes batch requests every (osl-1)*tpot
+        rate = cand.batch_size / (max(self.w.osl - 1, 1) * tpot / 1e3)
+        return modes.PoolCandidate(config=cand,
+                                   chips=cand.parallel.chips_per_instance,
+                                   latency_ms=tpot, req_throughput=rate)

@@ -1,0 +1,81 @@
+"""Speculative-decoding extension (beyond-paper: §7 lists it as future
+work).
+
+Models draft-and-verify decoding on top of the operator database:
+
+  - the DRAFT model runs γ autoregressive steps,
+  - the TARGET model verifies γ+1 tokens in ONE step (a γ+1-token
+    "mini-prefill" against the full KV cache),
+  - with per-token acceptance rate a, the expected accepted tokens per
+    round is E[n] = (1 - a^{γ+1}) / (1 - a)  (Leviathan et al. 2023),
+
+so TPOT_spec = (γ·T_draft + T_verify(γ+1)) / E[n].  Both step latencies
+come from the same PerfDatabase the rest of the configurator uses, so the
+search composes: ``best_gamma`` sweeps γ under the workload's SLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.configs import get_config
+from repro.core.config import ParallelismConfig, RuntimeFlags, WorkloadDescriptor
+from repro.core.perf_database import PerfDatabase
+from repro.core.session import InferenceSession
+from repro.serving.sim import StepSpec
+
+
+def expected_accepted(gamma: int, acceptance: float) -> float:
+    """E[tokens emitted per draft-verify round] (includes the bonus token)."""
+    a = min(max(acceptance, 0.0), 0.9999)
+    return (1.0 - a ** (gamma + 1)) / (1.0 - a)
+
+
+@dataclasses.dataclass
+class SpecDecodeProjection:
+    gamma: int
+    tpot_ms: float                 # effective per-token latency
+    tokens_per_s_user: float
+    speedup_vs_autoregressive: float
+    draft_step_ms: float
+    verify_step_ms: float
+    accepted_per_round: float
+
+
+class SpeculativeEstimator:
+    def __init__(self, workload: WorkloadDescriptor, draft_model: str,
+                 db: Optional[PerfDatabase] = None):
+        self.w = workload
+        self.target = InferenceSession(workload, db)
+        draft_w = dataclasses.replace(workload, model=draft_model)
+        self.draft = InferenceSession(draft_w, self.target.db)
+
+    def evaluate(self, par: ParallelismConfig, batch: int, gamma: int,
+                 acceptance: float,
+                 flags: RuntimeFlags = RuntimeFlags()) -> SpecDecodeProjection:
+        kv = self.w.isl + self.w.osl // 2
+        t_draft = self.draft.spec_latency_ms(
+            par, StepSpec(prefill=(), decode=(kv,) * batch), flags)
+        # verification: γ+1 query tokens per sequence against the cache —
+        # a chunked-prefill-shaped step (compute-denser than decode)
+        t_verify = self.target.spec_latency_ms(
+            par, StepSpec(prefill=tuple((gamma + 1, kv)
+                                        for _ in range(batch)),
+                          decode=()), flags)
+        t_ar = self.target.spec_latency_ms(
+            par, StepSpec(prefill=(), decode=(kv,) * batch), flags)
+        acc = expected_accepted(gamma, acceptance)
+        tpot = (gamma * t_draft + t_verify) / acc
+        return SpecDecodeProjection(
+            gamma=gamma, tpot_ms=tpot,
+            tokens_per_s_user=1000.0 / tpot if tpot else float("inf"),
+            speedup_vs_autoregressive=t_ar / tpot if tpot else 0.0,
+            draft_step_ms=t_draft, verify_step_ms=t_verify,
+            accepted_per_round=acc)
+
+    def best_gamma(self, par: ParallelismConfig, batch: int,
+                   acceptance: float, max_gamma: int = 8
+                   ) -> Tuple[SpecDecodeProjection, list]:
+        projs = [self.evaluate(par, batch, g, acceptance)
+                 for g in range(1, max_gamma + 1)]
+        return min(projs, key=lambda p: p.tpot_ms), projs

@@ -1,0 +1,166 @@
+"""TaskRunner (§4.1): builds the candidate search space from a workload
+descriptor, drives InferenceSession over every candidate, hands the results
+to the Pareto analyzer, and reports search timing (Table 1's metric).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import get_config
+from repro.core import modes, pareto
+from repro.core.config import (CandidateConfig, DisaggConfig,
+                               ParallelismConfig, Projection, RuntimeFlags,
+                               WorkloadDescriptor)
+from repro.core.perf_database import PerfDatabase
+from repro.core.session import InferenceSession
+
+BATCH_SWEEP = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+MAX_TOKENS_SWEEP = (4096, 8192, 16384)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    projections: List[Projection]
+    best: Optional[Projection]
+    frontier: List[Projection]
+    n_candidates: int
+    elapsed_s: float
+    per_candidate_ms: float
+    disagg_best: Optional[modes.DisaggBest] = None
+
+    def summary(self) -> str:
+        lines = [f"evaluated {self.n_candidates} candidates in "
+                 f"{self.elapsed_s:.2f}s "
+                 f"({self.per_candidate_ms:.2f} ms/config)"]
+        if self.best:
+            b = self.best
+            lines.append(
+                f"best [{b.mode}] {b.config.get('describe', '')}: "
+                f"{b.tokens_per_s_per_chip:.1f} tok/s/chip @ "
+                f"{b.tokens_per_s_user:.1f} tok/s/user "
+                f"(TTFT {b.ttft_ms:.0f}ms)")
+        return "\n".join(lines)
+
+
+class TaskRunner:
+    def __init__(self, workload: WorkloadDescriptor,
+                 db: Optional[PerfDatabase] = None):
+        self.w = workload
+        self.session = InferenceSession(workload, db)
+        self.cfg = get_config(workload.model)
+
+    # ------------------------------------------------------------------
+    def parallelism_candidates(self, max_chips: Optional[int] = None
+                               ) -> List[ParallelismConfig]:
+        cluster = self.w.cluster
+        limit = max_chips or cluster.n_chips
+        out = []
+        tp = 1
+        while tp <= limit:
+            pp = 1
+            while tp * pp <= limit:
+                eps = [1]
+                if self.cfg.num_experts:
+                    eps = [e for e in (1, 2, 4, 8, 16, 32, 64)
+                           if e <= tp and tp % e == 0
+                           and e <= self.cfg.num_experts]
+                for ep in eps:
+                    out.append(ParallelismConfig(tp=tp, pp=pp, ep=ep))
+                pp *= 2
+                if pp > 8 or pp > self.cfg.num_layers:
+                    break
+            tp *= 2
+        return out
+
+    def candidates(self, sweep_flags: bool = False) -> List[CandidateConfig]:
+        out = []
+        toks = MAX_TOKENS_SWEEP if sweep_flags else (
+            self.session.backend.default_max_num_tokens,)
+        for par, b, mt in itertools.product(
+                self.parallelism_candidates(), BATCH_SWEEP, toks):
+            out.append(CandidateConfig(
+                parallel=par, batch_size=b,
+                flags=RuntimeFlags(max_num_tokens=mt)))
+        return out
+
+    # ------------------------------------------------------------------
+    def run(self, sweep_flags: bool = False,
+            keep_all_disagg: bool = False) -> SearchResult:
+        t0 = time.perf_counter()
+        projs: List[Projection] = []
+        cands = self.candidates(sweep_flags)
+        n_eval = 0
+
+        if "static" in self.w.modes or "aggregated" in self.w.modes:
+            for cand in cands:
+                if "static" in self.w.modes:
+                    p = self.session.evaluate_static(cand)
+                    n_eval += 1
+                    if p:
+                        projs.append(p)
+                if "aggregated" in self.w.modes:
+                    p = self.session.evaluate_aggregated(cand)
+                    n_eval += 1
+                    if p:
+                        projs.append(p)
+
+        disagg_best = None
+        if "disaggregated" in self.w.modes:
+            disagg_best, disagg_all = self._run_disagg(keep_all_disagg)
+            n_eval += len(disagg_all) if disagg_all else 0
+            if disagg_best:
+                projs.append(self._disagg_projection(disagg_best))
+            for d in disagg_all or []:
+                if d is not disagg_best:
+                    projs.append(self._disagg_projection(d))
+
+        elapsed = time.perf_counter() - t0
+        best = pareto.best(projs, self.w.sla)
+        return SearchResult(
+            projections=projs, best=best, frontier=pareto.frontier(projs),
+            n_candidates=n_eval, elapsed_s=elapsed,
+            per_candidate_ms=1e3 * elapsed / max(n_eval, 1),
+            disagg_best=disagg_best)
+
+    # ------------------------------------------------------------------
+    def _run_disagg(self, keep_all: bool):
+        # prefill pool: small batches, TP-heavy; decode pool: big batches
+        pre_pool, dec_pool = [], []
+        for par in self.parallelism_candidates():
+            for b in (1, 2, 4, 8):
+                c = self.session.prefill_pool_candidate(
+                    CandidateConfig(parallel=par, batch_size=b))
+                if c:
+                    pre_pool.append(c)
+            for b in BATCH_SWEEP:
+                c = self.session.decode_pool_candidate(
+                    CandidateConfig(parallel=par, batch_size=b))
+                if c:
+                    dec_pool.append(c)
+        best, everything = modes.disaggregated_mode(
+            pre_pool, dec_pool,
+            self.w.sla.ttft_ms, self.w.sla.tpot_limit_ms(),
+            valid_totals=range(1, self.w.cluster.n_chips + 1),
+            osl=self.w.osl, keep_all=keep_all)
+        return best, everything
+
+    def _disagg_projection(self, d: modes.DisaggBest) -> Projection:
+        return Projection(
+            ttft_ms=d.ttft_ms, tpot_ms=d.tpot_ms,
+            tokens_per_s_user=1000.0 / d.tpot_ms if d.tpot_ms else float("inf"),
+            tokens_per_s_per_chip=d.tokens_per_s_per_chip,
+            chips=d.total_chips,
+            batch_size=d.decode.config.batch_size,
+            mode="disaggregated",
+            config={
+                "describe": DisaggConfig(
+                    prefill=d.prefill.config, decode=d.decode.config,
+                    x=d.x, y=d.y).describe(),
+                "prefill": {"parallel": dataclasses.asdict(d.prefill.config.parallel),
+                            "batch": d.prefill.config.batch_size, "x": d.x},
+                "decode": {"parallel": dataclasses.asdict(d.decode.config.parallel),
+                           "batch": d.decode.config.batch_size, "y": d.y},
+            })

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Sk, K, D) with H % K == 0."""
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    g = H // K
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        m = kpos <= qpos + (Sk - Sq)
+        if window:
+            m &= kpos > qpos + (Sk - Sq) - window
+        logits = jnp.where(m[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         valid_len: jax.Array) -> jax.Array:
+    """q: (B, H, D); caches: (B, W, K, D); valid_len: (B,)."""
+    B, H, D = q.shape
+    W, K = k_cache.shape[1], k_cache.shape[2]
+    g = H // K
+    k = jnp.repeat(k_cache, g, axis=2).astype(jnp.float32)
+    v = jnp.repeat(v_cache, g, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k) * (D ** -0.5)
+    valid = jnp.arange(W)[None, :] < valid_len[:, None]
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v).astype(q.dtype)
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (B, S, W) fp32; h0: (B, W).  Returns all states (B, S, W)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    _, hs = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def moe_gemm_ref(xe: jax.Array, we: jax.Array) -> jax.Array:
+    """Grouped GEMM: xe (E, C, D) @ we (E, D, F) -> (E, C, F), fp32 accum."""
+    return jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                      we.astype(jnp.float32)).astype(xe.dtype)

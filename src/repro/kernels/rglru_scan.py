@@ -1,0 +1,89 @@
+"""RG-LRU gated linear recurrence — Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t over the sequence, blocked (batch, width) with the
+sequence-block index as the minor (sequential) grid dimension; the running
+state h lives in VMEM scratch across sequence blocks, so each (B, W) tile
+streams its gates once from HBM — the recurrence is purely memory-bound,
+matching the RecurrentOp model in core/operators.py.
+
+(The pure-jnp path uses ``lax.associative_scan`` — log-depth but 3x the HBM
+traffic; the kernel is the linear-traffic alternative the paper's operator
+DB would profile.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _SCRATCH = lambda shape: pltpu.VMEM(shape, jnp.float32)
+except Exception:  # pragma: no cover
+    pltpu = None
+    _SCRATCH = lambda shape: pl.VMEM(shape, jnp.float32)
+
+DEFAULT_BB = 8
+DEFAULT_BS = 128
+DEFAULT_BW = 128
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, h_ref, *, bs: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)      # (bs, bw)
+    b = b_ref[0].astype(jnp.float32)
+    h = h_ref[...]                        # (bb=1 squeezed? no: (bb, bw))
+
+    def step(t, carry):
+        h = carry
+        h = a[t] * h + b[t]
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, bs, step, h)
+    h_ref[...] = h
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+               block_s: int = DEFAULT_BS, block_w: int = DEFAULT_BW,
+               interpret: bool = False) -> jax.Array:
+    """a, b: (B, S, W); h0: (B, W).  Returns all states (B, S, W).
+
+    Batch is handled one row per program (bb=1) so the inner loop is a pure
+    (bw,)-vector recurrence on the VPU."""
+    B, S, W = a.shape
+    bs = min(block_s, S)
+    bw = min(block_w, W)
+    pad_s = (-S) % bs
+    pad_w = (-W) % bw
+    if pad_s or pad_w:
+        a = jnp.pad(a, ((0, 0), (0, pad_s), (0, pad_w)))
+        b = jnp.pad(b, ((0, 0), (0, pad_s), (0, pad_w)))
+    if pad_w:
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_w)))
+    ns = a.shape[1] // bs
+    nw = a.shape[2] // bw
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs),
+        grid=(B, nw, ns),
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda i, w, s: (i, s, w)),
+            pl.BlockSpec((1, bs, bw), lambda i, w, s: (i, s, w)),
+            pl.BlockSpec((1, bw), lambda i, w, s: (i, w)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bw), lambda i, w, s: (i, s, w)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        scratch_shapes=[_SCRATCH((bw,))],
+        interpret=interpret,
+    )(a, b, h0)
+    if pad_s or pad_w:
+        out = out[:, :S, :W]
+    return out

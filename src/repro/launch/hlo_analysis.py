@@ -1,0 +1,329 @@
+"""Trip-count-aware HLO accounting.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+program with ``lax.scan`` (our layer stacks, blockwise attention, microbatch
+accumulation) under-reports FLOPs/bytes/collectives by the loop trip counts.
+This module parses the partitioned HLO text, recovers the call graph
+(while bodies x trip count, fusions, calls), and accumulates:
+
+  - matmul FLOPs (dot ops, contracting dims resolved from operand shapes),
+  - approximate HBM bytes (operand+result bytes of top-level ops at fusion
+    boundaries — fused interiors stay on-chip),
+  - per-kind collective bytes (result shapes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute).
+
+Everything is per-device (the HLO is the per-device SPMD module).
+
+Trip counts come from the canonical jax scan condition
+``compare(iter, constant), direction=LT`` with iter starting at 0; loops
+whose bound cannot be recovered default to 1 (and are reported).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+                "f8e5m2fnuz": 1, "f8e4m3fnuz": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(
+    r"(?:branch_computations=\{([^}]*)\}"
+    r"|true_computation=%?([\w.\-]+)|false_computation=%?([\w.\-]+))")
+
+
+def _called_all(rhs: str):
+    out = list(_CALLED_RE.findall(rhs))
+    for m in _BRANCHES_RE.finditer(rhs):
+        if m.group(1):
+            out += [b.strip().lstrip("%") for b in m.group(1).split(",")]
+        for g in (m.group(2), m.group(3)):
+            if g:
+                out.append(g)
+    return out
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(text: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(text: str) -> List[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    rhs: str                      # full right-hand side text
+    result_text: str              # type portion
+    kind: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_fused: bool
+
+
+def _split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        # computation header: "%name (...) -> type {" or "ENTRY %name ..."
+        if s.endswith("{") and ("(" in s) and ("=" not in s.split("(")[0]):
+            header = s.split("(")[0].strip()
+            name = header.replace("ENTRY", "").strip().lstrip("%").strip()
+            cur = Computation(name=name, ops=[],
+                              is_fused=name.startswith("fused_")
+                              or ".fused" in name)
+            comps[name] = cur
+            continue
+        if s == "}" or s.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        opname, rhs = m.group(1), m.group(2)
+        # kind = first word after the type, e.g. "bf16[2,3]{1,0} dot(...)"
+        km = re.search(r"\)?\s*([a-z][\w\-]*)\(", rhs)
+        kind = km.group(1) if km else ""
+        # result text = rhs up to the op kind
+        rt = rhs[:km.start()] if km else rhs
+        cur.ops.append(Op(name=opname, rhs=rhs, result_text=rt, kind=kind))
+    return comps
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """Recover N from the canonical jax scan condition: the loop bound is
+    the (max) s32 constant in the condition region.  (The compare itself is
+    often inside a fused sub-computation, so we don't require seeing
+    direction=LT here.)"""
+    consts = []
+    for op in cond.ops:
+        consts += [int(c) for c in _CONST_RE.findall(op.rhs)]
+    return max(consts) if consts else None
+
+
+def _operands(op: Op) -> List[str]:
+    """Operand names from the paren group FOLLOWING the op kind (tuple-typed
+    results put a paren group before the op kind)."""
+    m = re.search(r"\b" + re.escape(op.kind) + r"\(([^)]*)\)", op.rhs)
+    if not m:
+        return []
+    return [o.strip().lstrip("%") for o in m.group(1).split(",") if o.strip()]
+
+
+def _dot_flops(op: Op, symbols: Dict[str, str]) -> float:
+    """2 * prod(result dims) * prod(contracting dim sizes of lhs)."""
+    res_dims = shape_dims(op.result_text)
+    operands = _operands(op)
+    lhs_text = symbols.get(operands[0], "") if operands else ""
+    lhs_dims = shape_dims(lhs_text if lhs_text else op.rhs)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rhs)
+    contract = 1
+    if cm and lhs_dims:
+        for d in cm.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                contract *= lhs_dims[int(d)]
+    n = 1
+    for d in res_dims:
+        n *= d
+    return 2.0 * n * contract
+
+
+def _fusion_input_bytes(op: Op, comps: Dict[str, "Computation"],
+                        caller_tab: Dict[str, str]) -> float:
+    """Bytes a fusion actually reads per input: inputs consumed ONLY by
+    slice/dynamic-slice/gather inside the fused computation contribute the
+    sliced size, not the full operand (scan bodies slice their stacked
+    xs — counting the whole stack per iteration would overstate HBM
+    traffic by the trip count)."""
+    operands = _operands(op)
+    targets = _CALLED_RE.findall(op.rhs)
+    called = comps.get(targets[0]) if targets else None
+    if called is None:
+        return sum(shape_bytes(caller_tab.get(o, "")) for o in operands)
+    # parameter name -> operand index
+    param_idx: Dict[str, int] = {}
+    for fop in called.ops:
+        if fop.kind == "parameter":
+            mm = re.search(r"parameter\((\d+)\)", fop.rhs)
+            if mm:
+                param_idx[fop.name] = int(mm.group(1))
+    sliced_bytes: Dict[int, float] = {}
+    full_needed: Dict[int, bool] = {}
+    for fop in called.ops:
+        if fop.kind == "parameter":
+            continue
+        for o in _operands(fop):
+            if o in param_idx:
+                idx = param_idx[o]
+                if fop.kind in ("slice", "dynamic-slice", "gather"):
+                    sliced_bytes[idx] = sliced_bytes.get(idx, 0.0) \
+                        + shape_bytes(fop.result_text)
+                else:
+                    full_needed[idx] = True
+    total = 0.0
+    for i, o in enumerate(operands):
+        full = shape_bytes(caller_tab.get(o, ""))
+        if full_needed.get(i) or i not in sliced_bytes:
+            total += full
+        else:
+            total += min(sliced_bytes[i], full)
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    unresolved_loops: int = 0
+
+    def collective_total(self) -> float:
+        return sum(self.collectives.values())
+
+
+def analyze(hlo_text: str) -> HloStats:
+    comps = _split_computations(hlo_text)
+    stats = HloStats()
+
+    # a computation is "fused" iff some fusion op calls it (names alone are
+    # unreliable: kLoop fusions are often %wrapped_*_computation)
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                for target in _CALLED_RE.findall(op.rhs):
+                    if target in comps:
+                        comps[target].is_fused = True
+
+    # symbol table per computation: op name -> result text (for operand shapes)
+    symtabs: Dict[str, Dict[str, str]] = {}
+    for cname, comp in comps.items():
+        tab: Dict[str, str] = {}
+        for op in comp.ops:
+            tab[op.name] = op.result_text or op.rhs
+        # parameters are declared like "%p = bf16[...] parameter(0)" — covered
+        symtabs[cname] = tab
+
+    # multipliers via worklist from ENTRY
+    entry = None
+    for cname, comp in comps.items():
+        if "main" in cname or entry is None:
+            if entry is None or "main" in cname:
+                entry = cname
+    mult: Dict[str, float] = {}
+    work: List[Tuple[str, float]] = [(entry, 1.0)]
+    visited_pairs = set()
+    while work:
+        cname, m = work.pop()
+        if cname not in comps:
+            continue
+        mult[cname] = mult.get(cname, 0.0) + m
+        comp = comps[cname]
+        for op in comp.ops:
+            if op.kind == "while":
+                bm = _CALLED_RE.search(op.rhs)
+                cm_ = _COND_RE.search(op.rhs)
+                trips = None
+                if cm_ and cm_.group(1) in comps:
+                    trips = _trip_count(comps[cm_.group(1)])
+                if trips is None:
+                    trips = 1
+                    stats.unresolved_loops += 1
+                if bm:
+                    key = (cname, op.name, bm.group(1))
+                    if key not in visited_pairs:
+                        visited_pairs.add(key)
+                        work.append((bm.group(1), m * trips))
+            elif op.kind in ("fusion", "call", "conditional",
+                             "async-start", "custom-call"):
+                # NOTE: conditional branches are both counted at the full
+                # multiplier — an upper bound; runtime executes one branch
+                # (the causal block-skip's saving is reported analytically)
+                for target in _called_all(op.rhs):
+                    key = (cname, op.name, target)
+                    if key not in visited_pairs:
+                        visited_pairs.add(key)
+                        work.append((target, m))
+
+    # accumulate
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        tab = symtabs[cname]
+        for op in comp.ops:
+            if op.kind == "dot":
+                stats.flops += m * _dot_flops(op, tab)
+            elif op.kind == "convolution":
+                # approximate: 2 * result elems * (contraction guess skipped)
+                res = shape_dims(op.result_text)
+                n = 1
+                for d in res:
+                    n *= d
+                stats.flops += m * 2.0 * n
+            for kind in COLLECTIVES:
+                if op.kind == kind or op.kind == kind + "-start":
+                    stats.collectives[kind] += m * shape_bytes(op.result_text)
+                    break
+            # bytes: approximate the HBM traffic a WELL-FUSED (TPU) backend
+            # would see.  Only memory-bearing ops count; pure elementwise /
+            # reduce / copy / transpose chains are assumed fused into their
+            # producers (the CPU backend leaves them unfused, which would
+            # overstate traffic by orders of magnitude).
+            if not comp.is_fused:
+                if op.kind in ("slice", "dynamic-slice", "gather"):
+                    # reads only the sliced region (+ writes it)
+                    b = 2.0 * shape_bytes(op.result_text)
+                elif op.kind in ("dynamic-update-slice", "scatter"):
+                    # in-place region write: traffic ~ 2x the update operand
+                    operands = _operands(op)
+                    upd = operands[1] if len(operands) > 1 else None
+                    b = 2.0 * shape_bytes(tab.get(upd, "")) if upd else 0.0
+                elif op.kind == "fusion":
+                    b = shape_bytes(op.result_text)
+                    b += _fusion_input_bytes(op, comps, tab)
+                elif op.kind in ("dot", "convolution"):
+                    b = shape_bytes(op.result_text)
+                    for operand in _operands(op):
+                        if operand in tab:
+                            b += shape_bytes(tab[operand])
+                elif op.kind in COLLECTIVES or op.kind.rstrip("-start") in COLLECTIVES:
+                    b = shape_bytes(op.result_text)
+                else:
+                    b = 0.0
+                stats.bytes_accessed += m * b
+    return stats

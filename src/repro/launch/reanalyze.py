@@ -1,0 +1,47 @@
+"""Offline re-analysis of archived partitioned HLO.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze \
+        --jsonl results/dryrun.jsonl --hlo-dir results/hlo
+
+Recomputes the trip-count-corrected FLOPs/bytes/collectives with the
+current hlo_analysis and rewrites the jsonl in place — iterating on the
+analyzer never requires recompiling the 68-entry matrix.
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import os
+
+from repro.launch import hlo_analysis
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="results/dryrun.jsonl")
+    ap.add_argument("--hlo-dir", default="results/hlo")
+    args = ap.parse_args()
+
+    recs = [json.loads(l) for l in open(args.jsonl)]
+    n_updated = 0
+    for r in recs:
+        path = os.path.join(args.hlo_dir,
+                            f"{r['arch']}_{r['shape']}_{r['mesh']}.hlo.gz")
+        if not r.get("ok") or not os.path.exists(path):
+            continue
+        with gzip.open(path, "rt") as f:
+            st = hlo_analysis.analyze(f.read())
+        r["flops_corrected"] = st.flops
+        r["bytes_corrected"] = st.bytes_accessed
+        r["collectives"] = st.collectives
+        r["unresolved_loops"] = st.unresolved_loops
+        n_updated += 1
+    with open(args.jsonl, "w") as f:
+        for r in recs:
+            f.write(json.dumps(r) + "\n")
+    print(f"re-analyzed {n_updated}/{len(recs)} records -> {args.jsonl}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Serving driver — consumes the configurator's Generator output.
+
+    # from a generated launch file:
+    PYTHONPATH=src python -m repro.launch.serve --launch-config out.json
+
+    # or directly:
+    PYTHONPATH=src python -m repro.launch.serve --model internlm2-1.8b \
+        --max-batch 4 --requests 8 --isl 16 --osl 8
+
+Runs the real continuous-batching engine (reduced config on CPU) over a
+synthetic workload and reports TTFT/TPOT/throughput — the measured
+counterpart to the configurator's projections.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import numpy as np
+
+from repro import models
+from repro.configs import get_config
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--launch-config", default="")
+    ap.add_argument("--model", default="internlm2-1.8b")
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--pp", type=int, default=1)
+    ap.add_argument("--ep", type=int, default=1)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-num-tokens", type=int, default=8192)
+    ap.add_argument("--kv-cache-hbm-fraction", type=float, default=0.9)
+    ap.add_argument("--chunked-prefill", action="store_true")
+    ap.add_argument("--decode-bucketing", action="store_true")
+    ap.add_argument("--disaggregated", action="store_true")
+    ap.add_argument("--prefill", default="")
+    ap.add_argument("--decode", default="")
+    ap.add_argument("--decode-batch", type=int, default=0)
+    ap.add_argument("--kv-frac", type=float, default=0.9)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--isl", type=int, default=16)
+    ap.add_argument("--osl", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    model, max_batch = args.model, args.max_batch
+    if args.launch_config:
+        with open(args.launch_config) as f:
+            lc = json.load(f)
+        model = lc["model"]
+        if lc.get("mode") == "disaggregated":
+            max_batch = lc["decode_workers"]["batch_size"]
+        else:
+            max_batch = lc["batch_size"]
+        print(f"loaded launch config: {lc.get('mode')} "
+              f"{lc.get('parallel', lc.get('decode_workers'))}")
+    if args.disaggregated:
+        print(f"[disaggregated] prefill={args.prefill} decode={args.decode} "
+              "— single-host run executes the decode pool shape")
+        if args.decode_batch:
+            max_batch = args.decode_batch
+
+    cfg = get_config(model).reduced()
+    params = models.init_params(cfg, jax.random.PRNGKey(args.seed))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=min(max_batch, 16),
+        max_seq=max(args.isl + args.osl + 8, 64),
+        kv_cache_hbm_fraction=args.kv_cache_hbm_fraction,
+        decode_bucketing=args.decode_bucketing,
+        max_num_tokens=args.max_num_tokens))
+
+    rng = np.random.default_rng(args.seed)
+    t_start = time.perf_counter()
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, args.isl).tolist()
+        eng.add_request(Request(rid=i, isl=args.isl, osl=args.osl,
+                                arrival=time.perf_counter(), prompt=prompt))
+    done = eng.run_until_drained()
+    wall = time.perf_counter() - t_start
+
+    ttfts = [r.ttft for r in done if r.ttft is not None]
+    tpots = [r.tpot for r in done if r.tpot is not None]
+    gen = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests in {wall:.2f}s on "
+          f"{jax.default_backend()}")
+    print(f"TTFT p50 {1e3*statistics.median(ttfts):.1f}ms  "
+          f"TPOT p50 {1e3*statistics.median(tpots):.2f}ms  "
+          f"throughput {gen/wall:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

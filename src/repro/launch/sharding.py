@@ -1,0 +1,198 @@
+"""Logical-axis -> mesh-axis sharding resolution.
+
+Param schemas carry logical axes ('embed', 'vocab', 'heads', 'kv', 'ffn',
+'experts', 'layers'); this module maps them to PartitionSpecs for a given
+mesh + ShardingRules + mode, with a divisibility guard: a mesh axis is only
+assigned when the dim divides evenly (uneven GSPMD padding is never relied
+on — what doesn't divide is replicated, and the roofline shows the cost).
+
+Baseline layout (megatron-style TP on 'model', FSDP on 'data' for training
+and for serve-time models too big to replicate across the data axis,
+expert-parallel on 'model' when num_experts divides):
+
+  batch axes: ('pod', 'data') when the pod axis exists.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, schema_axes
+
+SERVE_FSDP_THRESHOLD = 0.75     # of HBM capacity (v5e 16 GiB)
+V5E_HBM = 16 * 2 ** 30
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _param_bytes(cfg: ModelConfig) -> float:
+    return cfg.param_count() * 2.0          # bf16
+
+
+def logical_map(cfg: ModelConfig, mode: str, mesh: Mesh) -> Dict[str, Any]:
+    rules = cfg.sharding
+    sizes = mesh_axis_sizes(mesh)
+    model_n = sizes.get("model", 1)
+    fsdp = mode == "train"
+    if mode == "serve" and _param_bytes(cfg) / model_n > SERVE_FSDP_THRESHOLD * V5E_HBM:
+        fsdp = True                          # too big to replicate (mixtral)
+    if "expert" in sizes and cfg.num_experts \
+            and cfg.num_experts % sizes["expert"] == 0:
+        # dedicated expert axis (perf-iteration mesh): non-expert weights
+        # TP across the COMBINED (expert, model) axes; expert weights EP on
+        # 'expert' + TP on 'model' within each expert
+        tp = ("expert", "model")
+        return {
+            "layers": None,
+            "vocab": tp if rules.shard_vocab else None,
+            "heads": tp if rules.shard_heads else None,
+            "kv": tp,
+            "ffn": ("model" if rules.shard_ffn and rules.moe_ffn_tp
+                    else None),
+            "experts": "expert",
+            "embed": "data" if (mode == "train" or
+                                _param_bytes(cfg) / model_n
+                                > SERVE_FSDP_THRESHOLD * V5E_HBM) else None,
+            None: None,
+        }
+    moe_expert_par = (cfg.num_experts and rules.moe_mode == "expert"
+                      and cfg.num_experts % model_n == 0)
+    return {
+        "layers": None,
+        "vocab": "model" if rules.shard_vocab else None,
+        "heads": "model" if rules.shard_heads else None,
+        "kv": "model",
+        # note: for expert weights under EP, 'experts' consumes the model
+        # axis first and the per-expert ffn dim stays unsharded (the `used`
+        # set in spec_for enforces one use per mesh axis)
+        "ffn": "model" if rules.shard_ffn else None,
+        "experts": "model" if moe_expert_par else None,
+        "embed": "data" if fsdp else None,
+        None: None,
+    }
+
+
+def spec_for(pspec: ParamSpec, lmap: Dict[str, Any],
+             sizes: Dict[str, int]) -> P:
+    parts = []
+    used = set()
+    for dim, axis in zip(pspec.shape, pspec.axes):
+        target = lmap.get(axis)
+        if target is None:
+            parts.append(None)
+            continue
+        taxes = target if isinstance(target, tuple) else (target,)
+        if used & set(taxes):
+            parts.append(None)
+            continue
+        n = 1
+        for a in taxes:
+            n *= sizes.get(a, 1)
+        if n <= 1 or dim % n != 0:
+            parts.append(None)
+            continue
+        parts.append(target)
+        used.update(taxes)
+    return P(*parts)
+
+
+def param_specs(cfg: ModelConfig, mode: str, mesh: Mesh):
+    """PartitionSpec tree mirroring the model schema."""
+    sch = models.schema(cfg)
+    lmap = logical_map(cfg, mode, mesh)
+    sizes = mesh_axis_sizes(mesh)
+
+    return jax.tree.map(lambda ps: spec_for(ps, lmap, sizes), sch,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_shardings(cfg: ModelConfig, mode: str, mesh: Mesh):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        param_specs(cfg, mode, mesh))
+
+
+# ---------------------------------------------------------------------------
+# cache / activation specs
+# ---------------------------------------------------------------------------
+
+def kv_cache_spec(cfg: ModelConfig, mesh: Mesh, batch: int,
+                  width: int = 0) -> P:
+    """(L, B, W, K, D) cache partition: batch over data axes when it
+    divides; then either sequence-sharded (context-parallel decode,
+    ShardingRules.shard_kv_seq) or KV heads over 'model' when divisible,
+    else head_dim."""
+    sizes = mesh_axis_sizes(mesh)
+    model_n = sizes.get("model", 1)
+    b_axes = batch_axes(mesh)
+    b_total = int(np.prod([sizes[a] for a in b_axes])) if b_axes else 1
+    bspec = b_axes if (b_axes and batch % b_total == 0) else None
+    if cfg.sharding.shard_kv_seq and (width == 0 or width % model_n == 0):
+        return P(None, bspec, "model", None, None)
+    if cfg.num_kv_heads % model_n == 0:
+        kv, hd = "model", None
+    elif cfg.head_dim % model_n == 0:
+        kv, hd = None, "model"
+    else:
+        kv = hd = None
+    return P(None, bspec, None, kv, hd)
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    b_axes = batch_axes(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    b_total = int(np.prod([sizes[a] for a in b_axes])) if b_axes else 1
+    bspec = b_axes if (b_axes and batch % b_total == 0) else None
+    return P(bspec, *([None] * extra_dims))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int):
+    """Sharding tree matching each family's decode-cache structure."""
+    kv = NamedSharding(mesh, kv_cache_spec(cfg, mesh, batch))
+    rep = NamedSharding(mesh, P())
+    bsp = lambda nd: NamedSharding(mesh, batch_spec(mesh, batch, nd))
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.sharding.kv_quant and cfg.family != "moe":
+            sc = NamedSharding(mesh, P(*kv_cache_spec(cfg, mesh, batch)[:4]))
+            return {"k": kv, "v": kv, "k_scale": sc, "v_scale": sc,
+                    "pos": rep}
+        return {"k": kv, "v": kv, "pos": rep}
+    if cfg.family == "audio":
+        return {"k": kv, "v": kv,
+                "ck": kv, "cv": kv, "pos": rep}
+    if cfg.family == "hybrid":
+        # h_group (G,2,B,w) conv_group (G,2,B,cw-1,w) h_tail (T,B,w) ...
+        def state(nlead, ntail):
+            sizes = mesh_axis_sizes(mesh)
+            b_axes = batch_axes(mesh)
+            b_total = int(np.prod([sizes[a] for a in b_axes])) if b_axes else 1
+            bspec = b_axes if (b_axes and batch % b_total == 0) else None
+            return NamedSharding(
+                mesh, P(*([None] * nlead), bspec, *([None] * ntail)))
+        return {"k": kv, "v": kv,
+                "h_group": state(2, 1), "conv_group": state(2, 2),
+                "h_tail": state(1, 1), "conv_tail": state(1, 2),
+                "pos": rep}
+    if cfg.family == "ssm":
+        def state(ntail):
+            sizes = mesh_axis_sizes(mesh)
+            b_axes = batch_axes(mesh)
+            b_total = int(np.prod([sizes[a] for a in b_axes])) if b_axes else 1
+            bspec = b_axes if (b_axes and batch % b_total == 0) else None
+            return NamedSharding(mesh, P(None, bspec, *([None] * ntail)))
+        return {"m": {"C": state(3), "n": state(2), "m": state(1),
+                      "conv": state(2)},
+                "s": {"c": state(2), "n": state(2), "m": state(2),
+                      "h": state(2)},
+                "pos": rep}
+    raise ValueError(cfg.family)

@@ -1,0 +1,89 @@
+"""Unified model API — dispatch by config family.
+
+    schema(cfg)                      param schema tree (ParamSpec leaves)
+    init_params(cfg, rng)            materialized params
+    abstract_params(cfg)             ShapeDtypeStructs for dry-run lowering
+    forward_train(params, cfg, batch)-> (hidden, aux_loss)
+    prefill(params, cfg, ...)        -> (last logits, cache)
+    decode_step(params, cfg, ...)    -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, dense, encdec, hybrid, moe, xlstm
+from repro.models.common import cross_entropy, lm_logits
+
+_FAMILY_MOD = {
+    "dense": dense,
+    "vlm": dense,
+    "moe": moe,
+    "hybrid": hybrid,
+    "ssm": xlstm,
+    "audio": encdec,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILY_MOD[cfg.family]
+
+
+def schema(cfg: ModelConfig) -> Dict:
+    return module_for(cfg).schema(cfg)
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Dict:
+    return common.materialize(schema(cfg), rng, param_dtype(cfg))
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    return common.abstract_params(schema(cfg), param_dtype(cfg))
+
+
+def forward_train(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                  **extras) -> Tuple[jax.Array, jax.Array]:
+    """Returns (final hidden states, aux loss)."""
+    mod = module_for(cfg)
+    out = mod.forward_train(params, cfg, tokens, **extras)
+    if isinstance(out, tuple):
+        return out
+    return out, jnp.float32(0.0)
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array, max_len: int,
+            **extras) -> Tuple[jax.Array, Any]:
+    return module_for(cfg).prefill(params, cfg, tokens, max_len, **extras)
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array, cache: Any,
+                **extras) -> Tuple[jax.Array, Any]:
+    return module_for(cfg).decode_step(params, cfg, token, cache, **extras)
+
+
+def extra_train_inputs(cfg: ModelConfig, batch: int, seq: int,
+                       abstract: bool = False, rng: Optional[jax.Array] = None):
+    """Modality-frontend stub inputs (the allowed carve-out): whisper frame
+    embeddings / VLM patch embeddings + M-RoPE position ids."""
+    dt = param_dtype(cfg)
+    out: Dict[str, Any] = {}
+
+    def make(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype) if dtype != jnp.int32 else \
+            jnp.zeros(shape, jnp.int32)
+
+    if cfg.family == "audio":
+        out["frames"] = make((batch, cfg.num_source_positions, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        out["image_embeds"] = make((batch, cfg.num_image_tokens, cfg.d_model), dt)
+        out["mrope_positions"] = make((3, batch, seq), jnp.int32)
+    return out

@@ -1,0 +1,230 @@
+"""Whisper-style encoder-decoder (audio backbone) [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is a STUB (the one allowed
+carve-out): inputs are precomputed frame embeddings (B, n_frames, d_model)
+supplied by ``input_specs``.  We implement the transformer backbone:
+bidirectional encoder + causal decoder with cross-attention, LayerNorm +
+GELU MLP (whisper convention), sinusoidal positions, tied output head.
+
+Decode caches: ring-buffer self-attention KV + static cross-attention KV
+computed once from the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def sinusoidal(positions: jax.Array, d_model: int) -> jax.Array:
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _ln_schema(L: int, d: int, names) -> Dict:
+    sch = {}
+    for nm in names:
+        sch[nm + "_g"] = cm.ParamSpec((L, d), ("layers", None), init="ones")
+        sch[nm + "_b"] = cm.ParamSpec((L, d), ("layers", None), init="zeros")
+    return sch
+
+
+def _mlp_schema(cfg: ModelConfig, L: int) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_fc": cm.ParamSpec((L, d, f), ("layers", "embed", "ffn")),
+        "b_fc": cm.ParamSpec((L, f), ("layers", "ffn"), init="zeros"),
+        "w_proj": cm.ParamSpec((L, f, d), ("layers", "ffn", "embed")),
+        "b_proj": cm.ParamSpec((L, d), ("layers", None), init="zeros"),
+    }
+
+
+def _cross_schema(cfg: ModelConfig, L: int) -> Dict:
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wq_c": cm.ParamSpec((L, d, h * hd), ("layers", "embed", "heads")),
+        "wk_c": cm.ParamSpec((L, d, h * hd), ("layers", "embed", "heads")),
+        "wv_c": cm.ParamSpec((L, d, h * hd), ("layers", "embed", "heads")),
+        "wo_c": cm.ParamSpec((L, h * hd, d), ("layers", "heads", "embed")),
+    }
+
+
+def schema(cfg: ModelConfig) -> Dict:
+    Le, Ld, d = cfg.encoder_layers, cfg.num_layers, cfg.d_model
+    enc = {}
+    enc.update(cm.attn_schema(cfg, Le))
+    enc.update(_mlp_schema(cfg, Le))
+    enc.update(_ln_schema(Le, d, ("ln0", "ln1")))
+    dec = {}
+    dec.update(cm.attn_schema(cfg, Ld))
+    dec.update(_cross_schema(cfg, Ld))
+    dec.update(_mlp_schema(cfg, Ld))
+    dec.update(_ln_schema(Ld, d, ("ln0", "ln1", "ln2")))
+    emb = {
+        "tok_embed": cm.ParamSpec((cfg.vocab_size, d), ("vocab", "embed")),
+        "final_norm": cm.ParamSpec((d,), (None,), init="ones"),
+        "final_bias": cm.ParamSpec((d,), (None,), init="zeros"),
+        "enc_norm_g": cm.ParamSpec((d,), (None,), init="ones"),
+        "enc_norm_b": cm.ParamSpec((d,), (None,), init="zeros"),
+    }
+    return {"embed": emb, "enc_layers": enc, "dec_layers": dec}
+
+
+def _mlp(lp, x):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, lp["w_fc"]) + lp["b_fc"])
+    return jnp.einsum("bsf,fd->bsd", h, lp["w_proj"]) + lp["b_proj"]
+
+
+def encode(params: Dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, T, d) stub conv-frontend embeddings -> encoder states."""
+    B, T, d = frames.shape
+    x = frames + sinusoidal(jnp.arange(T)[None], d).astype(frames.dtype)
+
+    def body(carry, lp):
+        y = carry
+        h = cm.layer_norm(y, lp["ln0_g"], lp["ln0_b"], cfg.norm_eps)
+        q, k, v = cm.qkv_project(lp, h, cfg, jnp.arange(T)[None], rope=False)
+        a = cm.attention(q, k, v, None, causal=False,
+                         q_shard=cfg.sharding.blockwise_q_shard)
+        y = y + jnp.einsum("bse,ed->bsd", a.reshape(B, T, -1), lp["wo"])
+        h = cm.layer_norm(y, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+        y = y + _mlp(lp, h)
+        return y, None
+
+    if cfg.sharding.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    e = params["embed"]
+    return cm.layer_norm(x, e["enc_norm_g"], e["enc_norm_b"], cfg.norm_eps)
+
+
+def _dec_block(cfg, lp, x, enc_kv, positions, self_attn_fn):
+    """Shared decoder block; self_attn_fn handles seq vs cached-step attn."""
+    B, S, _ = x.shape
+    h = cm.layer_norm(x, lp["ln0_g"], lp["ln0_b"], cfg.norm_eps)
+    x = x + self_attn_fn(lp, h)
+    h = cm.layer_norm(x, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+    qc = jnp.einsum("bsd,de->bse", h, lp["wq_c"]).reshape(
+        B, S, cfg.num_heads, cfg.head_dim)
+    kc, vc = enc_kv
+    a = cm.attention(qc, kc, vc, None, causal=False,
+                     q_shard=cfg.sharding.blockwise_q_shard)
+    x = x + jnp.einsum("bse,ed->bsd", a.reshape(B, S, -1), lp["wo_c"])
+    h = cm.layer_norm(x, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+    return x + _mlp(lp, h)
+
+
+def _cross_kv(cfg, lp, enc_out):
+    B, T, _ = enc_out.shape
+    kc = jnp.einsum("btd,de->bte", enc_out, lp["wk_c"]).reshape(
+        B, T, cfg.num_heads, cfg.head_dim)
+    vc = jnp.einsum("btd,de->bte", enc_out, lp["wv_c"]).reshape(
+        B, T, cfg.num_heads, cfg.head_dim)
+    return kc, vc
+
+
+def forward_train(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                  frames: Optional[jax.Array] = None, **_) -> jax.Array:
+    """Teacher-forced decoder hidden states."""
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    x = jnp.take(params["embed"]["tok_embed"], tokens, axis=0)
+    x = x + sinusoidal(jnp.arange(S)[None], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(S)[None]
+
+    def body(carry, lp):
+        def self_attn(lp, h):
+            q, k, v = cm.qkv_project(lp, h, cfg, positions, rope=False)
+            a = cm.attention(q, k, v, None, causal=True,
+                             q_shard=cfg.sharding.blockwise_q_shard)
+            return jnp.einsum("bse,ed->bsd", a.reshape(B, S, -1), lp["wo"])
+        y = _dec_block(cfg, lp, carry, _cross_kv(cfg, lp, enc_out),
+                       positions, self_attn)
+        return y, None
+
+    if cfg.sharding.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["dec_layers"])
+    return x
+
+
+def _final_logits(params, cfg, x):
+    e = params["embed"]
+    x = cm.constrain(x, "batch", None, None)
+    x = cm.layer_norm(x, e["final_norm"], e["final_bias"], cfg.norm_eps)
+    out = jnp.einsum("bsd,vd->bsv", x, e["tok_embed"])
+    return cm.constrain(out, "batch", None, "tp")
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array, max_len: int,
+            frames: Optional[jax.Array] = None, **_):
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    x = jnp.take(params["embed"]["tok_embed"], tokens, axis=0)
+    x = x + sinusoidal(jnp.arange(S)[None], cfg.d_model).astype(x.dtype)
+    positions = jnp.arange(S)[None]
+
+    def body(carry, lp):
+        kv_box = {}
+
+        def self_attn(lp, h):
+            q, k, v = cm.qkv_project(lp, h, cfg, positions, rope=False)
+            kv_box["kv"] = (k, v)
+            a = cm.attention(q, k, v, None, causal=True,
+                             q_shard=cfg.sharding.blockwise_q_shard)
+            return jnp.einsum("bse,ed->bsd", a.reshape(B, S, -1), lp["wo"])
+
+        y = _dec_block(cfg, lp, carry, _cross_kv(cfg, lp, enc_out),
+                       positions, self_attn)
+        ck, cv = _cross_kv(cfg, lp, enc_out)
+        k, v = kv_box["kv"]
+        return y, (cm.kv_shard(k), cm.kv_shard(v),
+                   cm.kv_shard(ck), cm.kv_shard(cv))
+
+    x, (ks, vs, cks, cvs) = lax.scan(body, x, params["dec_layers"])
+    W = max_len
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, W - S), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, W - S), (0, 0), (0, 0)))
+    cache = {"k": ks, "v": vs, "ck": cks, "cv": cvs, "pos": jnp.int32(S)}
+    return _final_logits(params, cfg, x[:, -1:]), cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array, cache: Dict, **_):
+    B = token.shape[0]
+    pos, W = cache["pos"], cache["k"].shape[2]
+    x = jnp.take(params["embed"]["tok_embed"], token, axis=0)
+    positions = cm.decode_pos_vec(pos, B)
+    x = x + sinusoidal(positions, cfg.d_model).astype(x.dtype)
+    valid_len = jnp.minimum(pos + 1, W)
+
+    def body(carry, inp):
+        y = carry
+        lp, kc, vc, ck, cv = inp
+        box = {}
+
+        def self_attn(lp, h):
+            q, k, v = cm.qkv_project(lp, h, cfg, positions, rope=False)
+            kcn, vcn = cm.cache_update(kc, vc, k, v, pos)
+            box["kv"] = (kcn, vcn)
+            a = cm.decode_attention(q, kcn, vcn, valid_len,
+                                    pin=cfg.sharding.decode_attn_pin,
+                                   seq_shard=cfg.sharding.shard_kv_seq)
+            return jnp.einsum("bse,ed->bsd", a.reshape(B, 1, -1), lp["wo"])
+
+        y = _dec_block(cfg, lp, y, (ck, cv), positions, self_attn)
+        kcn, vcn = box["kv"]
+        return y, (kcn, vcn)
+
+    x, (ks, vs) = lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]))
+    logits = _final_logits(params, cfg, x)
+    return logits, {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"],
+                    "pos": pos + 1}

@@ -1,0 +1,335 @@
+"""Griffin/RecurrentGemma hybrid: RG-LRU recurrent blocks + local-attention
+(MQA) blocks in a (rec, rec, attn) repeating pattern [arXiv:2402.19427].
+
+Temporal mixing alternates; every layer is followed by a GeGLU MLP.  The
+RG-LRU is a gated linear recurrence — training/prefill use
+``lax.associative_scan`` over the sequence (log-depth, sub-quadratic),
+decode is an O(1) state update, which is why this arch runs ``long_500k``.
+
+Layers are scanned in groups of three (rec, rec, attn); the <=2 remainder
+layers (always rec) are unrolled.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+C_RGLRU = 8.0  # recurrence sharpness constant from the Griffin paper
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    return cfg.num_layers // 3
+
+
+def n_tail(cfg: ModelConfig) -> int:
+    return cfg.num_layers - 3 * n_groups(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def _rec_schema(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict:
+    d, w = cfg.d_model, cfg.lru_width
+    la = tuple("layers" for _ in lead)
+    sch = {
+        "w_in": cm.ParamSpec(lead + (d, w), la + ("embed", "ffn")),
+        "w_gate_branch": cm.ParamSpec(lead + (d, w), la + ("embed", "ffn")),
+        "conv_w": cm.ParamSpec(lead + (cfg.conv_width, w), la + (None, "ffn")),
+        "conv_b": cm.ParamSpec(lead + (w,), la + ("ffn",), init="zeros"),
+        "w_a": cm.ParamSpec(lead + (w, w), la + ("ffn", None)),
+        "b_a": cm.ParamSpec(lead + (w,), la + (None,), init="zeros"),
+        "w_x": cm.ParamSpec(lead + (w, w), la + ("ffn", None)),
+        "b_x": cm.ParamSpec(lead + (w,), la + (None,), init="zeros"),
+        "lambda_p": cm.ParamSpec(lead + (w,), la + (None,), init="ones"),
+        "w_out": cm.ParamSpec(lead + (w, d), la + ("ffn", "embed")),
+    }
+    return sch
+
+
+def _mlp_schema(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    la = tuple("layers" for _ in lead)
+    return {
+        "w_gate": cm.ParamSpec(lead + (d, f), la + ("embed", "ffn")),
+        "w_up": cm.ParamSpec(lead + (d, f), la + ("embed", "ffn")),
+        "w_down": cm.ParamSpec(lead + (f, d), la + ("ffn", "embed")),
+        "norm0": cm.ParamSpec(lead + (d,), la + (None,), init="ones"),
+        "norm1": cm.ParamSpec(lead + (d,), la + (None,), init="ones"),
+    }
+
+
+def schema(cfg: ModelConfig) -> Dict:
+    G, T = n_groups(cfg), n_tail(cfg)
+    sch = {"embed": cm.embed_schema(cfg)}
+    if G:
+        sch["rec_groups"] = {**_rec_schema(cfg, (G, 2)), **_mlp_schema(cfg, (G, 2))}
+        attn = cm.attn_schema(cfg, G)
+        attn.update(_mlp_schema(cfg, (G,)))
+        sch["attn_groups"] = attn
+    if T:
+        sch["rec_tail"] = {**_rec_schema(cfg, (T,)), **_mlp_schema(cfg, (T,))}
+    return sch
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _gates(lp: Dict, x: jax.Array):
+    """x: (..., W).  Returns (log_a, gated_input)."""
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, lp["w_a"]) + lp["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, lp["w_x"]) + lp["b_x"])
+    log_a = -C_RGLRU * jax.nn.softplus(lp["lambda_p"]) * r
+    a = jnp.exp(log_a.astype(jnp.float32))
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-6)) * (i * x).astype(jnp.float32)
+    return a, b
+
+
+def rglru_seq(lp: Dict, x: jax.Array, h0: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence RG-LRU via associative scan.  x: (B, S, W)."""
+    a, b = _gates(lp, x)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(lp: Dict, x: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token RG-LRU.  x: (B, 1, W); h: (B, W) fp32 state."""
+    a, b = _gates(lp, x)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x.dtype)[:, None], h_new
+
+
+def causal_conv_seq(lp: Dict, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over sequence.  x: (B, S, W)."""
+    cw = lp["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * lp["conv_w"][i] for i in range(cw))
+    return out + lp["conv_b"]
+
+
+def causal_conv_step(lp: Dict, x: jax.Array, state: jax.Array):
+    """x: (B, 1, W); state: (B, cw-1, W) last inputs. Returns (y, new_state)."""
+    cw = lp["conv_w"].shape[0]
+    window = jnp.concatenate([state, x], axis=1)              # (B, cw, W)
+    y = jnp.einsum("bcw,cw->bw", window, lp["conv_w"]) + lp["conv_b"]
+    return y[:, None], window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _rec_block_seq(cfg, lp, x, h0=None):
+    """Recurrent temporal block + MLP (full sequence).
+
+    Returns (x, last LRU state, last (conv_width-1) pre-conv inputs) so a
+    prefill can hand an *exact* state to the step path.
+    """
+    B, S, _ = x.shape
+    cw = cfg.conv_width
+    h = cm.rms_norm(x, lp["norm0"], cfg.norm_eps)
+    pre_conv = jnp.einsum("bsd,dw->bsw", h, lp["w_in"])
+    if S >= cw - 1:
+        conv_state = pre_conv[:, S - (cw - 1):]
+    else:
+        conv_state = jnp.pad(pre_conv, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+    main = causal_conv_seq(lp, pre_conv)
+    main, h_last = rglru_seq(lp, main, h0)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, lp["w_gate_branch"]))
+    x = x + jnp.einsum("bsw,wd->bsd", main * gate, lp["w_out"])
+    h2 = cm.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    x = x + cm.swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return x, h_last, conv_state
+
+
+def _rec_block_step(cfg, lp, x, lru_state, conv_state):
+    B = x.shape[0]
+    h = cm.rms_norm(x, lp["norm0"], cfg.norm_eps)
+    main = jnp.einsum("bsd,dw->bsw", h, lp["w_in"])
+    main, conv_state = causal_conv_step(lp, main, conv_state)
+    main, lru_state = rglru_step(lp, main, lru_state)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, lp["w_gate_branch"]))
+    x = x + jnp.einsum("bsw,wd->bsd", main * gate, lp["w_out"])
+    h2 = cm.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    x = x + cm.swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return x, lru_state, conv_state
+
+
+def _attn_block_seq(cfg, lp, x, positions):
+    B, S, _ = x.shape
+    h = cm.rms_norm(x, lp["norm0"], cfg.norm_eps)
+    q, k, v = cm.qkv_project(lp, h, cfg, positions)
+    attn = cm.attention(q, k, v, None, causal=True, window=cfg.local_window,
+                        q_shard=cfg.sharding.blockwise_q_shard)
+    x = x + jnp.einsum("bse,ed->bsd", attn.reshape(B, S, -1), lp["wo"])
+    h2 = cm.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    x = x + cm.swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return x, k, v
+
+
+def _attn_block_step(cfg, lp, x, kc, vc, positions, pos, valid_len):
+    B = x.shape[0]
+    h = cm.rms_norm(x, lp["norm0"], cfg.norm_eps)
+    q, k, v = cm.qkv_project(lp, h, cfg, positions)
+    kc, vc = cm.cache_update(kc, vc, k, v, pos)
+    attn = cm.decode_attention(q, kc, vc, valid_len,
+                               pin=cfg.sharding.decode_attn_pin,
+                                   seq_shard=cfg.sharding.shard_kv_seq)
+    x = x + jnp.einsum("bse,ed->bsd", attn.reshape(B, 1, -1), lp["wo"])
+    h2 = cm.rms_norm(x, lp["norm1"], cfg.norm_eps)
+    x = x + cm.swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return x, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _seq_forward(params, cfg, x, positions, remat, collect_cache, max_len):
+    """Shared full-sequence pass; optionally returns cache for decode."""
+    G, T = n_groups(cfg), n_tail(cfg)
+    W = min(max_len, cfg.local_window) if max_len else cfg.local_window
+    S = x.shape[1]
+
+    def group_body(carry, gp):
+        y = carry
+        rec_p, attn_p = gp
+        h_lasts, c_states = [], []
+        for j in range(2):
+            lp = jax.tree.map(lambda a: a[j], rec_p)
+            y, h_last, c_state = _rec_block_seq(cfg, lp, y)
+            h_lasts.append(h_last)
+            c_states.append(c_state)
+        y, k, v = _attn_block_seq(cfg, attn_p, y, positions)
+        return cm.seq_shard(y), (jnp.stack(h_lasts), jnp.stack(c_states),
+                                 cm.kv_shard(k), cm.kv_shard(v))
+
+    if remat == "full":
+        group_body = jax.checkpoint(group_body)
+
+    hs_g = cs_g = k_g = v_g = None
+    if G:
+        x, (hs_g, cs_g, k_g, v_g) = lax.scan(
+            group_body, x, (params["rec_groups"], params["attn_groups"]))
+    hs_t, cs_t = [], []
+    for t in range(T):
+        lp = jax.tree.map(lambda a: a[t], params["rec_tail"])
+        x, h_last, c_state = _rec_block_seq(cfg, lp, x)
+        hs_t.append(h_last)
+        cs_t.append(c_state)
+
+    cache = None
+    if collect_cache:
+        if k_g is not None and W >= S:
+            pad = W - S
+            k_g = jnp.pad(k_g, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v_g = jnp.pad(v_g, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        elif k_g is not None:
+            k_g = jnp.roll(k_g[:, :, S - W:], shift=S % W, axis=2)
+            v_g = jnp.roll(v_g[:, :, S - W:], shift=S % W, axis=2)
+        B = x.shape[0]
+        cw, w = cfg.conv_width, cfg.lru_width
+        cache = {
+            "k": k_g, "v": v_g,
+            "h_group": (hs_g.astype(jnp.float32) if hs_g is not None
+                        else jnp.zeros((0, 2, B, w), jnp.float32)),
+            "conv_group": (cs_g if cs_g is not None
+                           else jnp.zeros((0, 2, B, cw - 1, w), x.dtype)),
+            "h_tail": (jnp.stack(hs_t).astype(jnp.float32) if hs_t
+                       else jnp.zeros((0, B, w), jnp.float32)),
+            "conv_tail": (jnp.stack(cs_t) if cs_t
+                          else jnp.zeros((0, B, cw - 1, w), x.dtype)),
+            "pos": jnp.int32(S),
+        }
+    return x, cache
+
+
+def forward_train(params: Dict, cfg: ModelConfig, tokens: jax.Array, **_):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"]["tok_embed"], tokens, axis=0)
+    positions = jnp.arange(S)[None, :]
+    x, _ = _seq_forward(params, cfg, x, positions, cfg.sharding.remat,
+                        False, 0)
+    return x
+
+
+def init_conv_states(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    G, T = n_groups(cfg), n_tail(cfg)
+    cw, w = cfg.conv_width, cfg.lru_width
+    return {
+        "conv_group": jnp.zeros((max(G, 0), 2, batch, cw - 1, w), dtype),
+        "conv_tail": jnp.zeros((T, batch, cw - 1, w), dtype),
+    }
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array, max_len: int, **_):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"]["tok_embed"], tokens, axis=0)
+    positions = jnp.arange(S)[None, :]
+    x, cache = _seq_forward(params, cfg, x, positions, "none", True, max_len)
+    logits = cm.lm_logits(params["embed"], x[:, -1:], cfg)
+    return logits, cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array, cache: Dict, **_):
+    B = token.shape[0]
+    G, T = n_groups(cfg), n_tail(cfg)
+    pos = cache["pos"]
+    x = jnp.take(params["embed"]["tok_embed"], token, axis=0)
+    positions = cm.decode_pos_vec(pos, B)
+
+    if G:
+        W = cache["k"].shape[2]
+        valid_len = jnp.minimum(pos + 1, W)
+
+        def group_body(carry, inp):
+            y = carry
+            rec_p, attn_p, hg, cg, kc, vc = inp
+            new_h, new_c = [], []
+            for j in range(2):
+                lp = jax.tree.map(lambda a: a[j], rec_p)
+                y, h_new, c_new = _rec_block_step(cfg, lp, y, hg[j], cg[j])
+                new_h.append(h_new)
+                new_c.append(c_new)
+            y, kc, vc = _attn_block_step(cfg, attn_p, y, kc, vc,
+                                         positions, pos, valid_len)
+            return y, (jnp.stack(new_h), jnp.stack(new_c), kc, vc)
+
+        x, (hg, cg, ks, vs) = lax.scan(
+            group_body, x,
+            (params["rec_groups"], params["attn_groups"],
+             cache["h_group"], cache["conv_group"], cache["k"], cache["v"]))
+    else:
+        hg, cg, ks, vs = cache["h_group"], cache["conv_group"], cache["k"], cache["v"]
+
+    ht, ct = [], []
+    for t in range(T):
+        lp = jax.tree.map(lambda a: a[t], params["rec_tail"])
+        x, h_new, c_new = _rec_block_step(cfg, lp, x, cache["h_tail"][t],
+                                          cache["conv_tail"][t])
+        ht.append(h_new)
+        ct.append(c_new)
+
+    new_cache = {
+        "k": ks, "v": vs, "h_group": hg, "conv_group": cg,
+        "h_tail": jnp.stack(ht) if ht else cache["h_tail"],
+        "conv_tail": jnp.stack(ct) if ct else cache["conv_tail"],
+        "pos": pos + 1,
+    }
+    logits = cm.lm_logits(params["embed"], x, cfg)
+    return logits, new_cache

@@ -1,0 +1,435 @@
+"""xLSTM family (xlstm-350m): alternating mLSTM / sLSTM blocks
+[arXiv:2405.04517].
+
+mLSTM: matrix-memory cell with exponential gating.  Training/prefill use the
+*parallel form* (quadratic, attention-like, with the paper's log-space
+stabilizer); decode uses the O(1) recurrent form.  The two are algebraically
+identical — tests assert parallel == scan-of-steps.
+
+sLSTM: scalar-memory cell with recurrent weights R (head-block-diagonal) —
+inherently sequential, so both training and decode use ``lax.scan`` over
+time.
+
+State is O(1) in sequence length -> this arch runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def n_pairs(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % 2 == 0, "xlstm stack scans (mLSTM, sLSTM) pairs"
+    return cfg.num_layers // 2
+
+
+def up_dim(cfg: ModelConfig) -> int:
+    return int(cfg.d_model * cfg.mlstm_proj_factor)
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def _mlstm_schema(cfg: ModelConfig, lead) -> Dict:
+    d, u, nh = cfg.d_model, up_dim(cfg), cfg.num_heads
+    la = tuple("layers" for _ in lead)
+    return {
+        "m_norm": cm.ParamSpec(lead + (d,), la + (None,), init="ones"),
+        "m_up": cm.ParamSpec(lead + (d, u), la + ("embed", "ffn")),
+        "m_gate": cm.ParamSpec(lead + (d, u), la + ("embed", "ffn")),
+        "m_conv_w": cm.ParamSpec(lead + (cfg.conv_width, u), la + (None, "ffn")),
+        "m_conv_b": cm.ParamSpec(lead + (u,), la + ("ffn",), init="zeros"),
+        "m_wq": cm.ParamSpec(lead + (u, u), la + ("ffn", None)),
+        "m_wk": cm.ParamSpec(lead + (u, u), la + ("ffn", None)),
+        "m_wv": cm.ParamSpec(lead + (u, u), la + ("ffn", None)),
+        "m_wi": cm.ParamSpec(lead + (u, nh), la + ("ffn", None), scale=0.1),
+        "m_bi": cm.ParamSpec(lead + (nh,), la + (None,), init="zeros"),
+        "m_wf": cm.ParamSpec(lead + (u, nh), la + ("ffn", None), scale=0.1),
+        "m_bf": cm.ParamSpec(lead + (nh,), la + (None,), init="ones"),
+        "m_out_norm": cm.ParamSpec(lead + (u,), la + (None,), init="ones"),
+        "m_down": cm.ParamSpec(lead + (u, d), la + ("ffn", "embed")),
+    }
+
+
+def _slstm_schema(cfg: ModelConfig, lead) -> Dict:
+    d, nh = cfg.d_model, cfg.num_heads
+    dh = d // nh
+    f = int(d * cfg.slstm_proj_factor)
+    la = tuple("layers" for _ in lead)
+    return {
+        "s_norm": cm.ParamSpec(lead + (d,), la + (None,), init="ones"),
+        "s_w": cm.ParamSpec(lead + (d, 4 * d), la + ("embed", "ffn")),
+        "s_r": cm.ParamSpec(lead + (nh, dh, 4 * dh), la + (None, None, None), scale=0.5),
+        "s_b": cm.ParamSpec(lead + (4 * d,), la + ("ffn",), init="zeros"),
+        "s_out_norm": cm.ParamSpec(lead + (d,), la + (None,), init="ones"),
+        "s_ffn_norm": cm.ParamSpec(lead + (d,), la + (None,), init="ones"),
+        "s_ffn_up": cm.ParamSpec(lead + (d, 2 * f), la + ("embed", "ffn")),
+        "s_ffn_down": cm.ParamSpec(lead + (f, d), la + ("ffn", "embed")),
+    }
+
+
+def schema(cfg: ModelConfig) -> Dict:
+    G = n_pairs(cfg)
+    return {
+        "embed": cm.embed_schema(cfg),
+        "pairs": {**_mlstm_schema(cfg, (G,)), **_slstm_schema(cfg, (G,))},
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+def _mlstm_qkvif(cfg, lp, x):
+    """x: (B, S, d) -> q,k,v (B,S,NH,dh), log-i/log-f (B,S,NH), gate (B,S,u)."""
+    B, S, _ = x.shape
+    nh = cfg.num_heads
+    u = up_dim(cfg)
+    dh = u // nh
+    h = cm.rms_norm(x, lp["m_norm"], cfg.norm_eps)
+    m = jnp.einsum("bsd,du->bsu", h, lp["m_up"])
+    z = jnp.einsum("bsd,du->bsu", h, lp["m_gate"])
+    c = jax.nn.silu(_conv(lp, m))
+    q = jnp.einsum("bsu,uv->bsv", c, lp["m_wq"]).reshape(B, S, nh, dh)
+    k = jnp.einsum("bsu,uv->bsv", c, lp["m_wk"]).reshape(B, S, nh, dh)
+    v = jnp.einsum("bsu,uv->bsv", m, lp["m_wv"]).reshape(B, S, nh, dh)
+    li = (jnp.einsum("bsu,un->bsn", c, lp["m_wi"]) + lp["m_bi"]).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        (jnp.einsum("bsu,un->bsn", c, lp["m_wf"]) + lp["m_bf"]).astype(jnp.float32))
+    return q, k, v, li, lf, z, m
+
+
+def _conv(lp, x):
+    cw = lp["m_conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * lp["m_conv_w"][i] for i in range(cw))
+    return out + lp["m_conv_b"]
+
+
+def _conv_step(lp, x, state):
+    """x: (B,1,u); state (B,cw-1,u)."""
+    window = jnp.concatenate([state, x], axis=1)
+    y = jnp.einsum("bcu,cu->bu", window, lp["m_conv_w"]) + lp["m_conv_b"]
+    return y[:, None], window[:, 1:]
+
+
+def mlstm_parallel(q, k, v, li, lf):
+    """Stabilized parallel form.  q,k,v: (B,S,NH,dh); li,lf: (B,S,NH)."""
+    B, S, NH, dh = q.shape
+    scale = dh ** -0.5
+    Bc = jnp.cumsum(lf, axis=1)                                   # (B,S,NH)
+    # logD_ij = Bc_i - Bc_j + li_j  (j <= i)
+    logD = (Bc[:, :, None, :] - Bc[:, None, :, :]
+            + li[:, None, :, :])                                  # (B,Sq,Sk,NH)
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+    m = jnp.max(logD, axis=2, keepdims=True)                      # (B,S,1,NH)
+    D = jnp.exp(logD - m)
+    qk = jnp.einsum("bihd,bjhd->bijh", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    Sm = qk * D
+    norm = jnp.maximum(jnp.abs(jnp.sum(Sm, axis=2)), jnp.exp(-m[:, :, 0]))
+    h = jnp.einsum("bijh,bjhd->bihd", Sm, v.astype(jnp.float32))
+    h = h / norm[..., None]
+    return h.astype(q.dtype), m[:, -1, 0], Bc
+
+
+def mlstm_chunkwise(q, k, v, li, lf, chunk: int = 256, return_state=False):
+    """Chunkwise-parallel mLSTM: intra-chunk quadratic + inter-chunk
+    recurrent (C, n, m) state — O(S*c) memory instead of O(S^2), same
+    stabilized math as the parallel/recurrent forms (tests assert equality).
+
+    q,k,v: (B,S,NH,dh); li,lf: (B,S,NH) log gates (fp32).
+    """
+    B, S, NH, dh = q.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = q.shape[1] // c
+    scale = dh ** -0.5
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(B, n_chunks, c, *x.shape[2:]), 1, 0)
+
+    qc, kc, vc, lic, lfc = map(to_chunks, (q, k, v, li, lf))
+
+    def chunk_step(carry, inp):
+        C_prev, n_prev, m_prev = carry                    # (B,NH,dh,dh) ...
+        qb, kb, vb, lib, lfb = inp                        # (B,c,NH,*)
+        b = jnp.cumsum(lfb, axis=1)                       # (B,c,NH) local
+        # intra-chunk log weights: b_i - b_j + li_j   (j <= i)
+        logD = (b[:, :, None, :] - b[:, None, :, :] + lib[:, None, :, :])
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+        m_intra = jnp.max(logD, axis=2)                   # (B,c,NH)
+        m_inter = b + m_prev[:, None, :]                  # (B,c,NH)
+        m_i = jnp.maximum(m_intra, m_inter)
+        D = jnp.exp(logD - m_i[:, :, None, :])
+        qk = jnp.einsum("bihd,bjhd->bijh", qb.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * scale
+        Sm = qk * D
+        w_inter = jnp.exp(m_inter - m_i)                  # (B,c,NH)
+        num_intra = jnp.einsum("bijh,bjhd->bihd", Sm, vb.astype(jnp.float32))
+        num_inter = jnp.einsum("bihd,bhde->bihe", qb.astype(jnp.float32),
+                               C_prev) * w_inter[..., None]
+        den_intra = jnp.sum(Sm, axis=2)                   # (B,c,NH)
+        den_inter = jnp.einsum("bihd,bhd->bih", qb.astype(jnp.float32),
+                               n_prev) * w_inter
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_i))
+        h = (num_intra + num_inter) / den[..., None]
+        # ---- state update to end of chunk ----
+        b_last = b[:, -1, :]                              # (B,NH)
+        w_j = b_last[:, None, :] - b + lib                # (B,c,NH)
+        m_new = jnp.maximum(b_last + m_prev, jnp.max(w_j, axis=1))
+        ew = jnp.exp(w_j - m_new[:, None, :])
+        C_new = (jnp.exp(b_last + m_prev - m_new)[..., None, None] * C_prev
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", ew,
+                              kb.astype(jnp.float32) * scale,
+                              vb.astype(jnp.float32)))
+        n_new = (jnp.exp(b_last + m_prev - m_new)[..., None] * n_prev
+                 + jnp.einsum("bjh,bjhd->bhd", ew,
+                              kb.astype(jnp.float32) * scale))
+        return (C_new, n_new, m_new), h.astype(qb.dtype)
+
+    init = (jnp.zeros((B, NH, dh, dh), jnp.float32),
+            jnp.zeros((B, NH, dh), jnp.float32),
+            jnp.full((B, NH), -1e30, jnp.float32))
+    # remat per chunk: backward residuals stay O(c^2), not O(S*c)
+    chunk_step = jax.checkpoint(chunk_step)
+    state, hs = lax.scan(chunk_step, init, (qc, kc, vc, lic, lfc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, n_chunks * c, NH, dh)
+    hs = hs[:, :S] if pad else hs
+    if return_state:
+        # padding is state-exact: padded steps carry li=-1e30 (i'=0, no
+        # input) and lf=0 (f=1, no decay)
+        return hs, state
+    return hs
+
+
+def mlstm_step(q, k, v, li, lf, state):
+    """Recurrent form.  q,k,v: (B,NH,dh); li,lf: (B,NH).
+
+    state = (C (B,NH,dh,dh), n (B,NH,dh), m (B,NH)) fp32.
+    """
+    C, n, m = state
+    dh = q.shape[-1]
+    scale = dh ** -0.5
+    q32, k32, v32 = (t.astype(jnp.float32) for t in (q, k, v))
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(li - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * (
+        k32[..., :, None] * scale * v32[..., None, :])            # (B,NH,dh,dh)
+    n = fp[..., None] * n + ip[..., None] * k32 * scale
+    num = jnp.einsum("bhd,bhde->bhe", q32, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q32, n)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h.astype(q.dtype), (C, n, m_new)
+
+
+MLSTM_PARALLEL_MAX_SEQ = 512
+
+
+def mlstm_block_seq(cfg, lp, x, return_state: bool = False):
+    B, S, _ = x.shape
+    u = up_dim(cfg)
+    cw = cfg.conv_width
+    q, k, v, li, lf, z, m_pre = _mlstm_qkvif(cfg, lp, x)
+    state = None
+    if return_state:
+        h, (C, n, m) = mlstm_chunkwise(q, k, v, li, lf, return_state=True)
+        if S >= cw - 1:
+            conv_state = m_pre[:, S - (cw - 1):]
+        else:
+            conv_state = jnp.pad(m_pre, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+        state = {"C": C, "n": n, "m": m, "conv": conv_state}
+    elif S > MLSTM_PARALLEL_MAX_SEQ:
+        h = mlstm_chunkwise(q, k, v, li, lf)
+    else:
+        h, _, _ = mlstm_parallel(q, k, v, li, lf)
+    h = h.reshape(B, S, u)
+    h = cm.rms_norm(h, lp["m_out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsu,ud->bsd", h * jax.nn.silu(z), lp["m_down"])
+    if return_state:
+        return x + out, state
+    return x + out
+
+
+def mlstm_block_step(cfg, lp, x, state):
+    """x: (B,1,d); state dict with C,n,m,conv."""
+    B = x.shape[0]
+    nh, u = cfg.num_heads, up_dim(cfg)
+    dh = u // nh
+    h0 = cm.rms_norm(x, lp["m_norm"], cfg.norm_eps)
+    mm = jnp.einsum("bsd,du->bsu", h0, lp["m_up"])
+    z = jnp.einsum("bsd,du->bsu", h0, lp["m_gate"])
+    cv, conv_state = _conv_step(lp, mm, state["conv"])
+    cv = jax.nn.silu(cv)
+    q = jnp.einsum("bsu,uv->bsv", cv, lp["m_wq"]).reshape(B, nh, dh)
+    k = jnp.einsum("bsu,uv->bsv", cv, lp["m_wk"]).reshape(B, nh, dh)
+    v = jnp.einsum("bsu,uv->bsv", mm, lp["m_wv"]).reshape(B, nh, dh)
+    li = (jnp.einsum("bsu,un->bn", cv, lp["m_wi"]) + lp["m_bi"]).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        (jnp.einsum("bsu,un->bn", cv, lp["m_wf"]) + lp["m_bf"]).astype(jnp.float32))
+    h, (C, n, m) = mlstm_step(q, k, v, li, lf,
+                              (state["C"], state["n"], state["m"]))
+    h = h.reshape(B, 1, u)
+    h = cm.rms_norm(h, lp["m_out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsu,ud->bsd", h * jax.nn.silu(z), lp["m_down"])
+    return x + out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell
+# ---------------------------------------------------------------------------
+
+def _slstm_cell(lp, nh, dh, x_t, state):
+    """One sLSTM time step.  x_t: (B, 4d) pre-activation (W x + b);
+    state = (c, n, m, h) each (B, nh, dh) / m: (B, nh, dh)."""
+    c, n, m, h = state
+    rec = jnp.einsum("bhd,hde->bhe", h, lp["s_r"])                # (B,nh,4dh)
+    B = x_t.shape[0]
+    pre = x_t.reshape(B, nh, 4 * dh) + rec
+    zt, it, ft, ot = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(it - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h_new = o * (c / jnp.maximum(n, 1e-6))
+    return (c, n, m_new, h_new)
+
+
+def slstm_block_seq(cfg, lp, x, state=None):
+    B, S, d = x.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    h0 = cm.rms_norm(x, lp["s_norm"], cfg.norm_eps)
+    pre = jnp.einsum("bsd,de->bse", h0, lp["s_w"]) + lp["s_b"]    # (B,S,4d)
+    if state is None:
+        z = jnp.zeros((B, nh, dh), jnp.float32)
+        state = (z, z, jnp.full_like(z, -1e30), z)
+
+    def step(carry, x_t):
+        carry = _slstm_cell(lp, nh, dh, x_t, carry)
+        return carry, carry[3]
+
+    state, hs = lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)  # (B,S,d)
+    hs = cm.rms_norm(hs, lp["s_out_norm"], cfg.norm_eps)
+    x = x + hs
+    # GeGLU FFN (proj factor 4/3)
+    h1 = cm.rms_norm(x, lp["s_ffn_norm"], cfg.norm_eps)
+    uu = jnp.einsum("bsd,df->bsf", h1, lp["s_ffn_up"])
+    g, u = jnp.split(uu, 2, axis=-1)
+    x = x + jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, lp["s_ffn_down"])
+    return x, state
+
+
+def slstm_block_step(cfg, lp, x, state):
+    B = x.shape[0]
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    h0 = cm.rms_norm(x, lp["s_norm"], cfg.norm_eps)
+    pre = (jnp.einsum("bsd,de->bse", h0, lp["s_w"]) + lp["s_b"])[:, 0]
+    state = _slstm_cell(lp, nh, dh, pre, state)
+    hs = state[3].reshape(B, 1, d).astype(x.dtype)
+    hs = cm.rms_norm(hs, lp["s_out_norm"], cfg.norm_eps)
+    x = x + hs
+    h1 = cm.rms_norm(x, lp["s_ffn_norm"], cfg.norm_eps)
+    uu = jnp.einsum("bsd,df->bsf", h1, lp["s_ffn_up"])
+    g, u = jnp.split(uu, 2, axis=-1)
+    x = x + jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, lp["s_ffn_down"])
+    return x, state
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(params: Dict, cfg: ModelConfig, tokens: jax.Array, **_):
+    x = jnp.take(params["embed"]["tok_embed"], tokens, axis=0)
+
+    def pair_body(carry, lp):
+        y = carry
+        y = mlstm_block_seq(cfg, lp, y)
+        y, _ = slstm_block_seq(cfg, lp, y)
+        return cm.seq_shard(y), None
+
+    if cfg.sharding.remat == "full":
+        pair_body = jax.checkpoint(pair_body)
+    x, _ = lax.scan(pair_body, x, params["pairs"])
+    return x
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    G = n_pairs(cfg)
+    nh, u, d = cfg.num_heads, up_dim(cfg), cfg.d_model
+    dhm, dhs = u // nh, d // nh
+    z = jnp.zeros
+    return {
+        "m": {"C": z((G, batch, nh, dhm, dhm), jnp.float32),
+              "n": z((G, batch, nh, dhm), jnp.float32),
+              "m": z((G, batch, nh), jnp.float32),
+              "conv": z((G, batch, cfg.conv_width - 1, u), dtype)},
+        "s": {"c": z((G, batch, nh, dhs), jnp.float32),
+              "n": z((G, batch, nh, dhs), jnp.float32),
+              "m": jnp.full((G, batch, nh, dhs), -1e30, jnp.float32),
+              "h": z((G, batch, nh, dhs), jnp.float32)},
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array, max_len: int, **_):
+    """Sequence-parallel prefill: chunkwise mLSTM (with exact final state)
+    + scanned sLSTM; the recurrent state is the whole cache."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"]["tok_embed"], tokens, axis=0)
+
+    def pair_body(carry, lp):
+        y = carry
+        y, mstate = mlstm_block_seq(cfg, lp, y, return_state=True)
+        y, sstate = slstm_block_seq(cfg, lp, y)
+        c, n, m, h = sstate
+        return cm.seq_shard(y), (mstate, {"c": c, "n": n, "m": m, "h": h})
+
+    x, (mstates, sstates) = lax.scan(pair_body, x, params["pairs"])
+    logits = cm.lm_logits(params["embed"], x[:, -1:], cfg)
+    return logits, {"m": mstates, "s": sstates, "pos": jnp.int32(S)}
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array, cache: Dict, **_):
+    B = token.shape[0]
+    x = jnp.take(params["embed"]["tok_embed"], token, axis=0)
+
+    def pair_body(carry, inp):
+        y = carry
+        lp, ms, ss = inp
+        y, ms_new = mlstm_block_step(cfg, lp, y, ms)
+        c, n, m, h = ss["c"], ss["n"], ss["m"], ss["h"]
+        y, (c, n, m, h) = slstm_block_step(cfg, lp, y, (c, n, m, h))
+        return y, (ms_new, {"c": c, "n": n, "m": m, "h": h})
+
+    x, (ms, ss) = lax.scan(
+        pair_body, x,
+        (params["pairs"], cache["m"],
+         {k: cache["s"][k] for k in ("c", "n", "m", "h")}))
+    logits = cm.lm_logits(params["embed"], x, cfg)
+    return logits, {"m": ms, "s": ss, "pos": cache["pos"] + 1}

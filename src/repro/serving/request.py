@@ -1,0 +1,72 @@
+"""Request lifecycle types shared by the real engine and the simulator."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    isl: int                              # input sequence length
+    osl: int                              # output sequence length target
+    arrival: float = 0.0                  # seconds (virtual or wall)
+    prompt: Optional[List[int]] = None    # real tokens (engine) or None (sim)
+
+    # mutable lifecycle state
+    phase: Phase = Phase.WAITING
+    prefill_done: int = 0                 # prompt tokens processed so far
+    generated: int = 0
+    slot: int = -1                        # engine batch slot
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+
+    # metrics
+    t_first_sched: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.t_finish is None or self.t_first_token is None or self.osl <= 1:
+            return None
+        return (self.t_finish - self.t_first_token) / (self.osl - 1)
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    req: Request
+    start: int
+    length: int
+
+
+@dataclasses.dataclass
+class IterationPlan:
+    """What one engine iteration executes (the 'mixed step' of Alg. 2)."""
+    prefill: List[PrefillChunk]
+    decode: List[Request]
+
+    @property
+    def ctx_tokens(self) -> int:
+        return sum(c.length for c in self.prefill)
+
+    @property
+    def gen_tokens(self) -> int:
+        return len(self.decode)
+
+    @property
+    def empty(self) -> bool:
+        return not self.prefill and not self.decode

@@ -1,0 +1,121 @@
+"""Iteration-level continuous-batching scheduler.
+
+One scheduler implementation drives BOTH the real JAX engine and the
+discrete-event simulator, so the simulator is an honest ground truth for the
+paper's closed-form Algorithm 2: they share admission, chunking, and slot
+policies and differ only in how an iteration's latency is obtained
+(measured vs. perf-DB query).
+
+Modeled runtime flags (the paper's framework-specific knobs):
+  max_batch            decode slot count (engine batch dimension)
+  max_num_tokens       per-iteration context-token capacity (C_ctx)
+  chunked_prefill      split prompts into max_num_tokens-sized chunks
+  prefill_priority     schedule prefill before decode when contending
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.serving.request import IterationPlan, Phase, PrefillChunk, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch: int = 64
+    max_num_tokens: int = 8192          # C_ctx
+    chunked_prefill: bool = True
+    prefill_priority: bool = True       # TRT-LLM-style context-first
+    max_queue: int = 100_000
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.waiting: Deque[Request] = deque()
+        self.prefilling: List[Request] = []
+        self.decoding: List[Request] = []
+        self._free_slots = list(range(cfg.max_batch))[::-1]
+
+    # ------------------------------------------------------------------
+    def add(self, req: Request) -> bool:
+        if len(self.waiting) >= self.cfg.max_queue:
+            return False
+        req.phase = Phase.WAITING
+        self.waiting.append(req)
+        return True
+
+    @property
+    def active(self) -> int:
+        return len(self.waiting) + len(self.prefilling) + len(self.decoding)
+
+    # ------------------------------------------------------------------
+    def plan(self, now: float) -> IterationPlan:
+        """Build the next iteration: fill C_ctx with prefill chunks, give the
+        remaining slots to decode."""
+        cfg = self.cfg
+        budget = cfg.max_num_tokens
+        chunks: List[PrefillChunk] = []
+
+        # 1. continue partially-prefilled requests first (chunked mode)
+        for req in list(self.prefilling):
+            if budget <= 0:
+                break
+            take = min(req.isl - req.prefill_done, budget)
+            if take > 0:
+                chunks.append(PrefillChunk(req, req.prefill_done, take))
+                budget -= take
+
+        # 2. admit waiting requests while slots and token budget remain
+        while self.waiting and self._free_slots and budget > 0:
+            req = self.waiting[0]
+            take = min(req.isl, budget) if cfg.chunked_prefill else req.isl
+            if take > budget and not (budget == cfg.max_num_tokens
+                                      and not cfg.chunked_prefill):
+                break  # whole-prompt scheduling: wait for a freer iteration
+            self.waiting.popleft()
+            req.slot = self._free_slots.pop()
+            req.phase = Phase.PREFILL
+            if req.t_first_sched is None:
+                req.t_first_sched = now
+            self.prefilling.append(req)
+            chunks.append(PrefillChunk(req, 0, take))
+            budget -= take
+
+        decode = list(self.decoding)
+        return IterationPlan(prefill=chunks, decode=decode)
+
+    # ------------------------------------------------------------------
+    def commit(self, plan: IterationPlan, now: float) -> List[Request]:
+        """Apply an executed iteration's effects; returns finished requests."""
+        for chunk in plan.prefill:
+            req = chunk.req
+            req.prefill_done += chunk.length
+            if req.prefill_done >= req.isl:
+                # prefill complete -> first token produced this iteration
+                req.phase = Phase.DECODE
+                req.generated = 1
+                if req.t_first_token is None:
+                    req.t_first_token = now
+                self.prefilling.remove(req)
+                self.decoding.append(req)
+
+        finished: List[Request] = []
+        for req in plan.decode:
+            req.generated += 1
+            if req.generated >= req.osl:
+                req.phase = Phase.DONE
+                req.t_finish = now
+                self.decoding.remove(req)
+                self._free_slots.append(req.slot)
+                finished.append(req)
+        # a request that finishes prefill with osl == 1 is also done
+        for req in list(self.decoding):
+            if req.osl <= 1 and req.generated >= 1:
+                req.phase = Phase.DONE
+                req.t_finish = now
+                self.decoding.remove(req)
+                self._free_slots.append(req.slot)
+                finished.append(req)
+        return finished

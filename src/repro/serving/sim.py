@@ -1,0 +1,102 @@
+"""Discrete-event serving simulator — the fidelity ground truth.
+
+Plays the role real silicon plays in the paper's §5 evaluation: it executes
+the *same* continuous-batching scheduler as the engine, iteration by
+iteration, advancing a virtual clock by a per-iteration latency obtained
+from an operator-level latency callback (the perf DB).  Algorithm 2's
+closed-form estimate is then validated against this step-accurate
+execution (benchmarks/fig6_fidelity.py), reproducing the paper's MAPE
+methodology without GPUs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.serving.request import IterationPlan, Request
+from repro.serving.scheduler import ContinuousBatchingScheduler, SchedulerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSpec:
+    """Shape of one iteration handed to the latency model."""
+    prefill: Tuple[Tuple[int, int], ...]   # (chunk_len, past_len) per chunk
+    decode: Tuple[int, ...]                # kv length per decode row
+
+
+@dataclasses.dataclass
+class SimMetrics:
+    ttft_ms: float
+    tpot_ms: float
+    throughput_tok_s: float                # generated tokens / wall
+    tokens_per_s_per_user: float
+    completed: int
+    steps: int
+    per_request: List[Tuple[float, float]]  # (ttft_s, tpot_s)
+
+
+LatencyFn = Callable[[StepSpec], float]
+
+
+class ServingSimulator:
+    def __init__(self, sched_cfg: SchedulerConfig, latency_fn: LatencyFn):
+        self.sched_cfg = sched_cfg
+        self.latency_fn = latency_fn
+
+    def run(self, isl: int, osl: int, concurrency: int,
+            max_requests: int = 64, warmup: int = 8) -> SimMetrics:
+        """Closed-loop at fixed concurrency (the paper's steady-state view)."""
+        sched = ContinuousBatchingScheduler(self.sched_cfg)
+        t = 0.0
+        rid = 0
+        done: List[Request] = []
+
+        def inject():
+            nonlocal rid
+            req = Request(rid=rid, isl=isl, osl=osl, arrival=t)
+            sched.add(req)
+            rid += 1
+
+        for _ in range(min(concurrency, max_requests + warmup)):
+            inject()
+
+        steps = 0
+        gen_window = 0
+        t_window_start: Optional[float] = None
+        while len(done) < max_requests + warmup and sched.active > 0:
+            plan = sched.plan(t)
+            if plan.empty:
+                break
+            spec = StepSpec(
+                prefill=tuple((c.length, c.start) for c in plan.prefill),
+                decode=tuple(r.isl + r.generated for r in plan.decode),
+            )
+            t += self.latency_fn(spec)
+            steps += 1
+            if len(done) >= warmup:
+                if t_window_start is None:
+                    t_window_start = t
+                gen_window += plan.gen_tokens + sum(
+                    1 for c in plan.prefill
+                    if c.start + c.length >= c.req.isl)
+            finished = sched.commit(plan, t)
+            done.extend(finished)
+            for _ in finished:
+                if rid < max_requests + warmup:
+                    inject()
+
+        measured = done[warmup:]
+        ttfts = [r.ttft for r in measured if r.ttft is not None]
+        tpots = [r.tpot for r in measured if r.tpot is not None]
+        elapsed = max(t - (t_window_start or 0.0), 1e-9)
+        mean_tpot = statistics.mean(tpots) if tpots else 0.0
+        return SimMetrics(
+            ttft_ms=1e3 * statistics.mean(ttfts) if ttfts else 0.0,
+            tpot_ms=1e3 * mean_tpot,
+            throughput_tok_s=gen_window / elapsed,
+            tokens_per_s_per_user=(1.0 / mean_tpot) if mean_tpot else 0.0,
+            completed=len(measured),
+            steps=steps,
+            per_request=[(r.ttft or 0.0, r.tpot or 0.0) for r in measured],
+        )

@@ -1,0 +1,67 @@
+"""Flat-npz checkpointing for params + optimizer state.
+
+Trees are flattened with '/'-joined key paths; restore rebuilds against a
+reference tree (shape- and dtype-checked), so a checkpoint can never be
+silently loaded into the wrong architecture.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_seg(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _seg(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, params: Any, opt_state: Any = None, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blob = {"__step": np.int64(step)}
+    for k, v in _flatten(params).items():
+        blob["p/" + k] = v
+    if opt_state is not None:
+        for k, v in _flatten(opt_state).items():
+            blob["o/" + k] = v
+    tmp = path + ".tmp"
+    np.savez(tmp, **blob)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, params_like: Any,
+            opt_like: Any = None) -> Tuple[Any, Optional[Any], int]:
+    with np.load(path, allow_pickle=False) as blob:
+        step = int(blob["__step"])
+
+        def rebuild(like: Any, prefix: str) -> Any:
+            flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+            leaves = []
+            for path_, leaf in flat:
+                key = prefix + "/".join(_seg(p) for p in path_)
+                arr = blob[key]
+                if arr.shape != leaf.shape:
+                    raise ValueError(
+                        f"checkpoint mismatch at {key}: {arr.shape} vs {leaf.shape}")
+                leaves.append(arr.astype(leaf.dtype))
+            return jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(like), leaves)
+
+        p = rebuild(params_like, "p/")
+        o = rebuild(opt_like, "o/") if opt_like is not None else None
+    return p, o, step

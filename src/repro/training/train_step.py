@@ -1,0 +1,81 @@
+"""Training step: CE loss (+ MoE aux), grad, AdamW update.
+
+``make_train_step`` returns the function the dry-run lowers for the
+``train_4k`` shape and the trainer jits for real CPU smoke runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.training import optimizer as opt
+
+AUX_LOSS_COEF = 0.01
+
+
+def loss_fn(params: Any, cfg: ModelConfig, tokens: jax.Array,
+            labels: jax.Array, extras: Dict[str, Any]) -> Tuple[jax.Array, Dict]:
+    hidden, aux = models.forward_train(params, cfg, tokens, **extras)
+    chunk = cfg.sharding.loss_chunk
+    if cfg.family == "audio":
+        from repro.models import encdec
+        logits = encdec._final_logits(params, cfg, hidden)
+        ce = cm.cross_entropy(logits, labels)
+    elif chunk:
+        ce = cm.chunked_loss(params["embed"], hidden, labels, cfg, chunk)
+    else:
+        logits = cm.lm_logits(params["embed"], hidden, cfg)
+        ce = cm.cross_entropy(logits, labels)
+    total = ce + AUX_LOSS_COEF * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[opt.AdamWConfig] = None):
+    opt_cfg = opt_cfg or opt.AdamWConfig()
+    n_mb = max(cfg.sharding.microbatches, 1)
+
+    def train_step(params, opt_state, tokens, labels, **extras):
+        if n_mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, cfg, tokens, labels, extras)
+        else:
+            # gradient accumulation: scan microbatches, fp32 accumulators
+            B = tokens.shape[0]
+            assert B % n_mb == 0, (B, n_mb)
+            tk = tokens.reshape(n_mb, B // n_mb, -1)
+            lb = labels.reshape(n_mb, B // n_mb, -1)
+            # modality extras split along their batch axis
+            ex_axis = {"frames": 0, "image_embeds": 0, "mrope_positions": 1}
+            ex_split = {}
+            for k, v in extras.items():
+                if v is None:
+                    continue
+                ax = ex_axis[k]
+                shape = v.shape[:ax] + (n_mb, B // n_mb) + v.shape[ax + 1:]
+                ex_split[k] = jnp.moveaxis(v.reshape(shape), ax, 0)
+
+            def mb(acc, inp):
+                g_acc, l_acc = acc
+                t, l, ex = inp
+                (loss_i, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, cfg, t, l, ex)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_mb, g_acc, g)
+                return (g_acc, l_acc + loss_i / n_mb), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                mb, (zeros, jnp.float32(0.0)), (tk, lb, ex_split))
+            metrics = {"ce": loss, "aux": jnp.float32(0.0)}
+        params, opt_state, opt_metrics = opt.update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

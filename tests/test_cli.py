@@ -1,0 +1,28 @@
+"""Configurator CLI (the paper's Fig. 2 workflow as one command)."""
+import json
+
+import pytest
+
+from repro.core import cli
+
+
+def test_cli_end_to_end(tmp_path, capsys):
+    out = str(tmp_path / "launch.json")
+    rc = cli.main(["--model", "llama3.1-8b", "--isl", "1024", "--osl", "256",
+                   "--ttft", "2000", "--min-speed", "10", "--chips", "16",
+                   "--dtype", "fp8", "--save-launch", out])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "launch command:" in text
+    assert "tok/s/chip" in text
+    raw = json.load(open(out))
+    assert raw["model"] == "llama3.1-8b"
+    assert raw["mode"] in ("static", "aggregated", "disaggregated")
+
+
+def test_cli_unsatisfiable_sla(capsys):
+    rc = cli.main(["--model", "qwen3-235b", "--isl", "8192", "--osl", "512",
+                   "--ttft", "1", "--min-speed", "10000", "--chips", "8",
+                   "--dtype", "fp8"])
+    assert rc == 1
+    assert "no configuration satisfies" in capsys.readouterr().out

@@ -1,0 +1,61 @@
+"""Dry-run CLI smoke: one (arch x shape) pair lowered + compiled on the real
+16x16 production mesh in a subprocess (the 512-device XLA flag must be set
+before jax init, so it cannot run in-process with the other tests)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [("internlm2-1.8b", "decode_32k")])
+def test_dryrun_single_pair(tmp_path, arch, shape):
+    out = str(tmp_path / "dr.jsonl")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", out],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(open(out).read().strip().splitlines()[-1])
+    assert rec["ok"], rec.get("error")
+    assert rec["flops_corrected"] > 0
+    assert rec["mem"]["temp_size_in_bytes"] > 0
+    assert rec["mesh"] == "16x16"
+
+
+def test_input_specs_shapes():
+    """input_specs builds ShapeDtypeStructs for every matrix pair without
+    touching devices."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.configs import dryrun_pairs, INPUT_SHAPES, get_config
+    from repro.launch.dryrun import input_specs
+    pairs = dryrun_pairs()
+    assert len(pairs) == 34          # 10*4 minus six long_500k skips
+    for arch, shape in pairs:
+        specs = input_specs(arch, shape)
+        sh = INPUT_SHAPES[shape]
+        if sh.kind == "train":
+            assert specs["tokens"].shape == (sh.global_batch, sh.seq_len)
+        elif sh.kind == "prefill":
+            assert specs["tokens"].shape == (sh.global_batch, sh.seq_len)
+        else:
+            assert specs["token"].shape == (sh.global_batch, 1)
+            assert "cache" in specs
+
+
+def test_long500k_skips_documented():
+    from repro.configs import dryrun_pairs, get_config, list_archs
+    pairs = set(dryrun_pairs())
+    for arch in list_archs():
+        cfg = get_config(arch)
+        has_long = (arch, "long_500k") in pairs
+        assert has_long == cfg.sub_quadratic
+    # exactly the four sub-quadratic archs run long_500k
+    longs = sorted(a for a, s in pairs if s == "long_500k")
+    assert longs == ["h2o-danube-3-4b", "mixtral-8x22b",
+                     "recurrentgemma-2b", "xlstm-350m"]

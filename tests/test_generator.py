@@ -1,0 +1,73 @@
+"""Generator (§4.1): launch artifacts for every backend with resolved flags."""
+import json
+
+import pytest
+
+from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
+                        WorkloadDescriptor, generate)
+from repro.core.backends.base import all_backends, get_backend
+from repro.core.generator import resolve_kv_fraction
+from repro.core.config import ParallelismConfig
+
+
+def _workload(backend):
+    return WorkloadDescriptor(
+        model="llama3.1-8b", isl=1024, osl=256,
+        sla=SLA(ttft_ms=2000, min_tokens_per_s_user=10),
+        cluster=ClusterSpec(n_chips=16), backend=backend, dtype="fp8")
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for be in all_backends():
+        w = _workload(be)
+        r = TaskRunner(w, PerfDatabase("tpu_v5e", be)).run()
+        assert r.best is not None
+        out[be] = (w, r)
+    return out
+
+
+@pytest.mark.parametrize("backend", ["repro-jax", "trtllm", "vllm", "sglang"])
+def test_launch_artifact(results, backend):
+    w, r = results[backend]
+    lc = generate(w, r.best)
+    assert lc.backend == backend
+    assert w.model in lc.command
+    be = get_backend(backend)
+    assert lc.command.startswith(be.launcher)
+    raw = json.loads(lc.to_json())
+    assert raw["mode"] in ("static", "aggregated", "disaggregated")
+    if raw["mode"] != "disaggregated":
+        kv = raw["runtime_flags"]["kv_cache_mem_fraction"]
+        assert 0.0 < kv <= 0.95
+        assert be.flags["kv_cache_mem_fraction"] in lc.command
+
+
+def test_backend_flag_vocabulary_differs(results):
+    cmds = {be: generate(w, r.best).command for be, (w, r) in results.items()}
+    # trtllm-style flag appears only in its own command
+    assert "--kv_cache_free_gpu_mem_fraction" not in cmds["vllm"]
+    assert any("kv_cache_free_gpu_mem_fraction" in cmds["trtllm"]
+               or "--prefill" in cmds["trtllm"]
+               for _ in [0])
+
+
+def test_kv_fraction_monotone_in_batch():
+    w = _workload("repro-jax")
+    par = ParallelismConfig(tp=8)
+    f_small = resolve_kv_fraction(w, par, 2)
+    f_big = resolve_kv_fraction(w, par, 64)
+    assert f_small <= f_big <= 0.95
+
+
+def test_disagg_artifact():
+    w = _workload("repro-jax")
+    r = TaskRunner(w, PerfDatabase("tpu_v5e", "repro-jax")).run()
+    dis = [p for p in r.projections if p.mode == "disaggregated"]
+    if not dis:
+        pytest.skip("no disagg candidate fit this workload")
+    lc = generate(w, dis[0])
+    assert "--disaggregated" in lc.command
+    assert lc.raw["prefill_workers"]["count"] >= 1
+    assert lc.raw["decode_workers"]["count"] >= 1

@@ -1,0 +1,105 @@
+"""Pallas kernel validation (deliverable c): shape/dtype sweeps, interpret
+mode on CPU, assert_allclose against the pure-jnp oracles in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RTOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 3e-2}
+
+
+def _allclose(out, expect, dtype):
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=RTOL[dtype], atol=ATOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Sk,H,K,D,causal,window,bq,bk", [
+    (2, 64, 64, 4, 2, 64, True, 0, 32, 32),
+    (1, 128, 128, 8, 8, 64, True, 0, 64, 64),      # MHA
+    (2, 48, 48, 4, 1, 32, True, 16, 16, 16),       # MQA + SWA
+    (1, 100, 100, 4, 2, 64, True, 0, 32, 32),      # padding path
+    (2, 64, 64, 4, 4, 128, False, 0, 32, 32),      # non-causal (encoder)
+    (1, 96, 96, 6, 3, 64, True, 32, 48, 32),       # window spans blocks
+])
+def test_flash_attention(B, Sq, Sk, H, K, D, causal, window, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, K, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, K, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    assert out.shape == q.shape and out.dtype == dtype
+    _allclose(out, expect, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,D,W,bk", [
+    (4, 8, 2, 64, 128, 32),
+    (2, 4, 4, 128, 64, 64),     # MHA
+    (3, 8, 1, 64, 100, 32),     # MQA + non-multiple width
+    (1, 16, 2, 64, 256, 128),
+])
+def test_decode_attention(B, H, K, D, W, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kc = jax.random.normal(ks[1], (B, W, K, D), dtype)
+    vc = jax.random.normal(ks[2], (B, W, K, D), dtype)
+    vl = jnp.asarray(np.random.default_rng(0).integers(1, W + 1, B),
+                     jnp.int32)
+    out = ops.decode_attention(q, kc, vc, vl, block_k=bk, interpret=True)
+    expect = ref.decode_attention_ref(q, kc, vc, vl)
+    assert out.shape == (B, H, D)
+    _allclose(out, expect, dtype)
+
+
+@pytest.mark.parametrize("B,S,W,bs,bw", [
+    (2, 64, 128, 16, 64),
+    (3, 100, 96, 32, 32),     # non-multiples both dims
+    (1, 17, 40, 8, 16),
+    (4, 128, 256, 128, 128),
+])
+def test_rglru_scan(B, S, W, bs, bw):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W)))
+    b = jax.random.normal(ks[1], (B, S, W))
+    h0 = jax.random.normal(ks[2], (B, W))
+    out = ops.rglru_scan(a, b, h0, block_s=bs, block_w=bw, interpret=True)
+    expect = ref.rglru_scan_ref(a, b, h0)
+    _allclose(out, expect, jnp.float32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F", [
+    (4, 64, 128, 256),
+    (2, 100, 96, 130),       # ragged dims exercise padding
+    (8, 32, 512, 64),
+    (1, 128, 128, 128),
+])
+def test_moe_gemm(E, C, D, F, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    xe = (jax.random.normal(ks[0], (E, C, D), dtype) * 0.1).astype(dtype)
+    we = (jax.random.normal(ks[1], (E, D, F), dtype) * 0.1).astype(dtype)
+    out = ops.moe_gemm(xe, we, block_c=32, block_f=64, block_d=64,
+                       interpret=True)
+    expect = ref.moe_gemm_ref(xe, we)
+    assert out.shape == (E, C, F)
+    _allclose(out, expect, dtype)
+
+
+def test_flash_matches_model_attention():
+    """The kernel and the model's blockwise-jnp attention agree."""
+    from repro.models import common as cm
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (2, 64, 8, 64))
+    k = jax.random.normal(ks[1], (2, 64, 2, 64))
+    v = jax.random.normal(ks[2], (2, 64, 2, 64))
+    a = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                            interpret=True)
+    b = cm.attention(q, k, v, None, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -1,0 +1,59 @@
+"""Property tests (hypothesis) for the PerfDatabase interpolation grid."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perf_database import OpGrid
+
+
+def _mono_grid():
+    axes = [[1, 2, 4, 8, 16, 32], [128, 256, 512, 1024]]
+    table = np.empty((6, 4))
+    for i, m in enumerate(axes[0]):
+        for j, n in enumerate(axes[1]):
+            table[i, j] = 1e-6 * m * n + 5e-6
+    return OpGrid(axes, table), axes
+
+
+@given(st.floats(1, 32), st.floats(128, 1024))
+@settings(max_examples=100, deadline=None)
+def test_interpolation_within_bounds(m, n):
+    grid, axes = _mono_grid()
+    v = grid.query((m, n))
+    lo = grid.table.min()
+    hi = grid.table.max()
+    assert lo * 0.999 <= v <= hi * 1.001
+
+
+@given(st.floats(1, 32), st.floats(1, 32), st.floats(128, 1024))
+@settings(max_examples=100, deadline=None)
+def test_interpolation_monotone(m1, m2, n):
+    """Monotone table -> monotone interpolation along each axis."""
+    grid, _ = _mono_grid()
+    a, b = sorted((m1, m2))
+    assert grid.query((a, n)) <= grid.query((b, n)) * (1 + 1e-9)
+
+
+def test_exact_on_grid_points():
+    grid, axes = _mono_grid()
+    for i, m in enumerate(axes[0]):
+        for j, n in enumerate(axes[1]):
+            assert grid.query((m, n)) == pytest.approx(grid.table[i, j],
+                                                       rel=1e-9)
+
+
+@given(st.floats(0.01, 100), st.floats(1, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_clamps_outside_domain(m, n):
+    grid, _ = _mono_grid()
+    v = grid.query((m, n))
+    assert math.isfinite(v) and v > 0
+
+
+def test_json_roundtrip():
+    grid, _ = _mono_grid()
+    g2 = OpGrid.from_json(grid.to_json())
+    assert g2.query((3.3, 300.0)) == pytest.approx(grid.query((3.3, 300.0)),
+                                                   rel=1e-12)

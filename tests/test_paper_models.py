@@ -1,0 +1,61 @@
+"""The paper's own evaluation models (perf-model-only in the dry-run
+matrix) are nonetheless REAL model configs: their reduced variants run a
+forward pass too, including DeepSeek's MLA-adjacent MoE with shared
+experts."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import models
+from repro.configs import get_config, list_archs
+from repro.models import common as cm
+
+PAPER_MODELS = ["llama3.1-8b", "qwen3-32b", "qwen3-235b", "deepseek-v3"]
+
+
+def test_paper_models_registered_but_not_in_matrix():
+    matrix = set(list_archs())
+    everything = set(list_archs(include_perf_only=True))
+    assert set(PAPER_MODELS) <= everything - matrix
+
+
+@pytest.mark.parametrize("arch", PAPER_MODELS)
+def test_reduced_forward(arch):
+    cfg = get_config(arch).reduced()
+    if arch == "deepseek-v3":
+        cfg = dataclasses.replace(cfg, n_shared_experts=1)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    h, aux = models.forward_train(params, cfg, toks)
+    assert h.shape == (2, 12, cfg.d_model)
+    assert jnp.isfinite(h).all()
+
+
+def test_deepseek_shared_expert_decode_consistency():
+    cfg = dataclasses.replace(get_config("deepseek-v3").reduced(),
+                              n_shared_experts=1)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 13), 0,
+                              cfg.vocab_size)
+    h, _ = models.forward_train(params, cfg, toks)
+    ref = cm.lm_logits(params["embed"], h[:, -1:], cfg)
+    _, cache = models.prefill(params, cfg, toks[:, :12], max_len=20)
+    lg, _ = models.decode_step(params, cfg, toks[:, 12:13], cache)
+    assert float(jnp.max(jnp.abs(lg - ref))) < 1e-3
+
+
+def test_shared_experts_change_output():
+    base = get_config("deepseek-v3").reduced()
+    with_se = dataclasses.replace(base, n_shared_experts=1)
+    p = models.init_params(with_se, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                              base.vocab_size)
+    h1, _ = models.forward_train(p, with_se, toks)
+    # zeroing the shared-expert weights must change the result
+    p2 = jax.tree.map(lambda x: x, p)
+    p2["layers"]["ws_gate"] = jnp.zeros_like(p2["layers"]["ws_gate"])
+    h2, _ = models.forward_train(p2, with_se, toks)
+    assert float(jnp.max(jnp.abs(h1 - h2))) > 1e-4

@@ -1,0 +1,57 @@
+"""Property tests for the Pareto analyzer."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pareto
+from repro.core.config import Projection, SLA
+
+
+def _proj(speed, thru, ttft=100.0):
+    return Projection(ttft_ms=ttft, tpot_ms=1000.0 / max(speed, 1e-6),
+                      tokens_per_s_user=speed, tokens_per_s_per_chip=thru,
+                      chips=8, batch_size=8, mode="aggregated", config={})
+
+
+pts = st.lists(
+    st.tuples(st.floats(1, 500), st.floats(1, 5000)),
+    min_size=1, max_size=60)
+
+
+@given(pts)
+@settings(max_examples=100, deadline=None)
+def test_frontier_non_dominated(points):
+    projs = [_proj(s, t) for s, t in points]
+    front = pareto.frontier(projs)
+    # no point in the frontier is dominated by any input point
+    for f in front:
+        for p in projs:
+            strictly_better = (p.tokens_per_s_user > f.tokens_per_s_user
+                               and p.tokens_per_s_per_chip > f.tokens_per_s_per_chip)
+            assert not strictly_better
+    # every input point is dominated-or-equal by some frontier point
+    for p in projs:
+        assert any(f.tokens_per_s_user >= p.tokens_per_s_user
+                   and f.tokens_per_s_per_chip >= p.tokens_per_s_per_chip
+                   for f in front)
+
+
+@given(pts, st.floats(5, 400))
+@settings(max_examples=50, deadline=None)
+def test_sla_filter_and_best(points, min_speed):
+    sla = SLA(ttft_ms=500, min_tokens_per_s_user=min_speed)
+    projs = [_proj(s, t) for s, t in points]
+    ok = pareto.sla_filter(projs, sla)
+    assert all(p.tokens_per_s_user >= min_speed - 1e-6 for p in ok)
+    best = pareto.best(projs, sla)
+    if ok:
+        assert best is not None
+        assert best.tokens_per_s_per_chip == max(
+            p.tokens_per_s_per_chip for p in ok)
+    else:
+        assert best is None
+
+
+def test_ttft_violations_filtered():
+    sla = SLA(ttft_ms=50)
+    projs = [_proj(10, 100, ttft=200.0), _proj(10, 1, ttft=10.0)]
+    best = pareto.best(projs, sla)
+    assert best is not None and best.ttft_ms == 10.0

@@ -1,0 +1,135 @@
+"""Perf-iteration knobs (§Perf) must be semantics-preserving: with no mesh
+context they are exact no-ops; spec resolution for the 3-axis expert mesh
+is consistent; the causal block-skip is bit-compatible with the plain path
+(exercised in test_recurrent_forms too)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import models
+from repro.configs import get_config
+from repro.launch import sharding as shd
+from repro.models import common as cm
+
+
+def _with_rules(cfg, **kw):
+    return dataclasses.replace(
+        cfg, sharding=dataclasses.replace(cfg.sharding, **kw))
+
+
+@pytest.mark.parametrize("knobs", [
+    {"decode_attn_pin": True},
+    {"shard_kv_seq": True},
+    {"blockwise_q_shard": True},
+    {"decode_attn_pin": True, "shard_kv_seq": True,
+     "blockwise_q_shard": True},
+])
+def test_knobs_preserve_decode_semantics(knobs):
+    rng = jax.random.PRNGKey(0)
+    base = get_config("qwen3-moe-30b-a3b").reduced()
+    tuned = _with_rules(base, **knobs)
+    params = models.init_params(base, rng)
+    toks = jax.random.randint(rng, (2, 13), 0, base.vocab_size)
+
+    def run(cfg):
+        lg, cache = models.prefill(params, cfg, toks[:, :12], max_len=20)
+        lg2, _ = models.decode_step(params, cfg, toks[:, 12:13], cache)
+        return lg2
+
+    np.testing.assert_array_equal(np.asarray(run(base)),
+                                  np.asarray(run(tuned)))
+
+
+def test_blockwise_q_shard_exact_on_long_seq():
+    """q_shard changes sharding only; values identical (no mesh -> no-op,
+    and the lax.cond skip path must agree with plain attention)."""
+    rng = jax.random.PRNGKey(1)
+    q = jax.random.normal(rng, (1, 96, 4, 32))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 96, 2, 32))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (1, 96, 2, 32))
+    a = cm._blockwise_attention(q.reshape(1, 96, 2, 2, 32), k, v, True, 0, 0,
+                                bq=16, bk=16, q_shard=True)
+    b = cm._blockwise_attention(q.reshape(1, 96, 2, 2, 32), k, v, True, 0, 0,
+                                bq=16, bk=16, q_shard=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _expert_mesh():
+    class M:
+        axis_names = ("data", "expert", "model")
+        class devices:
+            pass
+    m = M()
+    m.devices = np.empty((16, 8, 2), dtype=object)
+    return m
+
+
+def test_expert_mesh_param_specs():
+    cfg = get_config("mixtral-8x22b")
+    specs = shd.param_specs(cfg, "train", _expert_mesh())
+    lay = specs["layers"]
+    # expert weights: E on 'expert', per-expert ffn on 'model', D on 'data'
+    assert lay["we_gate"] == P(None, "expert", "data", "model")
+    # attention heads TP across the combined axes
+    assert lay["wq"][2] == ("expert", "model")
+    # vocab TP across combined axes
+    assert specs["embed"]["tok_embed"][0] == ("expert", "model")
+
+
+def test_expert_mesh_moe_ffn_tp_off():
+    cfg = _with_rules(get_config("mixtral-8x22b"), moe_ffn_tp=False)
+    specs = shd.param_specs(cfg, "train", _expert_mesh())
+    assert specs["layers"]["we_gate"] == P(None, "expert", "data", None)
+
+
+def test_tp_size_and_model_axes():
+    cm.set_mesh_axes(("data", "expert", "model"), (16, 8, 2))
+    try:
+        assert cm.model_axes() == ("expert", "model")
+        assert cm.tp_size() == 16
+    finally:
+        cm.set_mesh_axes(())
+    assert cm.tp_size() == 1
+
+
+def test_constrain_noop_without_mesh():
+    cm.set_mesh_axes(())
+    x = jnp.ones((4, 8))
+    assert cm.constrain(x, "batch", "tp") is x
+    assert cm.seq_shard(jnp.ones((2, 8, 4))).shape == (2, 8, 4)
+
+
+def test_int8_kv_cache_quantization():
+    """kv_quant roundtrip + decode consistency within quantization error."""
+    import jax.numpy as jnp
+    from repro.models.common import kv_quantize, kv_dequantize
+    rng = jax.random.PRNGKey(3)
+    k = jax.random.normal(rng, (2, 8, 4, 64))
+    q, s = kv_quantize(k)
+    assert q.dtype == jnp.int8 and s.shape == (2, 8, 4)
+    back = kv_dequantize(q, s, k.dtype)
+    # absmax scaling: error bounded by scale/2 per element
+    assert float(jnp.max(jnp.abs(k - back))) < float(jnp.max(s))
+
+
+def test_int8_kv_cache_decode():
+    import jax.numpy as jnp
+    from repro.models import common as cm
+    cfg = get_config("qwen3-14b").reduced()
+    cfgq = _with_rules(cfg, kv_quant=True)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 13), 0,
+                              cfg.vocab_size)
+    hidden, _ = models.forward_train(params, cfg, toks)
+    ref = cm.lm_logits(params["embed"], hidden[:, -1:], cfg)
+    _, cache = models.prefill(params, cfgq, toks[:, :12], max_len=20)
+    assert cache["k"].dtype == jnp.int8
+    assert "k_scale" in cache
+    lg, cache2 = models.decode_step(params, cfgq, toks[:, 12:13], cache)
+    assert cache2["k"].dtype == jnp.int8
+    rel = float(jnp.max(jnp.abs(lg - ref))) / float(jnp.max(jnp.abs(ref)))
+    assert rel < 0.05, rel

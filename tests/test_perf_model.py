@@ -1,0 +1,281 @@
+"""Unit tests for the AIConfigurator core: PerfDatabase grids +
+interpolation, Algorithms 1–3 against the paper's pseudocode semantics,
+throughput equations, and end-to-end search."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import analytical, modes
+from repro.core import operators as ops
+from repro.core.config import (CandidateConfig, ClusterSpec,
+                               ParallelismConfig, RuntimeFlags, SLA,
+                               WorkloadDescriptor)
+from repro.core.hardware import get_platform
+from repro.core.perf_database import OpGrid, PerfDatabase
+from repro.core.session import InferenceSession
+from repro.core.task_runner import TaskRunner
+
+
+@pytest.fixture(scope="module")
+def db():
+    return PerfDatabase("tpu_v5e", "repro-jax")
+
+
+# ---------------------------------------------------------------------------
+# PerfDatabase
+# ---------------------------------------------------------------------------
+
+def test_grid_exact_on_grid_points(db):
+    g = ops.GEMM(1024, 4096, 4096, "bf16")
+    measured = analytical.latency(db.platform, g)
+    assert db.op_latency(g) == pytest.approx(measured, rel=1e-6)
+
+
+def test_interpolation_between_neighbors(db):
+    lo = db.op_latency(ops.GEMM(1024, 4096, 4096, "bf16"))
+    hi = db.op_latency(ops.GEMM(2048, 4096, 4096, "bf16"))
+    mid = db.op_latency(ops.GEMM(1536, 4096, 4096, "bf16"))
+    assert min(lo, hi) <= mid <= max(lo, hi)
+
+
+def test_interpolation_clamps_at_edges(db):
+    tiny = db.op_latency(ops.GEMM(1, 128, 128, "bf16"))
+    assert tiny > 0
+    huge = db.op_latency(ops.GEMM(1 << 22, 32768, 32768, "bf16"))
+    assert math.isfinite(huge)
+
+
+def test_sol_fallback_smaller_than_calibrated(db):
+    """SoL (no efficiency curves/overhead) must lower-bound calibrated."""
+    g = ops.GEMM(4096, 4096, 4096, "bf16")
+    assert analytical.sol_latency(db.platform, g) \
+        <= analytical.latency(db.platform, g)
+
+
+def test_fp8_faster_than_bf16(db):
+    b = db.op_latency(ops.GEMM(8192, 8192, 8192, "bf16"))
+    f = db.op_latency(ops.GEMM(8192, 8192, 8192, "fp8"))
+    assert f < b
+
+
+def test_decode_attention_memory_bound(db):
+    """Decode attention latency tracks KV bytes / HBM bandwidth."""
+    a = ops.Attention("decode", 32, 1, 32768, 32, 8, 128)
+    t = db.op_latency(a)
+    floor = a.bytes() / db.platform.hbm_bw
+    assert t >= floor
+    assert t < 20 * floor
+
+
+def test_comm_scaling(db):
+    small = db.op_latency(ops.Comm("all_reduce", 2**20, 16))
+    big = db.op_latency(ops.Comm("all_reduce", 2**30, 16))
+    assert big > small
+    assert db.op_latency(ops.Comm("all_reduce", 2**20, 1)) == 0.0
+
+
+def test_db_save_load(tmp_path, db):
+    path = str(tmp_path / "db.json")
+    # touch a lazy grid first so it round-trips
+    a = ops.Attention("decode", 8, 1, 4096, 16, 4, 128)
+    before = db.op_latency(a)
+    db.save(path)
+    db2 = PerfDatabase.load(path)
+    assert db2.op_latency(a) == pytest.approx(before, rel=1e-9)
+    g = ops.GEMM(777, 2048, 2048, "bf16")
+    assert db2.op_latency(g) == pytest.approx(db.op_latency(g), rel=1e-9)
+
+
+def test_weighted_sequence_latency(db):
+    g = ops.GEMM(128, 1024, 1024)
+    assert db.sequence_latency([(g, 3)]) == pytest.approx(
+        3 * db.op_latency(g))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — static
+# ---------------------------------------------------------------------------
+
+def test_static_mode_ttft_is_prefill():
+    lat = lambda b, s, ph: 100.0 if ph == "prefill" else 2.0
+    ttft, tpot = modes.static_mode(lat, isl=512, osl=64, batch=4)
+    assert ttft == 100.0
+    assert tpot == pytest.approx(2.0)
+
+
+def test_static_mode_stride_weighting():
+    """Latency growing with seq must be averaged with stride interpolation."""
+    lat = lambda b, s, ph: 0.0 if ph == "prefill" else float(s)
+    isl, osl = 100, 65
+    _, tpot = modes.static_mode(lat, isl, osl, 1)
+    # strided sum: steps at k=0,32,64 covering 32,32,... of OSL-1=64
+    expected = (float(isl + 1) * 32 + float(isl + 33) * 32) / 64
+    assert tpot == pytest.approx(expected)
+
+
+def test_static_mode_osl1():
+    lat = lambda b, s, ph: 5.0
+    ttft, tpot = modes.static_mode(lat, 128, 1, 1)
+    assert (ttft, tpot) == (5.0, 0.0)
+
+
+def test_static_prefix_reduces_prefill():
+    seen = {}
+    def lat(b, s, ph):
+        if ph == "prefill":
+            seen["s"] = s
+        return 1.0
+    modes.static_mode(lat, isl=512, osl=2, batch=1, prefix=128)
+    assert seen["s"] == 384
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — aggregated
+# ---------------------------------------------------------------------------
+
+def test_aggregated_rate_match_throttle():
+    """Context-dominant regime throttles decode streams (lines 6-10)."""
+    captured = {}
+    def mix(nc, ng, i, o):
+        captured["ng"] = ng
+        return 10.0
+    gen = lambda b, i, o: 1.0
+    isl, osl, B, c = 4096, 16, 64, 4096
+    # T_total_ctx = 64 >= OSL=16 -> N_gen = B/(T/OSL) = 64/4 = 16
+    modes.aggregated_mode(mix, gen, isl, osl, B, c)
+    assert captured["ng"] == 16
+
+
+def test_aggregated_f_corr_formula():
+    mix = lambda nc, ng, i, o: 10.0
+    gen = lambda b, i, o: 1.0
+    isl, osl, B, c = 1024, 256, 8, 4096
+    t_total = math.ceil(isl * B / c)           # 2
+    ttft, _ = modes.aggregated_mode(mix, gen, isl, osl, B, c)
+    f_corr = min(2 + (t_total - 3) / 20, 4.0)
+    assert ttft == pytest.approx(10.0 * math.ceil(isl / c) * f_corr)
+
+
+def test_aggregated_jitter_offset():
+    """TPOT weighting uses max(1, T_mix - 3)."""
+    mix = lambda nc, ng, i, o: 100.0
+    gen = lambda b, i, o: 1.0
+    isl, osl, B, c = 4096, 100, 8, 4096
+    t_mix = math.ceil(isl * B / c)             # 8
+    t_gen = osl - t_mix                        # 92
+    t_mix_p = max(1, t_mix - 3)                # 5
+    _, tpot = modes.aggregated_mode(mix, gen, isl, osl, B, c)
+    assert tpot == pytest.approx((100.0 * t_mix_p + 1.0 * t_gen)
+                                 / (t_mix_p + t_gen))
+
+
+def test_aggregated_batch1_pure_decode():
+    mix = lambda nc, ng, i, o: 50.0
+    gen = lambda b, i, o: 3.0
+    _, tpot = modes.aggregated_mode(mix, gen, 1024, 64, 1, 8192)
+    assert tpot == 3.0
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — disaggregated
+# ---------------------------------------------------------------------------
+
+def _pool(lat, thru, chips=1, cfg=None):
+    return modes.PoolCandidate(config=cfg, chips=chips, latency_ms=lat,
+                               req_throughput=thru)
+
+
+def test_disagg_rate_matching_picks_min():
+    pre = [_pool(100.0, 10.0)]
+    dec = [_pool(5.0, 4.0)]
+    best, _ = modes.disaggregated_mode(
+        pre, dec, ttft_limit_ms=1000, tpot_limit_ms=50,
+        valid_totals=range(1, 9), osl=100)
+    assert best is not None
+    r_pre = 10.0 * best.x * modes.ALPHA_PRE
+    r_dec = 4.0 * best.y * modes.ALPHA_DEC
+    assert best.req_per_s == pytest.approx(min(r_pre, r_dec))
+
+
+def test_disagg_beta_ttft_filter():
+    # latency 600 * 1.8 = 1080 > 1000 -> filtered out
+    pre = [_pool(600.0, 10.0)]
+    dec = [_pool(5.0, 4.0)]
+    best, _ = modes.disaggregated_mode(pre, dec, 1000, 50,
+                                       range(1, 9), osl=100)
+    assert best is None
+
+
+def test_disagg_tpot_filter():
+    pre = [_pool(100.0, 10.0)]
+    dec = [_pool(60.0, 4.0)]
+    best, _ = modes.disaggregated_mode(pre, dec, 1000, 50,
+                                       range(1, 9), osl=100)
+    assert best is None
+
+
+def test_disagg_respects_valid_totals():
+    pre = [_pool(100.0, 10.0, chips=4)]
+    dec = [_pool(5.0, 4.0, chips=4)]
+    best, _ = modes.disaggregated_mode(pre, dec, 1000, 50,
+                                       valid_totals=[8], osl=10)
+    assert best is not None
+    assert best.total_chips == 8 and best.x == 1 and best.y == 1
+
+
+# ---------------------------------------------------------------------------
+# Session / TaskRunner end-to-end
+# ---------------------------------------------------------------------------
+
+def _workload(**kw):
+    base = dict(model="llama3.1-8b", isl=1024, osl=256,
+                sla=SLA(ttft_ms=2000, min_tokens_per_s_user=10),
+                cluster=ClusterSpec(n_chips=16), backend="repro-jax",
+                dtype="fp8")
+    base.update(kw)
+    return WorkloadDescriptor(**base)
+
+
+def test_throughput_equation(db):
+    """System throughput follows eq. (2) exactly."""
+    s = InferenceSession(_workload(), db)
+    cand = CandidateConfig(parallel=ParallelismConfig(tp=8), batch_size=8)
+    p = s.evaluate_static(cand)
+    assert p is not None
+    expect = 1000.0 / (p.ttft_ms + (256 - 1) * p.tpot_ms) * 8 * 256 / 8
+    assert p.tokens_per_s_per_chip == pytest.approx(expect, rel=1e-6)
+
+
+def test_memory_pruning(db):
+    """A config that cannot fit HBM returns None."""
+    s = InferenceSession(_workload(dtype="bf16"), db)
+    too_big = CandidateConfig(parallel=ParallelismConfig(tp=1),
+                              batch_size=256)
+    assert s.evaluate_static(too_big) is None
+
+
+def test_search_end_to_end(db):
+    r = TaskRunner(_workload(), db).run()
+    assert r.n_candidates > 50
+    assert r.best is not None
+    assert r.best.meets(_workload().sla)
+    assert r.per_candidate_ms < 50          # paper: ~1.5ms; CI headroom
+    # frontier is non-dominated and sorted by speed desc
+    f = r.frontier
+    for a, b in zip(f, f[1:]):
+        assert a.tokens_per_s_user >= b.tokens_per_s_user
+        assert a.tokens_per_s_per_chip <= b.tokens_per_s_per_chip
+
+
+def test_backends_differ(db):
+    """Framework-specific dynamics: identical workload, different backend,
+    different projections (the paper's core motivation)."""
+    results = {}
+    for be in ("repro-jax", "trtllm", "vllm", "sglang"):
+        w = _workload(backend=be)
+        s = InferenceSession(w, PerfDatabase("tpu_v5e", be))
+        cand = CandidateConfig(parallel=ParallelismConfig(tp=8), batch_size=8)
+        results[be] = s.evaluate_aggregated(cand).tpot_ms
+    assert len(set(round(v, 6) for v in results.values())) > 1
+    assert results["trtllm"] < results["vllm"]   # static engine < py sched

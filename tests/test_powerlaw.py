@@ -1,0 +1,70 @@
+"""Property tests (hypothesis) for the power-law MoE load correction
+(§4.4.1, eq. 3–4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import powerlaw
+
+
+@given(st.integers(2, 256), st.floats(0.01, 2.0), st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_weights_within_bounds(E, alpha, seed):
+    rng = np.random.default_rng(seed)
+    x = powerlaw.sample_weights(E, alpha, rng)
+    assert x.shape == (E,)
+    assert np.all(x >= powerlaw.X_MIN - 1e-9)
+    assert np.all(x <= powerlaw.X_MAX + 1e-9)
+
+
+@given(st.integers(1, 4096), st.integers(1, 8), st.integers(2, 128),
+       st.floats(0.01, 1.5), st.integers(0, 1000))
+@settings(max_examples=60, deadline=None)
+def test_token_counts_conserved(T, K, E, alpha, seed):
+    """Eq. 4: Σ N_i == T_total * K exactly (residual rebalancing)."""
+    n = powerlaw.token_counts(T, K, E, alpha, seed)
+    assert n.sum() == T * K
+    assert np.all(n >= 0)
+
+
+def test_alpha_controls_skew():
+    """Fig. 5: larger alpha -> heavier tail (hot experts hold more)."""
+    T, K, E = 8192, 8, 128
+    def top20_share(alpha):
+        shares = []
+        for seed in range(20):
+            n = powerlaw.token_counts(T, K, E, alpha, seed)
+            n = np.sort(n)[::-1]
+            shares.append(n[:E // 5].sum() / n.sum())
+        return np.mean(shares)
+    uniform_ish = top20_share(0.05)
+    skewed = top20_share(1.2)
+    assert skewed > uniform_ish + 0.1
+    # paper: alpha≈1.2 -> ~70% of compute on 20% of experts
+    assert 0.45 < skewed < 0.95
+
+
+@given(st.integers(4, 512), st.integers(2, 64), st.integers(0, 100))
+@settings(max_examples=40, deadline=None)
+def test_assignment_matrix_column_sums(T, E, seed):
+    counts = powerlaw.token_counts(T, 2, E, 1.0, seed)
+    L = powerlaw.assignment_matrix(T, counts)
+    assert L.shape == (T, E)
+    np.testing.assert_array_equal(L.sum(axis=0), counts)
+
+
+@given(st.integers(2, 64), st.integers(0, 50))
+@settings(max_examples=30, deadline=None)
+def test_hot_rank_bounds(ep, seed):
+    """Hottest rank holds between mean-share and everything."""
+    T, K, E = 4096, 8, 128
+    ep = min(ep, E)
+    hot = powerlaw.hot_rank_tokens(T, K, E, ep, 1.2, seed)
+    total = T * K
+    assert total / ep - 1 <= hot <= total
+
+
+def test_hot_rank_monotone_in_alpha():
+    vals = [np.mean([powerlaw.hot_rank_tokens(4096, 8, 128, 16, a, s)
+                     for s in range(30)]) for a in (0.05, 1.2)]
+    assert vals[1] > vals[0]

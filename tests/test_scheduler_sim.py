@@ -1,0 +1,80 @@
+"""Scheduler invariants (hypothesis) + discrete-event simulator behaviour."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.request import Phase, Request
+from repro.serving.scheduler import ContinuousBatchingScheduler, SchedulerConfig
+from repro.serving.sim import ServingSimulator, StepSpec
+
+
+@given(st.lists(st.tuples(st.integers(1, 500), st.integers(1, 40)),
+                min_size=1, max_size=40),
+       st.integers(1, 16), st.integers(64, 2048), st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_scheduler_invariants(reqs, max_batch, c_ctx, chunked):
+    sched = ContinuousBatchingScheduler(SchedulerConfig(
+        max_batch=max_batch, max_num_tokens=c_ctx, chunked_prefill=chunked))
+    for i, (isl, osl) in enumerate(reqs):
+        sched.add(Request(rid=i, isl=isl, osl=osl))
+    t, finished, steps = 0.0, [], 0
+    while sched.active and steps < 20_000:
+        plan = sched.plan(t)
+        if plan.empty:
+            break
+        # invariant: decode slots never exceed max_batch
+        assert len(plan.decode) + len(sched.prefilling) <= max_batch
+        # invariant: chunked mode respects the token budget
+        if chunked:
+            assert plan.ctx_tokens <= c_ctx
+        # invariant: chunks only cover un-processed prompt
+        for c in plan.prefill:
+            assert c.start == c.req.prefill_done
+            assert c.start + c.length <= c.req.isl
+        t += 1.0
+        finished += sched.commit(plan, t)
+        steps += 1
+    # all requests complete, each generated exactly osl tokens
+    assert len(finished) == len(reqs)
+    for r in finished:
+        assert r.generated == r.osl
+        assert r.phase == Phase.DONE
+        assert r.prefill_done == r.isl
+    # all slots returned
+    assert len(sched._free_slots) == max_batch
+
+
+def test_prefill_priority_order():
+    sched = ContinuousBatchingScheduler(SchedulerConfig(
+        max_batch=4, max_num_tokens=100, chunked_prefill=True))
+    sched.add(Request(rid=0, isl=250, osl=4))
+    p1 = sched.plan(0.0)
+    assert p1.ctx_tokens == 100 and not p1.decode
+    sched.commit(p1, 1.0)
+    p2 = sched.plan(1.0)
+    assert p2.prefill[0].start == 100
+
+
+def _lat(spec: StepSpec) -> float:
+    return 1e-3 + 1e-6 * sum(c for c, _ in spec.prefill) \
+        + 1e-5 * len(spec.decode)
+
+
+def test_sim_completes_and_reports():
+    sim = ServingSimulator(SchedulerConfig(max_batch=8, max_num_tokens=2048),
+                           _lat)
+    m = sim.run(isl=256, osl=32, concurrency=8, max_requests=24)
+    assert m.completed == 24
+    assert m.ttft_ms > 0 and m.tpot_ms > 0
+    assert m.tokens_per_s_per_user == pytest.approx(1000.0 / m.tpot_ms)
+
+
+def test_sim_concurrency_tradeoff():
+    """More concurrency -> more throughput, worse (or equal) TPOT."""
+    sim = ServingSimulator(SchedulerConfig(max_batch=64, max_num_tokens=4096),
+                           _lat)
+    lo = sim.run(isl=128, osl=32, concurrency=2, max_requests=16)
+    hi = sim.run(isl=128, osl=32, concurrency=32, max_requests=32)
+    assert hi.throughput_tok_s > lo.throughput_tok_s
+    assert hi.tpot_ms >= lo.tpot_ms - 1e-6

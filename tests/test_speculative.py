@@ -1,0 +1,45 @@
+"""Speculative-decoding estimator (beyond-paper extension)."""
+import pytest
+
+from repro.core import ClusterSpec, PerfDatabase, SLA, WorkloadDescriptor
+from repro.core.config import ParallelismConfig
+from repro.core.speculative import SpeculativeEstimator, expected_accepted
+
+
+def test_expected_accepted_limits():
+    assert expected_accepted(4, 0.0) == pytest.approx(1.0)   # always 1 token
+    assert expected_accepted(4, 1.0) == pytest.approx(5.0, rel=1e-2)
+    lo, hi = expected_accepted(4, 0.3), expected_accepted(4, 0.9)
+    assert 1.0 < lo < hi < 5.0
+
+
+@pytest.fixture(scope="module")
+def est():
+    w = WorkloadDescriptor(
+        model="qwen3-32b", isl=2048, osl=256,
+        sla=SLA(ttft_ms=5000), cluster=ClusterSpec(n_chips=8),
+        backend="repro-jax", dtype="fp8")
+    return SpeculativeEstimator(w, draft_model="llama3.1-8b",
+                                db=PerfDatabase("tpu_v5e", "repro-jax"))
+
+
+def test_speedup_with_high_acceptance(est):
+    par = ParallelismConfig(tp=8)
+    p = est.evaluate(par, batch=4, gamma=4, acceptance=0.85)
+    assert p.speedup_vs_autoregressive > 1.0
+    assert p.accepted_per_round > 3.0
+    assert p.draft_step_ms < p.verify_step_ms * 2
+
+
+def test_low_acceptance_not_worth_it(est):
+    par = ParallelismConfig(tp=8)
+    p = est.evaluate(par, batch=4, gamma=6, acceptance=0.05)
+    assert p.speedup_vs_autoregressive < 1.0
+
+
+def test_best_gamma_monotone_in_acceptance(est):
+    par = ParallelismConfig(tp=8)
+    best_lo, _ = est.best_gamma(par, batch=4, acceptance=0.4)
+    best_hi, _ = est.best_gamma(par, batch=4, acceptance=0.95)
+    assert best_hi.gamma >= best_lo.gamma
+    assert best_hi.tpot_ms <= best_lo.tpot_ms

@@ -1,0 +1,90 @@
+"""End-to-end system behaviour: configurator -> generator -> real engine.
+
+The closed loop the paper ships: describe a workload, search the config
+space, emit a launch config, and run the recommended (reduced-scale)
+deployment on the real JAX engine.
+"""
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
+                        WorkloadDescriptor, generate)
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.sim import ServingSimulator, StepSpec
+from repro.core.session import InferenceSession
+from repro.core.config import CandidateConfig, ParallelismConfig, RuntimeFlags
+
+
+@pytest.fixture(scope="module")
+def db():
+    return PerfDatabase("tpu_v5e", "repro-jax")
+
+
+def test_configurator_to_engine_loop(db):
+    w = WorkloadDescriptor(
+        model="internlm2-1.8b", isl=512, osl=128,
+        sla=SLA(ttft_ms=2000, min_tokens_per_s_user=10),
+        cluster=ClusterSpec(n_chips=8), backend="repro-jax", dtype="bf16",
+        modes=("aggregated",))
+    result = TaskRunner(w, db).run()
+    assert result.best is not None
+    launch = generate(w, result.best)
+    raw = json.loads(launch.to_json())
+
+    # drive the real engine with the recommended batch size (reduced scale)
+    cfg = get_config(w.model).reduced()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=min(raw["batch_size"], 4), max_seq=64))
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        prompt = rng.integers(0, cfg.vocab_size, 8).tolist()
+        eng.add_request(Request(rid=i, isl=8, osl=4,
+                                arrival=time.perf_counter(), prompt=prompt))
+    done = eng.run_until_drained()
+    assert len(done) == 4
+    assert all(r.tpot is not None for r in done)
+
+
+def test_model_vs_simulator_fidelity(db):
+    """Algorithm 2's closed form tracks the step-accurate simulator within
+    a generous MAPE bound (the full Fig. 6 sweep lives in benchmarks)."""
+    w = WorkloadDescriptor(
+        model="llama3.1-8b", isl=512, osl=128,
+        sla=SLA(ttft_ms=5000), cluster=ClusterSpec(n_chips=8),
+        backend="repro-jax", dtype="fp8")
+    session = InferenceSession(w, db)
+    par = ParallelismConfig(tp=8)
+    flags = RuntimeFlags()
+    cand = CandidateConfig(parallel=par, batch_size=16, flags=flags)
+    proj = session.evaluate_aggregated(cand)
+    assert proj is not None
+
+    def lat(spec: StepSpec) -> float:
+        return session.spec_latency_ms(par, spec, flags) / 1e3
+
+    sim = ServingSimulator(SchedulerConfig(
+        max_batch=16, max_num_tokens=flags.max_num_tokens), lat)
+    m = sim.run(isl=512, osl=128, concurrency=16, max_requests=24)
+    ape_tpot = abs(proj.tpot_ms - m.tpot_ms) / m.tpot_ms
+    assert ape_tpot < 0.5, (proj.tpot_ms, m.tpot_ms)
+
+
+def test_search_covers_all_three_modes(db):
+    w = WorkloadDescriptor(
+        model="qwen3-32b", isl=4000, osl=500,
+        sla=SLA(ttft_ms=1200, min_tokens_per_s_user=60),
+        cluster=ClusterSpec(n_chips=16), backend="repro-jax", dtype="fp8",
+        modes=("static", "aggregated", "disaggregated"))
+    r = TaskRunner(w, db).run()
+    modes_seen = {p.mode for p in r.projections}
+    assert {"static", "aggregated"} <= modes_seen
+    assert r.best is not None

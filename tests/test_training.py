@@ -1,0 +1,121 @@
+"""Training substrate: optimizer convergence, schedule, grad clipping,
+microbatch-accumulation equivalence, checkpoint round-trip, data
+determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.training import checkpoint as ckpt
+from repro.training import data as dat
+from repro.training import optimizer as opt
+from repro.training.train_step import loss_fn, make_train_step
+
+
+def test_overfit_single_batch():
+    cfg = get_config("internlm2-1.8b").reduced()
+    p = models.init_params(cfg, jax.random.PRNGKey(0))
+    st = opt.init(p)
+    ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=1000,
+                           weight_decay=0.0)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    b = dat.make_dataset(cfg, 16, 4).batch(0)
+    t, l = jnp.asarray(b["tokens"]), jnp.asarray(b["labels"])
+    losses = []
+    for _ in range(25):
+        p, st, m = step(p, st, t, l)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 2.0
+
+
+def test_lr_schedule():
+    c = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110)
+    assert float(opt.schedule(c, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(opt.schedule(c, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(opt.schedule(c, jnp.int32(110))) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_grad_clipping():
+    c = opt.AdamWConfig(grad_clip=1.0)
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 100.0)}
+    state = opt.init(params)
+    _, _, m = opt.update(c, grads, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_microbatch_equivalence():
+    """n_mb=2 grad accumulation == full-batch loss/grads (linear loss avg)."""
+    import dataclasses
+    cfg = get_config("internlm2-1.8b").reduced()
+    cfg2 = dataclasses.replace(
+        cfg, sharding=dataclasses.replace(cfg.sharding, microbatches=2))
+    p = models.init_params(cfg, jax.random.PRNGKey(0))
+    b = dat.make_dataset(cfg, 16, 4).batch(0)
+    t, l = jnp.asarray(b["tokens"]), jnp.asarray(b["labels"])
+
+    g_full = jax.grad(lambda p_: loss_fn(p_, cfg, t, l, {})[0])(p)
+    # manual accumulation like make_train_step's scan
+    g_a = jax.grad(lambda p_: loss_fn(p_, cfg, t[:2], l[:2], {})[0])(p)
+    g_b = jax.grad(lambda p_: loss_fn(p_, cfg, t[2:], l[2:], {})[0])(p)
+    for full, a, bb in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_a),
+                           jax.tree.leaves(g_b)):
+        np.testing.assert_allclose(np.asarray(full, np.float32),
+                                   (np.asarray(a, np.float32)
+                                    + np.asarray(bb, np.float32)) / 2,
+                                   rtol=2e-2, atol=2e-3)
+
+    st = opt.init(p)
+    step2 = jax.jit(make_train_step(cfg2))
+    p2, st2, m2 = step2(p, st, t, l)
+    assert jnp.isfinite(m2["loss"])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("xlstm-350m").reduced()
+    p = models.init_params(cfg, jax.random.PRNGKey(0))
+    st = opt.init(p)
+    path = str(tmp_path / "ck.npz")
+    ckpt.save(path, p, st, step=7)
+    p2, st2, step = ckpt.restore(path, p, st)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    cfg = get_config("xlstm-350m").reduced()
+    p = models.init_params(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ck.npz")
+    ckpt.save(path, p, step=1)
+    other = get_config("internlm2-1.8b").reduced()
+    p_other = models.init_params(other, jax.random.PRNGKey(0))
+    with pytest.raises((ValueError, KeyError)):
+        ckpt.restore(path, p_other)
+
+
+def test_data_deterministic_and_seekable():
+    cfg = get_config("internlm2-1.8b").reduced()
+    ds = dat.make_dataset(cfg, 32, 4, seed=3)
+    b1, b2 = ds.batch(17), ds.batch(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds.batch(18)["tokens"], b1["tokens"])
+    # labels are next-token shifted
+    full = ds.batch(5)
+    assert full["tokens"].shape == (4, 32)
+    assert (full["tokens"] < cfg.vocab_size).all()
+
+
+def test_prefetcher():
+    cfg = get_config("internlm2-1.8b").reduced()
+    ds = dat.make_dataset(cfg, 16, 2)
+    pf = dat.Prefetcher(ds)
+    b0 = next(pf)
+    np.testing.assert_array_equal(b0["tokens"], ds.batch(0)["tokens"])
+    b1 = next(pf)
+    np.testing.assert_array_equal(b1["tokens"], ds.batch(1)["tokens"])
+    pf.close()
