@@ -3,26 +3,25 @@
 Plots (as CSV) every TTFT<=1000ms config for aggregated and disaggregated
 serving at ISL 4096 / OSL 1024, and stars the best config above
 20 tokens/s/user — reproducing the paper's headline "disaggregated wins
-~50%" observation.
+~50%" observation.  Runs through the ``repro.api`` facade.
 """
 from __future__ import annotations
 
 from benchmarks.common import write_csv
-from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
-                        WorkloadDescriptor)
-from repro.core import pareto
+from repro.api import Configurator
 
 
 def run(quick: bool = False):
-    w = WorkloadDescriptor(
-        model="qwen3-235b", isl=4096, osl=1024,
-        sla=SLA(ttft_ms=1000.0, min_tokens_per_s_user=20),
-        cluster=ClusterSpec(n_chips=64), backend="trtllm", dtype="fp8")
-    runner = TaskRunner(w, PerfDatabase("tpu_v5e", "trtllm"))
-    res = runner.run(keep_all_disagg=not quick)
+    report = (Configurator.for_model("qwen3-235b")
+              .traffic(isl=4096, osl=1024)
+              .sla(ttft_ms=1000.0, min_tokens_per_s_user=20)
+              .cluster(chips=64, platform="tpu_v5e")
+              .backend("trtllm").dtype("fp8")
+              .search(keep_all_disagg=not quick))
+    w = report.workload
 
     rows = []
-    for p in res.projections:
+    for p in report.projections:
         if p.ttft_ms > w.sla.ttft_ms:
             continue
         rows.append([p.mode, f"{p.tokens_per_s_user:.2f}",
@@ -34,7 +33,7 @@ def run(quick: bool = False):
 
     best = {}
     for mode in ("aggregated", "disaggregated"):
-        cands = [p for p in res.projections
+        cands = [p for p in report.projections
                  if p.mode == mode and p.meets(w.sla)]
         if cands:
             best[mode] = max(cands, key=lambda p: p.tokens_per_s_per_chip)

@@ -2,35 +2,38 @@
 configuration for Qwen3-32B-FP8 under SLA (TTFT<=1200ms, >=60 tok/s/user).
 
 The paper uses 8 H200s; on 16GiB-HBM v5e chips the same model needs 16
-chips for comparable headroom (documented adaptation).  Emits the launch
-artifacts for both winners — the Generator's production output.
+chips for comparable headroom (documented adaptation).  Runs through the
+``repro.api`` facade — the same code path as the CLI and the examples —
+and emits the launch artifacts for both winners plus the full
+schema-versioned SearchReport.
 """
 from __future__ import annotations
 
-import json
 import os
 
 from benchmarks.common import RESULTS_DIR, write_csv
-from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
-                        WorkloadDescriptor, generate)
+from repro.api import Configurator
+from repro.core.generator import generate
 
 
 def run(quick: bool = False):
-    w = WorkloadDescriptor(
-        model="qwen3-32b", isl=4000, osl=500,
-        sla=SLA(ttft_ms=1200.0, min_tokens_per_s_user=60),
-        cluster=ClusterSpec(n_chips=16), backend="repro-jax", dtype="fp8")
-    res = TaskRunner(w, PerfDatabase("tpu_v5e", "repro-jax")).run()
+    report = (Configurator.for_model("qwen3-32b")
+              .traffic(isl=4000, osl=500)
+              .sla(ttft_ms=1200.0, min_tokens_per_s_user=60)
+              .cluster(chips=16, platform="tpu_v5e")
+              .backend("repro-jax").dtype("fp8")
+              .search())
+    w = report.workload
 
     rows, launches = [], {}
     for mode in ("aggregated", "disaggregated"):
-        cands = [p for p in res.projections
+        cands = [p for p in report.projections
                  if p.mode == mode and p.meets(w.sla)]
         if not cands:
             rows.append([mode, "-", "-", "-", "-", "no SLA-valid config"])
             continue
         best = max(cands, key=lambda p: p.tokens_per_s_per_chip)
-        lc = generate(w, best)
+        lc = report.launch if best is report.best else generate(w, best)
         launches[mode] = lc
         rows.append([mode, f"{best.tokens_per_s_per_chip:.1f}",
                      f"{best.tokens_per_s_user:.1f}",
@@ -44,6 +47,7 @@ def run(quick: bool = False):
                      ["mode", "tokens_per_s_per_chip", "tokens_per_s_user",
                       "ttft_ms", "batch", "config"], rows)
     os.makedirs(RESULTS_DIR, exist_ok=True)
+    report.save(os.path.join(RESULTS_DIR, "table2_report.json"))
     for mode, lc in launches.items():
         with open(os.path.join(RESULTS_DIR, f"launch_{mode}.json"), "w") as f:
             f.write(lc.to_json())

@@ -1,0 +1,13 @@
+"""Make ``repro`` importable when examples run from a source checkout.
+
+Examples do ``import _bootstrap  # noqa: F401`` instead of hand-rolling
+per-file ``sys.path`` surgery.  If the package is installed
+(``pip install -e .``) this is a no-op.
+"""
+import os
+import sys
+
+try:
+    import repro  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -3,15 +3,13 @@
     PYTHONPATH=src python examples/agg_vs_disagg_sweep.py
 
 Shows the paper's §2.2 point: disaggregation is NOT universally superior —
-the winner flips with ISL/OSL mix and generation-speed targets.
+the winner flips with ISL/OSL mix and generation-speed targets.  One
+Configurator runs the whole sweep, sharing its PerfDatabase across
+scenarios.
 """
-import os
-import sys
+import _bootstrap  # noqa: F401
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
-                        WorkloadDescriptor)
+from repro.api import Configurator
 
 SHAPES = [
     (4000, 200, 60),     # prefill-heavy chat, strict speed
@@ -22,20 +20,21 @@ SHAPES = [
 
 
 def main():
-    db = PerfDatabase("tpu_v5e", "repro-jax")
+    cfg = (Configurator.for_model("qwen3-32b")
+           .traffic(isl=SHAPES[0][0], osl=SHAPES[0][1])
+           .sla(ttft_ms=1500, min_tokens_per_s_user=SHAPES[0][2])
+           .cluster(chips=16).backend("repro-jax").dtype("fp8"))
+    comparison = cfg.compare(
+        [{"isl": isl, "osl": osl, "min_tokens_per_s_user": speed}
+         for isl, osl, speed in SHAPES])
+
     print(f"{'ISL':>6} {'OSL':>6} {'speed>=':>8} | "
           f"{'best agg':>12} {'best disagg':>12} {'winner':>14}")
-    for isl, osl, speed in SHAPES:
-        w = WorkloadDescriptor(
-            model="qwen3-32b", isl=isl, osl=osl,
-            sla=SLA(ttft_ms=1500, min_tokens_per_s_user=speed),
-            cluster=ClusterSpec(n_chips=16), backend="repro-jax",
-            dtype="fp8")
-        res = TaskRunner(w, db).run()
+    for (isl, osl, speed), rep in zip(SHAPES, comparison.reports):
         best = {}
         for mode in ("aggregated", "disaggregated"):
-            ok = [p for p in res.projections
-                  if p.mode == mode and p.meets(w.sla)]
+            ok = [p for p in rep.projections
+                  if p.mode == mode and p.meets(rep.workload.sla)]
             best[mode] = max((p.tokens_per_s_per_chip for p in ok),
                              default=float("nan"))
         a, d = best["aggregated"], best["disaggregated"]

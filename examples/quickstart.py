@@ -2,46 +2,38 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Describes a production workload (model, traffic shape, SLA, cluster),
-searches the configuration space in under a second on CPU, prints the
-Pareto frontier, and emits a ready-to-run launch command.
+Describes a production workload fluently (model, traffic shape, SLA,
+cluster), searches the configuration space in under a second on CPU,
+prints the Pareto frontier, and saves the schema-versioned SearchReport —
+launch artifact included — as the machine-readable result.
 """
 import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _bootstrap  # noqa: F401
 
-from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
-                        WorkloadDescriptor, generate)
+from repro.api import Configurator
 
 
 def main():
-    workload = WorkloadDescriptor(
-        model="qwen3-32b",            # any id from repro.configs
-        isl=4000, osl=500,            # traffic shape
-        sla=SLA(ttft_ms=1200, min_tokens_per_s_user=60),
-        cluster=ClusterSpec(n_chips=16, platform="tpu_v5e"),
-        backend="repro-jax",          # or: trtllm | vllm | sglang
-        dtype="fp8",
-    )
+    report = (Configurator.for_model("qwen3-32b")   # any id from repro.configs
+              .traffic(isl=4000, osl=500)           # traffic shape
+              .sla(ttft_ms=1200, min_tokens_per_s_user=60)
+              .cluster(chips=16, platform="tpu_v5e")
+              .backend("repro-jax")                 # or: trtllm | vllm | sglang
+              .dtype("fp8")
+              .search())
 
-    db = PerfDatabase(workload.cluster.platform, workload.backend)
-    result = TaskRunner(workload, db).run()
-
-    print(result.summary())
+    print(report.summary())
     print("\nPareto frontier (speed vs per-chip throughput):")
-    for p in result.frontier[:10]:
+    for p in report.frontier[:10]:
         print(f"  [{p.mode:13s}] {p.tokens_per_s_user:7.1f} tok/s/user  "
               f"{p.tokens_per_s_per_chip:8.1f} tok/s/chip  "
               f"TTFT {p.ttft_ms:7.1f}ms  {p.config.get('describe', '')}")
 
-    launch = generate(workload, result.best)
-    print(f"\nlaunch command:\n  {launch.command}")
-    out = os.path.join("results", "quickstart_launch.json")
+    print(f"\nlaunch command:\n  {report.launch.command}")
     os.makedirs("results", exist_ok=True)
-    with open(out, "w") as f:
-        f.write(launch.to_json())
-    print(f"launch config -> {out}")
+    out = report.save(os.path.join("results", "quickstart_report.json"))
+    print(f"search report (schema v{report.schema_version}) -> {out}")
 
 
 if __name__ == "__main__":

@@ -9,35 +9,31 @@
    workload, reporting measured TTFT/TPOT/throughput next to the
    configurator's projections.
 """
-import os
 import statistics
-import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _bootstrap  # noqa: F401
 
 import jax
 import numpy as np
 
 from repro import models
+from repro.api import Configurator
 from repro.configs import get_config
-from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
-                        WorkloadDescriptor, generate)
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.request import Request
 
 
 def main():
-    workload = WorkloadDescriptor(
-        model="internlm2-1.8b", isl=24, osl=12,
-        sla=SLA(ttft_ms=10_000, min_tokens_per_s_user=0.1),
-        cluster=ClusterSpec(n_chips=8), backend="repro-jax", dtype="bf16",
-        modes=("aggregated",),
-    )
-    result = TaskRunner(workload, PerfDatabase("tpu_v5e", "repro-jax")).run()
-    launch = generate(workload, result.best)
-    print("recommended:", launch.command)
-    proj = result.best
+    report = (Configurator.for_model("internlm2-1.8b")
+              .traffic(isl=24, osl=12)
+              .sla(ttft_ms=10_000, min_tokens_per_s_user=0.1)
+              .cluster(chips=8).backend("repro-jax").dtype("bf16")
+              .modes("aggregated")
+              .search())
+    workload = report.workload
+    print("recommended:", report.launch.command)
+    proj = report.best
 
     cfg = get_config(workload.model).reduced()
     params = models.init_params(cfg, jax.random.PRNGKey(0))

@@ -6,10 +6,9 @@ Uses the same train_step the production dry-run lowers on the 512-chip
 mesh — synthetic data pipeline, AdamW with warmup+cosine, checkpointing.
 """
 import argparse
-import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _bootstrap  # noqa: F401
 
 from repro.launch import train
 

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite + CLI JSON smoke test.
+# Run from the repo root: bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "=== tier-1: pytest ==="
+python -m pytest -x -q
+
+echo "=== smoke: search --json emits valid SearchReport JSON on stdout ==="
+PYTHONPATH=src python -m repro.core.cli search \
+    --model qwen3-32b --isl 512 --osl 64 --chips 8 --json \
+  | python -c '
+import json
+import sys
+
+report = json.load(sys.stdin)
+version = report["schema_version"]
+n_projections = len(report["projections"])
+best_index = report["best"]
+assert version == 1, version
+assert n_projections > 0, "search produced no projections"
+print(f"ok: schema v{version}, {n_projections} projections, "
+      f"best index {best_index}")
+'
+
+echo "=== ci passed ==="

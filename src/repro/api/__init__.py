@@ -1,0 +1,48 @@
+"""repro.api — the unified programmatic surface of the configurator.
+
+This is the one stable entry point the CLI, examples, and benchmarks all
+build on: describe the workload fluently, search, and get back a
+schema-versioned, JSON-round-trippable :class:`SearchReport`.
+
+Canonical quickstart::
+
+    from repro.api import Configurator
+
+    report = (Configurator.for_model("qwen3-32b")
+              .traffic(isl=4000, osl=500)
+              .sla(ttft_ms=1200, min_tokens_per_s_user=60)
+              .cluster(chips=16, platform="tpu_v5e")
+              .backend("repro-jax")
+              .dtype("fp8")
+              .search())
+
+    print(report.summary())             # timing + best config
+    for p in report.top_k(5): ...       # SLA-valid leaders
+    print(report.launch.command)        # ready-to-run launch artifact
+    report.save("report.json")          # schema-versioned interchange
+
+    # round-trip: SearchReport.from_json(report.to_json()) == report
+
+Every setter validates eagerly — unknown models, platforms, backends,
+dtypes, or modes raise ``ValueError`` listing the valid choices before any
+search starts.  A Configurator instance keeps its PerfDatabase and
+InferenceSession warm across calls, so a second ``.search()``, a
+``.compare()`` sweep over traffic shapes, or a ``.speculative()``
+projection reuses every op-sequence latency the first search priced.
+
+Third-party serving backends join in without touching core::
+
+    from repro.core.backends.base import BackendProfile, register_backend
+
+    @register_backend("my-engine", capabilities=("aggregated",))
+    def _profile() -> BackendProfile:
+        return BackendProfile(name="my-engine", ...)
+"""
+from repro.api.configurator import Comparison, Configurator
+from repro.api.report import (SCHEMA_VERSION, SearchReport,
+                              workload_from_dict, workload_to_dict)
+
+__all__ = [
+    "Comparison", "Configurator", "SCHEMA_VERSION", "SearchReport",
+    "workload_from_dict", "workload_to_dict",
+]

@@ -1,0 +1,306 @@
+"""Fluent, eagerly-validated entry point to the configurator.
+
+One ``Configurator`` owns one :class:`~repro.core.perf_database.PerfDatabase`
+per (platform, backend) and one :class:`~repro.core.session.InferenceSession`
+per workload, shared across ``.search()``, ``.compare()`` and
+``.speculative()`` calls — op-sequence latencies memoized during the first
+search answer the next one, so repeated searches on the same instance are
+measurably faster than a cold ``TaskRunner.run()``.
+
+Every setter validates its inputs immediately: an unknown model, platform,
+backend, dtype or mode raises ``ValueError`` (listing the valid choices) at
+build time, never minutes into a search.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.configs import list_archs
+from repro.core.backends.base import SERVING_MODES, all_backends, get_backend
+from repro.core.config import (ClusterSpec, ParallelismConfig, SLA,
+                               WorkloadDescriptor)
+from repro.core.generator import generate
+from repro.core.hardware import PLATFORMS
+from repro.core.perf_database import PerfDatabase
+from repro.core.session import InferenceSession
+from repro.core.task_runner import TaskRunner
+
+from repro.api.report import SearchReport
+
+VALID_DTYPES = ("bf16", "fp16", "fp8")
+VALID_MODES = SERVING_MODES
+
+
+def _choices_error(kind: str, got: str, valid: Iterable[str]) -> ValueError:
+    return ValueError(f"unknown {kind} {got!r}; valid choices: "
+                      f"{', '.join(sorted(valid))}")
+
+
+class Configurator:
+    """Fluent builder over the TaskRunner/Pareto/Generator pipeline.
+
+    >>> report = (Configurator.for_model("qwen3-32b")
+    ...           .traffic(isl=4000, osl=500)
+    ...           .sla(ttft_ms=1200, min_tokens_per_s_user=60)
+    ...           .cluster(chips=16, platform="tpu_v5e")
+    ...           .backend("repro-jax")
+    ...           .search())
+    """
+
+    def __init__(self, model: str):
+        known = list_archs(True)
+        if model not in known:
+            raise _choices_error("model", model, known)
+        self._model = model
+        self._isl: Optional[int] = None
+        self._osl: Optional[int] = None
+        self._prefix_len = 0
+        self._sla = SLA()
+        self._cluster = ClusterSpec()
+        self._backend = "repro-jax"
+        self._dtype = "bf16"
+        self._modes: Tuple[str, ...] = ("aggregated", "disaggregated")
+        self._moe_alpha = 1.2
+        # shared engines: one PerfDatabase per (platform, backend), one
+        # InferenceSession per workload — the memoization that makes a
+        # second .search() on this instance fast
+        self._dbs: Dict[Tuple[str, str], PerfDatabase] = {}
+        self._session: Optional[InferenceSession] = None
+
+    # -- fluent setters (each validates eagerly) -----------------------------
+    @classmethod
+    def for_model(cls, model: str) -> "Configurator":
+        return cls(model)
+
+    def traffic(self, isl: int, osl: int, prefix_len: int = 0) -> "Configurator":
+        if isl is None or osl is None:
+            raise ValueError("traffic shape requires both isl and osl")
+        if isl <= 0 or osl <= 0:
+            raise ValueError(f"isl/osl must be positive, got {isl}/{osl}")
+        if prefix_len < 0 or prefix_len > isl:
+            raise ValueError(f"prefix_len must be in [0, isl], got {prefix_len}")
+        self._isl, self._osl, self._prefix_len = isl, osl, prefix_len
+        return self
+
+    def sla(self, ttft_ms: float = 1000.0,
+            min_tokens_per_s_user: Optional[float] = None,
+            tpot_ms: Optional[float] = None) -> "Configurator":
+        if ttft_ms <= 0:
+            raise ValueError(f"ttft_ms must be positive, got {ttft_ms}")
+        self._sla = SLA(ttft_ms=ttft_ms, tpot_ms=tpot_ms,
+                        min_tokens_per_s_user=min_tokens_per_s_user)
+        return self
+
+    def cluster(self, chips: int = 8, platform: str = "tpu_v5e",
+                chips_per_host: int = 8) -> "Configurator":
+        if platform not in PLATFORMS:
+            raise _choices_error("platform", platform, PLATFORMS)
+        if chips < 1:
+            raise ValueError(f"chips must be >= 1, got {chips}")
+        self._cluster = ClusterSpec(n_chips=chips, chips_per_host=chips_per_host,
+                                    platform=platform)
+        return self
+
+    def backend(self, name: str) -> "Configurator":
+        if name not in all_backends():
+            raise _choices_error("backend", name, all_backends())
+        self._backend = name
+        return self
+
+    def dtype(self, dtype: str) -> "Configurator":
+        if dtype not in VALID_DTYPES:
+            raise _choices_error("dtype", dtype, VALID_DTYPES)
+        self._dtype = dtype
+        return self
+
+    def modes(self, *modes: str) -> "Configurator":
+        if not modes:
+            raise ValueError(f"at least one mode required; valid: "
+                             f"{', '.join(VALID_MODES)}")
+        for m in modes:
+            if m not in VALID_MODES:
+                raise _choices_error("mode", m, VALID_MODES)
+        self._modes = tuple(modes)
+        return self
+
+    def moe_alpha(self, alpha: float) -> "Configurator":
+        if alpha <= 0:
+            raise ValueError(f"moe_alpha must be positive, got {alpha}")
+        self._moe_alpha = alpha
+        return self
+
+    # -- assembly ------------------------------------------------------------
+    def workload(self) -> WorkloadDescriptor:
+        """Materialize the (validated) workload descriptor."""
+        if self._isl is None or self._osl is None:
+            raise ValueError("traffic shape not set: call "
+                             ".traffic(isl=..., osl=...) before searching")
+        profile = get_backend(self._backend)
+        unsupported = [m for m in self._modes if not profile.supports(m)]
+        if unsupported:
+            raise ValueError(
+                f"backend {self._backend!r} does not support mode(s) "
+                f"{', '.join(unsupported)}; its capabilities: "
+                f"{', '.join(sorted(profile.capabilities))}")
+        return WorkloadDescriptor(
+            model=self._model, isl=self._isl, osl=self._osl,
+            sla=self._sla, cluster=self._cluster, backend=self._backend,
+            prefix_len=self._prefix_len, modes=self._modes,
+            moe_alpha=self._moe_alpha, dtype=self._dtype)
+
+    def database(self) -> PerfDatabase:
+        """The shared per-(platform, backend) PerfDatabase."""
+        key = (self._cluster.platform, self._backend)
+        db = self._dbs.get(key)
+        if db is None:
+            db = self._dbs[key] = PerfDatabase(*key)
+        return db
+
+    def _session_for(self, w: WorkloadDescriptor) -> InferenceSession:
+        if self._session is None or self._session.w != w:
+            self._session = InferenceSession(w, self.database())
+        return self._session
+
+    # -- operations ----------------------------------------------------------
+    def search(self, sweep_flags: bool = False, keep_all_disagg: bool = False,
+               generate_launch: bool = True) -> SearchReport:
+        """Run the configuration search and return a SearchReport."""
+        w = self.workload()
+        runner = TaskRunner(w, session=self._session_for(w))
+        result = runner.run(sweep_flags=sweep_flags,
+                            keep_all_disagg=keep_all_disagg)
+        launch = (generate(w, result.best)
+                  if generate_launch and result.best is not None else None)
+        return SearchReport.from_result(w, result, launch=launch)
+
+    def compare(self, variants: Sequence[Dict],
+                labels: Optional[Sequence[str]] = None,
+                **search_kwargs) -> "Comparison":
+        """Sweep workload variants (scenario diversity) on shared databases.
+
+        Each variant is a dict of overrides: any of ``isl``, ``osl``,
+        ``prefix_len``, ``ttft_ms``, ``min_tokens_per_s_user``, ``tpot_ms``,
+        ``chips``, ``platform``, ``backend``, ``dtype``, ``modes``,
+        ``moe_alpha``.  Databases are shared across variants, so a sweep
+        over traffic shapes on one platform pays the collection cost once.
+        """
+        labels = list(labels) if labels is not None else None
+        if labels is not None and len(labels) != len(variants):
+            raise ValueError("labels must match variants 1:1")
+        out_labels, reports = [], []
+        for i, overrides in enumerate(variants):
+            c = self._variant(overrides)
+            reports.append(c.search(**search_kwargs))
+            out_labels.append(labels[i] if labels is not None
+                              else _variant_label(overrides))
+        return Comparison(reports=reports, labels=out_labels)
+
+    def speculative(self, draft: str, acceptance: float = 0.8,
+                    max_gamma: int = 8,
+                    report: Optional[SearchReport] = None):
+        """Project speculative decoding with ``draft`` on the best config.
+
+        Returns ``(best, all_projections)`` —
+        :class:`~repro.core.speculative.SpecDecodeProjection` objects for
+        the best γ and the full sweep.  Reuses this Configurator's
+        PerfDatabase (and the report from a prior ``.search()``, if given).
+        """
+        known = list_archs(True)
+        if draft not in known:
+            raise _choices_error("draft model", draft, known)
+        if not 0.0 < acceptance < 1.0:
+            raise ValueError(f"acceptance must be in (0, 1), got {acceptance}")
+        from repro.core.speculative import SpeculativeEstimator
+        w = self.workload()
+        if not get_backend(self._backend).supports("speculative"):
+            raise ValueError(f"backend {self._backend!r} does not declare "
+                             "the 'speculative' capability")
+        if report is None:
+            report = self.search(generate_launch=False)
+        best = report.best
+        if best is None:
+            raise ValueError("no SLA-valid configuration to speculate on; "
+                             "relax the SLA or grow the cluster")
+        if best.mode != "disaggregated":
+            par = ParallelismConfig(
+                **{k: best.config.get("parallel", {}).get(k, 1)
+                   for k in ("tp", "pp", "ep", "dp")})
+        else:
+            par = ParallelismConfig(tp=min(w.cluster.n_chips, 8))
+        est = SpeculativeEstimator(w, draft, self.database())
+        return est.best_gamma(par, batch=best.batch_size,
+                              acceptance=acceptance, max_gamma=max_gamma)
+
+    # -- internals -----------------------------------------------------------
+    def _variant(self, overrides: Dict) -> "Configurator":
+        c = copy.copy(self)          # shares self._dbs on purpose
+        c._session = None
+        known = {"isl", "osl", "prefix_len", "ttft_ms",
+                 "min_tokens_per_s_user", "tpot_ms", "chips", "platform",
+                 "chips_per_host", "backend", "dtype", "modes", "moe_alpha"}
+        bad = set(overrides) - known
+        if bad:
+            raise ValueError(f"unknown compare override(s) {sorted(bad)}; "
+                             f"valid: {sorted(known)}")
+        o = dict(overrides)
+        if {"isl", "osl", "prefix_len"} & set(o):
+            c.traffic(o.pop("isl", self._isl), o.pop("osl", self._osl),
+                      o.pop("prefix_len", self._prefix_len))
+        if {"ttft_ms", "min_tokens_per_s_user", "tpot_ms"} & set(o):
+            c.sla(o.pop("ttft_ms", self._sla.ttft_ms),
+                  o.pop("min_tokens_per_s_user",
+                        self._sla.min_tokens_per_s_user),
+                  o.pop("tpot_ms", self._sla.tpot_ms))
+        if {"chips", "platform", "chips_per_host"} & set(o):
+            c.cluster(o.pop("chips", self._cluster.n_chips),
+                      o.pop("platform", self._cluster.platform),
+                      o.pop("chips_per_host", self._cluster.chips_per_host))
+        if "backend" in o:
+            c.backend(o.pop("backend"))
+        if "dtype" in o:
+            c.dtype(o.pop("dtype"))
+        if "modes" in o:
+            m = o.pop("modes")
+            c.modes(*((m,) if isinstance(m, str) else m))
+        if "moe_alpha" in o:
+            c.moe_alpha(o.pop("moe_alpha"))
+        return c
+
+
+def _variant_label(overrides: Dict) -> str:
+    return " ".join(f"{k}={v}" for k, v in overrides.items()) or "base"
+
+
+@dataclasses.dataclass
+class Comparison:
+    """Results of a ``Configurator.compare`` sweep."""
+    reports: List[SearchReport]
+    labels: List[str]
+
+    def summary(self) -> str:
+        width = max((len(l) for l in self.labels), default=4)
+        lines = [f"{'scenario':<{width}} | {'best mode':>13} "
+                 f"{'tok/s/chip':>11} {'tok/s/user':>11} {'TTFT ms':>9}"]
+        for label, rep in zip(self.labels, self.reports):
+            b = rep.best
+            if b is None:
+                lines.append(f"{label:<{width}} | {'—':>13} "
+                             f"{'(no SLA-valid config)':>34}")
+            else:
+                lines.append(
+                    f"{label:<{width}} | {b.mode:>13} "
+                    f"{b.tokens_per_s_per_chip:>11.1f} "
+                    f"{b.tokens_per_s_user:>11.1f} {b.ttft_ms:>9.1f}")
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict:
+        return {"schema_version": self.reports[0].schema_version
+                if self.reports else 1,
+                "scenarios": [{"label": l, "report": r.to_dict()}
+                              for l, r in zip(self.labels, self.reports)]}
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        import json
+        return json.dumps(self.to_dict(), indent=indent)

@@ -1,0 +1,181 @@
+"""SearchReport: the serializable result of a configurator search.
+
+Wraps the core :class:`~repro.core.task_runner.SearchResult` into a
+schema-versioned, JSON-round-trippable artifact — projections, Pareto
+frontier, disaggregated solution, search timing, and the resolved launch
+artifact travel together.  ``SearchReport.from_json(r.to_json())``
+reconstructs an equal report, making the report (not ad-hoc
+``Projection.config`` dicts) the interchange format between the CLI,
+benchmarks, dashboards, and downstream tooling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+from repro.core import modes, pareto
+from repro.core.config import (ClusterSpec, DisaggConfig, Projection, SLA,
+                               WorkloadDescriptor)
+from repro.core.generator import LaunchConfig
+
+#: Bump on any backwards-incompatible change to the JSON layout.
+SCHEMA_VERSION = 1
+
+
+def workload_to_dict(w: WorkloadDescriptor) -> Dict:
+    return {
+        "model": w.model, "isl": w.isl, "osl": w.osl,
+        "sla": dataclasses.asdict(w.sla),
+        "cluster": dataclasses.asdict(w.cluster),
+        "backend": w.backend, "prefix_len": w.prefix_len,
+        "modes": list(w.modes), "moe_alpha": w.moe_alpha, "dtype": w.dtype,
+    }
+
+
+def workload_from_dict(d: Dict) -> WorkloadDescriptor:
+    return WorkloadDescriptor(
+        model=d["model"], isl=d["isl"], osl=d["osl"],
+        sla=SLA(**d["sla"]), cluster=ClusterSpec(**d["cluster"]),
+        backend=d["backend"], prefix_len=d["prefix_len"],
+        modes=tuple(d["modes"]), moe_alpha=d["moe_alpha"], dtype=d["dtype"])
+
+
+def _disagg_to_dict(d: modes.DisaggBest) -> Dict:
+    describe = DisaggConfig(prefill=d.prefill.config, decode=d.decode.config,
+                            x=d.x, y=d.y).describe()
+
+    def pool(c: modes.PoolCandidate) -> Dict:
+        return {"parallel": dataclasses.asdict(c.config.parallel),
+                "batch": c.config.batch_size, "chips": c.chips,
+                "latency_ms": c.latency_ms,
+                "req_throughput": c.req_throughput}
+
+    return {"describe": describe, "x": d.x, "y": d.y,
+            "ttft_ms": d.ttft_ms, "tpot_ms": d.tpot_ms,
+            "total_chips": d.total_chips, "req_per_s": d.req_per_s,
+            "tokens_per_s_per_chip": d.tokens_per_s_per_chip,
+            "prefill": pool(d.prefill), "decode": pool(d.decode)}
+
+
+@dataclasses.dataclass
+class SearchReport:
+    """Everything one configurator search produced, in one artifact."""
+    workload: WorkloadDescriptor
+    projections: List[Projection]
+    frontier_indices: List[int]
+    best_index: Optional[int]
+    n_candidates: int
+    elapsed_s: float
+    per_candidate_ms: float
+    disagg: Optional[Dict] = None          # plain-dict (x)P(y)D solution
+    launch: Optional[LaunchConfig] = None  # resolved artifact for `best`
+    speculative: Optional[Dict] = None     # draft/gamma projection, if run
+    schema_version: int = SCHEMA_VERSION
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_result(cls, workload: WorkloadDescriptor, result,
+                    launch: Optional[LaunchConfig] = None,
+                    speculative: Optional[Dict] = None) -> "SearchReport":
+        """Build from a core ``SearchResult`` (``TaskRunner.run`` output)."""
+        idx = {id(p): i for i, p in enumerate(result.projections)}
+        return cls(
+            workload=workload,
+            projections=list(result.projections),
+            frontier_indices=[idx[id(p)] for p in result.frontier],
+            best_index=idx[id(result.best)] if result.best is not None else None,
+            n_candidates=result.n_candidates,
+            elapsed_s=result.elapsed_s,
+            per_candidate_ms=result.per_candidate_ms,
+            disagg=(_disagg_to_dict(result.disagg_best)
+                    if result.disagg_best is not None else None),
+            launch=launch, speculative=speculative)
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def best(self) -> Optional[Projection]:
+        return (self.projections[self.best_index]
+                if self.best_index is not None else None)
+
+    @property
+    def frontier(self) -> List[Projection]:
+        return [self.projections[i] for i in self.frontier_indices]
+
+    def top_k(self, k: int = 5) -> List[Projection]:
+        return pareto.top_k(self.projections, self.workload.sla, k)
+
+    def summary(self) -> str:
+        lines = [f"evaluated {self.n_candidates} candidates in "
+                 f"{self.elapsed_s:.2f}s "
+                 f"({self.per_candidate_ms:.2f} ms/config)"]
+        if self.best:
+            b = self.best
+            lines.append(
+                f"best [{b.mode}] {b.config.get('describe', '')}: "
+                f"{b.tokens_per_s_per_chip:.1f} tok/s/chip @ "
+                f"{b.tokens_per_s_user:.1f} tok/s/user "
+                f"(TTFT {b.ttft_ms:.0f}ms)")
+        return "\n".join(lines)
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return {
+            "schema_version": self.schema_version,
+            "workload": workload_to_dict(self.workload),
+            "search": {"n_candidates": self.n_candidates,
+                       "elapsed_s": self.elapsed_s,
+                       "per_candidate_ms": self.per_candidate_ms},
+            "projections": [dataclasses.asdict(p) for p in self.projections],
+            "frontier": list(self.frontier_indices),
+            "best": self.best_index,
+            "disagg": self.disagg,
+            "launch": (dataclasses.asdict(self.launch)
+                       if self.launch is not None else None),
+            "speculative": self.speculative,
+        }
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "SearchReport":
+        version = d.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported SearchReport schema_version {version!r}; "
+                f"this build reads version {SCHEMA_VERSION}")
+        try:
+            return cls._from_dict_v1(d, version)
+        except (KeyError, TypeError) as e:
+            raise ValueError(f"malformed SearchReport: {e}") from e
+
+    @classmethod
+    def _from_dict_v1(cls, d: Dict, version: int) -> "SearchReport":
+        return cls(
+            workload=workload_from_dict(d["workload"]),
+            projections=[Projection(**p) for p in d["projections"]],
+            frontier_indices=list(d["frontier"]),
+            best_index=d["best"],
+            n_candidates=d["search"]["n_candidates"],
+            elapsed_s=d["search"]["elapsed_s"],
+            per_candidate_ms=d["search"]["per_candidate_ms"],
+            disagg=d.get("disagg"),
+            launch=(LaunchConfig(**d["launch"])
+                    if d.get("launch") is not None else None),
+            speculative=d.get("speculative"),
+            schema_version=version)
+
+    @classmethod
+    def from_json(cls, text: str) -> "SearchReport":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "SearchReport":
+        with open(path) as f:
+            return cls.from_json(f.read())

@@ -1,6 +1,17 @@
 """AIConfigurator core — the paper's contribution.
 
-Public API:
+The public, stable entry point is the ``repro.api`` facade::
+
+    from repro.api import Configurator
+
+    report = (Configurator.for_model("qwen3-32b")
+              .traffic(isl=4000, osl=500)
+              .sla(ttft_ms=1200, min_tokens_per_s_user=60)
+              .cluster(chips=8)
+              .search())
+
+This package holds the building blocks underneath it (used directly when
+composing custom pipelines):
 
     from repro.core import (WorkloadDescriptor, SLA, ClusterSpec, TaskRunner,
                             PerfDatabase, generate)

@@ -3,13 +3,33 @@
 Each backend contributes: scheduling-overhead constants (the
 framework-specific dynamics the paper insists generic models miss), default
 runtime-flag values, memory-overhead factors, flag vocabulary for the
-Generator, and its EP collective pattern (consumed by decompose via the
-backend name).
+Generator, its EP collective pattern (consumed by decompose via the backend
+name), and a declared capability set the Configurator validates against.
+
+Backends plug in through the decorator registry — no core edits needed:
+
+    from repro.core.backends.base import BackendProfile, register_backend
+
+    @register_backend("my-engine", capabilities=("aggregated",))
+    def _my_engine() -> BackendProfile:
+        return BackendProfile(name="my-engine", ...)
+
+Registration is explicit and duplicate names are rejected; the built-in
+profiles (``repro.core.backends.profiles``) are loaded lazily the first
+time any lookup runs, so importing this module has no side effects and
+callers never need the old ``import profiles  # noqa: F401`` trick.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Callable, Dict, FrozenSet, Iterable, Optional, Tuple, Union
+
+#: Serving modes a workload can request (WorkloadDescriptor.modes).
+SERVING_MODES = ("static", "aggregated", "disaggregated")
+
+#: Everything a backend may declare support for: serving modes plus
+#: cross-cutting features.
+KNOWN_CAPABILITIES = frozenset(SERVING_MODES) | {"speculative"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +55,9 @@ class BackendProfile:
     # flag vocabulary: canonical knob -> backend flag string
     flags: Dict[str, str] = dataclasses.field(default_factory=dict)
     launcher: str = "custom"
+    # serving modes this backend supports (filled from the registry entry
+    # when registered via @register_backend(..., capabilities=...))
+    capabilities: FrozenSet[str] = KNOWN_CAPABILITIES
 
     def iteration_overhead(self, n_chunks: int, decode_rows: int,
                            graph_capture: bool) -> float:
@@ -43,21 +66,99 @@ class BackendProfile:
             ov -= self.graph_capture_saving * self.step_overhead
         return max(ov, 1e-6)
 
+    def supports(self, capability: str) -> bool:
+        return capability in self.capabilities
 
-_REGISTRY: Dict[str, BackendProfile] = {}
+
+ProfileSource = Union[BackendProfile, Callable[[], BackendProfile]]
 
 
-def register(profile: BackendProfile) -> BackendProfile:
-    _REGISTRY[profile.name] = profile
+@dataclasses.dataclass
+class _Entry:
+    source: ProfileSource
+    capabilities: FrozenSet[str]
+    resolved: Optional[BackendProfile] = None
+
+
+_REGISTRY: Dict[str, _Entry] = {}
+_BUILTINS_LOADED = False
+
+
+def _ensure_builtins() -> None:
+    """Load the in-tree profiles exactly once, on first lookup."""
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        _BUILTINS_LOADED = True
+        from repro.core.backends import profiles  # noqa: F401
+
+
+def register_backend(name: str, *,
+                     capabilities: Iterable[str] = KNOWN_CAPABILITIES,
+                     override: bool = False):
+    """Decorator registering a backend under ``name``.
+
+    Accepts either a zero-arg factory returning a :class:`BackendProfile`
+    (resolved lazily on first :func:`get_backend`) or a ready profile
+    instance.  Duplicate names raise ``ValueError`` unless ``override=True``
+    (used by calibration flows that legitimately re-register).
+    """
+    caps = frozenset(capabilities)
+    unknown = caps - KNOWN_CAPABILITIES
+    if unknown:
+        raise ValueError(
+            f"unknown capabilities {sorted(unknown)} for backend {name!r}; "
+            f"known: {sorted(KNOWN_CAPABILITIES)}")
+
+    def deco(source: ProfileSource) -> ProfileSource:
+        if name in _REGISTRY and not override:
+            raise ValueError(
+                f"backend {name!r} is already registered; pass "
+                f"override=True to replace it")
+        _REGISTRY[name] = _Entry(source=source, capabilities=caps)
+        return source
+
+    return deco
+
+
+def register(profile: BackendProfile,
+             capabilities: Optional[Iterable[str]] = None
+             ) -> BackendProfile:
+    """Legacy instance-registration helper (kept for calibration flows);
+    silently replaces an existing entry of the same name.  Unless new
+    capabilities are given explicitly, a re-registration keeps the
+    capabilities the backend originally declared."""
+    if capabilities is None:
+        prior = _REGISTRY.get(profile.name)
+        capabilities = (prior.capabilities if prior is not None
+                        else KNOWN_CAPABILITIES)
+    register_backend(profile.name, capabilities=capabilities,
+                     override=True)(profile)
     return profile
 
 
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
 def get_backend(name: str) -> BackendProfile:
+    _ensure_builtins()
     try:
-        return _REGISTRY[name]
+        entry = _REGISTRY[name]
     except KeyError:
-        raise KeyError(f"unknown backend {name!r}; known: {sorted(_REGISTRY)}")
+        raise KeyError(
+            f"unknown backend {name!r}; known: {sorted(_REGISTRY)}")
+    if entry.resolved is None:
+        prof = entry.source() if callable(entry.source) else entry.source
+        if prof.capabilities != entry.capabilities:
+            prof = dataclasses.replace(prof, capabilities=entry.capabilities)
+        entry.resolved = prof
+    return entry.resolved
+
+
+def backend_capabilities(name: str) -> FrozenSet[str]:
+    return get_backend(name).capabilities
 
 
 def all_backends() -> Tuple[str, ...]:
+    _ensure_builtins()
     return tuple(sorted(_REGISTRY))

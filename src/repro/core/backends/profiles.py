@@ -6,74 +6,99 @@ benchmarks/fig6_fidelity.py).  trtllm/vllm/sglang model the production
 frameworks' scheduling dynamics: static-graph low-overhead stepping
 (TRT-LLM), Python-scheduler overhead (vLLM), Triton-launch middle ground
 (SGLang).  Flag vocabularies feed the Generator.
+
+Each profile registers through the ``@register_backend`` decorator — the
+same entrypoint third-party backends use — and is resolved lazily by
+``get_backend``; this module is imported by the registry itself on first
+lookup, never as an import-time side effect of unrelated modules.
 """
 from __future__ import annotations
 
-from repro.core.backends.base import BackendProfile, register
+from repro.core.backends.base import (KNOWN_CAPABILITIES, BackendProfile,
+                                      get_backend, register_backend)
 
-REPRO_JAX = register(BackendProfile(
-    name="repro-jax",
-    step_overhead=120e-6,          # python dispatch + host sync
-    chunk_overhead=40e-6,          # per-prompt prefill dispatch
-    runtime_mem_overhead=0.04,
-    default_max_num_tokens=8192,
-    graph_capture_saving=0.6,      # donated fixed-shape decode step
-    # our engine admits requests into the next iteration immediately (no
-    # TRT-LLM-style admission queue), so the TTFT correction base is ~1
-    f_corr_base=1.0,
-    flags={
-        "max_num_tokens": "--max-num-tokens",
-        "kv_cache_mem_fraction": "--kv-cache-hbm-fraction",
-        "enable_chunked_context": "--chunked-prefill",
-        "enable_graph_capture": "--decode-bucketing",
-    },
-    launcher="python -m repro.launch.serve",
-))
 
-TRTLLM = register(BackendProfile(
-    name="trtllm",
-    step_overhead=30e-6,           # static engine, C++ runtime
-    chunk_overhead=15e-6,
-    runtime_mem_overhead=0.08,     # engine workspace
-    default_max_num_tokens=8192,
-    graph_capture_saving=0.8,
-    flags={
-        "max_num_tokens": "--max_num_tokens",
-        "kv_cache_mem_fraction": "--kv_cache_free_gpu_mem_fraction",
-        "enable_chunked_context": "--enable_chunked_context",
-        "enable_graph_capture": "--enable_cuda_graph",
-    },
-    launcher="trtllm-serve",
-))
+@register_backend("repro-jax", capabilities=KNOWN_CAPABILITIES)
+def _repro_jax() -> BackendProfile:
+    return BackendProfile(
+        name="repro-jax",
+        step_overhead=120e-6,          # python dispatch + host sync
+        chunk_overhead=40e-6,          # per-prompt prefill dispatch
+        runtime_mem_overhead=0.04,
+        default_max_num_tokens=8192,
+        graph_capture_saving=0.6,      # donated fixed-shape decode step
+        # our engine admits requests into the next iteration immediately (no
+        # TRT-LLM-style admission queue), so the TTFT correction base is ~1
+        f_corr_base=1.0,
+        flags={
+            "max_num_tokens": "--max-num-tokens",
+            "kv_cache_mem_fraction": "--kv-cache-hbm-fraction",
+            "enable_chunked_context": "--chunked-prefill",
+            "enable_graph_capture": "--decode-bucketing",
+        },
+        launcher="python -m repro.launch.serve",
+    )
 
-VLLM = register(BackendProfile(
-    name="vllm",
-    step_overhead=150e-6,          # python scheduler
-    chunk_overhead=30e-6,
-    runtime_mem_overhead=0.05,
-    default_max_num_tokens=8192,
-    graph_capture_saving=0.7,
-    flags={
-        "max_num_tokens": "--max-num-batched-tokens",
-        "kv_cache_mem_fraction": "--gpu-memory-utilization",
-        "enable_chunked_context": "--enable-chunked-prefill",
-        "enable_graph_capture": "--compilation-config",
-    },
-    launcher="vllm serve",
-))
 
-SGLANG = register(BackendProfile(
-    name="sglang",
-    step_overhead=60e-6,
-    chunk_overhead=25e-6,
-    runtime_mem_overhead=0.06,
-    default_max_num_tokens=8192,
-    graph_capture_saving=0.75,
-    flags={
-        "max_num_tokens": "--max-prefill-tokens",
-        "kv_cache_mem_fraction": "--mem-fraction-static",
-        "enable_chunked_context": "--chunked-prefill-size",
-        "enable_graph_capture": "--cuda-graph-max-bs",
-    },
-    launcher="python -m sglang.launch_server",
-))
+@register_backend("trtllm", capabilities=KNOWN_CAPABILITIES)
+def _trtllm() -> BackendProfile:
+    return BackendProfile(
+        name="trtllm",
+        step_overhead=30e-6,           # static engine, C++ runtime
+        chunk_overhead=15e-6,
+        runtime_mem_overhead=0.08,     # engine workspace
+        default_max_num_tokens=8192,
+        graph_capture_saving=0.8,
+        flags={
+            "max_num_tokens": "--max_num_tokens",
+            "kv_cache_mem_fraction": "--kv_cache_free_gpu_mem_fraction",
+            "enable_chunked_context": "--enable_chunked_context",
+            "enable_graph_capture": "--enable_cuda_graph",
+        },
+        launcher="trtllm-serve",
+    )
+
+
+@register_backend("vllm", capabilities=KNOWN_CAPABILITIES)
+def _vllm() -> BackendProfile:
+    return BackendProfile(
+        name="vllm",
+        step_overhead=150e-6,          # python scheduler
+        chunk_overhead=30e-6,
+        runtime_mem_overhead=0.05,
+        default_max_num_tokens=8192,
+        graph_capture_saving=0.7,
+        flags={
+            "max_num_tokens": "--max-num-batched-tokens",
+            "kv_cache_mem_fraction": "--gpu-memory-utilization",
+            "enable_chunked_context": "--enable-chunked-prefill",
+            "enable_graph_capture": "--compilation-config",
+        },
+        launcher="vllm serve",
+    )
+
+
+@register_backend("sglang", capabilities=KNOWN_CAPABILITIES)
+def _sglang() -> BackendProfile:
+    return BackendProfile(
+        name="sglang",
+        step_overhead=60e-6,
+        chunk_overhead=25e-6,
+        runtime_mem_overhead=0.06,
+        default_max_num_tokens=8192,
+        graph_capture_saving=0.75,
+        flags={
+            "max_num_tokens": "--max-prefill-tokens",
+            "kv_cache_mem_fraction": "--mem-fraction-static",
+            "enable_chunked_context": "--chunked-prefill-size",
+            "enable_graph_capture": "--cuda-graph-max-bs",
+        },
+        launcher="python -m sglang.launch_server",
+    )
+
+
+# resolved singletons for direct import (calibration, tests)
+REPRO_JAX = get_backend("repro-jax")
+TRTLLM = get_backend("trtllm")
+VLLM = get_backend("vllm")
+SGLANG = get_backend("sglang")

@@ -1,14 +1,22 @@
-"""AIConfigurator command-line interface — the paper's user workflow
-(Fig. 2) as one command:
+"""AIConfigurator command-line interface — a thin shell over ``repro.api``.
 
-    PYTHONPATH=src python -m repro.core.cli \\
-        --model qwen3-32b --isl 4000 --osl 500 \\
-        --ttft 1200 --min-speed 60 --chips 16 --dtype fp8 \\
-        --backend repro-jax --save-launch launch.json
+The paper's user workflow (Fig. 2) as subcommands:
 
-Prints the Pareto frontier and the top configurations, emits the launch
-artifact for the chosen backend, and (optionally) the speculative-decoding
-projection when a draft model is supplied.
+    python -m repro.core.cli search   --model qwen3-32b --isl 4000 --osl 500 \\
+        --ttft 1200 --min-speed 60 --chips 16 --dtype fp8 --backend repro-jax
+    python -m repro.core.cli generate --from-report report.json --out launch.json
+    python -m repro.core.cli compare  --model qwen3-32b --chips 16 \\
+        --shapes 4000:200:60,512:1024:30
+    python -m repro.core.cli list     backends
+
+Every subcommand accepts ``--json`` to emit machine-readable output
+(``search --json`` prints the schema-versioned SearchReport) on stdout,
+with human chatter kept off it.  Exit codes are stable: 0 success, 1 no
+configuration satisfies the SLA, 2 usage or validation error.
+
+The pre-subcommand flat-flag invocation (``python -m repro.core.cli
+--model ... --isl ...``) still works through a deprecation shim and prints
+byte-identical results to the ``search`` subcommand.
 """
 from __future__ import annotations
 
@@ -16,19 +24,31 @@ import argparse
 import json
 import sys
 
+from repro.api import Comparison, Configurator, SearchReport
 from repro.configs import list_archs
-from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
-                        WorkloadDescriptor, generate)
+from repro.core.backends.base import all_backends, backend_capabilities
+from repro.core.generator import generate
+from repro.core.hardware import PLATFORMS
+
+EXIT_OK = 0
+EXIT_NO_CONFIG = 1
+EXIT_USAGE = 2
+
+_SUBCOMMANDS = ("search", "generate", "compare", "list")
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser(
-        prog="repro.core.cli",
-        description="AIConfigurator: find the optimal serving configuration")
-    ap.add_argument("--model", required=True,
+# ---------------------------------------------------------------------------
+# argument plumbing
+# ---------------------------------------------------------------------------
+
+def _add_workload_args(ap: argparse.ArgumentParser, traffic: bool = True,
+                       required: bool = True):
+    ap.add_argument("--model", required=required, default=None,
                     help=f"one of {', '.join(list_archs(True))}")
-    ap.add_argument("--isl", type=int, required=True)
-    ap.add_argument("--osl", type=int, required=True)
+    if traffic:
+        ap.add_argument("--isl", type=int, required=required, default=None)
+        ap.add_argument("--osl", type=int, required=required, default=None)
+        ap.add_argument("--prefix-len", type=int, default=0)
     ap.add_argument("--ttft", type=float, default=1000.0,
                     help="TTFT SLA in ms")
     ap.add_argument("--min-speed", type=float, default=None,
@@ -36,65 +56,251 @@ def main(argv=None):
     ap.add_argument("--chips", type=int, default=8)
     ap.add_argument("--platform", default="tpu_v5e")
     ap.add_argument("--backend", default="repro-jax",
-                    choices=["repro-jax", "trtllm", "vllm", "sglang"])
+                    help=f"one of {', '.join(all_backends())} "
+                         "(or any registered plugin)")
     ap.add_argument("--dtype", default="bf16",
                     choices=["bf16", "fp16", "fp8"])
     ap.add_argument("--modes", default="aggregated,disaggregated")
-    ap.add_argument("--prefix-len", type=int, default=0)
     ap.add_argument("--moe-alpha", type=float, default=1.2)
-    ap.add_argument("--top", type=int, default=5)
-    ap.add_argument("--save-launch", default="")
-    ap.add_argument("--draft-model", default="",
-                    help="also project speculative decoding with this draft")
-    ap.add_argument("--acceptance", type=float, default=0.8)
-    args = ap.parse_args(argv)
 
-    workload = WorkloadDescriptor(
-        model=args.model, isl=args.isl, osl=args.osl,
-        sla=SLA(ttft_ms=args.ttft, min_tokens_per_s_user=args.min_speed),
-        cluster=ClusterSpec(n_chips=args.chips, platform=args.platform),
-        backend=args.backend, dtype=args.dtype,
-        prefix_len=args.prefix_len,
-        modes=tuple(args.modes.split(",")),
-        moe_alpha=args.moe_alpha)
 
-    db = PerfDatabase(args.platform, args.backend)
-    result = TaskRunner(workload, db).run()
-    print(result.summary())
+def _configurator(args, isl=None, osl=None, prefix_len=0) -> Configurator:
+    return (Configurator.for_model(args.model)
+            .traffic(isl if isl is not None else args.isl,
+                     osl if osl is not None else args.osl,
+                     prefix_len or getattr(args, "prefix_len", 0))
+            .sla(ttft_ms=args.ttft, min_tokens_per_s_user=args.min_speed)
+            .cluster(chips=args.chips, platform=args.platform)
+            .backend(args.backend)
+            .dtype(args.dtype)
+            .modes(*args.modes.split(","))
+            .moe_alpha(args.moe_alpha))
 
-    from repro.core import pareto
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+def _print_search_report(report: SearchReport, args) -> int:
+    """The classic human-readable search output (legacy-compatible)."""
+    print(report.summary())
     print(f"\ntop {args.top} SLA-valid configurations:")
-    for p in pareto.top_k(result.projections, workload.sla, args.top):
+    for p in report.top_k(args.top):
         print(f"  [{p.mode:13s}] {p.tokens_per_s_per_chip:9.1f} tok/s/chip  "
               f"{p.tokens_per_s_user:7.1f} tok/s/user  "
               f"TTFT {p.ttft_ms:8.1f}ms  {p.config.get('describe', '')}")
 
-    if result.best is None:
+    if report.best is None:
         print("\nno configuration satisfies the SLA on this cluster")
-        return 1
-    launch = generate(workload, result.best)
-    print(f"\nlaunch command:\n  {launch.command}")
+        return EXIT_NO_CONFIG
+    print(f"\nlaunch command:\n  {report.launch.command}")
     if args.save_launch:
         with open(args.save_launch, "w") as f:
-            f.write(launch.to_json())
+            f.write(report.launch.to_json())
         print(f"launch config -> {args.save_launch}")
 
-    if args.draft_model:
-        from repro.core.config import ParallelismConfig
-        from repro.core.speculative import SpeculativeEstimator
-        est = SpeculativeEstimator(workload, args.draft_model, db)
-        par = ParallelismConfig(
-            **{k: result.best.config.get("parallel", {}).get(k, 1)
-               for k in ("tp", "pp", "ep", "dp")}) \
-            if result.best.mode != "disaggregated" else ParallelismConfig(
-                tp=min(args.chips, 8))
-        best, _ = est.best_gamma(par, batch=result.best.batch_size,
-                                 acceptance=args.acceptance)
-        print(f"\nspeculative decoding ({args.draft_model}, "
-              f"acceptance {args.acceptance}): best gamma={best.gamma} -> "
-              f"{best.speedup_vs_autoregressive:.2f}x "
-              f"({best.tokens_per_s_user:.0f} tok/s/user)")
-    return 0
+    if report.speculative:
+        s = report.speculative
+        print(f"\nspeculative decoding ({s['draft_model']}, "
+              f"acceptance {s['acceptance']}): best gamma={s['gamma']} -> "
+              f"{s['speedup_vs_autoregressive']:.2f}x "
+              f"({s['tokens_per_s_user']:.0f} tok/s/user)")
+    return EXIT_OK
+
+
+def _run_search(args) -> "tuple[SearchReport, Configurator]":
+    cfg = _configurator(args)
+    report = cfg.search()
+    draft = getattr(args, "draft_model", "")
+    if draft and report.best is not None:
+        best, _ = cfg.speculative(draft, acceptance=args.acceptance,
+                                  report=report)
+        report.speculative = {
+            "draft_model": draft, "acceptance": args.acceptance,
+            "gamma": best.gamma, "tpot_ms": best.tpot_ms,
+            "tokens_per_s_user": best.tokens_per_s_user,
+            "speedup_vs_autoregressive": best.speedup_vs_autoregressive,
+        }
+    return report, cfg
+
+
+def cmd_search(args) -> int:
+    report, _ = _run_search(args)
+    if args.save_report:
+        report.save(args.save_report)
+    if args.json:
+        if args.save_launch and report.launch is not None:
+            with open(args.save_launch, "w") as f:
+                f.write(report.launch.to_json())
+        print(report.to_json())
+        return EXIT_OK if report.best is not None else EXIT_NO_CONFIG
+    return _print_search_report(report, args)
+
+
+# ---------------------------------------------------------------------------
+# generate
+# ---------------------------------------------------------------------------
+
+def cmd_generate(args) -> int:
+    if args.from_report:
+        report = SearchReport.load(args.from_report)
+        launch = report.launch
+        if launch is None and report.best is not None:
+            launch = generate(report.workload, report.best)
+    else:
+        if args.model is None or args.isl is None or args.osl is None:
+            print("error: generate needs --from-report or "
+                  "--model/--isl/--osl", file=sys.stderr)
+            return EXIT_USAGE
+        report, _ = _run_search(args)
+        launch = report.launch
+    if launch is None:
+        print("no configuration satisfies the SLA on this cluster",
+              file=sys.stderr)
+        return EXIT_NO_CONFIG
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(launch.to_json())
+    if args.json:
+        print(launch.to_json())
+    else:
+        print(launch.command)
+        if args.out:
+            print(f"launch config -> {args.out}")
+    return EXIT_OK
+
+
+# ---------------------------------------------------------------------------
+# compare
+# ---------------------------------------------------------------------------
+
+def _parse_shapes(text: str):
+    """``isl:osl[:min_speed],...`` -> list of compare-variant dicts."""
+    variants = []
+    for part in text.split(","):
+        bits = part.split(":")
+        if len(bits) not in (2, 3):
+            raise ValueError(
+                f"bad shape {part!r}; expected isl:osl or isl:osl:min_speed")
+        v = {"isl": int(bits[0]), "osl": int(bits[1])}
+        if len(bits) == 3:
+            v["min_tokens_per_s_user"] = float(bits[2])
+        variants.append(v)
+    return variants
+
+
+def cmd_compare(args) -> int:
+    variants = _parse_shapes(args.shapes)
+    cfg = _configurator(args, isl=variants[0]["isl"], osl=variants[0]["osl"])
+    comparison: Comparison = cfg.compare(variants)
+    if args.json:
+        print(comparison.to_json())
+    else:
+        print(comparison.summary())
+    return EXIT_OK if any(r.best for r in comparison.reports) \
+        else EXIT_NO_CONFIG
+
+
+# ---------------------------------------------------------------------------
+# list
+# ---------------------------------------------------------------------------
+
+def cmd_list(args) -> int:
+    inventory = {
+        "models": list_archs(True),
+        "backends": {name: sorted(backend_capabilities(name))
+                     for name in all_backends()},
+        "platforms": sorted(PLATFORMS),
+    }
+    wanted = (inventory if args.what == "all"
+              else {args.what: inventory[args.what]})
+    if args.json:
+        print(json.dumps(wanted, indent=2))
+        return EXIT_OK
+    for section, items in wanted.items():
+        print(f"{section}:")
+        if isinstance(items, dict):
+            for name, caps in items.items():
+                print(f"  {name}  ({', '.join(caps)})")
+        else:
+            for name in items:
+                print(f"  {name}")
+    return EXIT_OK
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.core.cli",
+        description="AIConfigurator: find the optimal serving configuration")
+    sub = ap.add_subparsers(dest="command")
+
+    sp = sub.add_parser("search", help="search the configuration space")
+    _add_workload_args(sp)
+    sp.add_argument("--top", type=int, default=5)
+    sp.add_argument("--save-launch", default="")
+    sp.add_argument("--save-report", default="",
+                    help="write the SearchReport JSON here")
+    sp.add_argument("--draft-model", default="",
+                    help="also project speculative decoding with this draft")
+    sp.add_argument("--acceptance", type=float, default=0.8)
+    sp.add_argument("--json", action="store_true",
+                    help="print the SearchReport JSON on stdout")
+    sp.set_defaults(func=cmd_search)
+
+    gp = sub.add_parser("generate", help="emit the launch artifact")
+    gp.add_argument("--from-report", default="",
+                    help="SearchReport JSON from `search --save-report`")
+    gp.add_argument("--out", default="", help="write launch JSON here")
+    gp.add_argument("--json", action="store_true")
+    _add_workload_args(gp, required=False)
+    gp.set_defaults(func=cmd_generate)
+
+    cp = sub.add_parser("compare",
+                        help="sweep traffic shapes (scenario diversity)")
+    _add_workload_args(cp, traffic=False)
+    cp.add_argument("--shapes", required=True,
+                    help="comma list of isl:osl[:min_speed]")
+    cp.add_argument("--json", action="store_true")
+    cp.set_defaults(func=cmd_compare)
+
+    lp = sub.add_parser("list", help="enumerate models/backends/platforms")
+    lp.add_argument("what", nargs="?", default="all",
+                    choices=["models", "backends", "platforms", "all"])
+    lp.add_argument("--json", action="store_true")
+    lp.set_defaults(func=cmd_list)
+    return ap
+
+
+def _legacy_argv_to_search(argv) -> list:
+    """Deprecation shim: flat-flag invocation -> `search` subcommand argv."""
+    print("deprecated: flat-flag invocation; use "
+          "`python -m repro.core.cli search ...` (same flags)",
+          file=sys.stderr)
+    return ["search"] + list(argv)
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] not in _SUBCOMMANDS \
+            and not argv[0] in ("-h", "--help"):
+        argv = _legacy_argv_to_search(argv)
+    ap = _build_parser()
+    args = ap.parse_args(argv)
+    if getattr(args, "func", None) is None:
+        ap.print_help()
+        return EXIT_USAGE
+    try:
+        return args.func(args)
+    except (ValueError, OSError, KeyError) as e:
+        # bad inputs (validation, unreadable/corrupt report files,
+        # unregistered backends referenced by a loaded report) -> 2
+        msg = e.args[0] if isinstance(e, KeyError) and e.args else e
+        print(f"error: {msg}", file=sys.stderr)
+        return EXIT_USAGE
 
 
 if __name__ == "__main__":

@@ -101,6 +101,7 @@ class DatabaseStats:
     grid_hits: int = 0
     sol_fallbacks: int = 0
     grids_built: int = 0
+    seq_hits: int = 0
 
 
 class PerfDatabase:
@@ -114,6 +115,7 @@ class PerfDatabase:
         self.use_grid = use_grid
         self._grids: Dict[Tuple, OpGrid] = {}
         self._memo: Dict = {}
+        self._seq_memo: Dict[Tuple, float] = {}
         self.stats = DatabaseStats()
         if use_grid:
             self._collect_static()
@@ -183,7 +185,10 @@ class PerfDatabase:
 
     # -- queries -------------------------------------------------------------
     def op_latency(self, op) -> float:
-        cached = self._memo.get(op)
+        try:
+            cached = self._memo.get(op)
+        except TypeError:  # unhashable custom op: price it uncached
+            return self._op_latency_uncached(op)
         if cached is not None:
             return cached
         t = self._op_latency_uncached(op)
@@ -235,7 +240,24 @@ class PerfDatabase:
         return analytical.latency(self.platform, op)
 
     def sequence_latency(self, op_list: List) -> float:
-        """Accepts plain operators or (operator, count) pairs."""
+        """Accepts plain operators or (operator, count) pairs.
+
+        Whole op-sequences are memoized on top of the per-operator memo:
+        candidate sweeps re-derive identical iteration decompositions
+        constantly (same parallelism at a different batch, repeated
+        searches over one database), so a warm database answers them
+        without re-walking the operator list.
+        """
+        key: Optional[Tuple] = None
+        try:
+            key = tuple(op_list)
+            cached = self._seq_memo.get(key)
+        except TypeError:  # unhashable custom op: skip sequence memo
+            key = None
+            cached = None
+        if cached is not None:
+            self.stats.seq_hits += 1
+            return cached
         total = 0.0
         for item in op_list:
             if isinstance(item, tuple):
@@ -243,6 +265,8 @@ class PerfDatabase:
                 total += count * self.op_latency(op)
             else:
                 total += self.op_latency(item)
+        if key is not None and len(self._seq_memo) < 500_000:
+            self._seq_memo[key] = total
         return total
 
     # -- persistence ----------------------------------------------------------

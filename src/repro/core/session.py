@@ -16,7 +16,6 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.core import decompose, modes
-from repro.core.backends import profiles  # noqa: F401  (registers backends)
 from repro.core.backends.base import get_backend
 from repro.core.config import (CandidateConfig, ParallelismConfig, Projection,
                                RuntimeFlags, SLA, WorkloadDescriptor)

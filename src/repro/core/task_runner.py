@@ -9,7 +9,6 @@ import itertools
 import time
 from typing import Dict, List, Optional, Tuple
 
-from repro.configs import get_config
 from repro.core import modes, pareto
 from repro.core.config import (CandidateConfig, DisaggConfig,
                                ParallelismConfig, Projection, RuntimeFlags,
@@ -47,10 +46,14 @@ class SearchResult:
 
 class TaskRunner:
     def __init__(self, workload: WorkloadDescriptor,
-                 db: Optional[PerfDatabase] = None):
+                 db: Optional[PerfDatabase] = None,
+                 session: Optional[InferenceSession] = None):
         self.w = workload
-        self.session = InferenceSession(workload, db)
-        self.cfg = get_config(workload.model)
+        if session is not None and session.w is not workload \
+                and session.w != workload:
+            raise ValueError("session was built for a different workload")
+        self.session = session or InferenceSession(workload, db)
+        self.cfg = self.session.cfg
 
     # ------------------------------------------------------------------
     def parallelism_candidates(self, max_chips: Optional[int] = None

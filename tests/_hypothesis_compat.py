@@ -1,0 +1,99 @@
+"""Deterministic fallback for ``hypothesis`` on bare environments.
+
+The tier-1 suite must collect and pass without optional dependencies
+(ISSUE 1 satellite).  When hypothesis is installed the real library is
+used; otherwise this shim supplies ``given``/``settings``/``st`` with just
+the strategy surface our property tests need.  Each ``@given`` test runs a
+fixed number of seeded-random examples plus the all-minimal and
+all-maximal corner draws — far weaker than hypothesis's shrinking search,
+but deterministic and dependency-free.
+
+Usage (in test modules)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import random
+import types
+
+N_EXAMPLES = 25  # random draws per test, after the two corner draws
+
+
+class _Strategy:
+    def __init__(self, draw, minimal, maximal):
+        self.draw = draw
+        self.minimal = minimal
+        self.maximal = maximal
+
+
+def _floats(lo, hi):
+    return _Strategy(lambda rng: rng.uniform(lo, hi),
+                     lambda: float(lo), lambda: float(hi))
+
+
+def _integers(lo, hi):
+    return _Strategy(lambda rng: rng.randint(lo, hi),
+                     lambda: lo, lambda: hi)
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5,
+                     lambda: False, lambda: True)
+
+
+def _tuples(*strategies):
+    return _Strategy(
+        lambda rng: tuple(s.draw(rng) for s in strategies),
+        lambda: tuple(s.minimal() for s in strategies),
+        lambda: tuple(s.maximal() for s in strategies))
+
+
+def _lists(elem, min_size=0, max_size=10):
+    return _Strategy(
+        lambda rng: [elem.draw(rng)
+                     for _ in range(rng.randint(min_size, max_size))],
+        lambda: [elem.minimal() for _ in range(min_size)],
+        lambda: [elem.maximal() for _ in range(max_size)])
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))],
+                     lambda: seq[0], lambda: seq[-1])
+
+
+st = types.SimpleNamespace(
+    floats=_floats, integers=_integers, booleans=_booleans,
+    tuples=_tuples, lists=_lists, sampled_from=_sampled_from)
+
+
+def given(*strategies):
+    """Run the test over corner draws + N_EXAMPLES seeded-random draws.
+
+    The wrapper takes no arguments so pytest does not mistake the
+    strategy-bound parameters for fixtures (hypothesis's ``@given`` hides
+    them the same way).
+    """
+    def deco(fn):
+        def run():
+            fn(*(s.minimal() for s in strategies))
+            fn(*(s.maximal() for s in strategies))
+            rng = random.Random(fn.__name__)  # deterministic per test
+            for _ in range(N_EXAMPLES):
+                fn(*(s.draw(rng) for s in strategies))
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        return run
+    return deco
+
+
+def settings(**_kwargs):
+    """No-op stand-in for ``hypothesis.settings``."""
+    def deco(fn):
+        return fn
+    return deco

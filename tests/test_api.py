@@ -1,0 +1,331 @@
+"""The unified `repro.api` facade: fluent Configurator, schema-versioned
+SearchReport round-trip, backend registry, and CLI equivalence."""
+import dataclasses
+import json
+import re
+import time
+
+import pytest
+
+from repro.api import Comparison, Configurator, SCHEMA_VERSION, SearchReport
+from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
+                        WorkloadDescriptor, cli)
+from repro.core.backends.base import (BackendProfile, all_backends,
+                                      get_backend, register_backend,
+                                      unregister_backend)
+
+
+def _small_configurator(**kw):
+    return (Configurator.for_model(kw.get("model", "llama3.1-8b"))
+            .traffic(isl=kw.get("isl", 256), osl=kw.get("osl", 64))
+            .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+            .cluster(chips=kw.get("chips", 8))
+            .backend("repro-jax").dtype("fp8")
+            .modes(*kw.get("modes", ("aggregated",))))
+
+
+@pytest.fixture(scope="module")
+def report():
+    return _small_configurator().search()
+
+
+# ---------------------------------------------------------------------------
+# SearchReport round-trip
+# ---------------------------------------------------------------------------
+
+def test_report_json_roundtrip(report):
+    blob = report.to_json()
+    assert json.loads(blob)["schema_version"] == SCHEMA_VERSION
+    back = SearchReport.from_json(blob)
+    assert back == report
+    # second hop is stable too
+    assert SearchReport.from_json(back.to_json()) == report
+
+
+def test_report_roundtrip_with_disagg_and_launch():
+    rep = _small_configurator(isl=128, osl=32, chips=4,
+                              modes=("aggregated", "disaggregated")).search()
+    assert rep.launch is not None
+    back = SearchReport.from_json(rep.to_json())
+    assert back == rep
+    assert back.launch.command == rep.launch.command
+    if rep.disagg is not None:
+        assert back.disagg["describe"] == rep.disagg["describe"]
+
+
+def test_report_rejects_unknown_schema_version(report):
+    d = report.to_dict()
+    d["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema_version"):
+        SearchReport.from_dict(d)
+
+
+def test_report_rejects_truncated_payload():
+    with pytest.raises(ValueError, match="malformed"):
+        SearchReport.from_dict({"schema_version": SCHEMA_VERSION})
+
+
+def test_report_views(report):
+    assert report.best is report.projections[report.best_index]
+    assert all(f in report.projections for f in report.frontier)
+    assert report.top_k(3)
+    assert "candidates" in report.summary()
+
+
+# ---------------------------------------------------------------------------
+# Configurator: eager validation
+# ---------------------------------------------------------------------------
+
+def test_unknown_model_lists_choices():
+    with pytest.raises(ValueError) as e:
+        Configurator.for_model("gpt-99")
+    assert "qwen3-32b" in str(e.value)
+
+
+def test_unknown_backend_lists_choices():
+    with pytest.raises(ValueError) as e:
+        Configurator.for_model("llama3.1-8b").backend("tensorflow-serving")
+    assert "repro-jax" in str(e.value)
+
+
+def test_unknown_platform_lists_choices():
+    with pytest.raises(ValueError) as e:
+        Configurator.for_model("llama3.1-8b").cluster(8, platform="tpu_v9")
+    assert "tpu_v5e" in str(e.value)
+
+
+def test_invalid_traffic_and_modes():
+    c = Configurator.for_model("llama3.1-8b")
+    with pytest.raises(ValueError):
+        c.traffic(isl=0, osl=64)
+    with pytest.raises(ValueError, match="mode"):
+        c.modes("quantum")
+    with pytest.raises(ValueError, match="traffic"):
+        c.search()   # traffic never set
+
+
+def test_compare_without_traffic_is_clean_error():
+    c = Configurator.for_model("llama3.1-8b")
+    with pytest.raises(ValueError, match="isl and osl"):
+        c.compare([{"isl": 128}])    # osl never set anywhere
+
+
+def test_unknown_draft_model():
+    c = _small_configurator()
+    with pytest.raises(ValueError, match="draft model"):
+        c.speculative("not-a-model")
+
+
+# ---------------------------------------------------------------------------
+# Memoized search: second run on the same instance is faster
+# ---------------------------------------------------------------------------
+
+def test_second_search_is_faster_and_hits_seq_memo():
+    c = _small_configurator()
+    t0 = time.perf_counter()
+    r1 = c.search()
+    t_cold = time.perf_counter() - t0
+    db = c.database()
+    hits_before = db.stats.seq_hits
+    t0 = time.perf_counter()
+    r2 = c.search()
+    t_warm = time.perf_counter() - t0
+    assert db.stats.seq_hits > hits_before   # op-sequence memo answered
+    # cold includes grid collection + uncached pricing, so the margin is
+    # large; best-of-two warm runs keeps scheduler noise from flaking it
+    t0 = time.perf_counter()
+    c.search()
+    t_warm = min(t_warm, time.perf_counter() - t0)
+    assert t_warm < t_cold                   # measurably faster than cold
+    # same results both times (modulo timing metadata)
+    assert r1.projections == r2.projections
+    assert r1.best_index == r2.best_index
+
+
+def test_sequence_memo_tolerates_unhashable_ops():
+    @dataclasses.dataclass(eq=True)          # eq without frozen -> unhashable
+    class WeirdOp:
+        flops_val: float = 1e9
+
+        def flops(self):
+            return self.flops_val
+
+        def bytes(self):
+            return 1e6
+
+    db = PerfDatabase("tpu_v5e", "repro-jax", use_grid=False)
+    assert db.sequence_latency([WeirdOp(), (WeirdOp(), 2)]) > 0
+
+
+# ---------------------------------------------------------------------------
+# Facade == legacy TaskRunner path
+# ---------------------------------------------------------------------------
+
+def test_facade_matches_taskrunner():
+    w = WorkloadDescriptor(
+        model="llama3.1-8b", isl=256, osl=64,
+        sla=SLA(ttft_ms=2000, min_tokens_per_s_user=10),
+        cluster=ClusterSpec(n_chips=8), backend="repro-jax", dtype="fp8",
+        modes=("aggregated",))
+    legacy = TaskRunner(w, PerfDatabase("tpu_v5e", "repro-jax")).run()
+    rep = _small_configurator().search()
+    assert rep.workload == w
+    assert [dataclasses.asdict(p) for p in rep.projections] \
+        == [dataclasses.asdict(p) for p in legacy.projections]
+    assert dataclasses.asdict(rep.best) == dataclasses.asdict(legacy.best)
+    assert rep.n_candidates == legacy.n_candidates
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+def _dummy_profile(name="test-dummy"):
+    return BackendProfile(
+        name=name, step_overhead=1e-6, chunk_overhead=1e-6,
+        runtime_mem_overhead=0.01, default_max_num_tokens=8192,
+        graph_capture_saving=0.5)
+
+
+def test_registry_rejects_duplicates():
+    register_backend("test-dummy", capabilities=("aggregated",))(
+        _dummy_profile)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_backend("test-dummy")(_dummy_profile)
+        # resolved lazily, capabilities attached from the registration
+        prof = get_backend("test-dummy")
+        assert prof.capabilities == frozenset({"aggregated"})
+        assert "test-dummy" in all_backends()
+        # the facade accepts the plugin without core edits...
+        c = Configurator.for_model("llama3.1-8b").backend("test-dummy")
+        # ...and enforces its declared capabilities
+        with pytest.raises(ValueError, match="capabilit"):
+            c.traffic(isl=64, osl=16).modes("disaggregated").workload()
+    finally:
+        unregister_backend("test-dummy")
+    assert "test-dummy" not in all_backends()
+
+
+def test_legacy_register_preserves_declared_capabilities():
+    from repro.core.backends.base import register
+    register_backend("test-dummy3", capabilities=("aggregated",))(
+        lambda: _dummy_profile("test-dummy3"))
+    try:
+        # calibration-style re-registration without explicit capabilities
+        register(dataclasses.replace(get_backend("test-dummy3"),
+                                     step_overhead=9e-6))
+        assert get_backend("test-dummy3").capabilities \
+            == frozenset({"aggregated"})
+    finally:
+        unregister_backend("test-dummy3")
+
+
+def test_registry_rejects_unknown_capability():
+    with pytest.raises(ValueError, match="capabilities"):
+        register_backend("test-dummy2", capabilities=("teleportation",))
+
+
+def test_builtin_backends_registered_lazily():
+    assert set(all_backends()) >= {"repro-jax", "trtllm", "vllm", "sglang"}
+    with pytest.raises(KeyError, match="unknown backend"):
+        get_backend("definitely-not-registered")
+
+
+# ---------------------------------------------------------------------------
+# CLI: legacy flags == search subcommand; --json is valid JSON
+# ---------------------------------------------------------------------------
+
+_CLI_ARGS = ["--model", "llama3.1-8b", "--isl", "256", "--osl", "64",
+             "--ttft", "2000", "--min-speed", "10", "--chips", "8",
+             "--dtype", "fp8", "--modes", "aggregated"]
+
+
+def _normalize_timing(text):
+    return re.sub(r"in \d+\.\d+s \(\d+\.\d+ ms/config\)",
+                  "in <T>s (<T> ms/config)", text)
+
+
+def test_legacy_cli_identical_to_search_subcommand(capsys):
+    rc_new = cli.main(["search"] + _CLI_ARGS)
+    out_new = capsys.readouterr().out
+    rc_old = cli.main(_CLI_ARGS)
+    captured = capsys.readouterr()
+    assert "deprecated" in captured.err
+    assert rc_old == rc_new == 0
+    assert _normalize_timing(captured.out) == _normalize_timing(out_new)
+
+
+def test_cli_search_json(capsys):
+    rc = cli.main(["search"] + _CLI_ARGS + ["--json"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    d = json.loads(out)
+    assert d["schema_version"] == SCHEMA_VERSION
+    assert SearchReport.from_json(out).best is not None
+
+
+def test_cli_search_json_honors_save_launch(tmp_path, capsys):
+    out = str(tmp_path / "launch.json")
+    rc = cli.main(["search"] + _CLI_ARGS + ["--json", "--save-launch", out])
+    assert rc == 0
+    report = json.loads(capsys.readouterr().out)
+    assert json.load(open(out)) == report["launch"]["raw"]
+
+
+def test_cli_validation_exit_code(capsys):
+    rc = cli.main(["search", "--model", "gpt-99", "--isl", "64",
+                   "--osl", "16"])
+    assert rc == cli.EXIT_USAGE
+    assert "valid choices" in capsys.readouterr().err
+
+
+def test_cli_list_json(capsys):
+    rc = cli.main(["list", "--json"])
+    assert rc == 0
+    d = json.loads(capsys.readouterr().out)
+    assert "repro-jax" in d["backends"]
+    assert "tpu_v5e" in d["platforms"]
+
+
+def test_cli_generate_from_report(tmp_path, capsys):
+    rep_path = str(tmp_path / "report.json")
+    rc = cli.main(["search"] + _CLI_ARGS + ["--save-report", rep_path])
+    assert rc == 0
+    capsys.readouterr()
+    out_path = str(tmp_path / "launch.json")
+    rc = cli.main(["generate", "--from-report", rep_path,
+                   "--out", out_path, "--json"])
+    assert rc == 0
+    raw = json.loads(capsys.readouterr().out)
+    assert raw["model"] == "llama3.1-8b"
+    assert json.load(open(out_path)) == raw
+
+
+# ---------------------------------------------------------------------------
+# compare / speculative share the Configurator's engines
+# ---------------------------------------------------------------------------
+
+def test_compare_sweep():
+    c = _small_configurator()
+    comparison = c.compare([{"isl": 128, "osl": 32},
+                            {"isl": 512, "osl": 64}],
+                           labels=["short", "long"])
+    assert isinstance(comparison, Comparison)
+    assert len(comparison.reports) == 2
+    assert comparison.reports[0].workload.isl == 128
+    assert comparison.reports[1].workload.isl == 512
+    # shared database across the sweep (one platform/backend pair)
+    assert len(c._dbs) == 1
+    assert "short" in comparison.summary()
+    json.loads(comparison.to_json())
+
+
+def test_speculative_on_best_config():
+    c = _small_configurator()
+    rep = c.search()
+    best, sweep = c.speculative("internlm2-1.8b", acceptance=0.8,
+                                report=rep)
+    assert best.gamma >= 1
+    assert len(sweep) == 8
+    assert best.tpot_ms == min(p.tpot_ms for p in sweep)

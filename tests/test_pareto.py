@@ -1,5 +1,8 @@
 """Property tests for the Pareto analyzer."""
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare environment: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import pareto
 from repro.core.config import Projection, SLA

@@ -2,7 +2,10 @@
 (§4.4.1, eq. 3–4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare environment: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import powerlaw
 

@@ -2,7 +2,10 @@
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare environment: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.serving.request import Phase, Request
 from repro.serving.scheduler import ContinuousBatchingScheduler, SchedulerConfig
