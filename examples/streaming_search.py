@@ -1,0 +1,46 @@
+"""Streaming search: watch candidates arrive, stop as soon as you're happy.
+
+    PYTHONPATH=src python examples/streaming_search.py
+
+``Configurator.search_iter`` prices candidates lazily and yields a
+``SearchEvent`` per projection — the same pricing path batch ``search()``
+drains — so an interactive consumer can render progress, watch the online
+Pareto frontier grow, and early-exit once enough SLA-valid options exist.
+Here ``stop_after_n_valid(5)`` stops the sweep after five valid configs:
+every candidate after that is never priced at all.
+"""
+import _bootstrap  # noqa: F401
+
+from repro.api import Configurator, stop_after_n_valid
+
+
+def main():
+    cfg = (Configurator.for_model("llama3.1-8b")
+           .traffic(isl=2000, osl=256)
+           .sla(ttft_ms=1500, min_tokens_per_s_user=20)
+           .cluster(chips=8, platform="tpu_v5e")
+           .dtype("fp8")
+           .modes("aggregated"))
+
+    stream = cfg.search_iter(policies=[stop_after_n_valid(5)])
+    for ev in stream:
+        p = ev.projection
+        tick = "+" if ev.meets_sla else " "
+        print(f" {tick} #{ev.index:3d}  {p.config.get('describe', ''):14s} "
+              f"{p.tokens_per_s_per_chip:8.1f} tok/s/chip  "
+              f"{p.tokens_per_s_user:6.1f} tok/s/user  "
+              f"frontier={ev.frontier_size}  valid={ev.n_valid}")
+
+    report = stream.report()
+    print(f"\n{report.summary()}")
+    if report.early_exit:
+        print(f"stopped early: {report.early_exit['reason']} after pricing "
+              f"{report.early_exit['n_priced']} candidates")
+    print(f"database fingerprint: {report.fingerprint['platform']}/"
+          f"{report.fingerprint['backend']} "
+          f"grids={report.fingerprint['n_grids']} "
+          f"hash={report.fingerprint['grid_hash']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 CI: full test suite + CLI JSON smoke test.
+# Tier-1 CI: fast suite, slow suite, CLI JSON smoke test, streaming smoke.
 # Run from the repo root: bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "=== tier-1: pytest ==="
-python -m pytest -x -q
+echo "=== tier-1 (fast): pytest -m 'not slow' ==="
+python -m pytest -x -q -m "not slow"
+
+echo "=== tier-2 (slow): pytest -m slow ==="
+python -m pytest -x -q -m slow
 
 echo "=== smoke: search --json emits valid SearchReport JSON on stdout ==="
 PYTHONPATH=src python -m repro.core.cli search \
@@ -18,10 +21,56 @@ report = json.load(sys.stdin)
 version = report["schema_version"]
 n_projections = len(report["projections"])
 best_index = report["best"]
-assert version == 1, version
+assert version == 2, version
 assert n_projections > 0, "search produced no projections"
+assert report["database"]["platform"] == "tpu_v5e", report["database"]
+assert len(report["memory"]["per_candidate_bytes_per_chip"]) \
+    == n_projections, "memory section must cover every projection"
 print(f"ok: schema v{version}, {n_projections} projections, "
       f"best index {best_index}")
+'
+
+echo "=== smoke: search --stream survives an early-exiting consumer ==="
+# The consumer reads 5 records and exits; the producer must shut down
+# cleanly (exit 0, no BrokenPipeError traceback) under pipefail.
+stream_err=$(mktemp)
+PYTHONPATH=src python -m repro.core.cli search \
+    --model llama3.1-8b --isl 256 --osl 64 --chips 8 --dtype fp8 \
+    --modes aggregated --stream 2>"$stream_err" \
+  | python -c '
+import json
+import sys
+
+for i, line in zip(range(5), sys.stdin):
+    record = json.loads(line)
+    assert record["type"] in ("candidate", "summary"), record
+sys.exit(0)   # close the pipe with the producer mid-sweep
+'
+if grep -q "BrokenPipeError" "$stream_err"; then
+    echo "streaming producer leaked a BrokenPipeError:" >&2
+    cat "$stream_err" >&2
+    rm -f "$stream_err"
+    exit 1
+fi
+rm -f "$stream_err"
+echo "ok: early-exiting consumer, clean shutdown"
+
+echo "=== smoke: search --stream --first-n emits an early_exit summary ==="
+PYTHONPATH=src python -m repro.core.cli search \
+    --model llama3.1-8b --isl 256 --osl 64 --chips 8 --dtype fp8 \
+    --ttft 2000 --min-speed 10 --modes aggregated --stream --first-n 3 \
+  | python -c '
+import json
+import sys
+
+records = [json.loads(line) for line in sys.stdin if line.strip()]
+summary = records[-1]
+assert summary["type"] == "summary", summary
+assert summary["early_exit"] is not None, "expected an early-exit record"
+assert summary["n_valid"] == 3, summary["n_valid"]
+n_candidates = summary["n_candidates"]
+reason = summary["early_exit"]["reason"]
+print(f"ok: early exit after {n_candidates} candidates ({reason})")
 '
 
 echo "=== ci passed ==="

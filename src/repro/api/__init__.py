@@ -22,6 +22,18 @@ Canonical quickstart::
     report.save("report.json")          # schema-versioned interchange
 
     # round-trip: SearchReport.from_json(report.to_json()) == report
+    # (v1 report files are still readable and migrate to v2)
+
+Streaming: ``search_iter`` prices candidates lazily and yields a
+``SearchEvent`` per projection, with pluggable early-exit policies —
+batch ``search()`` is literally "drain the iterator"::
+
+    from repro.api import stop_after_n_valid
+
+    stream = cfg.search_iter(policies=[stop_after_n_valid(3)])
+    for event in stream:                # stops after 3 SLA-valid configs
+        print(event.projection.tokens_per_s_per_chip, event.frontier_size)
+    report = stream.report()            # early_exit recorded in the report
 
 Every setter validates eagerly — unknown models, platforms, backends,
 dtypes, or modes raise ``ValueError`` listing the valid choices before any
@@ -38,11 +50,16 @@ Third-party serving backends join in without touching core::
     def _profile() -> BackendProfile:
         return BackendProfile(name="my-engine", ...)
 """
-from repro.api.configurator import Comparison, Configurator
-from repro.api.report import (SCHEMA_VERSION, SearchReport,
-                              workload_from_dict, workload_to_dict)
+from repro.api.configurator import Comparison, Configurator, StreamingSearch
+from repro.api.policies import (SearchEvent, callback, deadline_s,
+                                stop_after_n_valid)
+from repro.api.report import (SCHEMA_VERSION, SUPPORTED_SCHEMA_VERSIONS,
+                              SearchReport, workload_from_dict,
+                              workload_to_dict)
 
 __all__ = [
-    "Comparison", "Configurator", "SCHEMA_VERSION", "SearchReport",
+    "Comparison", "Configurator", "SCHEMA_VERSION",
+    "SUPPORTED_SCHEMA_VERSIONS", "SearchEvent", "SearchReport",
+    "StreamingSearch", "callback", "deadline_s", "stop_after_n_valid",
     "workload_from_dict", "workload_to_dict",
 ]

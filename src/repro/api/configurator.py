@@ -15,19 +15,22 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import time
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.configs import list_archs
+from repro.core import pareto
 from repro.core.backends.base import SERVING_MODES, all_backends, get_backend
-from repro.core.config import (ClusterSpec, ParallelismConfig, SLA,
-                               WorkloadDescriptor)
+from repro.core.config import (ClusterSpec, ParallelismConfig, Projection,
+                               SLA, WorkloadDescriptor)
 from repro.core.generator import generate
 from repro.core.hardware import PLATFORMS
 from repro.core.perf_database import PerfDatabase
 from repro.core.session import InferenceSession
-from repro.core.task_runner import TaskRunner
+from repro.core.task_runner import SearchProgress, SearchResult, TaskRunner
 
-from repro.api.report import SearchReport
+from repro.api.policies import Policy, SearchEvent
+from repro.api.report import SCHEMA_VERSION, SearchReport
 
 VALID_DTYPES = ("bf16", "fp16", "fp8")
 VALID_MODES = SERVING_MODES
@@ -164,16 +167,40 @@ class Configurator:
         return self._session
 
     # -- operations ----------------------------------------------------------
-    def search(self, sweep_flags: bool = False, keep_all_disagg: bool = False,
-               generate_launch: bool = True) -> SearchReport:
-        """Run the configuration search and return a SearchReport."""
+    def search_iter(self, sweep_flags: bool = False,
+                    keep_all_disagg: bool = False,
+                    policies: Sequence[Policy] = ()) -> "StreamingSearch":
+        """Start an incremental search: a :class:`StreamingSearch` that
+        yields one :class:`~repro.api.policies.SearchEvent` per priced
+        projection, maintains the Pareto frontier online, consults
+        ``policies`` after every yield, and materializes a
+        :class:`SearchReport` via ``.report()`` whenever iteration stops
+        (drained, policy-stopped, or abandoned).
+        """
         w = self.workload()
         runner = TaskRunner(w, session=self._session_for(w))
-        result = runner.run(sweep_flags=sweep_flags,
-                            keep_all_disagg=keep_all_disagg)
-        launch = (generate(w, result.best)
-                  if generate_launch and result.best is not None else None)
-        return SearchReport.from_result(w, result, launch=launch)
+        return StreamingSearch(workload=w, runner=runner, db=self.database(),
+                               sweep_flags=sweep_flags,
+                               keep_all_disagg=keep_all_disagg,
+                               policies=policies)
+
+    def search(self, sweep_flags: bool = False, keep_all_disagg: bool = False,
+               generate_launch: bool = True,
+               policies: Sequence[Policy] = ()) -> SearchReport:
+        """Run the configuration search and return a SearchReport.
+
+        Implemented as "drain :meth:`search_iter`": batch and streaming
+        search share one pricing code path, they only differ in whether a
+        policy stops the iterator early.  ``policies`` apply here too —
+        ``search(policies=[stop_after_n_valid(3)])`` returns the partial
+        report (``early_exit`` set) without the caller driving the loop.
+        """
+        stream = self.search_iter(sweep_flags=sweep_flags,
+                                  keep_all_disagg=keep_all_disagg,
+                                  policies=policies)
+        for _event in stream:
+            pass
+        return stream.report(generate_launch=generate_launch)
 
     def compare(self, variants: Sequence[Dict],
                 labels: Optional[Sequence[str]] = None,
@@ -273,6 +300,122 @@ def _variant_label(overrides: Dict) -> str:
     return " ".join(f"{k}={v}" for k, v in overrides.items()) or "base"
 
 
+class StreamingSearch:
+    """Incremental search in flight: iterate to price candidates one at a
+    time, stop whenever you (or a policy) want, then ask for the report.
+
+    Yields :class:`~repro.api.policies.SearchEvent` objects.  State
+    accumulated while iterating — ``projections``, the online Pareto
+    ``frontier``, ``best``, ``n_valid``, ``early_exit`` — is readable at
+    any point, so interactive consumers can render progress without
+    waiting for the sweep to finish.  ``report()`` packages whatever has
+    been priced so far into a schema-v2 :class:`SearchReport` carrying
+    the PerfDatabase fingerprint; after a full drain that report is
+    identical (modulo wall-clock timing) to ``Configurator.search()``'s.
+    """
+
+    def __init__(self, workload: WorkloadDescriptor, runner: TaskRunner,
+                 db: PerfDatabase, sweep_flags: bool, keep_all_disagg: bool,
+                 policies: Sequence[Policy] = ()):
+        self.workload = workload
+        self.projections: List[Projection] = []
+        self.n_valid = 0
+        self.early_exit: Optional[Dict] = None
+        self.elapsed_s = 0.0
+        self._db = db
+        self._policies = tuple(policies)
+        self._progress = SearchProgress()
+        self._inner = runner.iter_search(sweep_flags, keep_all_disagg,
+                                         progress=self._progress)
+        self._acc = pareto.FrontierAccumulator()
+        self._best: Optional[Projection] = None
+        self._t0 = time.perf_counter()
+        self._exhausted = False
+
+    # -- live views ----------------------------------------------------------
+    @property
+    def best(self) -> Optional[Projection]:
+        return self._best
+
+    @property
+    def frontier(self) -> List[Projection]:
+        return self._acc.frontier()
+
+    @property
+    def n_priced(self) -> int:
+        return self._progress.n_evaluated
+
+    # -- iteration -----------------------------------------------------------
+    def __iter__(self) -> "StreamingSearch":
+        return self
+
+    def __next__(self) -> SearchEvent:
+        if self._exhausted:
+            raise StopIteration
+        try:
+            cand, p = next(self._inner)
+        except StopIteration:
+            self._finish()
+            raise
+        self.projections.append(p)
+        self._acc.add(p)
+        meets = p.meets(self.workload.sla)
+        if meets:
+            self.n_valid += 1
+            if self._best is None or (p.tokens_per_s_per_chip
+                                      > self._best.tokens_per_s_per_chip):
+                self._best = p
+        self.elapsed_s = time.perf_counter() - self._t0
+        event = SearchEvent(
+            candidate=cand, projection=p, index=len(self.projections) - 1,
+            n_priced=self._progress.n_evaluated, n_valid=self.n_valid,
+            elapsed_s=self.elapsed_s, frontier_size=len(self._acc),
+            meets_sla=meets)
+        for policy in self._policies:
+            if policy(event):
+                self.early_exit = {
+                    "reason": getattr(policy, "reason",
+                                      getattr(policy, "__name__", "policy")),
+                    "n_yielded": len(self.projections),
+                    "n_priced": self._progress.n_evaluated,
+                }
+                self._finish()
+                break
+        return event
+
+    def close(self) -> None:
+        """Stop the stream explicitly (idempotent).  Breaking out of a
+        ``for`` loop leaves the underlying generator open until GC; call
+        this to release it immediately and freeze ``elapsed_s``."""
+        if not self._exhausted:
+            self._finish()
+
+    def _finish(self) -> None:
+        self._exhausted = True
+        self.elapsed_s = time.perf_counter() - self._t0
+        self._inner.close()   # release the generator (skips remaining pricing)
+
+    # -- terminal artifacts ---------------------------------------------------
+    def result(self) -> SearchResult:
+        """Core ``SearchResult`` over everything priced so far."""
+        n = self._progress.n_evaluated
+        return SearchResult(
+            projections=list(self.projections), best=self._best,
+            frontier=self._acc.frontier(), n_candidates=n,
+            elapsed_s=self.elapsed_s,
+            per_candidate_ms=1e3 * self.elapsed_s / max(n, 1),
+            disagg_best=self._progress.disagg_best)
+
+    def report(self, generate_launch: bool = True) -> SearchReport:
+        """Schema-v2 SearchReport over everything priced so far."""
+        result = self.result()
+        launch = (generate(self.workload, result.best)
+                  if generate_launch and result.best is not None else None)
+        return SearchReport.from_result(
+            self.workload, result, launch=launch,
+            fingerprint=self._db.fingerprint(), early_exit=self.early_exit)
+
+
 @dataclasses.dataclass
 class Comparison:
     """Results of a ``Configurator.compare`` sweep."""
@@ -296,8 +439,7 @@ class Comparison:
         return "\n".join(lines)
 
     def to_dict(self) -> Dict:
-        return {"schema_version": self.reports[0].schema_version
-                if self.reports else 1,
+        return {"schema_version": SCHEMA_VERSION,
                 "scenarios": [{"label": l, "report": r.to_dict()}
                               for l, r in zip(self.labels, self.reports)]}
 

@@ -1,0 +1,75 @@
+"""Early-exit policies and progress events for streaming search.
+
+``Configurator.search_iter`` yields one :class:`SearchEvent` per priced
+projection and consults its policies after every yield; the first policy
+that returns True stops the stream (remaining candidates are never
+priced).  A policy is any callable ``SearchEvent -> bool`` — the
+factories here cover the common cases and stamp a ``reason`` attribute
+the terminal report records under ``early_exit``.
+
+    stream = cfg.search_iter(policies=[stop_after_n_valid(3)])
+    for event in stream:
+        ui.update(event.projection, event.frontier_size)
+    report = stream.report()          # report.early_exit names the policy
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from repro.core.config import CandidateConfig, Projection
+
+
+@dataclasses.dataclass
+class SearchEvent:
+    """One priced projection, with running search state attached."""
+    candidate: CandidateConfig
+    projection: Projection
+    index: int            # 0-based position in the yield stream
+    n_priced: int         # candidates evaluated so far (incl. invalid/OOM)
+    n_valid: int          # SLA-valid projections seen so far
+    elapsed_s: float
+    frontier_size: int    # current online Pareto-frontier size
+    meets_sla: bool
+
+
+#: A policy inspects the latest event and returns True to stop the search.
+Policy = Callable[[SearchEvent], bool]
+
+
+def _named(fn: Policy, reason: str) -> Policy:
+    fn.reason = reason  # type: ignore[attr-defined]
+    fn.__name__ = reason
+    return fn
+
+
+def stop_after_n_valid(n: int) -> Policy:
+    """Stop once ``n`` SLA-valid projections have been yielded."""
+    if n < 1:
+        raise ValueError(f"stop_after_n_valid needs n >= 1, got {n}")
+    return _named(lambda ev: ev.n_valid >= n, f"stop_after_n_valid({n})")
+
+
+def deadline_s(seconds: float) -> Policy:
+    """Stop once the search has run for ``seconds`` (checked per yield)."""
+    if seconds <= 0:
+        raise ValueError(f"deadline_s needs a positive deadline, got {seconds}")
+    t0: Optional[float] = None
+
+    def policy(ev: SearchEvent) -> bool:
+        # anchor on each stream's first event so a pre-built (or reused)
+        # policy object never counts time outside the current search
+        nonlocal t0
+        if t0 is None or ev.index == 0:
+            t0 = time.perf_counter() - ev.elapsed_s
+        return time.perf_counter() - t0 >= seconds
+
+    return _named(policy, f"deadline_s({seconds})")
+
+
+def callback(fn: Callable[[SearchEvent], object]) -> Policy:
+    """Progress hook: ``fn`` sees every event; a truthy return stops the
+    search, ``None``/falsy lets it continue."""
+    name = getattr(fn, "__name__", "<fn>")
+    return _named(lambda ev: bool(fn(ev)), f"callback({name})")

@@ -7,6 +7,15 @@ artifact travel together.  ``SearchReport.from_json(r.to_json())``
 reconstructs an equal report, making the report (not ad-hoc
 ``Projection.config`` dicts) the interchange format between the CLI,
 benchmarks, dashboards, and downstream tooling.
+
+Schema v2 makes the report an auditable deployment artifact: a
+``database`` section fingerprints the PerfDatabase that priced the search
+(platform/backend plus a digest over the collected latency grids), a
+``memory`` section surfaces every candidate's per-chip memory footprint,
+and ``search.early_exit`` records whether a streaming policy stopped the
+sweep before the full space was priced.  ``from_json`` still accepts v1
+payloads and migrates them losslessly (the new sections default to
+empty/None).
 """
 from __future__ import annotations
 
@@ -20,7 +29,10 @@ from repro.core.config import (ClusterSpec, DisaggConfig, Projection, SLA,
 from repro.core.generator import LaunchConfig
 
 #: Bump on any backwards-incompatible change to the JSON layout.
-SCHEMA_VERSION = 1
+#: v1: initial layout.  v2: + database fingerprint, memory footprints,
+#: early-exit record.  ``from_json`` reads every version listed here.
+SCHEMA_VERSION = 2
+SUPPORTED_SCHEMA_VERSIONS = (1, 2)
 
 
 def workload_to_dict(w: WorkloadDescriptor) -> Dict:
@@ -71,13 +83,17 @@ class SearchReport:
     disagg: Optional[Dict] = None          # plain-dict (x)P(y)D solution
     launch: Optional[LaunchConfig] = None  # resolved artifact for `best`
     speculative: Optional[Dict] = None     # draft/gamma projection, if run
+    fingerprint: Optional[Dict] = None     # PerfDatabase identity (v2)
+    early_exit: Optional[Dict] = None      # streaming policy stop record (v2)
     schema_version: int = SCHEMA_VERSION
 
     # -- construction --------------------------------------------------------
     @classmethod
     def from_result(cls, workload: WorkloadDescriptor, result,
                     launch: Optional[LaunchConfig] = None,
-                    speculative: Optional[Dict] = None) -> "SearchReport":
+                    speculative: Optional[Dict] = None,
+                    fingerprint: Optional[Dict] = None,
+                    early_exit: Optional[Dict] = None) -> "SearchReport":
         """Build from a core ``SearchResult`` (``TaskRunner.run`` output)."""
         idx = {id(p): i for i, p in enumerate(result.projections)}
         return cls(
@@ -90,7 +106,8 @@ class SearchReport:
             per_candidate_ms=result.per_candidate_ms,
             disagg=(_disagg_to_dict(result.disagg_best)
                     if result.disagg_best is not None else None),
-            launch=launch, speculative=speculative)
+            launch=launch, speculative=speculative,
+            fingerprint=fingerprint, early_exit=early_exit)
 
     # -- views ---------------------------------------------------------------
     @property
@@ -119,13 +136,23 @@ class SearchReport:
         return "\n".join(lines)
 
     # -- serialization -------------------------------------------------------
+    def memory_footprints(self) -> Dict:
+        """Per-candidate memory view (the v2 ``memory`` section): one
+        bytes-per-chip entry per projection, plus the peak."""
+        per = [p.mem_bytes_per_chip for p in self.projections]
+        return {"per_candidate_bytes_per_chip": per,
+                "peak_bytes_per_chip": max(per, default=0.0)}
+
     def to_dict(self) -> Dict:
         return {
-            "schema_version": self.schema_version,
+            "schema_version": SCHEMA_VERSION,
             "workload": workload_to_dict(self.workload),
             "search": {"n_candidates": self.n_candidates,
                        "elapsed_s": self.elapsed_s,
-                       "per_candidate_ms": self.per_candidate_ms},
+                       "per_candidate_ms": self.per_candidate_ms,
+                       "early_exit": self.early_exit},
+            "database": self.fingerprint,
+            "memory": self.memory_footprints(),
             "projections": [dataclasses.asdict(p) for p in self.projections],
             "frontier": list(self.frontier_indices),
             "best": self.best_index,
@@ -141,17 +168,21 @@ class SearchReport:
     @classmethod
     def from_dict(cls, d: Dict) -> "SearchReport":
         version = d.get("schema_version")
-        if version != SCHEMA_VERSION:
+        if version not in SUPPORTED_SCHEMA_VERSIONS:
             raise ValueError(
                 f"unsupported SearchReport schema_version {version!r}; "
-                f"this build reads version {SCHEMA_VERSION}")
+                f"this build reads versions "
+                f"{', '.join(map(str, SUPPORTED_SCHEMA_VERSIONS))}")
         try:
-            return cls._from_dict_v1(d, version)
+            return cls._from_dict_any(d, version)
         except (KeyError, TypeError) as e:
             raise ValueError(f"malformed SearchReport: {e}") from e
 
     @classmethod
-    def _from_dict_v1(cls, d: Dict, version: int) -> "SearchReport":
+    def _from_dict_any(cls, d: Dict, version: int) -> "SearchReport":
+        # v1 payloads lack the database/memory sections and the early_exit
+        # record; everything they do carry maps 1:1, so migration is just
+        # "new fields default to None" and the object re-serializes as v2.
         return cls(
             workload=workload_from_dict(d["workload"]),
             projections=[Projection(**p) for p in d["projections"]],
@@ -164,7 +195,10 @@ class SearchReport:
             launch=(LaunchConfig(**d["launch"])
                     if d.get("launch") is not None else None),
             speculative=d.get("speculative"),
-            schema_version=version)
+            fingerprint=d.get("database") if version >= 2 else None,
+            early_exit=(d["search"].get("early_exit")
+                        if version >= 2 else None),
+            schema_version=SCHEMA_VERSION)
 
     @classmethod
     def from_json(cls, text: str) -> "SearchReport":

@@ -14,6 +14,13 @@ Every subcommand accepts ``--json`` to emit machine-readable output
 with human chatter kept off it.  Exit codes are stable: 0 success, 1 no
 configuration satisfies the SLA, 2 usage or validation error.
 
+Streaming: ``search --stream`` rides ``Configurator.search_iter`` and
+emits one JSON-lines record per priced projection plus a terminal
+``{"type": "summary", ...}`` record; ``--first-n N`` stops the search as
+soon as N SLA-valid configurations are found (works with or without
+``--stream``, exit codes unchanged).  A consumer that closes the pipe
+early (``head``, an interactive UI) shuts the search down cleanly.
+
 The pre-subcommand flat-flag invocation (``python -m repro.core.cli
 --model ... --isl ...``) still works through a deprecation shim and prints
 byte-identical results to the ``search`` subcommand.
@@ -22,9 +29,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
-from repro.api import Comparison, Configurator, SearchReport
+from repro.api import (Comparison, Configurator, SearchReport,
+                       stop_after_n_valid)
 from repro.configs import list_archs
 from repro.core.backends.base import all_backends, backend_capabilities
 from repro.core.generator import generate
@@ -108,9 +117,12 @@ def _print_search_report(report: SearchReport, args) -> int:
     return EXIT_OK
 
 
-def _run_search(args) -> "tuple[SearchReport, Configurator]":
-    cfg = _configurator(args)
-    report = cfg.search()
+def _search_policies(args) -> list:
+    first_n = getattr(args, "first_n", 0)
+    return [stop_after_n_valid(first_n)] if first_n else []
+
+
+def _attach_speculative(report: SearchReport, cfg: Configurator, args) -> None:
     draft = getattr(args, "draft_model", "")
     if draft and report.best is not None:
         best, _ = cfg.speculative(draft, acceptance=args.acceptance,
@@ -121,10 +133,92 @@ def _run_search(args) -> "tuple[SearchReport, Configurator]":
             "tokens_per_s_user": best.tokens_per_s_user,
             "speedup_vs_autoregressive": best.speedup_vs_autoregressive,
         }
+
+
+def _run_search(args) -> "tuple[SearchReport, Configurator]":
+    cfg = _configurator(args)
+    # --first-n rides the same policy surface library users get: the
+    # iterator stops early and the report records why under early_exit
+    report = cfg.search(policies=_search_policies(args))
+    _attach_speculative(report, cfg, args)
     return report, cfg
 
 
+def _silence_broken_pipe() -> None:
+    """The stream consumer closed the pipe (head, early-exiting UI): point
+    stdout at devnull so the interpreter's exit flush cannot raise again.
+    An early-exiting consumer is the intended use, so callers exit 0."""
+    try:
+        devnull = os.open(os.devnull, os.O_WRONLY)
+        os.dup2(devnull, sys.stdout.fileno())
+    except (OSError, ValueError):
+        pass   # stdout has no real fd (captured stream): nothing to salvage
+
+
+def _stream_search(args) -> int:
+    """``search --stream``: JSON-lines progress records + summary record.
+
+    Honors the same post-search flags as the batch path (--draft-model,
+    --save-launch, --save-report); a consumer that closes the pipe early
+    still gets the report/launch files written before the clean exit.
+    """
+    cfg = _configurator(args)
+    stream = cfg.search_iter(policies=_search_policies(args))
+    broken_pipe = False
+    try:
+        for ev in stream:
+            p = ev.projection
+            print(json.dumps({
+                "type": "candidate", "index": ev.index, "mode": p.mode,
+                "describe": p.config.get("describe", ""),
+                "tokens_per_s_per_chip": p.tokens_per_s_per_chip,
+                "tokens_per_s_user": p.tokens_per_s_user,
+                "ttft_ms": p.ttft_ms,
+                "mem_bytes_per_chip": p.mem_bytes_per_chip,
+                "meets_sla": ev.meets_sla, "n_priced": ev.n_priced,
+                "n_valid": ev.n_valid, "frontier_size": ev.frontier_size,
+            }), flush=True)
+    except BrokenPipeError:
+        broken_pipe = True
+        stream.close()
+        _silence_broken_pipe()
+    report = stream.report(generate_launch=bool(args.save_launch))
+    _attach_speculative(report, cfg, args)
+    if not broken_pipe:
+        best = report.best
+        try:
+            print(json.dumps({
+                "type": "summary", "schema_version": report.schema_version,
+                "n_candidates": report.n_candidates,
+                "n_valid": stream.n_valid,
+                "elapsed_s": report.elapsed_s,
+                "early_exit": report.early_exit,
+                "database": report.fingerprint,
+                "speculative": report.speculative,
+                "best": (None if best is None else {
+                    "mode": best.mode,
+                    "describe": best.config.get("describe", ""),
+                    "tokens_per_s_per_chip": best.tokens_per_s_per_chip,
+                    "tokens_per_s_user": best.tokens_per_s_user,
+                    "ttft_ms": best.ttft_ms,
+                }),
+            }), flush=True)
+        except BrokenPipeError:
+            broken_pipe = True
+            _silence_broken_pipe()
+    if args.save_report:
+        report.save(args.save_report)
+    if args.save_launch and report.launch is not None:
+        with open(args.save_launch, "w") as f:
+            f.write(report.launch.to_json())
+    if broken_pipe:
+        return EXIT_OK
+    return EXIT_OK if report.best is not None else EXIT_NO_CONFIG
+
+
 def cmd_search(args) -> int:
+    if args.stream:
+        return _stream_search(args)
     report, _ = _run_search(args)
     if args.save_report:
         report.save(args.save_report)
@@ -249,6 +343,12 @@ def _build_parser() -> argparse.ArgumentParser:
     sp.add_argument("--acceptance", type=float, default=0.8)
     sp.add_argument("--json", action="store_true",
                     help="print the SearchReport JSON on stdout")
+    sp.add_argument("--stream", action="store_true",
+                    help="emit JSON-lines progress records as candidates "
+                         "are priced, then a terminal summary record")
+    sp.add_argument("--first-n", type=int, default=0, metavar="N",
+                    help="stop as soon as N SLA-valid configurations are "
+                         "found (early exit; prices fewer candidates)")
     sp.set_defaults(func=cmd_search)
 
     gp = sub.add_parser("generate", help="emit the launch artifact")

@@ -1,8 +1,16 @@
 """Pareto analyzer (§4.1): filter SLA-valid projections, compute the
-throughput-vs-speed Pareto frontier, rank the winners."""
+throughput-vs-speed Pareto frontier, rank the winners.
+
+Two implementations of the same frontier: batch :func:`frontier` (sort the
+full list once) and the online :class:`FrontierAccumulator` (maintain the
+non-dominated set as projections stream in, O(frontier) per insert).  The
+streaming search path uses the accumulator; the batch function stays as the
+independent oracle the property tests compare it against.
+"""
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+import bisect
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.config import Projection, SLA
 
@@ -23,6 +31,67 @@ def frontier(projs: Sequence[Projection]) -> List[Projection]:
             out.append(p)
             best_thru = p.tokens_per_s_per_chip
     return out
+
+
+class FrontierAccumulator:
+    """Online Pareto frontier over (tokens/s/user ↑, tokens/s/chip ↑).
+
+    Invariant: the internal list is sorted by speed strictly descending,
+    which forces per-chip throughput strictly ascending.  ``add`` locates
+    the insertion point by bisection, rejects dominated/duplicate points,
+    and evicts the contiguous run of points the newcomer dominates — so an
+    insert costs O(log f) search plus O(evicted) removals, never a re-sort
+    of everything seen so far.  Fed any permutation of a projection list,
+    the final set equals batch :func:`frontier` of that list (first-seen
+    instance wins among (speed, throughput) duplicates, matching the
+    stable batch sort).
+    """
+
+    def __init__(self, projs: Optional[Iterable[Projection]] = None):
+        self._neg_speeds: List[float] = []    # negated ⇒ ascending for bisect
+        self._points: List[Projection] = []   # speed desc, throughput asc
+        for p in projs or ():
+            self.add(p)
+
+    def __len__(self) -> int:
+        return len(self._points)
+
+    def add(self, p: Projection) -> bool:
+        """Insert one projection; True iff it joined the frontier."""
+        speed, thru = p.tokens_per_s_user, p.tokens_per_s_per_chip
+        i = bisect.bisect_left(self._neg_speeds, -speed)
+        # points[:i] are strictly faster; the slowest of them carries the
+        # highest throughput, so it alone decides domination from the left
+        if i > 0 and self._points[i - 1].tokens_per_s_per_chip >= thru:
+            return False
+        if i < len(self._points) \
+                and self._points[i].tokens_per_s_user == speed:
+            if self._points[i].tokens_per_s_per_chip >= thru:
+                return False          # dominated at equal speed (or duplicate)
+            del self._neg_speeds[i], self._points[i]
+        j = i                         # evict the run p now dominates
+        while j < len(self._points) \
+                and self._points[j].tokens_per_s_per_chip <= thru:
+            j += 1
+        del self._neg_speeds[i:j], self._points[i:j]
+        self._neg_speeds.insert(i, -speed)
+        self._points.insert(i, p)
+        return True
+
+    def frontier(self) -> List[Projection]:
+        """Current non-dominated set, sorted by speed descending (the same
+        order batch :func:`frontier` emits)."""
+        return list(self._points)
+
+    def dominates(self, p: Projection) -> bool:
+        """Would ``add(p)`` be rejected? (Read-only domination probe.)"""
+        speed, thru = p.tokens_per_s_user, p.tokens_per_s_per_chip
+        i = bisect.bisect_left(self._neg_speeds, -speed)
+        if i > 0 and self._points[i - 1].tokens_per_s_per_chip >= thru:
+            return True
+        return (i < len(self._points)
+                and self._points[i].tokens_per_s_user == speed
+                and self._points[i].tokens_per_s_per_chip >= thru)
 
 
 def top_k(projs: Sequence[Projection], sla: SLA, k: int = 5) -> List[Projection]:

@@ -18,6 +18,7 @@ a real file (src/repro/core/data/<platform>_<backend>.json).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import math
 import os
@@ -102,6 +103,8 @@ class DatabaseStats:
     sol_fallbacks: int = 0
     grids_built: int = 0
     seq_hits: int = 0
+    seq_queries: int = 0   # every sequence_latency call (memoized or not) —
+                           # the probe streaming-search tests count pricing by
 
 
 class PerfDatabase:
@@ -248,6 +251,7 @@ class PerfDatabase:
         searches over one database), so a warm database answers them
         without re-walking the operator list.
         """
+        self.stats.seq_queries += 1
         key: Optional[Tuple] = None
         try:
             key = tuple(op_list)
@@ -268,6 +272,29 @@ class PerfDatabase:
         if key is not None and len(self._seq_memo) < 500_000:
             self._seq_memo[key] = total
         return total
+
+    # -- identity --------------------------------------------------------------
+    def fingerprint(self) -> Dict:
+        """Stable identity of this database's contents: platform/backend
+        plus a digest over every grid's axes and latency table.
+
+        Grids are built deterministically (eager GEMM/comm at
+        construction, shape-keyed lazy grids on first use), so two
+        databases that served the same workload on the same
+        (platform, backend) fingerprint identically across runs, while
+        any change to platform, backend, or collected latencies changes
+        the digest — the auditability hook SearchReport v2 carries.
+        """
+        h = hashlib.sha256()
+        for key in sorted(self._grids, key=repr):
+            g = self._grids[key]
+            h.update(repr(key).encode())
+            for a in g.axes:
+                h.update(np.ascontiguousarray(a).tobytes())
+            h.update(np.ascontiguousarray(g.table).tobytes())
+        return {"platform": self.platform.name, "backend": self.backend,
+                "n_grids": len(self._grids),
+                "grid_hash": h.hexdigest()[:16]}
 
     # -- persistence ----------------------------------------------------------
     def save(self, path: Optional[str] = None) -> str:

@@ -1,13 +1,21 @@
 """TaskRunner (§4.1): builds the candidate search space from a workload
 descriptor, drives InferenceSession over every candidate, hands the results
 to the Pareto analyzer, and reports search timing (Table 1's metric).
+
+Candidate enumeration and pricing are generators end-to-end:
+:meth:`TaskRunner.iter_search` lazily yields ``(CandidateConfig,
+Projection)`` pairs as each candidate is priced against the (memoized)
+PerfDatabase, and :meth:`TaskRunner.run` is just "drain the iterator into
+a SearchResult" — batch and streaming search share one pricing code path,
+so an early-exit consumer prices strictly fewer candidates than a full
+sweep.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.core import modes, pareto
 from repro.core.config import (CandidateConfig, DisaggConfig,
@@ -18,6 +26,18 @@ from repro.core.session import InferenceSession
 
 BATCH_SWEEP = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 MAX_TOKENS_SWEEP = (4096, 8192, 16384)
+
+
+@dataclasses.dataclass
+class SearchProgress:
+    """Mutable side-channel a streaming consumer shares with
+    :meth:`TaskRunner.iter_search` — candidates priced so far (including
+    OOM/invalid ones that yield nothing) and the disaggregated solution
+    once that phase has run."""
+    n_evaluated: int = 0
+    n_yielded: int = 0
+    disagg_best: Optional[modes.DisaggBest] = None
+    disagg_done: bool = False
 
 
 @dataclasses.dataclass
@@ -60,11 +80,15 @@ class TaskRunner:
                                ) -> List[ParallelismConfig]:
         cluster = self.w.cluster
         limit = max_chips or cluster.n_chips
+        # a pipeline stage needs at least one layer: never emit pp beyond
+        # min(8, num_layers), regardless of which cap the doubling loop
+        # would have tripped first on shallow models
+        max_pp = min(8, max(self.cfg.num_layers, 1))
         out = []
         tp = 1
         while tp <= limit:
             pp = 1
-            while tp * pp <= limit:
+            while tp * pp <= limit and pp <= max_pp:
                 eps = [1]
                 if self.cfg.num_experts:
                     eps = [e for e in (1, 2, 4, 8, 16, 32, 64)
@@ -73,60 +97,96 @@ class TaskRunner:
                 for ep in eps:
                     out.append(ParallelismConfig(tp=tp, pp=pp, ep=ep))
                 pp *= 2
-                if pp > 8 or pp > self.cfg.num_layers:
-                    break
             tp *= 2
         return out
 
-    def candidates(self, sweep_flags: bool = False) -> List[CandidateConfig]:
-        out = []
+    def iter_candidates(self, sweep_flags: bool = False
+                        ) -> Iterator[CandidateConfig]:
+        """Lazily enumerate the (parallelism × batch × flags) grid."""
         toks = MAX_TOKENS_SWEEP if sweep_flags else (
             self.session.backend.default_max_num_tokens,)
         for par, b, mt in itertools.product(
                 self.parallelism_candidates(), BATCH_SWEEP, toks):
-            out.append(CandidateConfig(
+            yield CandidateConfig(
                 parallel=par, batch_size=b,
-                flags=RuntimeFlags(max_num_tokens=mt)))
-        return out
+                flags=RuntimeFlags(max_num_tokens=mt))
+
+    def candidates(self, sweep_flags: bool = False) -> List[CandidateConfig]:
+        return list(self.iter_candidates(sweep_flags))
 
     # ------------------------------------------------------------------
-    def run(self, sweep_flags: bool = False,
-            keep_all_disagg: bool = False) -> SearchResult:
-        t0 = time.perf_counter()
-        projs: List[Projection] = []
-        cands = self.candidates(sweep_flags)
-        n_eval = 0
+    def iter_search(self, sweep_flags: bool = False,
+                    keep_all_disagg: bool = False,
+                    progress: Optional[SearchProgress] = None
+                    ) -> Iterator[Tuple[CandidateConfig, Projection]]:
+        """Lazily price candidates, yielding ``(candidate, projection)``
+        pairs as each one resolves against the PerfDatabase.
+
+        Candidates that do not fit memory (or otherwise project to
+        nothing) are counted in ``progress.n_evaluated`` but yield no
+        pair.  Disaggregated composites are matched after the
+        per-candidate modes; each disagg projection is yielded with its
+        decode-pool candidate (the composite itself lives in
+        ``projection.config``), best composite first.  Abandoning the
+        iterator early (early-exit policy, ``break`` in a UI loop) skips
+        all remaining pricing work.
+        """
+        progress = progress if progress is not None else SearchProgress()
 
         if "static" in self.w.modes or "aggregated" in self.w.modes:
-            for cand in cands:
+            for cand in self.iter_candidates(sweep_flags):
                 if "static" in self.w.modes:
                     p = self.session.evaluate_static(cand)
-                    n_eval += 1
+                    progress.n_evaluated += 1
                     if p:
-                        projs.append(p)
+                        progress.n_yielded += 1
+                        yield cand, p
                 if "aggregated" in self.w.modes:
                     p = self.session.evaluate_aggregated(cand)
-                    n_eval += 1
+                    progress.n_evaluated += 1
                     if p:
-                        projs.append(p)
+                        progress.n_yielded += 1
+                        yield cand, p
 
-        disagg_best = None
         if "disaggregated" in self.w.modes:
             disagg_best, disagg_all = self._run_disagg(keep_all_disagg)
-            n_eval += len(disagg_all) if disagg_all else 0
+            progress.n_evaluated += len(disagg_all) if disagg_all else 0
+            progress.disagg_best = disagg_best
+            progress.disagg_done = True
             if disagg_best:
-                projs.append(self._disagg_projection(disagg_best))
+                progress.n_yielded += 1
+                yield disagg_best.decode.config, \
+                    self._disagg_projection(disagg_best)
             for d in disagg_all or []:
                 if d is not disagg_best:
-                    projs.append(self._disagg_projection(d))
+                    progress.n_yielded += 1
+                    yield d.decode.config, self._disagg_projection(d)
+
+    def run(self, sweep_flags: bool = False,
+            keep_all_disagg: bool = False) -> SearchResult:
+        """Drain :meth:`iter_search` into a batch SearchResult (single
+        pricing code path; the frontier is accumulated online)."""
+        t0 = time.perf_counter()
+        progress = SearchProgress()
+        projs: List[Projection] = []
+        acc = pareto.FrontierAccumulator()
+        best: Optional[Projection] = None
+        for _cand, p in self.iter_search(sweep_flags, keep_all_disagg,
+                                         progress=progress):
+            projs.append(p)
+            acc.add(p)
+            if p.meets(self.w.sla) and (
+                    best is None
+                    or p.tokens_per_s_per_chip > best.tokens_per_s_per_chip):
+                best = p
 
         elapsed = time.perf_counter() - t0
-        best = pareto.best(projs, self.w.sla)
+        n_eval = progress.n_evaluated
         return SearchResult(
-            projections=projs, best=best, frontier=pareto.frontier(projs),
+            projections=projs, best=best, frontier=acc.frontier(),
             n_candidates=n_eval, elapsed_s=elapsed,
             per_candidate_ms=1e3 * elapsed / max(n_eval, 1),
-            disagg_best=disagg_best)
+            disagg_best=progress.disagg_best)
 
     # ------------------------------------------------------------------
     def _run_disagg(self, keep_all: bool):

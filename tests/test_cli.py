@@ -1,9 +1,21 @@
-"""Configurator CLI (the paper's Fig. 2 workflow as one command)."""
+"""Configurator CLI (the paper's Fig. 2 workflow as one command), plus
+the streaming surface: `search --stream` JSON-lines, `--first-n` early
+exit, and exit-code stability."""
 import json
+import re
 
 import pytest
 
 from repro.core import cli
+
+_STREAM_ARGS = ["--model", "llama3.1-8b", "--isl", "256", "--osl", "64",
+                "--ttft", "2000", "--min-speed", "10", "--chips", "8",
+                "--dtype", "fp8", "--modes", "aggregated"]
+
+
+def _records(capsys):
+    lines = capsys.readouterr().out.strip().splitlines()
+    return [json.loads(line) for line in lines if line.strip()]
 
 
 def test_cli_end_to_end(tmp_path, capsys):
@@ -26,3 +38,118 @@ def test_cli_unsatisfiable_sla(capsys):
                    "--dtype", "fp8"])
     assert rc == 1
     assert "no configuration satisfies" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# search --stream: JSON-lines progress + terminal summary record
+# ---------------------------------------------------------------------------
+
+def test_cli_stream_emits_parseable_jsonl_with_summary(capsys):
+    rc = cli.main(["search"] + _STREAM_ARGS + ["--stream"])
+    records = _records(capsys)
+    assert rc == 0
+    assert len(records) > 1
+    candidates, summary = records[:-1], records[-1]
+    assert summary["type"] == "summary"
+    assert all(r["type"] == "candidate" for r in candidates)
+    # candidate records carry the streaming progress counters
+    for r in candidates:
+        assert {"index", "mode", "tokens_per_s_per_chip", "meets_sla",
+                "n_priced", "frontier_size",
+                "mem_bytes_per_chip"} <= set(r)
+    assert [r["index"] for r in candidates] == list(range(len(candidates)))
+    priced = [r["n_priced"] for r in candidates]
+    assert priced == sorted(priced)
+    # terminal record summarizes the whole (non-early-exited) sweep
+    assert summary["early_exit"] is None
+    assert summary["n_candidates"] == priced[-1]
+    assert summary["best"] is not None
+    assert summary["schema_version"] == 2
+    assert summary["database"]["platform"] == "tpu_v5e"
+
+
+def test_cli_stream_first_n_early_exit(capsys):
+    rc = cli.main(["search"] + _STREAM_ARGS + ["--stream"])
+    full = _records(capsys)[-1]
+    assert rc == 0
+
+    rc = cli.main(["search"] + _STREAM_ARGS + ["--stream", "--first-n", "3"])
+    records = _records(capsys)
+    assert rc == 0                               # exit code preserved
+    summary = records[-1]
+    assert summary["type"] == "summary"
+    assert summary["n_valid"] == 3
+    assert summary["early_exit"]["reason"] == "stop_after_n_valid(3)"
+    assert sum(r["meets_sla"] for r in records[:-1]) == 3
+    # strictly fewer candidates priced than the full sweep
+    assert summary["n_candidates"] < full["n_candidates"]
+
+
+def test_cli_first_n_without_stream_prints_report_and_early_exit(capsys):
+    rc = cli.main(["search"] + _STREAM_ARGS + ["--first-n", "2", "--json"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    report = json.loads(out)
+    assert report["search"]["early_exit"]["reason"] == "stop_after_n_valid(2)"
+    assert report["best"] is not None
+
+
+# ---------------------------------------------------------------------------
+# exit codes 0/1/2 are preserved under --first-n / --stream
+# ---------------------------------------------------------------------------
+
+_IMPOSSIBLE = ["--model", "llama3.1-8b", "--isl", "2048", "--osl", "128",
+               "--ttft", "1", "--min-speed", "100000", "--chips", "8",
+               "--dtype", "fp8", "--modes", "aggregated"]
+
+
+def test_cli_first_n_unsatisfiable_exits_1(capsys):
+    rc = cli.main(["search"] + _IMPOSSIBLE + ["--first-n", "3"])
+    assert rc == cli.EXIT_NO_CONFIG
+    capsys.readouterr()
+    rc = cli.main(["search"] + _IMPOSSIBLE + ["--stream", "--first-n", "3"])
+    records = _records(capsys)
+    assert rc == cli.EXIT_NO_CONFIG
+    assert records[-1]["type"] == "summary"
+    assert records[-1]["best"] is None
+    assert records[-1]["early_exit"] is None     # never found 3 valid
+
+
+def test_cli_first_n_validation_error_exits_2(capsys):
+    rc = cli.main(["search"] + _STREAM_ARGS + ["--first-n", "-1"])
+    assert rc == cli.EXIT_USAGE
+    assert "error" in capsys.readouterr().err
+
+
+def test_cli_stream_honors_save_flags(tmp_path, capsys):
+    rep_path = str(tmp_path / "report.json")
+    launch_path = str(tmp_path / "launch.json")
+    rc = cli.main(["search"] + _STREAM_ARGS
+                  + ["--stream", "--first-n", "2",
+                     "--save-report", rep_path, "--save-launch", launch_path])
+    assert rc == 0
+    capsys.readouterr()
+    saved = json.load(open(rep_path))
+    assert saved["schema_version"] == 2
+    assert saved["search"]["early_exit"]["reason"] == "stop_after_n_valid(2)"
+    launch = json.load(open(launch_path))
+    assert launch == saved["launch"]["raw"]
+
+
+# ---------------------------------------------------------------------------
+# legacy flat-flag shim: still byte-identical to the subcommand
+# ---------------------------------------------------------------------------
+
+def _normalize_timing(text):
+    return re.sub(r"in \d+\.\d+s \(\d+\.\d+ ms/config\)",
+                  "in <T>s (<T> ms/config)", text)
+
+
+def test_legacy_shim_matches_subcommand_with_new_flags(capsys):
+    rc_new = cli.main(["search"] + _STREAM_ARGS + ["--first-n", "2"])
+    out_new = capsys.readouterr().out
+    rc_old = cli.main(_STREAM_ARGS + ["--first-n", "2"])
+    captured = capsys.readouterr()
+    assert "deprecated" in captured.err
+    assert rc_old == rc_new == 0
+    assert _normalize_timing(captured.out) == _normalize_timing(out_new)

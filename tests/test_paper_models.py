@@ -10,6 +10,10 @@ import pytest
 
 from repro import models
 from repro.configs import get_config, list_archs
+from repro.core.config import ClusterSpec, SLA, WorkloadDescriptor
+from repro.core.perf_database import PerfDatabase
+from repro.core.session import InferenceSession
+from repro.core.task_runner import TaskRunner
 from repro.models import common as cm
 
 PAPER_MODELS = ["llama3.1-8b", "qwen3-32b", "qwen3-235b", "deepseek-v3"]
@@ -45,6 +49,44 @@ def test_deepseek_shared_expert_decode_consistency():
     _, cache = models.prefill(params, cfg, toks[:, :12], max_len=20)
     lg, _ = models.decode_step(params, cfg, toks[:, 12:13], cache)
     assert float(jnp.max(jnp.abs(lg - ref))) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# parallelism enumeration: pp is clamped to the model's depth
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sol_db():
+    # parallelism enumeration never queries latencies: the speed-of-light
+    # database skips grid collection and keeps this sweep instant
+    return PerfDatabase("tpu_v5e", "repro-jax", use_grid=False)
+
+
+def _workload(arch, chips=256):
+    return WorkloadDescriptor(model=arch, isl=128, osl=32, sla=SLA(),
+                              cluster=ClusterSpec(n_chips=chips),
+                              modes=("aggregated",))
+
+
+@pytest.mark.parametrize("arch", sorted(list_archs(include_perf_only=True)))
+def test_pp_never_exceeds_num_layers_across_config_zoo(arch, sol_db):
+    runner = TaskRunner(_workload(arch), db=sol_db)
+    cands = runner.parallelism_candidates()
+    assert cands
+    for par in cands:
+        assert par.pp <= min(8, runner.cfg.num_layers), \
+            f"{arch}: pp={par.pp} exceeds num_layers={runner.cfg.num_layers}"
+        assert par.tp * par.pp <= 256
+
+
+def test_pp_clamped_on_shallow_model(sol_db):
+    # a 3-layer variant: pp=4 would leave a pipeline stage with no layers,
+    # so enumeration must stop at pp=2 even though chips allow far more
+    w = _workload("llama3.1-8b", chips=64)
+    shallow = dataclasses.replace(get_config("llama3.1-8b"), num_layers=3)
+    runner = TaskRunner(w, session=InferenceSession(w, sol_db, cfg=shallow))
+    pps = {par.pp for par in runner.parallelism_candidates()}
+    assert pps == {1, 2}
 
 
 def test_shared_experts_change_output():

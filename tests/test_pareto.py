@@ -1,4 +1,6 @@
-"""Property tests for the Pareto analyzer."""
+"""Property tests for the Pareto analyzer (batch + online accumulator)."""
+import random
+
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # bare environment: deterministic fallback shim
@@ -58,3 +60,74 @@ def test_ttft_violations_filtered():
     projs = [_proj(10, 100, ttft=200.0), _proj(10, 1, ttft=10.0)]
     best = pareto.best(projs, sla)
     assert best is not None and best.ttft_ms == 10.0
+
+
+# ---------------------------------------------------------------------------
+# FrontierAccumulator: streaming/batch equivalence invariant
+# ---------------------------------------------------------------------------
+
+def _keys(projs):
+    return {(p.tokens_per_s_user, p.tokens_per_s_per_chip) for p in projs}
+
+
+@given(pts, st.integers(0, 2 ** 31))
+@settings(max_examples=100, deadline=None)
+def test_accumulator_any_permutation_matches_batch(points, seed):
+    """The streaming/batch equivalence invariant: feeding ANY permutation
+    of a projection list through the online accumulator yields the same
+    frontier set as batch `pareto.frontier` on the full list."""
+    projs = [_proj(s, t) for s, t in points]
+    order = list(projs)
+    random.Random(seed).shuffle(order)
+    acc = pareto.FrontierAccumulator()
+    for p in order:
+        acc.add(p)
+    assert _keys(acc.frontier()) == _keys(pareto.frontier(projs))
+    # structural invariant: speed strictly descending, thru strictly rising
+    front = acc.frontier()
+    for a, b in zip(front, front[1:]):
+        assert a.tokens_per_s_user > b.tokens_per_s_user
+        assert a.tokens_per_s_per_chip < b.tokens_per_s_per_chip
+
+
+@given(pts)
+@settings(max_examples=50, deadline=None)
+def test_accumulator_matches_batch_at_every_prefix(points):
+    """Mid-stream the accumulator equals batch over what has streamed so
+    far — what a progress UI reads while the search is still running."""
+    projs = [_proj(s, t) for s, t in points]
+    acc = pareto.FrontierAccumulator()
+    for i, p in enumerate(projs):
+        joined = acc.add(p)
+        assert _keys(acc.frontier()) == _keys(pareto.frontier(projs[:i + 1]))
+        # a point that joined is on the frontier; one that was rejected
+        # leaves its (speed, thru) key covered by some frontier point
+        key = (p.tokens_per_s_user, p.tokens_per_s_per_chip)
+        if joined:
+            assert key in _keys(acc.frontier())
+        else:
+            assert any(f.tokens_per_s_user >= key[0]
+                       and f.tokens_per_s_per_chip >= key[1]
+                       for f in acc.frontier())
+
+
+def test_accumulator_in_insertion_order_matches_batch_in_pricing_order():
+    # identical (speed, thru) duplicates: first-seen survives, like the
+    # stable batch sort; dominated points evict cleanly in the middle
+    a, b = _proj(10, 5), _proj(10, 5)
+    dominated = _proj(5, 8)
+    spoiler = _proj(7, 9)
+    acc = pareto.FrontierAccumulator([a, dominated])
+    assert not acc.add(b)               # duplicate of a: rejected
+    assert acc.frontier() == [a, dominated]
+    assert acc.dominates(b) and not acc.dominates(spoiler)
+    assert acc.add(spoiler)             # evicts `dominated` (5,8) ≤ (7,9)
+    assert acc.frontier() == [a, spoiler]
+    assert len(acc) == 2
+    assert pareto.frontier([a, dominated, b, spoiler]) == [a, spoiler]
+
+
+def test_accumulator_seeded_from_iterable():
+    projs = [_proj(s, t) for s, t in ((1, 10), (2, 8), (3, 6), (3, 7))]
+    acc = pareto.FrontierAccumulator(projs)
+    assert _keys(acc.frontier()) == _keys(pareto.frontier(projs))

@@ -1,0 +1,164 @@
+"""Golden-file round-trip tests for SearchReport schema v2: v1 fixtures
+migrate losslessly, v2 serialization is exact, and the PerfDatabase
+fingerprint behaves like an identity (stable across repeat runs, changed
+by platform/backend)."""
+import copy
+import json
+import os
+
+import pytest
+
+from repro.api import (Configurator, SCHEMA_VERSION,
+                       SUPPORTED_SCHEMA_VERSIONS, SearchReport,
+                       stop_after_n_valid)
+from repro.core.perf_database import PerfDatabase
+
+V1_FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                          "search_report_v1.json")
+
+
+def _small_configurator(**kw):
+    return (Configurator.for_model("llama3.1-8b")
+            .traffic(isl=256, osl=64)
+            .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+            .cluster(chips=8, platform=kw.get("platform", "tpu_v5e"))
+            .backend(kw.get("backend", "repro-jax")).dtype("fp8")
+            .modes("aggregated"))
+
+
+@pytest.fixture(scope="module")
+def v1_payload():
+    with open(V1_FIXTURE) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def report():
+    return _small_configurator().search()
+
+
+# ---------------------------------------------------------------------------
+# v1 -> v2 migration
+# ---------------------------------------------------------------------------
+
+def test_v1_fixture_migrates_losslessly(v1_payload):
+    rep = SearchReport.load(V1_FIXTURE)
+    assert rep.schema_version == SCHEMA_VERSION   # migrated to current
+    # every v1 field survives byte-exact
+    w = v1_payload["workload"]
+    assert rep.workload.model == w["model"]
+    assert rep.workload.isl == w["isl"] and rep.workload.osl == w["osl"]
+    assert rep.workload.sla.min_tokens_per_s_user \
+        == w["sla"]["min_tokens_per_s_user"]
+    assert rep.n_candidates == v1_payload["search"]["n_candidates"]
+    assert rep.elapsed_s == v1_payload["search"]["elapsed_s"]
+    assert rep.frontier_indices == v1_payload["frontier"]
+    assert rep.best_index == v1_payload["best"]
+    assert len(rep.projections) == len(v1_payload["projections"])
+    for proj, raw in zip(rep.projections, v1_payload["projections"]):
+        assert proj.tokens_per_s_per_chip == raw["tokens_per_s_per_chip"]
+        assert proj.mem_bytes_per_chip == raw["mem_bytes_per_chip"]
+        assert proj.config == raw["config"]
+    assert rep.launch.command == v1_payload["launch"]["command"]
+    # the sections v1 never carried default to empty
+    assert rep.fingerprint is None and rep.early_exit is None
+
+
+def test_migrated_v1_reserializes_as_v2(v1_payload):
+    rep = SearchReport.load(V1_FIXTURE)
+    d = rep.to_dict()
+    assert d["schema_version"] == 2
+    assert d["database"] is None
+    assert d["memory"]["per_candidate_bytes_per_chip"] \
+        == [p["mem_bytes_per_chip"] for p in v1_payload["projections"]]
+    assert d["memory"]["peak_bytes_per_chip"] \
+        == max(p["mem_bytes_per_chip"] for p in v1_payload["projections"])
+    # and the v2 re-serialization round-trips exactly
+    assert SearchReport.from_json(rep.to_json()) == rep
+
+
+# ---------------------------------------------------------------------------
+# v2 round-trip
+# ---------------------------------------------------------------------------
+
+def test_v2_roundtrip_is_exact(report):
+    blob = report.to_json()
+    d = json.loads(blob)
+    assert d["schema_version"] == SCHEMA_VERSION == 2
+    assert set(SUPPORTED_SCHEMA_VERSIONS) == {1, 2}
+    back = SearchReport.from_json(blob)
+    assert back == report
+    assert back.to_json() == blob                 # byte-stable second hop
+
+
+def test_v2_carries_memory_and_fingerprint(report):
+    d = report.to_dict()
+    assert len(d["memory"]["per_candidate_bytes_per_chip"]) \
+        == len(report.projections)
+    assert all(m > 0 for m in d["memory"]["per_candidate_bytes_per_chip"])
+    assert d["memory"]["peak_bytes_per_chip"] \
+        == max(p.mem_bytes_per_chip for p in report.projections)
+    fp = d["database"]
+    assert fp["platform"] == "tpu_v5e" and fp["backend"] == "repro-jax"
+    assert fp["n_grids"] > 0 and len(fp["grid_hash"]) == 16
+
+
+def test_v2_early_exit_record_roundtrips():
+    c = _small_configurator()
+    stream = c.search_iter(policies=[stop_after_n_valid(2)])
+    for _ in stream:
+        pass
+    rep = stream.report(generate_launch=False)
+    assert rep.early_exit["reason"] == "stop_after_n_valid(2)"
+    back = SearchReport.from_json(rep.to_json())
+    assert back == rep
+    assert back.early_exit == rep.early_exit
+
+
+def test_unknown_schema_version_rejected(report):
+    d = report.to_dict()
+    d["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema_version"):
+        SearchReport.from_dict(d)
+    d["schema_version"] = None
+    with pytest.raises(ValueError, match="schema_version"):
+        SearchReport.from_dict(d)
+
+
+def test_malformed_v1_payload_rejected(v1_payload):
+    broken = copy.deepcopy(v1_payload)
+    del broken["projections"]
+    with pytest.raises(ValueError, match="malformed"):
+        SearchReport.from_dict(broken)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint identity
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_stable_across_repeat_runs(report):
+    again = _small_configurator().search()
+    assert report.fingerprint == again.fingerprint
+    # and within one Configurator across repeated searches
+    c = _small_configurator()
+    assert c.search().fingerprint == c.search().fingerprint
+
+
+def test_fingerprint_changes_with_platform_and_backend(report):
+    other_platform = _small_configurator(platform="tpu_v5p").search()
+    assert other_platform.fingerprint["platform"] == "tpu_v5p"
+    assert other_platform.fingerprint["grid_hash"] \
+        != report.fingerprint["grid_hash"]
+    other_backend = _small_configurator(backend="vllm").search()
+    assert other_backend.fingerprint != report.fingerprint
+    assert other_backend.fingerprint["backend"] == "vllm"
+
+
+def test_fingerprint_tracks_database_contents():
+    db = PerfDatabase("tpu_v5e", "repro-jax")
+    fp1 = db.fingerprint()
+    assert fp1 == db.fingerprint()                 # idempotent
+    db._comm_grid("all_reduce", 4, False)          # lazily grow the db
+    fp2 = db.fingerprint()
+    assert fp2["n_grids"] == fp1["n_grids"] + 1
+    assert fp2["grid_hash"] != fp1["grid_hash"]

@@ -1,0 +1,212 @@
+"""End-to-end regression tests for streaming incremental search:
+drain-equivalence with batch ``search()``, early-exit policies pricing
+strictly fewer candidates (PerfDatabase call-count probe), and the online
+Pareto frontier matching the batch analyzer."""
+import dataclasses
+
+import pytest
+
+from repro.api import (Configurator, SearchEvent, StreamingSearch, callback,
+                       deadline_s, stop_after_n_valid)
+from repro.core import pareto
+from repro.core.config import ClusterSpec, SLA, WorkloadDescriptor
+from repro.core.perf_database import PerfDatabase
+from repro.core.task_runner import SearchProgress, TaskRunner
+
+
+def _small_configurator(**kw):
+    return (Configurator.for_model(kw.get("model", "llama3.1-8b"))
+            .traffic(isl=kw.get("isl", 256), osl=kw.get("osl", 64))
+            .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+            .cluster(chips=kw.get("chips", 8))
+            .backend("repro-jax").dtype("fp8")
+            .modes(*kw.get("modes", ("aggregated",))))
+
+
+def _asdicts(projs):
+    return [dataclasses.asdict(p) for p in projs]
+
+
+# ---------------------------------------------------------------------------
+# drain equivalence: streaming with no policy == batch search
+# ---------------------------------------------------------------------------
+
+def test_drained_search_iter_matches_search():
+    c = _small_configurator()
+    stream = c.search_iter()
+    assert isinstance(stream, StreamingSearch)
+    events = list(stream)
+    assert events and all(isinstance(ev, SearchEvent) for ev in events)
+    streamed = stream.report()
+    batch = c.search()
+    assert _asdicts(streamed.projections) == _asdicts(batch.projections)
+    assert dataclasses.asdict(streamed.best) == dataclasses.asdict(batch.best)
+    assert streamed.frontier_indices == batch.frontier_indices
+    assert streamed.n_candidates == batch.n_candidates
+    assert streamed.early_exit is None
+    assert streamed.fingerprint == batch.fingerprint
+    # events carried the same projections, in pricing order
+    assert _asdicts([ev.projection for ev in events]) \
+        == _asdicts(batch.projections)
+
+
+def test_drained_stream_matches_legacy_taskrunner():
+    w = WorkloadDescriptor(
+        model="llama3.1-8b", isl=256, osl=64,
+        sla=SLA(ttft_ms=2000, min_tokens_per_s_user=10),
+        cluster=ClusterSpec(n_chips=8), backend="repro-jax", dtype="fp8",
+        modes=("aggregated",))
+    legacy = TaskRunner(w, PerfDatabase("tpu_v5e", "repro-jax")).run()
+    stream = _small_configurator().search_iter()
+    for _ in stream:
+        pass
+    result = stream.result()
+    assert _asdicts(result.projections) == _asdicts(legacy.projections)
+    assert dataclasses.asdict(result.best) == dataclasses.asdict(legacy.best)
+    assert _asdicts(result.frontier) == _asdicts(legacy.frontier)
+    assert result.n_candidates == legacy.n_candidates
+
+
+@pytest.mark.slow
+def test_drain_equivalence_with_disagg_modes():
+    c = _small_configurator(isl=128, osl=32, chips=4,
+                            modes=("aggregated", "disaggregated"))
+    stream = c.search_iter()
+    events = list(stream)
+    streamed = stream.report()
+    batch = c.search()
+    assert _asdicts(streamed.projections) == _asdicts(batch.projections)
+    assert streamed.n_candidates == batch.n_candidates
+    assert streamed.disagg == batch.disagg
+    assert any(ev.projection.mode == "disaggregated" for ev in events)
+
+
+# ---------------------------------------------------------------------------
+# early-exit policies
+# ---------------------------------------------------------------------------
+
+def test_stop_after_n_valid_prices_strictly_fewer_candidates():
+    # full sweep on a fresh database: the call-count probe baseline
+    c_full = _small_configurator()
+    full_report = c_full.search()
+    full_queries = c_full.database().stats.seq_queries
+    assert full_report.best is not None
+    n_valid_total = sum(p.meets(full_report.workload.sla)
+                        for p in full_report.projections)
+    assert n_valid_total > 3   # early exit below must leave work unpriced
+
+    # early exit on its own fresh database
+    c_early = _small_configurator()
+    stream = c_early.search_iter(policies=[stop_after_n_valid(3)])
+    events = list(stream)
+    early_queries = c_early.database().stats.seq_queries
+
+    assert sum(ev.meets_sla for ev in events) == 3
+    assert stream.n_valid == 3
+    assert events[-1].meets_sla            # the 3rd valid one stopped it
+    report = stream.report()
+    assert report.early_exit is not None
+    assert report.early_exit["reason"] == "stop_after_n_valid(3)"
+    assert report.n_candidates < full_report.n_candidates
+    assert early_queries < full_queries    # PerfDatabase call-count probe
+    # the partial report is still a coherent artifact
+    assert report.best is not None and report.best.meets(report.workload.sla)
+    assert report.frontier
+
+
+def test_deadline_policy_stops_stream():
+    stream = _small_configurator().search_iter(policies=[deadline_s(1e-9)])
+    events = list(stream)
+    assert len(events) == 1                # first yield trips the deadline
+    report = stream.report(generate_launch=False)
+    assert report.early_exit["reason"].startswith("deadline_s")
+    assert len(report.projections) == 1
+
+
+def test_callback_policy_sees_every_event_and_can_stop():
+    seen = []
+
+    def hook(ev):
+        seen.append(ev)
+        return len(seen) >= 5
+
+    stream = _small_configurator().search_iter(policies=[callback(hook)])
+    events = list(stream)
+    assert events == seen
+    assert len(events) == 5
+    assert stream.early_exit["reason"] == "callback(hook)"
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        stop_after_n_valid(0)
+    with pytest.raises(ValueError):
+        deadline_s(0)
+
+
+def test_closed_stream_skips_remaining_pricing():
+    c = _small_configurator()
+    progress_probe = c.database().stats
+    stream = c.search_iter()
+    first = next(stream)
+    queries_after_one = progress_probe.seq_queries
+    stream.close()     # explicit abandon (e.g. after `break` in a UI loop)
+    stream.close()     # idempotent
+    assert progress_probe.seq_queries == queries_after_one
+    assert first.index == 0 and stream.n_priced >= 1
+    with pytest.raises(StopIteration):
+        next(stream)
+    # a closed stream still materializes a coherent partial report
+    assert len(stream.report(generate_launch=False).projections) == 1
+
+
+def test_search_accepts_policies_directly():
+    # the facade's batch entry point takes the same policies the CLI's
+    # --first-n uses: no manual drain loop needed for early exit
+    c = _small_configurator()
+    report = c.search(policies=[stop_after_n_valid(2)])
+    assert report.early_exit["reason"] == "stop_after_n_valid(2)"
+    assert sum(p.meets(report.workload.sla) for p in report.projections) == 2
+
+
+def test_deadline_policy_object_is_reusable_across_searches():
+    policy = deadline_s(30.0)   # generous: neither search should trip it
+    c = _small_configurator()
+    first = list(c.search_iter(policies=[policy]))
+    second_stream = c.search_iter(policies=[policy])
+    second = list(second_stream)
+    # the anchor re-arms per stream, so the (warm, fast) second search
+    # must run to completion instead of inheriting the first one's clock
+    assert len(second) == len(first)
+    assert second_stream.early_exit is None
+
+
+# ---------------------------------------------------------------------------
+# online frontier == batch analyzer, live views
+# ---------------------------------------------------------------------------
+
+def test_stream_frontier_matches_batch_analyzer():
+    stream = _small_configurator().search_iter()
+    running = []
+    for ev in stream:
+        running.append(ev.projection)
+        assert ev.frontier_size == len(pareto.frontier(running))
+    assert _asdicts(stream.frontier) == _asdicts(pareto.frontier(running))
+    assert dataclasses.asdict(stream.best) \
+        == dataclasses.asdict(pareto.best(running, stream.workload.sla))
+
+
+def test_core_iter_search_reports_progress():
+    w = WorkloadDescriptor(
+        model="llama3.1-8b", isl=256, osl=64,
+        sla=SLA(ttft_ms=2000, min_tokens_per_s_user=10),
+        cluster=ClusterSpec(n_chips=8), backend="repro-jax", dtype="fp8",
+        modes=("aggregated",))
+    runner = TaskRunner(w, PerfDatabase("tpu_v5e", "repro-jax"))
+    progress = SearchProgress()
+    pairs = list(runner.iter_search(progress=progress))
+    assert progress.n_yielded == len(pairs)
+    # every enumerated candidate was priced exactly once (aggregated only)
+    assert progress.n_evaluated == len(runner.candidates())
+    for cand, proj in pairs:
+        assert proj.batch_size == cand.batch_size
