@@ -10,6 +10,10 @@ Algorithm 2 over the PerfDatabase built on that platform, and (4) compare
 against WALL-CLOCK TTFT/TPOT of the real continuous-batching engine
 serving a reduced model.  Everything the paper does, end to end, with no
 simulator in the ground-truth path.
+
+Steps (1) and (2) are the ``repro.calibrate.host`` helpers — this
+benchmark drives the calibration subsystem rather than carrying its own
+measurement code.
 """
 from __future__ import annotations
 
@@ -18,101 +22,26 @@ import statistics
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import mape, write_csv
 from repro import models
+from repro.calibrate.host import (calibrate_cpu_platform,
+                                  measure_engine_overheads)
 from repro.configs import get_config
 from repro.core import ClusterSpec, SLA, WorkloadDescriptor
+from repro.core.backends.base import register
 from repro.core.config import CandidateConfig, ParallelismConfig, RuntimeFlags
-from repro.core.hardware import Platform
 from repro.core.perf_database import PerfDatabase
 from repro.core.session import InferenceSession
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.request import Request
 
 
-def _time(fn, *args, reps=5, trials=3):
-    """Median-of-trials timing (single-shot CPU measurements swing ~35%)."""
-    fn(*args).block_until_ready()                 # warm the jit
-    best = []
-    for _ in range(trials):
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            out = fn(*args)
-        out.block_until_ready()
-        best.append((time.perf_counter() - t0) / reps)
-    return statistics.median(best)
-
-
-def calibrate_cpu_platform() -> Platform:
-    """Measure this host's matmul throughput and stream bandwidth."""
-    mm = jax.jit(lambda a, b: a @ b)
-    a = jnp.ones((1024, 1024), jnp.float32)
-    b = jnp.ones((1024, 1024), jnp.float32)
-    t_mm = _time(mm, a, b)
-    flops = 2 * 1024 ** 3 / t_mm
-    cp = jax.jit(lambda x: x * 1.0001)
-    big = jnp.ones((64, 1024, 1024), jnp.float32)
-    t_cp = _time(cp, big)
-    bw = 2 * big.size * 4 / t_cp
-    return Platform(
-        name="cpu_host",
-        peak_flops_bf16=flops, peak_flops_fp8=flops,
-        hbm_bw=bw, hbm_capacity=8 * 2 ** 30,
-        link_bw=bw, links_per_axis=1, inter_pod_bw=bw,
-        launch_overhead=30e-6, hop_latency=1e-6,
-        tile_m=8, tile_n=8)          # SIMD CPU, not a 128-lane MXU
-
-
 def calibrate_backend(cfg, params, db) -> str:
-    """Measure the engine's per-iteration and per-prefill-call overheads —
-    the framework-specific dynamics the paper insists must be profiled per
-    backend (§1, §3): jit dispatch, host argmax sync, and the engine's
-    cache-insertion copy are all invisible to operator-level math."""
-    import jax.numpy as jnp
-    from repro.core.backends.base import BackendProfile, register
-    from repro.serving.sim import StepSpec
-    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=64))
-    rng = np.random.default_rng(0)
-    for i in range(2):
-        eng.add_request(Request(rid=i, isl=16, osl=4, arrival=0.0,
-                                prompt=rng.integers(0, cfg.vocab_size,
-                                                    16).tolist()))
-    eng.run_until_drained()                       # warm every jit
-    # prefill-call / decode-iteration wall times (median of 5)
-    t_prefills, t_decodes = [], []
-    for trial in range(5):
-        t0 = time.perf_counter()
-        eng.add_request(Request(rid=50 + trial, isl=16, osl=3, arrival=t0,
-                                prompt=rng.integers(0, cfg.vocab_size,
-                                                    16).tolist()))
-        eng.step()
-        t_prefills.append(time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        eng.step()
-        t_decodes.append(time.perf_counter() - t0)
-        eng.run_until_drained()
-    t_prefill_call = statistics.median(t_prefills)
-    t_decode_iter = statistics.median(t_decodes)
-    # subtract the operator-modeled compute to isolate overheads
-    from repro.core import decompose
-    par = ParallelismConfig(tp=1)
-    comp_prefill = db.sequence_latency(decompose.iteration_ops(
-        cfg, par, StepSpec(prefill=((16, 0),), decode=()), dtype="fp32"))
-    comp_decode = db.sequence_latency(decompose.iteration_ops(
-        cfg, par, StepSpec(prefill=(), decode=(17, 17)), dtype="fp32"))
-    prof = BackendProfile(
-        name="repro-jax-cpu",
-        step_overhead=max(t_decode_iter - comp_decode, 1e-4),
-        chunk_overhead=max(t_prefill_call - comp_prefill, 1e-3),
-        runtime_mem_overhead=0.04,
-        default_max_num_tokens=8192,
-        graph_capture_saving=0.0,
-        f_corr_base=1.0,
-        sequential_prefill=True,
-        launcher="python -m repro.launch.serve")
+    """Measure + register the engine-calibrated backend profile (the
+    measurement itself lives in repro.calibrate.host)."""
+    prof = measure_engine_overheads(cfg, params, db)
     register(prof)
     print(f"  calibrated repro-jax-cpu backend: step_overhead="
           f"{prof.step_overhead*1e3:.2f}ms chunk_overhead="

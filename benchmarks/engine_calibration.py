@@ -1,62 +1,35 @@
 """Backend-constant calibration — measures the repro-jax engine's real
 per-iteration host overhead on this machine (the quantity the
-BackendProfile.step_overhead constant models) by timing decode iterations
-of a reduced model and subtracting the jit-compute portion."""
+BackendProfile.step_overhead constant models) through the
+``repro.calibrate`` subsystem's host-measurement helpers."""
 from __future__ import annotations
 
-import statistics
-import time
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import write_csv
 from repro import models
+from repro.calibrate.host import measure_engine_iteration
 from repro.configs import get_config
 from repro.serving.engine import Engine, EngineConfig
-from repro.serving.request import Request
 
 
 def run(quick: bool = False):
     cfg = get_config("internlm2-1.8b").reduced()
     params = models.init_params(cfg, jax.random.PRNGKey(0))
     eng = Engine(cfg, params, EngineConfig(max_batch=4, max_seq=96))
-    rng = np.random.default_rng(0)
-    osl = 16 if quick else 48
-    for i in range(4):
-        prompt = rng.integers(0, cfg.vocab_size, 8).tolist()
-        eng.add_request(Request(rid=i, isl=8, osl=osl,
-                                arrival=time.perf_counter(), prompt=prompt))
-    # warm the decode jit, then time iterations
-    eng.step()
-    times = []
-    while eng.sched.active:
-        t0 = time.perf_counter()
-        eng.step()
-        times.append(time.perf_counter() - t0)
-    # pure-compute comparison: the jitted decode called back-to-back
-    tok = jnp.zeros((4, 1), jnp.int32)
-    cache = eng.cache
-    t0 = time.perf_counter()
-    reps = 10
-    for _ in range(reps):
-        lg, cache = eng._decode_fn(params=eng.params, token=tok, cache=cache)
-    lg.block_until_ready()
-    compute = (time.perf_counter() - t0) / reps
-    step_p50 = statistics.median(times)
-    overhead = max(step_p50 - compute, 0.0)
-    print(f"  engine iteration p50 {step_p50*1e3:.2f}ms, "
-          f"jit compute {compute*1e3:.2f}ms -> host overhead "
-          f"{overhead*1e6:.0f}us on THIS CPU container "
+    m = measure_engine_iteration(eng, cfg, osl=16 if quick else 48,
+                                 n_requests=4)
+    print(f"  engine iteration p50 {m['iteration_p50']*1e3:.2f}ms, "
+          f"jit compute {m['jit_compute']*1e3:.2f}ms -> host overhead "
+          f"{m['host_overhead']*1e6:.0f}us on THIS CPU container "
           f"(BackendProfile.step_overhead models a TPU-grade host at 120us; "
           f"the structure — fixed per-iteration cost — is what's calibrated)")
     path = write_csv("engine_calibration.csv",
                      ["metric", "seconds"],
-                     [["iteration_p50", step_p50],
-                      ["jit_compute", compute],
-                      ["host_overhead", overhead]])
-    return {"csv": path, "overhead_us": overhead * 1e6}
+                     [["iteration_p50", m["iteration_p50"]],
+                      ["jit_compute", m["jit_compute"]],
+                      ["host_overhead", m["host_overhead"]]])
+    return {"csv": path, "overhead_us": m["host_overhead"] * 1e6}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""Calibration workflow end to end: measure the kernels, fit corrections,
+audit the accuracy report, and run a search through the calibrated
+database — the artifact's identity travels inside the SearchReport.
+
+Run:  PYTHONPATH=src python examples/calibrated_search.py
+"""
+import _bootstrap  # noqa: F401
+
+import json
+
+from repro.api import Configurator
+from repro.calibrate import (DeterministicTimer, accuracy_report,
+                             format_accuracy, run_calibration)
+
+# 1. measure + fit (the deterministic timer keeps this demo reproducible;
+#    swap WallClockTimer() in on real silicon)
+artifact = run_calibration(
+    "tpu_v5e", "repro-jax",
+    timer=DeterministicTimer("tpu_v5e"),
+    created_at="2026-07-28T00:00:00Z",
+    points_per_axis=3)
+print(format_accuracy(accuracy_report(artifact)))
+
+# 2. persist the versioned artifact (lossless round-trip)
+path = artifact.save("calibration.json")
+print(f"\nartifact -> {path} (digest {artifact.digest()})")
+
+# 3. search through the calibrated database
+report = (Configurator.for_model("qwen3-32b")
+          .traffic(isl=4000, osl=500)
+          .sla(ttft_ms=1200, min_tokens_per_s_user=40)
+          .cluster(chips=16, platform="tpu_v5e")
+          .backend("repro-jax")
+          .dtype("fp8")
+          .modes("aggregated")
+          .with_calibration(artifact)
+          .search(generate_launch=False))
+print("\n" + report.summary())
+print("calibration recorded in the report's database section:")
+print(json.dumps(report.fingerprint["calibration"], indent=2))

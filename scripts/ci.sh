@@ -73,4 +73,35 @@ reason = summary["early_exit"]["reason"]
 print(f"ok: early exit after {n_candidates} candidates ({reason})")
 '
 
+echo "=== smoke: calibrate run -> artifact round-trips, MAPE finite ==="
+# Tiny grid on the deterministic (CI-reproducible) timer: the artifact
+# must reload losslessly and the accuracy report must show finite MAPE
+# with calibrated <= uncalibrated on every measured family.
+cal_dir=$(mktemp -d)
+PYTHONPATH=src python -m repro.core.cli calibrate run \
+    --timer deterministic --points 2 \
+    --timestamp 2026-01-01T00:00:00Z --out "$cal_dir/cal.json" \
+  > /dev/null
+PYTHONPATH=src python - "$cal_dir/cal.json" <<'PY'
+import math
+import sys
+
+from repro.calibrate import CalibrationArtifact, accuracy_report
+
+path = sys.argv[1]
+art = CalibrationArtifact.load(path)
+again = CalibrationArtifact.from_json(art.to_json())
+assert again == art, "artifact did not round-trip losslessly"
+report = accuracy_report(art)
+for family, row in report["families"].items():
+    assert math.isfinite(row["mape_calibrated"]), family
+    assert row["mape_calibrated"] <= row["mape_uncalibrated"], family
+overall = report["overall"]
+print(f"ok: {overall['n_samples']} samples, MAPE "
+      f"{overall['mape_uncalibrated']:.1f}% -> "
+      f"{overall['mape_calibrated']:.1f}% calibrated "
+      f"(digest {art.digest()})")
+PY
+rm -rf "$cal_dir"
+
 echo "=== ci passed ==="

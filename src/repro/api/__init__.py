@@ -49,6 +49,13 @@ Third-party serving backends join in without touching core::
     @register_backend("my-engine", capabilities=("aggregated",))
     def _profile() -> BackendProfile:
         return BackendProfile(name="my-engine", ...)
+
+Measured-kernel calibration (``repro.calibrate``, docs/calibration.md)
+plugs in through one builder hook — the report's ``database`` section
+then records exactly which calibration priced the search::
+
+    report = cfg.with_calibration("cal.json").search()
+    report.fingerprint["calibration"]["digest"]
 """
 from repro.api.configurator import Comparison, Configurator, StreamingSearch
 from repro.api.policies import (SearchEvent, callback, deadline_s,

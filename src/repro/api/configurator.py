@@ -71,6 +71,7 @@ class Configurator:
         # second .search() on this instance fast
         self._dbs: Dict[Tuple[str, str], PerfDatabase] = {}
         self._session: Optional[InferenceSession] = None
+        self._calibration = None   # repro.calibrate.CalibrationArtifact
 
     # -- fluent setters (each validates eagerly) -----------------------------
     @classmethod
@@ -134,6 +135,35 @@ class Configurator:
         self._moe_alpha = alpha
         return self
 
+    def with_calibration(self, artifact) -> "Configurator":
+        """Price every search through a measured-kernel calibration layer.
+
+        ``artifact`` is a :class:`repro.calibrate.CalibrationArtifact` or a
+        path to one (loaded — and validated — eagerly, like every other
+        setter).  The artifact must match this Configurator's current
+        (platform, backend); call :meth:`cluster`/:meth:`backend` first.
+        The resulting reports carry the calibration identity in their
+        ``database`` section.  :meth:`compare` variants that override
+        ``platform``/``backend`` away from the calibrated pair price
+        uncalibrated (their reports record ``calibration: null``).
+        """
+        from repro.calibrate.artifact import CalibrationArtifact
+        if isinstance(artifact, (str, bytes)):
+            artifact = CalibrationArtifact.load(artifact)
+        if artifact.platform != self._cluster.platform \
+                or artifact.backend != self._backend:
+            raise ValueError(
+                f"calibration artifact is for ({artifact.platform}, "
+                f"{artifact.backend}) but this Configurator targets "
+                f"({self._cluster.platform}, {self._backend}); set "
+                f".cluster()/.backend() before .with_calibration()")
+        self._calibration = artifact
+        db = self._dbs.get((self._cluster.platform, self._backend))
+        if db is not None:
+            db.apply_calibration(artifact)
+        self._session = None        # cached latencies are stale now
+        return self
+
     # -- assembly ------------------------------------------------------------
     def workload(self) -> WorkloadDescriptor:
         """Materialize the (validated) workload descriptor."""
@@ -156,9 +186,16 @@ class Configurator:
     def database(self) -> PerfDatabase:
         """The shared per-(platform, backend) PerfDatabase."""
         key = (self._cluster.platform, self._backend)
+        cal = self._calibration
+        if cal is not None and (cal.platform, cal.backend) != key:
+            raise ValueError(
+                f"calibration artifact covers ({cal.platform}, "
+                f"{cal.backend}) but this search targets {key}; "
+                f"re-run `calibrate run` for that pair or drop "
+                f".with_calibration()")
         db = self._dbs.get(key)
         if db is None:
-            db = self._dbs[key] = PerfDatabase(*key)
+            db = self._dbs[key] = PerfDatabase(*key, calibration=cal)
         return db
 
     def _session_for(self, w: WorkloadDescriptor) -> InferenceSession:
@@ -293,6 +330,13 @@ class Configurator:
             c.modes(*((m,) if isinstance(m, str) else m))
         if "moe_alpha" in o:
             c.moe_alpha(o.pop("moe_alpha"))
+        cal = c._calibration
+        if cal is not None and (cal.platform, cal.backend) \
+                != (c._cluster.platform, c._backend):
+            # a variant steering off the calibrated (platform, backend)
+            # pair prices uncalibrated — its report's database section
+            # says so — instead of aborting the whole compare sweep
+            c._calibration = None
         return c
 
 
@@ -325,12 +369,25 @@ class StreamingSearch:
         self._db = db
         self._policies = tuple(policies)
         self._progress = SearchProgress()
-        self._inner = runner.iter_search(sweep_flags, keep_all_disagg,
-                                         progress=self._progress)
         self._acc = pareto.FrontierAccumulator()
         self._best: Optional[Projection] = None
         self._t0 = time.perf_counter()
         self._exhausted = False
+        self._oob_reason: Optional[str] = None
+        # out-of-band early exit: policies exposing check_elapsed (e.g.
+        # deadline_s) can preempt the non-yielding disaggregated phase
+        self._progress.abort = self._check_oob_policies
+        self._inner = runner.iter_search(sweep_flags, keep_all_disagg,
+                                         progress=self._progress)
+
+    def _check_oob_policies(self) -> bool:
+        elapsed = time.perf_counter() - self._t0
+        for policy in self._policies:
+            check = getattr(policy, "check_elapsed", None)
+            if check is not None and check(elapsed):
+                self._oob_reason = getattr(policy, "reason", "policy")
+                return True
+        return False
 
     # -- live views ----------------------------------------------------------
     @property
@@ -379,6 +436,10 @@ class StreamingSearch:
                     "n_yielded": len(self.projections),
                     "n_priced": self._progress.n_evaluated,
                 }
+                if self._progress.disagg_preempted:
+                    # the disagg phase was already cut short out-of-band
+                    # before this yield tripped the policy
+                    self.early_exit["phase"] = "disaggregated"
                 self._finish()
                 break
         return event
@@ -392,6 +453,15 @@ class StreamingSearch:
 
     def _finish(self) -> None:
         self._exhausted = True
+        if self.early_exit is None and self._progress.disagg_preempted:
+            # a check_elapsed policy fired inside the disaggregated phase
+            # (between yields): record it like any other early exit
+            self.early_exit = {
+                "reason": self._oob_reason or "disagg_preempted",
+                "n_yielded": len(self.projections),
+                "n_priced": self._progress.n_evaluated,
+                "phase": "disaggregated",
+            }
         self.elapsed_s = time.perf_counter() - self._t0
         self._inner.close()   # release the generator (skips remaining pricing)
 

@@ -52,7 +52,14 @@ def stop_after_n_valid(n: int) -> Policy:
 
 
 def deadline_s(seconds: float) -> Policy:
-    """Stop once the search has run for ``seconds`` (checked per yield)."""
+    """Stop once the search has run for ``seconds``.
+
+    Checked per yield like every policy, AND out-of-band between yields:
+    the policy carries a ``check_elapsed(elapsed_s) -> bool`` hook the
+    streaming search threads into long non-yielding phases (the
+    disaggregated pool pricing + rate matching), so the deadline preempts
+    mid-match instead of waiting for the next projection.
+    """
     if seconds <= 0:
         raise ValueError(f"deadline_s needs a positive deadline, got {seconds}")
     t0: Optional[float] = None
@@ -65,7 +72,9 @@ def deadline_s(seconds: float) -> Policy:
             t0 = time.perf_counter() - ev.elapsed_s
         return time.perf_counter() - t0 >= seconds
 
-    return _named(policy, f"deadline_s({seconds})")
+    policy = _named(policy, f"deadline_s({seconds})")
+    policy.check_elapsed = lambda elapsed: elapsed >= seconds  # type: ignore[attr-defined]
+    return policy
 
 
 def callback(fn: Callable[[SearchEvent], object]) -> Policy:

@@ -1,0 +1,65 @@
+"""repro.calibrate — measured-kernel calibration pipeline.
+
+The paper's "calibrated kernel-level performance database" as a real
+measure → fit → persist → load loop:
+
+* :mod:`~repro.calibrate.harness` times the actual Pallas kernels
+  (flash/decode attention, MoE GEMM, RG-LRU scan, plain-jnp GEMM) over the
+  PerfDatabase's grid axes, through a pluggable timer
+  (:class:`WallClockTimer` for real execution, :class:`DeterministicTimer`
+  for bit-reproducible CI runs);
+* :mod:`~repro.calibrate.fit` turns (predicted, measured) pairs into
+  per-operator-family log-space correction models with goodness-of-fit
+  stats;
+* :class:`CalibrationArtifact` is the versioned JSON artifact with full
+  provenance that :meth:`PerfDatabase.apply_calibration` loads as a
+  correction layer, surfaced by ``fingerprint()`` and therefore by
+  SearchReport v2's ``database`` section;
+* :func:`accuracy_report` audits calibrated vs uncalibrated MAPE from the
+  artifact's embedded samples.
+
+Quickstart::
+
+    from repro.calibrate import DeterministicTimer, run_calibration
+
+    art = run_calibration("tpu_v5e", "repro-jax",
+                          timer=DeterministicTimer("tpu_v5e"),
+                          created_at="2026-07-28T00:00:00Z")
+    art.save("cal.json")
+
+    from repro.api import Configurator
+    report = (Configurator.for_model("qwen3-32b")
+              .traffic(isl=4000, osl=500)
+              .with_calibration("cal.json")
+              .search())
+    # report.fingerprint["calibration"] carries the artifact's identity
+
+CLI: ``python -m repro.core.cli calibrate run | apply | report``.
+
+``MeasurementHarness`` (which imports jax and the kernels) is exported
+lazily so artifact consumers never pay the kernel-import cost.
+"""
+from repro.calibrate.artifact import (KIND, SCHEMA_VERSION,
+                                      SUPPORTED_SCHEMA_VERSIONS,
+                                      CalibrationArtifact, FamilyFit, Sample,
+                                      grid_digest)
+from repro.calibrate.fit import fit_families, fit_family, mape
+from repro.calibrate.pipeline import (accuracy_report, format_accuracy,
+                                      run_calibration)
+from repro.calibrate.timers import (DeterministicTimer, WallClockTimer,
+                                    make_timer, median_time)
+
+__all__ = [
+    "CalibrationArtifact", "DeterministicTimer", "FamilyFit", "KIND",
+    "MeasurementHarness", "Sample", "SCHEMA_VERSION",
+    "SUPPORTED_SCHEMA_VERSIONS", "WallClockTimer", "accuracy_report",
+    "fit_families", "fit_family", "format_accuracy", "grid_digest",
+    "make_timer", "mape", "median_time", "run_calibration",
+]
+
+
+def __getattr__(name: str):
+    if name == "MeasurementHarness":
+        from repro.calibrate.harness import MeasurementHarness
+        return MeasurementHarness
+    raise AttributeError(f"module 'repro.calibrate' has no attribute {name!r}")

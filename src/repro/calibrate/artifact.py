@@ -1,0 +1,179 @@
+"""Versioned calibration artifact — the measured-kernel correction layer as
+a file.
+
+A :class:`CalibrationArtifact` is what ``calibrate run`` produces and what
+:meth:`PerfDatabase.apply_calibration` consumes: per-operator-family
+log-space correction models (``measured ≈ scale · predicted^exponent``)
+fitted against the analytical executor, together with the raw measurement
+samples they were fitted from and full provenance (platform, backend, timer,
+grid digest, caller-supplied timestamp — never ambient wall-clock, so
+artifacts are reproducible byte-for-byte).
+
+The JSON schema (see docs/calibration.md) round-trips losslessly:
+``CalibrationArtifact.from_json(a.to_json()) == a``.  Python's ``json``
+emits shortest-round-trip float reprs, so every scale/exponent/sample
+survives save → load bit-exactly — the property the golden fixture under
+``tests/fixtures/`` locks in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Sequence, Tuple
+
+#: Bump on any backwards-incompatible change to the artifact JSON layout.
+SCHEMA_VERSION = 1
+SUPPORTED_SCHEMA_VERSIONS = (1,)
+
+#: Sanity marker so a SearchReport or PerfDatabase blob is never
+#: accidentally loaded as a calibration artifact.
+KIND = "repro-calibration"
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """One measured grid point: an operator family at ``coords`` on the
+    measurement grid, the analytical prediction, and what the timer saw."""
+    family: str
+    coords: Tuple[float, ...]
+    predicted_s: float
+    measured_s: float
+
+    def to_dict(self) -> Dict:
+        return {"family": self.family, "coords": list(self.coords),
+                "predicted_s": self.predicted_s,
+                "measured_s": self.measured_s}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Sample":
+        return cls(family=d["family"], coords=tuple(d["coords"]),
+                   predicted_s=d["predicted_s"], measured_s=d["measured_s"])
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyFit:
+    """Log-space correction model for one operator family.
+
+    ``corrected = scale * predicted ** exponent`` — a straight line in
+    (log predicted, log measured) space.  Goodness-of-fit stats ride along
+    so ``calibrate report`` can audit the fit without re-measuring.
+    """
+    family: str
+    scale: float
+    exponent: float
+    n_samples: int
+    r2: float                  # of the log-log regression
+    residual_std: float        # std of log residuals after correction
+    mape_uncalibrated: float   # % on the fit's own samples
+    mape_calibrated: float
+
+    def correct(self, predicted_s: float) -> float:
+        return self.scale * max(predicted_s, 1e-12) ** self.exponent
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FamilyFit":
+        return cls(**d)
+
+
+def grid_digest(samples: Sequence[Sample]) -> str:
+    """Stable digest over the measurement grid (families × coords), i.e.
+    WHERE the silicon was sampled — independent of the latencies found
+    there, so two runs of the same sweep on different hardware share it."""
+    h = hashlib.sha256()
+    for s in sorted(samples, key=lambda s: (s.family, s.coords)):
+        h.update(s.family.encode())
+        h.update(repr(tuple(float(c) for c in s.coords)).encode())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class CalibrationArtifact:
+    """The calibrated artifact: fits + samples + provenance, versioned."""
+    platform: str
+    backend: str
+    timer: str                 # timer implementation that produced samples
+    created_at: str            # ISO-8601, supplied by the caller
+    grid_digest: str
+    fits: Dict[str, FamilyFit]
+    samples: List[Sample]
+    notes: str = ""
+    schema_version: int = SCHEMA_VERSION
+
+    # -- what PerfDatabase consumes -----------------------------------------
+    def corrections(self) -> Dict[str, Tuple[float, float]]:
+        """family -> (scale, exponent), the per-family correction layer."""
+        return {name: (fit.scale, fit.exponent)
+                for name, fit in self.fits.items()}
+
+    def digest(self) -> str:
+        """Content digest over the full artifact (fits AND samples)."""
+        blob = json.dumps(self.to_dict(), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def identity(self) -> Dict:
+        """Compact provenance record ``PerfDatabase.fingerprint()`` embeds
+        (and SearchReport v2's ``database`` section therefore carries)."""
+        return {"schema_version": self.schema_version,
+                "digest": self.digest(),
+                "timer": self.timer,
+                "created_at": self.created_at,
+                "grid_digest": self.grid_digest,
+                "families": sorted(self.fits)}
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return {
+            "kind": KIND,
+            "schema_version": self.schema_version,
+            "platform": self.platform,
+            "backend": self.backend,
+            "timer": self.timer,
+            "created_at": self.created_at,
+            "grid_digest": self.grid_digest,
+            "notes": self.notes,
+            "fits": {name: fit.to_dict()
+                     for name, fit in sorted(self.fits.items())},
+            "samples": [s.to_dict() for s in self.samples],
+        }
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "CalibrationArtifact":
+        if d.get("kind") != KIND:
+            raise ValueError(
+                f"not a calibration artifact (kind={d.get('kind')!r}; "
+                f"expected {KIND!r})")
+        version = d.get("schema_version")
+        if version not in SUPPORTED_SCHEMA_VERSIONS:
+            raise ValueError(
+                f"unsupported calibration schema_version {version!r}; this "
+                f"build reads versions "
+                f"{', '.join(map(str, SUPPORTED_SCHEMA_VERSIONS))}")
+        return cls(
+            platform=d["platform"], backend=d["backend"], timer=d["timer"],
+            created_at=d["created_at"], grid_digest=d["grid_digest"],
+            notes=d.get("notes", ""),
+            fits={name: FamilyFit.from_dict(f)
+                  for name, f in d["fits"].items()},
+            samples=[Sample.from_dict(s) for s in d["samples"]],
+            schema_version=version)
+
+    @classmethod
+    def from_json(cls, text: str) -> "CalibrationArtifact":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationArtifact":
+        with open(path) as f:
+            return cls.from_json(f.read())

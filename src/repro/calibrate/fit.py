@@ -1,0 +1,105 @@
+"""Fitting layer: per-operator-family correction models.
+
+Each family's samples are regressed in log-log space —
+``log(measured) = exponent · log(predicted) + log(scale)`` — which captures
+both a constant efficiency gap (scale) and a size-dependent drift
+(exponent ≠ 1: e.g. launch overhead dominating small shapes, or bandwidth
+saturation kicking in late).  Degenerate sample sets (fewer than 3 points,
+or no spread in the predictor) fall back to a pure log-space scale with
+exponent pinned to 1, the exponent is clamped to a sane band so a handful
+of noisy points can never produce a runaway power law, and the final model
+is selected by sample MAPE against scale-only and identity fallbacks so a
+fitted correction is never worse than no correction.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Sequence
+
+from repro.calibrate.artifact import FamilyFit, Sample
+
+#: Exponent clamp: outside this band a "fit" is extrapolating noise, not
+#: modeling silicon — pin to the boundary and let scale absorb the rest.
+EXPONENT_MIN = 0.5
+EXPONENT_MAX = 2.0
+
+#: Below this variance in log(predicted) the slope is unidentifiable.
+_MIN_LOG_VAR = 1e-9
+
+
+def mape(pred: Sequence[float], true: Sequence[float]) -> float:
+    """Mean absolute percentage error (%), the paper's fidelity metric."""
+    pairs = [(p, t) for p, t in zip(pred, true) if t > 0]
+    if not pairs:
+        return float("nan")
+    return 100.0 * sum(abs(p - t) / t for p, t in pairs) / len(pairs)
+
+
+def fit_family(family: str, samples: Sequence[Sample]) -> FamilyFit:
+    """Fit measured against predicted latency for one family.
+
+    Model selection by sample MAPE among three nested candidates —
+    log-log power law (clamped exponent), log-space scale only, and the
+    identity — so the correction can never be worse than no correction
+    on its own samples: noisy measurements whose regression slope
+    collapses (e.g. interpret-mode CPU wall clock against TPU analytics)
+    degrade gracefully to scale-only or identity instead of installing a
+    distorting power law.  This is what makes the
+    ``mape_calibrated <= mape_uncalibrated`` invariant a guarantee.
+    """
+    xs = [math.log(max(s.predicted_s, 1e-12)) for s in samples]
+    ys = [math.log(max(s.measured_s, 1e-12)) for s in samples]
+    n = len(samples)
+    if n == 0:
+        raise ValueError(f"family {family!r} has no samples to fit")
+
+    mean_x = sum(xs) / n
+    mean_y = sum(ys) / n
+    var_x = sum((x - mean_x) ** 2 for x in xs) / n
+    if n < 3 or var_x < _MIN_LOG_VAR:
+        slope = 1.0
+    else:
+        cov = sum((x - mean_x) * (y - mean_y)
+                  for x, y in zip(xs, ys)) / n
+        slope = min(max(cov / var_x, EXPONENT_MIN), EXPONENT_MAX)
+
+    measured = [s.measured_s for s in samples]
+    predicted = [s.predicted_s for s in samples]
+
+    def _model_mape(scale: float, exponent: float) -> float:
+        corrected = [scale * max(p, 1e-12) ** exponent for p in predicted]
+        return mape(corrected, measured)
+
+    # intercepts refit per candidate exponent: unbiased in log space
+    candidates = [
+        (math.exp(mean_y - slope * mean_x), slope),      # power law
+        (math.exp(mean_y - mean_x), 1.0),                # scale only
+        (1.0, 1.0),                                      # identity
+    ]
+    scale, exponent = min(candidates, key=lambda c: _model_mape(*c))
+
+    intercept = math.log(scale)
+    residuals = [y - (exponent * x + intercept) for x, y in zip(xs, ys)]
+    ss_res = sum(r * r for r in residuals)
+    ss_tot = sum((y - mean_y) ** 2 for y in ys)
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0
+    residual_std = math.sqrt(ss_res / n)
+
+    return FamilyFit(
+        family=family, scale=scale, exponent=exponent, n_samples=n,
+        r2=r2, residual_std=residual_std,
+        mape_uncalibrated=mape(predicted, measured),
+        mape_calibrated=_model_mape(scale, exponent))
+
+
+def group_by_family(samples: Iterable[Sample]) -> Dict[str, List[Sample]]:
+    grouped: Dict[str, List[Sample]] = {}
+    for s in samples:
+        grouped.setdefault(s.family, []).append(s)
+    return grouped
+
+
+def fit_families(samples: Iterable[Sample]) -> Dict[str, FamilyFit]:
+    """One :class:`FamilyFit` per operator family present in ``samples``."""
+    return {family: fit_family(family, group)
+            for family, group in sorted(group_by_family(samples).items())}

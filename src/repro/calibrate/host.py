@@ -1,0 +1,151 @@
+"""Host-silicon calibration: the measured-platform / measured-backend half
+of the pipeline.
+
+Where :mod:`~repro.calibrate.harness` measures individual kernels,
+this module measures the *machine* and the *engine* — the two
+calibrations benchmarks/cpu_silicon_fidelity.py and
+benchmarks/engine_calibration.py perform against the only real silicon in
+this container (the host CPU):
+
+* :func:`calibrate_cpu_platform` micro-benchmarks jit'd matmul throughput
+  and memory-stream bandwidth into a ``cpu_host`` :class:`Platform` — the
+  per-SKU hardware-spec calibration the paper runs once per GPU;
+* :func:`measure_engine_overheads` times the real continuous-batching
+  engine's per-prefill-call and per-decode-iteration wall clock, subtracts
+  the operator-modeled compute, and returns a :class:`BackendProfile`
+  with measured ``step_overhead``/``chunk_overhead`` — the
+  framework-dynamics calibration (§1, §3) operator math cannot see;
+* :func:`measure_engine_iteration` isolates the per-iteration host
+  overhead of a draining engine (the quantity
+  ``BackendProfile.step_overhead`` models).
+
+All timing goes through :func:`repro.calibrate.timers.median_time`, the
+subsystem's one timing discipline.
+
+Engine/model imports stay function-local: artifact-only consumers of
+``repro.calibrate`` never pay for them.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict
+
+from repro.calibrate.timers import median_time
+from repro.core.hardware import Platform
+
+
+def calibrate_cpu_platform() -> Platform:
+    """Measure this host's matmul throughput and stream bandwidth."""
+    import jax
+    import jax.numpy as jnp
+    mm = jax.jit(lambda a, b: a @ b)
+    a = jnp.ones((1024, 1024), jnp.float32)
+    b = jnp.ones((1024, 1024), jnp.float32)
+    t_mm = median_time(lambda: mm(a, b), reps=5, trials=3)
+    flops = 2 * 1024 ** 3 / t_mm
+    cp = jax.jit(lambda x: x * 1.0001)
+    big = jnp.ones((64, 1024, 1024), jnp.float32)
+    t_cp = median_time(lambda: cp(big), reps=5, trials=3)
+    bw = 2 * big.size * 4 / t_cp
+    return Platform(
+        name="cpu_host",
+        peak_flops_bf16=flops, peak_flops_fp8=flops,
+        hbm_bw=bw, hbm_capacity=8 * 2 ** 30,
+        link_bw=bw, links_per_axis=1, inter_pod_bw=bw,
+        launch_overhead=30e-6, hop_latency=1e-6,
+        tile_m=8, tile_n=8)          # SIMD CPU, not a 128-lane MXU
+
+
+def measure_engine_iteration(eng, cfg, osl: int = 48,
+                             n_requests: int = 4) -> Dict[str, float]:
+    """Per-iteration host overhead of a live engine: wall-clock decode
+    iterations of a draining engine minus the back-to-back jit compute.
+
+    Returns ``{"iteration_p50", "jit_compute", "host_overhead"}`` in
+    seconds.  The engine should be freshly constructed; its jits are
+    warmed here.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.serving.request import Request
+    rng = np.random.default_rng(0)
+    for i in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab_size, 8).tolist()
+        eng.add_request(Request(rid=i, isl=8, osl=osl,
+                                arrival=time.perf_counter(), prompt=prompt))
+    eng.step()                                   # warm the decode jit
+    times = []
+    while eng.sched.active:
+        t0 = time.perf_counter()
+        eng.step()
+        times.append(time.perf_counter() - t0)
+    tok = jnp.zeros((n_requests, 1), jnp.int32)
+    cache = eng.cache
+    state = {"cache": cache}
+
+    def decode_once():
+        lg, state["cache"] = eng._decode_fn(params=eng.params, token=tok,
+                                            cache=state["cache"])
+        return lg
+
+    compute = median_time(decode_once, reps=10, trials=1)
+    p50 = statistics.median(times)
+    return {"iteration_p50": p50, "jit_compute": compute,
+            "host_overhead": max(p50 - compute, 0.0)}
+
+
+def measure_engine_overheads(cfg, params, db, name: str = "repro-jax-cpu"):
+    """Measure the engine's per-prefill-call and per-decode-iteration
+    overheads and return a calibrated :class:`BackendProfile` (caller
+    registers it via ``backends.base.register`` if wanted).
+
+    This is the framework-specific-dynamics calibration the paper insists
+    must be profiled per backend: jit dispatch, host argmax sync, and the
+    engine's cache-insertion copy are all invisible to operator-level
+    math, so they are measured as residuals against the operator model.
+    """
+    import numpy as np
+    from repro.core import decompose
+    from repro.core.backends.base import BackendProfile
+    from repro.core.config import ParallelismConfig
+    from repro.serving.engine import Engine, EngineConfig
+    from repro.serving.request import Request
+    from repro.serving.sim import StepSpec
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_seq=64))
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        eng.add_request(Request(rid=i, isl=16, osl=4, arrival=0.0,
+                                prompt=rng.integers(0, cfg.vocab_size,
+                                                    16).tolist()))
+    eng.run_until_drained()                       # warm every jit
+    t_prefills, t_decodes = [], []
+    for trial in range(5):
+        t0 = time.perf_counter()
+        eng.add_request(Request(rid=50 + trial, isl=16, osl=3, arrival=t0,
+                                prompt=rng.integers(0, cfg.vocab_size,
+                                                    16).tolist()))
+        eng.step()
+        t_prefills.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        eng.step()
+        t_decodes.append(time.perf_counter() - t0)
+        eng.run_until_drained()
+    t_prefill_call = statistics.median(t_prefills)
+    t_decode_iter = statistics.median(t_decodes)
+    # subtract the operator-modeled compute to isolate overheads
+    par = ParallelismConfig(tp=1)
+    comp_prefill = db.sequence_latency(decompose.iteration_ops(
+        cfg, par, StepSpec(prefill=((16, 0),), decode=()), dtype="fp32"))
+    comp_decode = db.sequence_latency(decompose.iteration_ops(
+        cfg, par, StepSpec(prefill=(), decode=(17, 17)), dtype="fp32"))
+    return BackendProfile(
+        name=name,
+        step_overhead=max(t_decode_iter - comp_decode, 1e-4),
+        chunk_overhead=max(t_prefill_call - comp_prefill, 1e-3),
+        runtime_mem_overhead=0.04,
+        default_max_num_tokens=8192,
+        graph_capture_saving=0.0,
+        f_corr_base=1.0,
+        sequential_prefill=True,
+        launcher="python -m repro.launch.serve")

@@ -1,0 +1,44 @@
+"""Contrib backend plugins — out-of-tree-style profiles that are NOT part
+of the builtin registry.
+
+This module is the reference for how a third-party serving engine joins
+the configurator: import it (nothing else), and ``@register_backend``
+puts a lazily-resolved factory in the registry with an explicit,
+restricted capability set the Configurator gates workloads against.  The
+builtin loader never imports this module, so ``disagg-router`` only
+exists for processes that opted in — exactly the plugin contract.
+
+    import repro.core.backends.contrib  # noqa: F401  (registers)
+
+    Configurator.for_model(...).backend("disagg-router") \\
+        .modes("disaggregated")        # ok
+        .modes("aggregated")           # ValueError: capability gated
+"""
+from __future__ import annotations
+
+from repro.core.backends.base import BackendProfile, register_backend
+
+
+@register_backend("disagg-router", capabilities=("disaggregated",))
+def _disagg_router() -> BackendProfile:
+    """A prefill/decode-disaggregated router deployment: requests always
+    cross a router hop into separate pools, so there is no aggregated or
+    static mode to declare — only ``disaggregated``.  The router adds a
+    fixed per-iteration dispatch cost on top of an otherwise TRT-class
+    C++ data plane."""
+    return BackendProfile(
+        name="disagg-router",
+        step_overhead=45e-6,           # C++ pool step + router dispatch
+        chunk_overhead=20e-6,
+        runtime_mem_overhead=0.07,     # router buffers + engine workspace
+        default_max_num_tokens=16384,  # prefill pools batch aggressively
+        graph_capture_saving=0.75,
+        f_corr_base=1.8,               # admission queue ahead of prefill
+        flags={
+            "max_num_tokens": "--max-pool-tokens",
+            "kv_cache_mem_fraction": "--kv-cache-fraction",
+            "enable_chunked_context": "--chunked-prefill",
+            "enable_graph_capture": "--decode-graphs",
+        },
+        launcher="python -m disagg_router.serve",
+    )

@@ -8,6 +8,11 @@ The paper's user workflow (Fig. 2) as subcommands:
     python -m repro.core.cli compare  --model qwen3-32b --chips 16 \\
         --shapes 4000:200:60,512:1024:30
     python -m repro.core.cli list     backends
+    python -m repro.core.cli calibrate run --timer deterministic \\
+        --out cal.json
+    python -m repro.core.cli calibrate report --artifact cal.json
+    python -m repro.core.cli calibrate apply  --artifact cal.json \\
+        --model qwen3-32b --isl 4000 --osl 500
 
 Every subcommand accepts ``--json`` to emit machine-readable output
 (``search --json`` prints the schema-versioned SearchReport) on stdout,
@@ -43,7 +48,7 @@ EXIT_OK = 0
 EXIT_NO_CONFIG = 1
 EXIT_USAGE = 2
 
-_SUBCOMMANDS = ("search", "generate", "compare", "list")
+_SUBCOMMANDS = ("search", "generate", "compare", "list", "calibrate")
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +301,96 @@ def cmd_compare(args) -> int:
 
 
 # ---------------------------------------------------------------------------
+# calibrate
+# ---------------------------------------------------------------------------
+
+def cmd_calibrate_run(args) -> int:
+    """Measure kernels, fit per-family corrections, write the artifact."""
+    from repro.calibrate import (accuracy_report, format_accuracy,
+                                 make_timer, run_calibration)
+    created_at = args.timestamp
+    if not created_at:
+        import datetime
+        created_at = datetime.datetime.now(datetime.timezone.utc) \
+            .isoformat(timespec="seconds")
+    families = args.families.split(",") if args.families else None
+    art = run_calibration(
+        platform=args.platform, backend=args.backend,
+        timer=make_timer(args.timer, args.platform),
+        created_at=created_at, points_per_axis=args.points,
+        families=families, notes=args.notes)
+    art.save(args.out)
+    report = accuracy_report(art)
+    if args.json:
+        print(json.dumps({"artifact": args.out, "report": report}, indent=2))
+    else:
+        print(format_accuracy(report))
+        print(f"calibration artifact -> {args.out}")
+    return EXIT_OK
+
+
+def cmd_calibrate_report(args) -> int:
+    """Audit an artifact: per-family MAPE, calibrated vs uncalibrated."""
+    from repro.calibrate import (CalibrationArtifact, accuracy_report,
+                                 format_accuracy)
+    report = accuracy_report(CalibrationArtifact.load(args.artifact))
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        print(format_accuracy(report))
+    return EXIT_OK
+
+
+def cmd_calibrate_apply(args) -> int:
+    """Load an artifact into a PerfDatabase; with a workload, run the
+    calibrated search — without one, print the calibrated fingerprint."""
+    from repro.calibrate import CalibrationArtifact
+    art = CalibrationArtifact.load(args.artifact)
+    workload_args = (args.model, args.isl, args.osl)
+    if any(a is not None for a in workload_args) \
+            and not all(a is not None for a in workload_args):
+        print("error: calibrate apply needs all of --model/--isl/--osl "
+              "for a calibrated search (or none, to print the calibrated "
+              "fingerprint)", file=sys.stderr)
+        return EXIT_USAGE
+    if args.model is not None:
+        # the apply parser defaults platform/backend to None (sentinel):
+        # any explicitly passed value that mismatches the artifact earns
+        # a note before the artifact's calibrated pair wins
+        explicit = [(flag, got) for flag, got, want in
+                    (("--platform", args.platform, art.platform),
+                     ("--backend", args.backend, art.backend))
+                    if got is not None and got != want]
+        if explicit:
+            print(f"note: using the artifact's calibrated pair "
+                  f"({art.platform}, {art.backend}); ignoring "
+                  + ", ".join(f"{f} {g}" for f, g in explicit),
+                  file=sys.stderr)
+        args.platform = art.platform
+        args.backend = art.backend
+        cfg = _configurator(args).with_calibration(art)
+        report = cfg.search(policies=_search_policies(args))
+        if args.save_report:
+            report.save(args.save_report)
+        if args.json:
+            print(report.to_json())
+        else:
+            print(report.summary())
+            fp = report.fingerprint or {}
+            print(f"calibration: {json.dumps(fp.get('calibration'))}")
+        return EXIT_OK if report.best is not None else EXIT_NO_CONFIG
+    from repro.core.perf_database import PerfDatabase
+    db = PerfDatabase(art.platform, art.backend, calibration=art)
+    fp = db.fingerprint()
+    if args.json:
+        print(json.dumps(fp, indent=2))
+    else:
+        print(f"calibrated PerfDatabase ({art.platform}, {art.backend}):")
+        print(json.dumps(fp, indent=2))
+    return EXIT_OK
+
+
+# ---------------------------------------------------------------------------
 # list
 # ---------------------------------------------------------------------------
 
@@ -366,6 +461,48 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="comma list of isl:osl[:min_speed]")
     cp.add_argument("--json", action="store_true")
     cp.set_defaults(func=cmd_compare)
+
+    cal = sub.add_parser(
+        "calibrate",
+        help="measured-kernel calibration: run | apply | report")
+    calsub = cal.add_subparsers(dest="action")
+
+    cr = calsub.add_parser("run", help="measure kernels and fit corrections")
+    cr.add_argument("--platform", default="tpu_v5e",
+                    help=f"one of {', '.join(sorted(PLATFORMS))}")
+    cr.add_argument("--backend", default="repro-jax")
+    cr.add_argument("--timer", default="deterministic",
+                    choices=["deterministic", "wallclock"],
+                    help="deterministic: CI-reproducible analytical-skew "
+                         "timer; wallclock: execute the real kernels "
+                         "(interpret mode on CPU, compiled on TPU)")
+    cr.add_argument("--points", type=int, default=3,
+                    help="measurement points per grid axis")
+    cr.add_argument("--families", default="",
+                    help="comma list (default: all measured families)")
+    cr.add_argument("--out", required=True,
+                    help="write the calibration artifact JSON here")
+    cr.add_argument("--timestamp", default="",
+                    help="ISO-8601 provenance timestamp (default: now UTC)")
+    cr.add_argument("--notes", default="")
+    cr.add_argument("--json", action="store_true")
+    cr.set_defaults(func=cmd_calibrate_run)
+
+    ca = calsub.add_parser(
+        "apply", help="search through a calibrated PerfDatabase")
+    ca.add_argument("--artifact", required=True)
+    ca.add_argument("--save-report", default="")
+    ca.add_argument("--json", action="store_true")
+    _add_workload_args(ca, required=False)
+    # sentinel defaults: the artifact supplies the calibrated pair, and
+    # an EXPLICIT mismatching flag is detectable (and warned about)
+    ca.set_defaults(func=cmd_calibrate_apply, platform=None, backend=None)
+
+    crep = calsub.add_parser(
+        "report", help="per-family accuracy audit of an artifact")
+    crep.add_argument("--artifact", required=True)
+    crep.add_argument("--json", action="store_true")
+    crep.set_defaults(func=cmd_calibrate_report)
 
     lp = sub.add_parser("list", help="enumerate models/backends/platforms")
     lp.add_argument("what", nargs="?", default="all",

@@ -131,21 +131,34 @@ def disaggregated_mode(prefill_cands: Sequence[PoolCandidate],
                        x_range: Tuple[int, int] = (1, 32),
                        y_range: Tuple[int, int] = (1, 64),
                        beta_ttft: float = BETA_TTFT,
-                       keep_all: bool = False):
+                       keep_all: bool = False,
+                       progress_cb: Optional[Callable[[int], bool]] = None):
     """Rate matching over (x)P(y)D composites.  Returns (best, all) where
-    all is populated when keep_all (for Pareto plots)."""
+    all is populated when keep_all (for Pareto plots).
+
+    ``progress_cb`` (streaming early exit) is consulted with the number of
+    composites evaluated so far, once per (decode, prefill, x) slice; a
+    True return preempts the matching and the best composite found so far
+    is returned.  The full grid can be hundreds of thousands of
+    composites, so without this hook a ``deadline_s`` policy could not
+    bound disaggregated search cost.
+    """
     valid = set(valid_totals)
     cp = [c for c in prefill_cands if c.latency_ms * beta_ttft <= ttft_limit_ms]
     cd = [c for c in decode_cands if c.latency_ms <= tpot_limit_ms]
     best: Optional[DisaggBest] = None
     everything: List[DisaggBest] = []
+    n_seen = 0
     for dec in cd:
         for pre in cp:
             for x in range(x_range[0], x_range[1] + 1):
+                if progress_cb is not None and progress_cb(n_seen):
+                    return best, everything
                 g_pre = x * pre.chips
                 if g_pre > max(valid):
                     break
                 for y in range(y_range[0], y_range[1] + 1):
+                    n_seen += 1
                     g_total = g_pre + y * dec.chips
                     if g_total not in valid:
                         if g_total > max(valid):

@@ -191,3 +191,25 @@ class MemOp:
 
 
 Operator = object  # GEMM | Attention | MoEOp | RecurrentOp | Comm | Embedding | MemOp
+
+
+def op_family(op) -> str:
+    """Calibration family of an operator: the granularity at which measured
+    corrections are fitted and applied (repro.calibrate).  Attention splits
+    by phase because prefill (compute-bound flash) and decode (memory-bound
+    cache streaming) sit on different efficiency curves."""
+    if isinstance(op, GEMM):
+        return "gemm"
+    if isinstance(op, Attention):
+        return "attn_prefill" if op.phase == "prefill" else "attn_decode"
+    if isinstance(op, MoEOp):
+        return "moe"
+    if isinstance(op, RecurrentOp):
+        return "recurrent"
+    if isinstance(op, Comm):
+        return "comm"
+    if isinstance(op, Embedding):
+        return "embedding"
+    if isinstance(op, MemOp):
+        return "mem"
+    return "other"

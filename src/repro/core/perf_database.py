@@ -108,10 +108,18 @@ class DatabaseStats:
 
 
 class PerfDatabase:
-    """Operator latency oracle for one (platform, backend)."""
+    """Operator latency oracle for one (platform, backend).
+
+    When a calibration artifact (repro.calibrate) is applied, grid-backed
+    queries pass through a per-operator-family correction layer
+    (``corrected = scale · analytical^exponent``, fitted from measured
+    kernel runs) — the grids themselves stay analytical so corrections are
+    swappable, and the active calibration is part of ``fingerprint()``.
+    """
 
     def __init__(self, platform: str | Platform = "tpu_v5e",
-                 backend: str = "repro-jax", use_grid: bool = True):
+                 backend: str = "repro-jax", use_grid: bool = True,
+                 calibration=None):
         self.platform = (platform if isinstance(platform, Platform)
                          else get_platform(platform))
         self.backend = backend
@@ -119,9 +127,13 @@ class PerfDatabase:
         self._grids: Dict[Tuple, OpGrid] = {}
         self._memo: Dict = {}
         self._seq_memo: Dict[Tuple, float] = {}
+        self._corrections: Dict[str, Tuple[float, float]] = {}
+        self._calibration_id: Optional[Dict] = None
         self.stats = DatabaseStats()
         if use_grid:
             self._collect_static()
+        if calibration is not None:
+            self.apply_calibration(calibration)
 
     # -- offline collection -------------------------------------------------
     def _measure(self, op) -> float:
@@ -186,6 +198,41 @@ class PerfDatabase:
             self.stats.grids_built += 1
         return self._grids[key]
 
+    # -- calibration ---------------------------------------------------------
+    def apply_calibration(self, artifact) -> "PerfDatabase":
+        """Install a measured-kernel correction layer (a
+        :class:`repro.calibrate.CalibrationArtifact` or any object exposing
+        ``platform``/``backend``/``corrections()``/``identity()``).
+
+        The artifact must have been calibrated for this database's
+        (platform, backend) — silently applying foreign silicon's
+        corrections would defeat the provenance the artifact exists for.
+        Memoized latencies are invalidated because every grid-backed
+        answer changes.
+        """
+        if artifact.platform != self.platform.name \
+                or artifact.backend != self.backend:
+            raise ValueError(
+                f"calibration artifact is for "
+                f"({artifact.platform}, {artifact.backend}); this database "
+                f"is ({self.platform.name}, {self.backend})")
+        self._corrections = dict(artifact.corrections())
+        self._calibration_id = artifact.identity()
+        self._memo.clear()
+        self._seq_memo.clear()
+        return self
+
+    def load_calibration(self, path: str) -> "PerfDatabase":
+        from repro.calibrate.artifact import CalibrationArtifact
+        return self.apply_calibration(CalibrationArtifact.load(path))
+
+    def _correct(self, family: str, t: float) -> float:
+        c = self._corrections.get(family)
+        if c is None:
+            return t
+        scale, exponent = c
+        return scale * max(t, 1e-12) ** exponent
+
     # -- queries -------------------------------------------------------------
     def op_latency(self, op) -> float:
         try:
@@ -204,39 +251,53 @@ class PerfDatabase:
             self.stats.sol_fallbacks += 1
             return analytical.sol_latency(self.platform, op)
 
+        # grid-backed paths apply the calibration correction to the grid
+        # value itself (the quantity the measurement harness sampled:
+        # prefill attention and recurrence are measured per batch row, so
+        # the batch fold multiplies the corrected cell); family names come
+        # from ops.op_family, the one mapping the calibration pipeline
+        # fits and keys corrections by
         if isinstance(op, ops.GEMM):
             g = self._grids.get(("gemm", op.dtype))
             if g is None:
                 self.stats.sol_fallbacks += 1
                 return analytical.sol_latency(self.platform, op)
             self.stats.grid_hits += 1
-            return g.query((op.m, op.n, op.k))
+            return self._correct(ops.op_family(op),
+                                 g.query((op.m, op.n, op.k)))
 
         if isinstance(op, ops.Attention):
             grid = self._attn_grid(op)
             self.stats.grid_hits += 1
             kv = op.effective_kv()
+            family = ops.op_family(op)
             if op.phase == "prefill":
                 # batch folds linearly (flash tiles over batch)
-                return op.batch * grid.query((op.q_len, max(kv, 1)))
-            return grid.query((op.batch, max(kv, 1)))
+                return op.batch * self._correct(
+                    family, grid.query((op.q_len, max(kv, 1))))
+            return self._correct(
+                family, grid.query((op.batch, max(kv, 1))))
 
         if isinstance(op, ops.MoEOp):
             grid = self._moe_grid(op)
             self.stats.grid_hits += 1
-            return grid.query((max(op.rank_tokens(), 1),))
+            return self._correct(
+                ops.op_family(op), grid.query((max(op.rank_tokens(), 1),)))
 
         if isinstance(op, ops.RecurrentOp):
             grid = self._rec_grid(op)
             self.stats.grid_hits += 1
-            return op.batch * grid.query((max(op.seq, 1),))
+            return op.batch * self._correct(
+                ops.op_family(op), grid.query((max(op.seq, 1),)))
 
         if isinstance(op, ops.Comm):
             if op.n_chips <= 1:
                 return 0.0
             grid = self._comm_grid(op.kind, op.n_chips, op.inter_pod)
             self.stats.grid_hits += 1
-            return grid.query((max(op.bytes_per_chip, 1.0),))
+            return self._correct(
+                ops.op_family(op),
+                grid.query((max(op.bytes_per_chip, 1.0),)))
 
         # embedding / mem ops: speed-of-light path (paper: unprofiled ops)
         self.stats.sol_fallbacks += 1
@@ -294,7 +355,8 @@ class PerfDatabase:
             h.update(np.ascontiguousarray(g.table).tobytes())
         return {"platform": self.platform.name, "backend": self.backend,
                 "n_grids": len(self._grids),
-                "grid_hash": h.hexdigest()[:16]}
+                "grid_hash": h.hexdigest()[:16],
+                "calibration": self._calibration_id}
 
     # -- persistence ----------------------------------------------------------
     def save(self, path: Optional[str] = None) -> str:
@@ -305,6 +367,9 @@ class PerfDatabase:
         blob = {"platform": self.platform.name, "backend": self.backend,
                 "grids": {json.dumps(k): g.to_json()
                           for k, g in self._grids.items()}}
+        if self._corrections:
+            blob["calibration"] = {"corrections": self._corrections,
+                                   "identity": self._calibration_id}
         with open(path, "w") as f:
             json.dump(blob, f)
         return path
@@ -317,4 +382,9 @@ class PerfDatabase:
         db.use_grid = True
         db._grids = {tuple(json.loads(k)): OpGrid.from_json(g)
                      for k, g in blob["grids"].items()}
+        cal = blob.get("calibration")
+        if cal:
+            db._corrections = {f: tuple(c)
+                               for f, c in cal["corrections"].items()}
+            db._calibration_id = cal["identity"]
         return db

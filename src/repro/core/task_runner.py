@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 from repro.core import modes, pareto
 from repro.core.config import (CandidateConfig, DisaggConfig,
@@ -33,11 +33,21 @@ class SearchProgress:
     """Mutable side-channel a streaming consumer shares with
     :meth:`TaskRunner.iter_search` — candidates priced so far (including
     OOM/invalid ones that yield nothing) and the disaggregated solution
-    once that phase has run."""
+    once that phase has run.
+
+    ``abort`` is the out-of-band early-exit hook: when set (streaming
+    search installs its elapsed-based policy check), it is consulted
+    during the long non-yielding disaggregated phase — once per pool
+    candidate priced and once per (decode, prefill, x) matching slice —
+    and a True return preempts the phase, leaving the best-so-far
+    composite and ``disagg_preempted`` set."""
     n_evaluated: int = 0
     n_yielded: int = 0
     disagg_best: Optional[modes.DisaggBest] = None
     disagg_done: bool = False
+    abort: Optional[Callable[[], bool]] = None
+    disagg_pool_evaluated: int = 0
+    disagg_preempted: bool = False
 
 
 @dataclasses.dataclass
@@ -149,8 +159,8 @@ class TaskRunner:
                         yield cand, p
 
         if "disaggregated" in self.w.modes:
-            disagg_best, disagg_all = self._run_disagg(keep_all_disagg)
-            progress.n_evaluated += len(disagg_all) if disagg_all else 0
+            disagg_best, disagg_all = self._run_disagg(keep_all_disagg,
+                                                       progress)
             progress.disagg_best = disagg_best
             progress.disagg_done = True
             if disagg_best:
@@ -189,25 +199,50 @@ class TaskRunner:
             disagg_best=progress.disagg_best)
 
     # ------------------------------------------------------------------
-    def _run_disagg(self, keep_all: bool):
+    def _run_disagg(self, keep_all: bool,
+                    progress: Optional[SearchProgress] = None):
         # prefill pool: small batches, TP-heavy; decode pool: big batches
+        progress = progress if progress is not None else SearchProgress()
+
+        def _abort() -> bool:
+            if progress.abort is not None and progress.abort():
+                progress.disagg_preempted = True
+                return True
+            return False
+
         pre_pool, dec_pool = [], []
         for par in self.parallelism_candidates():
             for b in (1, 2, 4, 8):
+                if _abort():
+                    break
                 c = self.session.prefill_pool_candidate(
                     CandidateConfig(parallel=par, batch_size=b))
+                progress.n_evaluated += 1
+                progress.disagg_pool_evaluated += 1
                 if c:
                     pre_pool.append(c)
             for b in BATCH_SWEEP:
+                if _abort():
+                    break
                 c = self.session.decode_pool_candidate(
                     CandidateConfig(parallel=par, batch_size=b))
+                progress.n_evaluated += 1
+                progress.disagg_pool_evaluated += 1
                 if c:
                     dec_pool.append(c)
+            if progress.disagg_preempted:
+                break
+        if progress.disagg_preempted:
+            # the deadline already elapsed mid-pool-pricing; matching
+            # would be aborted by its progress_cb on the first slice
+            return None, []
         best, everything = modes.disaggregated_mode(
             pre_pool, dec_pool,
             self.w.sla.ttft_ms, self.w.sla.tpot_limit_ms(),
             valid_totals=range(1, self.w.cluster.n_chips + 1),
-            osl=self.w.osl, keep_all=keep_all)
+            osl=self.w.osl, keep_all=keep_all,
+            progress_cb=(lambda _n: _abort()) if progress.abort is not None
+            else None)
         return best, everything
 
     def _disagg_projection(self, d: modes.DisaggBest) -> Projection:

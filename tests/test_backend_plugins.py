@@ -1,0 +1,68 @@
+"""Third-party backend plugin path: the contrib ``disagg-router`` profile
+registers lazily through ``@register_backend`` and its restricted
+capability set gates workloads end to end."""
+import importlib
+import sys
+
+import pytest
+
+from repro.api import Configurator
+from repro.core.backends.base import (all_backends, backend_capabilities,
+                                      get_backend, unregister_backend)
+
+
+@pytest.fixture()
+def contrib():
+    """Import (= register) the contrib plugin; fully unwind afterwards so
+    the shared registry never leaks into other tests."""
+    mod = importlib.import_module("repro.core.backends.contrib")
+    yield mod
+    unregister_backend("disagg-router")
+    sys.modules.pop("repro.core.backends.contrib", None)
+
+
+def _configurator():
+    return (Configurator.for_model("llama3.1-8b")
+            .traffic(isl=256, osl=64)
+            .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+            .cluster(chips=8))
+
+
+def test_import_registers_lazily(contrib):
+    assert "disagg-router" in all_backends()
+    prof = get_backend("disagg-router")          # factory resolved here
+    assert prof.name == "disagg-router"
+    assert prof.capabilities == frozenset({"disaggregated"})
+    assert get_backend("disagg-router") is prof  # resolved once, cached
+
+
+def test_not_registered_without_import():
+    # builtin loading must NOT drag the contrib module in
+    if "repro.core.backends.contrib" not in sys.modules:
+        assert "disagg-router" not in all_backends()
+
+
+def test_capability_gating_rejects_unsupported_modes(contrib):
+    c = _configurator().backend("disagg-router")
+    for mode in ("aggregated", "static"):
+        with pytest.raises(ValueError, match="does not support"):
+            c.modes(mode).workload()
+    with pytest.raises(ValueError, match="does not support"):
+        c.modes("aggregated", "disaggregated").workload()
+
+
+def test_capability_gating_rejects_speculative(contrib):
+    c = (_configurator().backend("disagg-router").modes("disaggregated"))
+    with pytest.raises(ValueError, match="speculative"):
+        c.speculative("internlm2-1.8b")
+
+
+def test_supported_mode_searches_end_to_end(contrib):
+    assert backend_capabilities("disagg-router") == \
+        frozenset({"disaggregated"})
+    c = _configurator().backend("disagg-router").modes("disaggregated")
+    w = c.workload()
+    assert w.modes == ("disaggregated",)
+    report = c.search(generate_launch=False)
+    assert report.n_candidates > 0
+    assert all(p.mode == "disaggregated" for p in report.projections)

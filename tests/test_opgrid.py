@@ -60,3 +60,45 @@ def test_json_roundtrip():
     g2 = OpGrid.from_json(grid.to_json())
     assert g2.query((3.3, 300.0)) == pytest.approx(grid.query((3.3, 300.0)),
                                                    rel=1e-12)
+
+
+def test_json_roundtrip_equality():
+    """Round-trip preserves axes and table EXACTLY, not just query-close:
+    the calibration artifact's losslessness rides on this."""
+    grid, _ = _mono_grid()
+    blob = grid.to_json()
+    g2 = OpGrid.from_json(blob)
+    assert len(g2.axes) == len(grid.axes)
+    for a, b in zip(g2.axes, grid.axes):
+        assert np.array_equal(a, b)
+    assert np.array_equal(g2.table, grid.table)
+    assert g2.to_json() == blob                  # fixed point
+
+
+def test_edge_clamping_at_axis_boundaries():
+    """Queries beyond an axis clamp to the boundary cell exactly."""
+    grid, axes = _mono_grid()
+    lo_corner = grid.table[0, 0]
+    hi_corner = grid.table[-1, -1]
+    assert grid.query((0.01, 1.0)) == pytest.approx(lo_corner, rel=1e-9)
+    assert grid.query((1e6, 1e9)) == pytest.approx(hi_corner, rel=1e-9)
+    # clamping is per-axis: one coordinate out, the other interpolates
+    mixed = grid.query((0.01, 300.0))
+    assert mixed == pytest.approx(grid.query((axes[0][0], 300.0)), rel=1e-9)
+    mixed = grid.query((3.0, 1e9))
+    assert mixed == pytest.approx(grid.query((3.0, axes[1][-1])), rel=1e-9)
+
+
+def test_exact_on_grid_hits_1d_and_3d():
+    """Grid hits are exact for any dimensionality, not just the 2-D case."""
+    ax1 = [1, 4, 16, 64]
+    g1 = OpGrid.build((ax1,), lambda x: 3e-6 * x + 1e-6)
+    for x in ax1:
+        assert g1.query((x,)) == pytest.approx(3e-6 * x + 1e-6, rel=1e-9)
+    ax3 = ([1, 8, 64], [128, 512], [256, 1024])
+    g3 = OpGrid.build(ax3, lambda m, n, k: 1e-9 * m * n + 1e-8 * k)
+    for m in ax3[0]:
+        for n in ax3[1]:
+            for k in ax3[2]:
+                assert g3.query((m, n, k)) == pytest.approx(
+                    1e-9 * m * n + 1e-8 * k, rel=1e-9)

@@ -123,6 +123,42 @@ def test_deadline_policy_stops_stream():
     assert len(report.projections) == 1
 
 
+def test_deadline_preempts_disaggregated_mid_match():
+    """The disaggregated phase prices its whole pool grid before the first
+    composite yields; deadline_s must preempt it out-of-band (the
+    check_elapsed hook threaded through SearchProgress.abort), not wait
+    for a yield that may never come."""
+    full = _small_configurator(modes=("disaggregated",)) \
+        .search(generate_launch=False)
+    assert full.n_candidates > 0 and full.early_exit is None
+
+    # a deadline this short has always elapsed by the first out-of-band
+    # check, so preemption deterministically lands in pool pricing
+    c = _small_configurator(modes=("disaggregated",))
+    stream = c.search_iter(policies=[deadline_s(1e-7)])
+    list(stream)
+    report = stream.report(generate_launch=False)
+    assert report.early_exit is not None
+    assert report.early_exit["reason"].startswith("deadline_s")
+    assert report.early_exit["phase"] == "disaggregated"
+    # strictly fewer pool candidates priced than the full match
+    assert report.n_candidates < full.n_candidates
+
+
+def test_disagg_pool_pricing_reports_progress():
+    w = WorkloadDescriptor(
+        model="llama3.1-8b", isl=256, osl=64,
+        sla=SLA(ttft_ms=2000, min_tokens_per_s_user=10),
+        cluster=ClusterSpec(n_chips=8), backend="repro-jax", dtype="fp8",
+        modes=("disaggregated",))
+    runner = TaskRunner(w, PerfDatabase("tpu_v5e", "repro-jax"))
+    progress = SearchProgress()
+    list(runner.iter_search(progress=progress))
+    assert progress.disagg_done and not progress.disagg_preempted
+    assert progress.disagg_pool_evaluated > 0
+    assert progress.n_evaluated == progress.disagg_pool_evaluated
+
+
 def test_callback_policy_sees_every_event_and_can_stop():
     seen = []
 
