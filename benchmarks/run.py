@@ -20,7 +20,7 @@ from benchmarks import (ablation_sol, cpu_silicon_fidelity,
                         engine_calibration, fig1_pareto, fig5_powerlaw,
                         fig6_fidelity, fig7_disagg_fidelity, roofline,
                         spec_decode, table1_search_efficiency,
-                        table2_case_study)
+                        table2_case_study, workload_goodput)
 
 BENCHES = [
     ("table1_search_efficiency", table1_search_efficiency.run,
@@ -48,6 +48,9 @@ BENCHES = [
     ("ablation_calibrated_vs_sol", ablation_sol.run,
      lambda r: f"step_margin={r.get('step_ratio_calibrated', 0):.2f}x"
                f";sol_check={r.get('step_ratio_sol', 0):.2f}x"),
+    ("workload_goodput_rerank", workload_goodput.run,
+     lambda r: f"reranked={r.get('n_reranked', 0)}"
+               f"/{r.get('n_points', 0)}"),
 ]
 
 

@@ -1,0 +1,74 @@
+"""Dynamic-workload evaluation: the analytical ranking is not the
+production ranking.
+
+    PYTHONPATH=src python examples/workload_replay.py
+
+A seeded bursty multi-tenant trace is replayed against the analytical
+frontier's top candidates through the open-loop discrete-event
+simulator, where queueing delay counts into TTFT.  Under the
+tail-latency SLO the goodput ordering can differ from the static
+tok/s/chip ordering — that difference is exactly what the schema-v3
+``workload_eval`` section of the SearchReport records, and this script
+asserts it end-to-end (including the v3 JSON round-trip).
+"""
+import _bootstrap  # noqa: F401
+
+from repro.api import Configurator, SearchReport
+from repro.workloads import (ArrivalSpec, LengthSpec, SLOSpec, TenantSpec,
+                             TraceSpec, generate_trace)
+
+
+def main():
+    # a bursty two-tenant workload: interactive chat (priority) over a
+    # background batch tenant with longer prompts
+    spec = TraceSpec(
+        n_requests=80,
+        arrivals=ArrivalSpec(kind="bursty", rate_rps=6.0, burst_factor=4.0),
+        tenants=(
+            TenantSpec(name="chat", weight=0.7, priority=1,
+                       lengths=LengthSpec(kind="lognormal", isl=256, osl=64)),
+            TenantSpec(name="batch", weight=0.3,
+                       lengths=LengthSpec(kind="lognormal", isl=512,
+                                          osl=128)),
+        ))
+    trace = generate_trace(spec, seed=3)
+    print(f"trace: {trace.n_requests} requests over "
+          f"{trace.duration_s:.1f}s, tenants {trace.tenants}, "
+          f"digest {trace.digest()}")
+
+    slo = SLOSpec(ttft_p99_ms=1500, tpot_p99_ms=60)
+    cfg = (Configurator.for_model("llama3.1-8b")
+           .traffic(isl=256, osl=64)
+           .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+           .cluster(chips=8, platform="tpu_v5e")
+           .dtype("fp8")
+           .modes("aggregated"))
+
+    report = cfg.evaluate_frontier(trace, slo, top_k=3)
+    we = report.workload_eval
+
+    print("\nanalytical (static) order vs goodput-under-SLO order:")
+    by_index = {c["index"]: c for c in we["candidates"]}
+    for rank, idx in enumerate(we["ranking"]):
+        c = by_index[idx]
+        r = c["replay"]
+        print(f"  goodput #{rank + 1}  {c['describe']:14s} "
+              f"{r['goodput_tok_s']:8.1f} tok/s  "
+              f"attainment {100 * r['slo_attainment']:5.1f}%  "
+              f"p99 TTFT {r['ttft_ms']['p99']:7.1f}ms  "
+              f"(analytical #{c['analytical_rank'] + 1})")
+
+    # the headline property: replay re-ranks the frontier
+    assert we["reranked"], \
+        "expected the goodput ranking to differ from the analytical one"
+    print("\nre-ranked: the static winner is not the goodput winner")
+
+    # and the v3 report round-trips with the workload section intact
+    back = SearchReport.from_json(report.to_json())
+    assert back == report and back.workload_eval == we
+    print(f"SearchReport v{report.schema_version} round-trip OK "
+          f"(workload_eval preserved)")
+
+
+if __name__ == "__main__":
+    main()

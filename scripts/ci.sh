@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 CI: fast suite, slow suite, CLI JSON smoke test, streaming smoke.
+# Tier-1 CI: fast suite, slow suite, CLI JSON smoke test, streaming smoke,
+# calibration smoke, workload-trace smoke.
 # Run from the repo root: bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -21,7 +22,7 @@ report = json.load(sys.stdin)
 version = report["schema_version"]
 n_projections = len(report["projections"])
 best_index = report["best"]
-assert version == 2, version
+assert version == 3, version
 assert n_projections > 0, "search produced no projections"
 assert report["database"]["platform"] == "tpu_v5e", report["database"]
 assert len(report["memory"]["per_candidate_bytes_per_chip"]) \
@@ -103,5 +104,44 @@ print(f"ok: {overall['n_samples']} samples, MAPE "
       f"(digest {art.digest()})")
 PY
 rm -rf "$cal_dir"
+
+echo "=== smoke: workload generate -> replay emits finite goodput ==="
+# Tiny seeded trace: generation must be digest-stable across runs, and
+# an open-loop replay must produce finite goodput/attainment.
+wl_dir=$(mktemp -d)
+PYTHONPATH=src python -m repro.core.cli workload generate \
+    --arrivals bursty --rate 4 --n 24 --lengths lognormal \
+    --isl 128 --osl 32 --tenants "chat:0.7:1,batch:0.3" --seed 7 \
+    --out "$wl_dir/trace.jsonl" --json > "$wl_dir/gen1.json"
+PYTHONPATH=src python -m repro.core.cli workload generate \
+    --arrivals bursty --rate 4 --n 24 --lengths lognormal \
+    --isl 128 --osl 32 --tenants "chat:0.7:1,batch:0.3" --seed 7 \
+    --out "$wl_dir/trace2.jsonl" --json > "$wl_dir/gen2.json"
+PYTHONPATH=src python -m repro.core.cli workload replay \
+    --trace "$wl_dir/trace.jsonl" --model llama3.1-8b --tp 2 --batch 32 \
+    --dtype fp8 --slo-ttft-p99 2000 --slo-tpot-p99 100 --json \
+  > "$wl_dir/replay.json"
+PYTHONPATH=src python - "$wl_dir" <<'PY'
+import json
+import math
+import sys
+
+wl_dir = sys.argv[1]
+gen1 = json.load(open(f"{wl_dir}/gen1.json"))
+gen2 = json.load(open(f"{wl_dir}/gen2.json"))
+digest = gen1["describe"]["digest"]
+assert digest == gen2["describe"]["digest"], "trace digest is not stable"
+replay = json.load(open(f"{wl_dir}/replay.json"))
+assert replay["trace"]["digest"] == digest, "replay saw a different trace"
+m = replay["metrics"]
+assert m["completed"] + m["rejected"] + m["unfinished"] == 24, m
+assert math.isfinite(m["goodput_tok_s"]), m["goodput_tok_s"]
+assert math.isfinite(m["throughput_tok_s"]), m["throughput_tok_s"]
+assert 0.0 <= m["slo_attainment"] <= 1.0, m["slo_attainment"]
+print(f"ok: trace {digest}, {m['completed']} completed, goodput "
+      f"{m['goodput_tok_s']:.1f} tok/s at "
+      f"{100 * m['slo_attainment']:.0f}% attainment")
+PY
+rm -rf "$wl_dir"
 
 echo "=== ci passed ==="

@@ -56,6 +56,18 @@ then records exactly which calibration priced the search::
 
     report = cfg.with_calibration("cal.json").search()
     report.fingerprint["calibration"]["digest"]
+
+Dynamic workloads (``repro.workloads``, docs/workloads.md): replay the
+analytical frontier under a seeded trace and re-rank by goodput under a
+tail-latency SLO — recorded in the schema-v3 ``workload_eval`` section::
+
+    from repro.workloads import SLOSpec
+
+    report = cfg.evaluate_frontier("trace.jsonl",
+                                   SLOSpec(ttft_p99_ms=2000,
+                                           tpot_p99_ms=80), top_k=3)
+    report.workload_eval["ranking"]     # goodput order, with replay
+                                        # percentiles per candidate
 """
 from repro.api.configurator import Comparison, Configurator, StreamingSearch
 from repro.api.policies import (SearchEvent, callback, deadline_s,

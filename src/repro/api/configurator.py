@@ -297,6 +297,45 @@ class Configurator:
         return est.best_gamma(par, batch=best.batch_size,
                               acceptance=acceptance, max_gamma=max_gamma)
 
+    def evaluate_frontier(self, trace, slo, top_k: int = 5,
+                          report: Optional[SearchReport] = None,
+                          max_steps: int = 200_000) -> SearchReport:
+        """Replay the analytical frontier's top-K candidates under a
+        dynamic trace and re-rank them by goodput under ``slo``.
+
+        ``trace`` is a :class:`repro.workloads.WorkloadTrace` or a path
+        to a trace JSONL file; ``slo`` is a
+        :class:`repro.workloads.SLOSpec` (or a dict of its fields).
+        Without ``report``, runs :meth:`search` first (sharing this
+        instance's memoized PerfDatabase/session); with one, reuses its
+        priced projections.  Returns the report with its schema-v3
+        ``workload_eval`` section filled: per-candidate open-loop replay
+        metrics (TTFT/TPOT percentiles, queue depth, goodput) and the
+        goodput ranking next to the analytical one.
+        """
+        import os
+        from repro.workloads import SLOSpec, WorkloadTrace, replay_frontier
+        if isinstance(trace, (str, bytes, os.PathLike)):
+            trace = WorkloadTrace.load(trace)
+        if isinstance(slo, dict):
+            slo = SLOSpec.from_dict(slo)
+        if report is None:
+            report = self.search()
+        # replay prices through the report's own workload descriptor so a
+        # loaded report replays consistently; when it matches this
+        # instance's workload the memoized session is reused
+        w = report.workload
+        try:
+            own = self.workload()
+        except ValueError:
+            own = None
+        runner = (TaskRunner(w, session=self._session_for(w))
+                  if own == w else TaskRunner(w))
+        report.workload_eval = replay_frontier(
+            runner, report.projections, trace, slo, top_k=top_k,
+            sla=w.sla, max_steps=max_steps)
+        return report
+
     # -- internals -----------------------------------------------------------
     def _variant(self, overrides: Dict) -> "Configurator":
         c = copy.copy(self)          # shares self._dbs on purpose

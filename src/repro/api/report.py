@@ -13,9 +13,17 @@ Schema v2 makes the report an auditable deployment artifact: a
 (platform/backend plus a digest over the collected latency grids), a
 ``memory`` section surfaces every candidate's per-chip memory footprint,
 and ``search.early_exit`` records whether a streaming policy stopped the
-sweep before the full space was priced.  ``from_json`` still accepts v1
-payloads and migrates them losslessly (the new sections default to
-empty/None).
+sweep before the full space was priced.
+
+Schema v3 adds the dynamic-workload axis: a ``workload_eval`` section
+(written by ``Configurator.evaluate_frontier`` /
+``repro.workloads.frontier.replay_frontier``; named to stay clear of the
+v1 ``workload`` descriptor key) records the trace identity, the
+tail-latency SLO, each replayed frontier candidate's open-loop metrics,
+and the goodput-based re-ranking next to the analytical one.
+
+``from_json`` still accepts v1 and v2 payloads and migrates them
+losslessly (sections a version never carried default to empty/None).
 """
 from __future__ import annotations
 
@@ -30,9 +38,10 @@ from repro.core.generator import LaunchConfig
 
 #: Bump on any backwards-incompatible change to the JSON layout.
 #: v1: initial layout.  v2: + database fingerprint, memory footprints,
-#: early-exit record.  ``from_json`` reads every version listed here.
-SCHEMA_VERSION = 2
-SUPPORTED_SCHEMA_VERSIONS = (1, 2)
+#: early-exit record.  v3: + workload section (trace replay / SLO
+#: re-ranking).  ``from_json`` reads every version listed here.
+SCHEMA_VERSION = 3
+SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3)
 
 
 def workload_to_dict(w: WorkloadDescriptor) -> Dict:
@@ -85,6 +94,7 @@ class SearchReport:
     speculative: Optional[Dict] = None     # draft/gamma projection, if run
     fingerprint: Optional[Dict] = None     # PerfDatabase identity (v2)
     early_exit: Optional[Dict] = None      # streaming policy stop record (v2)
+    workload_eval: Optional[Dict] = None   # trace replay / SLO re-rank (v3)
     schema_version: int = SCHEMA_VERSION
 
     # -- construction --------------------------------------------------------
@@ -133,6 +143,17 @@ class SearchReport:
                 f"{b.tokens_per_s_per_chip:.1f} tok/s/chip @ "
                 f"{b.tokens_per_s_user:.1f} tok/s/user "
                 f"(TTFT {b.ttft_ms:.0f}ms)")
+        we = self.workload_eval
+        if we and we.get("best_index") is not None:
+            wb = self.projections[we["best_index"]]
+            replayed = [c for c in we["candidates"]
+                        if c["replay"] is not None]
+            lines.append(
+                f"workload replay ({len(replayed)} candidates, trace "
+                f"{we['trace']['digest']}): goodput best "
+                f"[{wb.mode}] {wb.config.get('describe', '')}"
+                + (" (re-ranked vs analytical)"
+                   if we.get("reranked") else ""))
         return "\n".join(lines)
 
     # -- serialization -------------------------------------------------------
@@ -160,6 +181,7 @@ class SearchReport:
             "launch": (dataclasses.asdict(self.launch)
                        if self.launch is not None else None),
             "speculative": self.speculative,
+            "workload_eval": self.workload_eval,
         }
 
     def to_json(self, indent: Optional[int] = 2) -> str:
@@ -180,9 +202,10 @@ class SearchReport:
 
     @classmethod
     def _from_dict_any(cls, d: Dict, version: int) -> "SearchReport":
-        # v1 payloads lack the database/memory sections and the early_exit
-        # record; everything they do carry maps 1:1, so migration is just
-        # "new fields default to None" and the object re-serializes as v2.
+        # older payloads lack the sections later versions added (v2:
+        # database/memory/early_exit, v3: workload); everything they do
+        # carry maps 1:1, so migration is just "new fields default to
+        # None" and the object re-serializes as the current version.
         return cls(
             workload=workload_from_dict(d["workload"]),
             projections=[Projection(**p) for p in d["projections"]],
@@ -198,6 +221,7 @@ class SearchReport:
             fingerprint=d.get("database") if version >= 2 else None,
             early_exit=(d["search"].get("early_exit")
                         if version >= 2 else None),
+            workload_eval=d.get("workload_eval") if version >= 3 else None,
             schema_version=SCHEMA_VERSION)
 
     @classmethod

@@ -13,6 +13,15 @@ The paper's user workflow (Fig. 2) as subcommands:
     python -m repro.core.cli calibrate report --artifact cal.json
     python -m repro.core.cli calibrate apply  --artifact cal.json \\
         --model qwen3-32b --isl 4000 --osl 500
+    python -m repro.core.cli workload generate --arrivals bursty --rate 2 \\
+        --n 200 --lengths sharegpt --seed 7 --out trace.jsonl
+    python -m repro.core.cli workload describe --trace trace.jsonl
+    python -m repro.core.cli workload replay --trace trace.jsonl \\
+        --model qwen3-32b --tp 4 --batch 64 --slo-ttft-p99 2000 \\
+        --slo-tpot-p99 80
+    python -m repro.core.cli search --model qwen3-32b --isl 4000 --osl 500 \\
+        --chips 16 --trace trace.jsonl --slo-ttft-p99 2000 \\
+        --slo-tpot-p99 80 --replay-top-k 3
 
 Every subcommand accepts ``--json`` to emit machine-readable output
 (``search --json`` prints the schema-versioned SearchReport) on stdout,
@@ -48,7 +57,8 @@ EXIT_OK = 0
 EXIT_NO_CONFIG = 1
 EXIT_USAGE = 2
 
-_SUBCOMMANDS = ("search", "generate", "compare", "list", "calibrate")
+_SUBCOMMANDS = ("search", "generate", "compare", "list", "calibrate",
+                "workload")
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +129,27 @@ def _print_search_report(report: SearchReport, args) -> int:
               f"acceptance {s['acceptance']}): best gamma={s['gamma']} -> "
               f"{s['speedup_vs_autoregressive']:.2f}x "
               f"({s['tokens_per_s_user']:.0f} tok/s/user)")
+
+    we = report.workload_eval
+    if we:
+        print(f"\nworkload replay (trace {we['trace']['digest']}, "
+              f"{we['trace']['n_requests']} requests) — goodput ranking:")
+        by_index = {c["index"]: c for c in we["candidates"]}
+        for rank, idx in enumerate(we["ranking"]):
+            c = by_index[idx]
+            r = c["replay"]
+            print(f"  #{rank + 1} [{c['mode']:11s}] {c['describe']:20s} "
+                  f"goodput {r['goodput_tok_s']:9.1f} tok/s  "
+                  f"attainment {100 * r['slo_attainment']:5.1f}%  "
+                  f"p99 TTFT {r['ttft_ms']['p99']:8.1f}ms  "
+                  f"(analytical #{c['analytical_rank'] + 1})")
+        skipped = [c for c in we["candidates"] if c["skipped"]]
+        for c in skipped:
+            print(f"  -- [{c['mode']:11s}] {c['describe']:20s} "
+                  f"skipped: {c['skipped']}")
+        if we["reranked"]:
+            print("  note: goodput ranking differs from the analytical "
+                  "(static) ranking")
     return EXIT_OK
 
 
@@ -140,12 +171,23 @@ def _attach_speculative(report: SearchReport, cfg: Configurator, args) -> None:
         }
 
 
+def _attach_workload_eval(report: SearchReport, cfg: Configurator,
+                          args) -> None:
+    """``--trace``: replay the frontier's top-K under the trace and record
+    the goodput re-ranking in the report's ``workload_eval`` section."""
+    trace = getattr(args, "trace", "")
+    if trace:
+        cfg.evaluate_frontier(trace, _slo_from_args(args),
+                              top_k=args.replay_top_k, report=report)
+
+
 def _run_search(args) -> "tuple[SearchReport, Configurator]":
     cfg = _configurator(args)
     # --first-n rides the same policy surface library users get: the
     # iterator stops early and the report records why under early_exit
     report = cfg.search(policies=_search_policies(args))
     _attach_speculative(report, cfg, args)
+    _attach_workload_eval(report, cfg, args)
     return report, cfg
 
 
@@ -189,6 +231,7 @@ def _stream_search(args) -> int:
         _silence_broken_pipe()
     report = stream.report(generate_launch=bool(args.save_launch))
     _attach_speculative(report, cfg, args)
+    _attach_workload_eval(report, cfg, args)
     if not broken_pipe:
         best = report.best
         try:
@@ -200,6 +243,11 @@ def _stream_search(args) -> int:
                 "early_exit": report.early_exit,
                 "database": report.fingerprint,
                 "speculative": report.speculative,
+                "workload_eval": (None if report.workload_eval is None else {
+                    "trace": report.workload_eval["trace"]["digest"],
+                    "ranking": report.workload_eval["ranking"],
+                    "reranked": report.workload_eval["reranked"],
+                }),
                 "best": (None if best is None else {
                     "mode": best.mode,
                     "describe": best.config.get("describe", ""),
@@ -391,6 +439,130 @@ def cmd_calibrate_apply(args) -> int:
 
 
 # ---------------------------------------------------------------------------
+# workload
+# ---------------------------------------------------------------------------
+
+def _parse_tenants(text: str, lengths) -> tuple:
+    """``name:weight[:priority],...`` -> TenantSpec tuple (shared lengths)."""
+    from repro.workloads import TenantSpec
+    tenants = []
+    for part in text.split(","):
+        bits = part.split(":")
+        if len(bits) not in (2, 3):
+            raise ValueError(f"bad tenant {part!r}; expected "
+                             "name:weight or name:weight:priority")
+        tenants.append(TenantSpec(
+            name=bits[0], weight=float(bits[1]),
+            priority=int(bits[2]) if len(bits) == 3 else 0,
+            lengths=lengths))
+    return tuple(tenants)
+
+
+def _trace_spec_from_args(args):
+    from repro.workloads import ArrivalSpec, LengthSpec, TenantSpec, TraceSpec
+    if args.spec:
+        with open(args.spec) as f:
+            return TraceSpec.from_dict(json.load(f))
+    isl_lo, isl_hi = (int(b) for b in args.isl_range.split(":"))
+    osl_lo, osl_hi = (int(b) for b in args.osl_range.split(":"))
+    lengths = LengthSpec(kind=args.lengths, isl=args.isl, osl=args.osl,
+                         isl_lo=isl_lo, isl_hi=isl_hi,
+                         osl_lo=osl_lo, osl_hi=osl_hi, sigma=args.sigma)
+    tenants = (_parse_tenants(args.tenants, lengths) if args.tenants
+               else (TenantSpec(lengths=lengths),))
+    arrivals = ArrivalSpec(kind=args.arrivals, rate_rps=args.rate,
+                           burst_factor=args.burst_factor,
+                           period_s=args.period, amplitude=args.amplitude)
+    return TraceSpec(n_requests=args.n, arrivals=arrivals, tenants=tenants)
+
+
+def cmd_workload_generate(args) -> int:
+    from repro.workloads import generate_trace
+    spec = _trace_spec_from_args(args)
+    trace = generate_trace(spec, seed=args.seed)
+    trace.save(args.out)
+    desc = trace.describe()
+    if args.json:
+        print(json.dumps({"out": args.out, "describe": desc}, indent=2))
+    else:
+        print(f"trace -> {args.out}  ({desc['n_requests']} requests, "
+              f"{desc['duration_s']:.1f}s, {desc['arrival_rate_rps']:.2f} "
+              f"req/s, digest {desc['digest']})")
+    return EXIT_OK
+
+
+def cmd_workload_describe(args) -> int:
+    from repro.workloads import WorkloadTrace
+    desc = WorkloadTrace.load(args.trace).describe()
+    if args.json:
+        print(json.dumps(desc, indent=2))
+    else:
+        print(f"trace {args.trace}: {desc['n_requests']} requests over "
+              f"{desc['duration_s']:.1f}s ({desc['arrival_rate_rps']:.2f} "
+              f"req/s), digest {desc['digest']}")
+        for name, n in sorted(desc["tenants"].items()):
+            print(f"  tenant {name}: {n} requests")
+        for axis in ("isl", "osl"):
+            if axis in desc:
+                d = desc[axis]
+                print(f"  {axis}: mean {d['mean']:.0f}  p50 {d['p50']:.0f}  "
+                      f"p95 {d['p95']:.0f}  max {d['max']:.0f}")
+    return EXIT_OK
+
+
+def _slo_from_args(args):
+    from repro.workloads import SLOSpec
+    return SLOSpec(ttft_p99_ms=args.slo_ttft_p99,
+                   tpot_p99_ms=args.slo_tpot_p99)
+
+
+def cmd_workload_replay(args) -> int:
+    """Replay a trace against one explicit serving configuration."""
+    from repro.core.config import (CandidateConfig, ClusterSpec,
+                                  ParallelismConfig, RuntimeFlags, SLA,
+                                  WorkloadDescriptor)
+    from repro.core.task_runner import TaskRunner
+    from repro.workloads import WorkloadTrace
+    trace = WorkloadTrace.load(args.trace)
+    w = WorkloadDescriptor(
+        model=args.model, isl=trace.mean_isl(), osl=trace.mean_osl(),
+        sla=SLA(), cluster=ClusterSpec(n_chips=args.tp * args.pp,
+                                       platform=args.platform),
+        backend=args.backend, modes=("aggregated",), dtype=args.dtype)
+    cand = CandidateConfig(
+        parallel=ParallelismConfig(tp=args.tp, pp=args.pp, ep=args.ep),
+        batch_size=args.batch,
+        flags=RuntimeFlags(max_num_tokens=args.max_num_tokens))
+    runner = TaskRunner(w)
+    sim = runner.simulator(cand, priority_admission=True,
+                           max_queue=args.max_queue)
+    metrics = sim.replay(trace, slo=_slo_from_args(args),
+                         max_steps=args.max_steps)
+    payload = {"trace": {"path": args.trace, "digest": trace.digest()},
+               "config": {"model": args.model, "describe": cand.describe(),
+                          "platform": args.platform,
+                          "backend": args.backend, "dtype": args.dtype},
+               "metrics": metrics.to_dict()}
+    if args.json:
+        print(json.dumps(payload, indent=2))
+    else:
+        m = metrics
+        print(f"replayed {m.n_requests} requests ({cand.describe()}): "
+              f"{m.completed} completed, {m.rejected} rejected, "
+              f"{m.unfinished} unfinished in {m.duration_s:.1f}s virtual")
+        print(f"  TTFT ms  p50 {m.ttft_ms['p50']:.1f}  "
+              f"p95 {m.ttft_ms['p95']:.1f}  p99 {m.ttft_ms['p99']:.1f}")
+        print(f"  TPOT ms  p50 {m.tpot_ms['p50']:.1f}  "
+              f"p95 {m.tpot_ms['p95']:.1f}  p99 {m.tpot_ms['p99']:.1f}")
+        print(f"  queue depth mean {m.queue_depth_mean:.1f} "
+              f"max {m.queue_depth_max}")
+        print(f"  throughput {m.throughput_tok_s:.1f} tok/s; goodput "
+              f"{m.goodput_tok_s:.1f} tok/s at "
+              f"{100 * m.slo_attainment:.1f}% SLO attainment")
+    return EXIT_OK if metrics.completed > 0 else EXIT_NO_CONFIG
+
+
+# ---------------------------------------------------------------------------
 # list
 # ---------------------------------------------------------------------------
 
@@ -421,6 +593,13 @@ def cmd_list(args) -> int:
 # entry point
 # ---------------------------------------------------------------------------
 
+def _add_slo_args(ap: argparse.ArgumentParser):
+    ap.add_argument("--slo-ttft-p99", type=float, default=2000.0,
+                    help="tail SLO: p99 TTFT target in ms")
+    ap.add_argument("--slo-tpot-p99", type=float, default=100.0,
+                    help="tail SLO: p99 TPOT target in ms")
+
+
 def _build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="repro.core.cli",
@@ -444,6 +623,13 @@ def _build_parser() -> argparse.ArgumentParser:
     sp.add_argument("--first-n", type=int, default=0, metavar="N",
                     help="stop as soon as N SLA-valid configurations are "
                          "found (early exit; prices fewer candidates)")
+    sp.add_argument("--trace", default="",
+                    help="workload trace JSONL (from `workload generate`): "
+                         "replay the frontier's top-K under it and re-rank "
+                         "by goodput (SearchReport workload_eval section)")
+    _add_slo_args(sp)
+    sp.add_argument("--replay-top-k", type=int, default=3, metavar="K",
+                    help="how many analytical leaders to replay")
     sp.set_defaults(func=cmd_search)
 
     gp = sub.add_parser("generate", help="emit the launch artifact")
@@ -503,6 +689,73 @@ def _build_parser() -> argparse.ArgumentParser:
     crep.add_argument("--artifact", required=True)
     crep.add_argument("--json", action="store_true")
     crep.set_defaults(func=cmd_calibrate_report)
+
+    wl = sub.add_parser(
+        "workload",
+        help="dynamic workload traces: generate | replay | describe")
+    wlsub = wl.add_subparsers(dest="action")
+
+    wg = wlsub.add_parser("generate",
+                          help="expand a seeded (spec, seed) into a trace")
+    wg.add_argument("--arrivals", default="poisson",
+                    choices=["poisson", "bursty", "diurnal"])
+    wg.add_argument("--rate", type=float, default=1.0,
+                    help="mean arrival rate, requests/s")
+    wg.add_argument("--burst-factor", type=float, default=4.0,
+                    help="bursty: ON-phase rate multiplier")
+    wg.add_argument("--period", type=float, default=120.0,
+                    help="diurnal: modulation period, seconds")
+    wg.add_argument("--amplitude", type=float, default=0.8,
+                    help="diurnal: modulation amplitude in [0, 1)")
+    wg.add_argument("--n", type=int, default=100, help="request count")
+    wg.add_argument("--lengths", default="fixed",
+                    choices=["fixed", "uniform", "lognormal", "sharegpt"])
+    wg.add_argument("--isl", type=int, default=512,
+                    help="fixed/lognormal input-length (median)")
+    wg.add_argument("--osl", type=int, default=128,
+                    help="fixed/lognormal output-length (median)")
+    wg.add_argument("--isl-range", default="64:2048", metavar="LO:HI",
+                    help="uniform input-length bounds")
+    wg.add_argument("--osl-range", default="16:512", metavar="LO:HI",
+                    help="uniform output-length bounds")
+    wg.add_argument("--sigma", type=float, default=0.5,
+                    help="lognormal spread")
+    wg.add_argument("--tenants", default="",
+                    help="comma list of name:weight[:priority] "
+                         "(default: one 'default' tenant)")
+    wg.add_argument("--spec", default="",
+                    help="TraceSpec JSON file (overrides the flags above)")
+    wg.add_argument("--seed", type=int, default=0)
+    wg.add_argument("--out", required=True,
+                    help="write the trace JSONL here")
+    wg.add_argument("--json", action="store_true")
+    wg.set_defaults(func=cmd_workload_generate)
+
+    wd = wlsub.add_parser("describe", help="summarize a trace file")
+    wd.add_argument("--trace", required=True)
+    wd.add_argument("--json", action="store_true")
+    wd.set_defaults(func=cmd_workload_describe)
+
+    wr = wlsub.add_parser(
+        "replay", help="open-loop replay against one serving config")
+    wr.add_argument("--trace", required=True)
+    wr.add_argument("--model", required=True,
+                    help=f"one of {', '.join(list_archs(True))}")
+    wr.add_argument("--tp", type=int, default=1)
+    wr.add_argument("--pp", type=int, default=1)
+    wr.add_argument("--ep", type=int, default=1)
+    wr.add_argument("--batch", type=int, default=64,
+                    help="decode slot count (max_batch)")
+    wr.add_argument("--max-num-tokens", type=int, default=8192)
+    wr.add_argument("--max-queue", type=int, default=100_000)
+    wr.add_argument("--max-steps", type=int, default=200_000)
+    wr.add_argument("--platform", default="tpu_v5e")
+    wr.add_argument("--backend", default="repro-jax")
+    wr.add_argument("--dtype", default="bf16",
+                    choices=["bf16", "fp16", "fp8"])
+    _add_slo_args(wr)
+    wr.add_argument("--json", action="store_true")
+    wr.set_defaults(func=cmd_workload_replay)
 
     lp = sub.add_parser("list", help="enumerate models/backends/platforms")
     lp.add_argument("what", nargs="?", default="all",

@@ -124,6 +124,28 @@ class TaskRunner:
     def candidates(self, sweep_flags: bool = False) -> List[CandidateConfig]:
         return list(self.iter_candidates(sweep_flags))
 
+    def simulator(self, cand: CandidateConfig,
+                  priority_admission: bool = False,
+                  max_queue: int = 100_000):
+        """Discrete-event simulator for one candidate, priced by this
+        runner's (memoized) session — the open-loop replay engine behind
+        SLO-aware frontier re-ranking shares the PerfDatabase that
+        priced the analytical search."""
+        from repro.serving.scheduler import SchedulerConfig
+        from repro.serving.sim import ServingSimulator
+        sched_cfg = SchedulerConfig(
+            max_batch=cand.batch_size,
+            max_num_tokens=cand.flags.max_num_tokens,
+            chunked_prefill=cand.flags.enable_chunked_context,
+            priority_admission=priority_admission,
+            max_queue=max_queue)
+        par, flags = cand.parallel, cand.flags
+
+        def latency_s(spec) -> float:
+            return self.session.spec_latency_ms(par, spec, flags) / 1e3
+
+        return ServingSimulator(sched_cfg, latency_s)
+
     # ------------------------------------------------------------------
     def iter_search(self, sweep_flags: bool = False,
                     keep_all_disagg: bool = False,

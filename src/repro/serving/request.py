@@ -20,6 +20,8 @@ class Request:
     osl: int                              # output sequence length target
     arrival: float = 0.0                  # seconds (virtual or wall)
     prompt: Optional[List[int]] = None    # real tokens (engine) or None (sim)
+    tenant: str = "default"
+    priority: int = 0                     # higher value admitted first
 
     # mutable lifecycle state
     phase: Phase = Phase.WAITING

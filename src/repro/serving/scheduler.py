@@ -11,6 +11,8 @@ Modeled runtime flags (the paper's framework-specific knobs):
   max_num_tokens       per-iteration context-token capacity (C_ctx)
   chunked_prefill      split prompts into max_num_tokens-sized chunks
   prefill_priority     schedule prefill before decode when contending
+  priority_admission   order the waiting queue by request priority
+                       (higher first, FIFO within a priority class)
 """
 from __future__ import annotations
 
@@ -28,6 +30,7 @@ class SchedulerConfig:
     chunked_prefill: bool = True
     prefill_priority: bool = True       # TRT-LLM-style context-first
     max_queue: int = 100_000
+    priority_admission: bool = False    # multi-tenant priority ordering
 
 
 class ContinuousBatchingScheduler:
@@ -43,6 +46,13 @@ class ContinuousBatchingScheduler:
         if len(self.waiting) >= self.cfg.max_queue:
             return False
         req.phase = Phase.WAITING
+        if self.cfg.priority_admission:
+            # keep the queue sorted by descending priority, FIFO within a
+            # class: insert before the first strictly-lower-priority entry
+            for i, other in enumerate(self.waiting):
+                if other.priority < req.priority:
+                    self.waiting.insert(i, req)
+                    return True
         self.waiting.append(req)
         return True
 

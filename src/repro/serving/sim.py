@@ -7,14 +7,29 @@ from an operator-level latency callback (the perf DB).  Algorithm 2's
 closed-form estimate is then validated against this step-accurate
 execution (benchmarks/fig6_fidelity.py), reproducing the paper's MAPE
 methodology without GPUs.
+
+Two drive modes:
+
+``run(isl, osl, concurrency)``
+    Closed-loop at fixed concurrency — the paper's steady-state view.
+    A finished request is immediately replaced, so the system never
+    queues and TTFT is pure compute.
+
+``replay(trace)``
+    Open-loop, arrival-time-driven: requests are admitted when the
+    virtual clock passes their trace arrival time regardless of how
+    loaded the engine is, so queueing delay counts into TTFT and tail
+    percentiles (p50/p95/p99), queue-depth stats, and goodput under a
+    tail-latency SLO become measurable.  This is the dynamic-workload
+    evaluation axis the static analytical model cannot see.
 """
 from __future__ import annotations
 
 import dataclasses
 import statistics
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.serving.request import IterationPlan, Request
+from repro.serving.request import Request
 from repro.serving.scheduler import ContinuousBatchingScheduler, SchedulerConfig
 
 
@@ -33,14 +48,64 @@ class SimMetrics:
     tokens_per_s_per_user: float
     completed: int
     steps: int
-    per_request: List[Tuple[float, float]]  # (ttft_s, tpot_s)
+    #: (ttft_s, tpot_s) per *finished* request; tpot_s is None for
+    #: single-token outputs (no decode interval exists) — unfinished
+    #: requests are dropped rather than coerced to 0.0, so percentiles
+    #: computed from this list are never silently skewed.
+    per_request: List[Tuple[float, Optional[float]]]
 
 
-LatencyFn = Callable[[StepSpec], float]
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (q in [0, 1]) of a sample."""
+    s = sorted(values)
+    if not s:
+        return float("nan")
+    if len(s) == 1:
+        return float(s[0])
+    pos = q * (len(s) - 1)
+    lo = int(pos)
+    frac = pos - lo
+    if lo + 1 >= len(s):
+        return float(s[-1])
+    return float(s[lo] * (1 - frac) + s[lo + 1] * frac)
+
+
+def _pctl_dict(values_ms: Sequence[float]) -> Dict[str, float]:
+    return {"p50": percentile(values_ms, 0.50),
+            "p95": percentile(values_ms, 0.95),
+            "p99": percentile(values_ms, 0.99)}
+
+
+@dataclasses.dataclass
+class ReplayMetrics:
+    """Open-loop replay outcome: tail percentiles, queueing, goodput."""
+    n_requests: int                        # submitted (trace size)
+    completed: int
+    rejected: int                          # bounced off max_queue
+    unfinished: int                        # still in flight at cutoff
+    steps: int
+    duration_s: float                      # virtual makespan
+    throughput_tok_s: float                # generated tokens / makespan
+    ttft_ms: Dict[str, float]              # {"p50": ..., "p95": ..., "p99": ...}
+    tpot_ms: Dict[str, float]
+    queue_depth_mean: float
+    queue_depth_max: int
+    #: (tenant, ttft_s, tpot_s) per finished request, tpot_s None when
+    #: no decode interval exists (osl == 1)
+    per_request: List[Tuple[str, float, Optional[float]]]
+    #: set when a SLO was supplied to replay()
+    slo: Optional[Dict] = None
+    slo_attainment: Optional[float] = None  # attaining / submitted
+    goodput_tok_s: Optional[float] = None   # tokens from attaining reqs / s
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.pop("per_request")           # raw samples stay in-process
+        return d
 
 
 class ServingSimulator:
-    def __init__(self, sched_cfg: SchedulerConfig, latency_fn: LatencyFn):
+    def __init__(self, sched_cfg: SchedulerConfig, latency_fn: "LatencyFn"):
         self.sched_cfg = sched_cfg
         self.latency_fn = latency_fn
 
@@ -98,5 +163,104 @@ class ServingSimulator:
             tokens_per_s_per_user=(1.0 / mean_tpot) if mean_tpot else 0.0,
             completed=len(measured),
             steps=steps,
-            per_request=[(r.ttft or 0.0, r.tpot or 0.0) for r in measured],
+            per_request=[(r.ttft, r.tpot) for r in measured
+                         if r.ttft is not None],
         )
+
+    # ------------------------------------------------------------------
+    def replay(self, trace, slo=None,
+               max_steps: int = 200_000) -> ReplayMetrics:
+        """Open-loop replay of a workload trace.
+
+        ``trace`` is a :class:`repro.workloads.trace.WorkloadTrace` (or
+        any sequence of records with ``arrival_s``/``isl``/``osl`` and
+        optional ``tenant``/``priority``).  Requests are admitted the
+        first iteration boundary after their arrival time; when the
+        engine sits idle the clock jumps to the next arrival.  Queueing
+        delay is part of TTFT (TTFT = first token time − *arrival*), so
+        a bursty trace degrades tail percentiles even when steady-state
+        throughput looks identical.
+
+        ``slo`` (a :class:`repro.workloads.slo.SLOSpec`-like object)
+        turns on goodput accounting: rejected and unfinished requests
+        count as SLO misses.
+        """
+        records = list(getattr(trace, "requests", trace))
+        sched = ContinuousBatchingScheduler(self.sched_cfg)
+        t = 0.0
+        i = 0
+        rejected = 0
+        done: List[Request] = []
+        steps = 0
+        gen_total = 0
+        depth_sum = 0
+        depth_max = 0
+
+        def admit_arrived():
+            nonlocal i, rejected
+            while i < len(records) and records[i].arrival_s <= t:
+                r = records[i]
+                req = Request(rid=i, isl=r.isl, osl=r.osl,
+                              arrival=r.arrival_s,
+                              tenant=getattr(r, "tenant", "default"),
+                              priority=getattr(r, "priority", 0))
+                if not sched.add(req):
+                    rejected += 1
+                i += 1
+
+        admit_arrived()
+        while (i < len(records) or sched.active > 0) and steps < max_steps:
+            plan = sched.plan(t)
+            if plan.empty:
+                if i < len(records):
+                    # engine idle, arrivals pending: jump to the next one
+                    t = max(t, records[i].arrival_s)
+                    admit_arrived()
+                    continue
+                break
+            depth = len(sched.waiting)
+            depth_sum += depth
+            depth_max = max(depth_max, depth)
+            spec = StepSpec(
+                prefill=tuple((c.length, c.start) for c in plan.prefill),
+                decode=tuple(r.isl + r.generated for r in plan.decode),
+            )
+            t += self.latency_fn(spec)
+            steps += 1
+            gen_total += plan.gen_tokens + sum(
+                1 for c in plan.prefill
+                if c.start + c.length >= c.req.isl)
+            done.extend(sched.commit(plan, t))
+            admit_arrived()
+
+        completed = [r for r in done if r.ttft is not None]
+        unfinished = len(records) - rejected - len(completed)
+        ttfts_ms = [1e3 * r.ttft for r in completed]
+        tpots_ms = [1e3 * r.tpot for r in completed if r.tpot is not None]
+        duration = max(t, 1e-9)
+        metrics = ReplayMetrics(
+            n_requests=len(records),
+            completed=len(completed),
+            rejected=rejected,
+            unfinished=unfinished,
+            steps=steps,
+            duration_s=t,
+            throughput_tok_s=gen_total / duration,
+            ttft_ms=_pctl_dict(ttfts_ms),
+            tpot_ms=_pctl_dict(tpots_ms),
+            queue_depth_mean=depth_sum / max(steps, 1),
+            queue_depth_max=depth_max,
+            per_request=[(r.tenant, r.ttft, r.tpot) for r in completed],
+        )
+        if slo is not None:
+            attaining = [r for r in completed
+                         if slo.request_meets(r.ttft, r.tpot)]
+            metrics.slo = {"ttft_p99_ms": slo.ttft_p99_ms,
+                           "tpot_p99_ms": slo.tpot_p99_ms}
+            metrics.slo_attainment = len(attaining) / max(len(records), 1)
+            metrics.goodput_tok_s = \
+                sum(r.osl for r in attaining) / duration
+        return metrics
+
+
+LatencyFn = Callable[[StepSpec], float]

@@ -1,0 +1,53 @@
+"""repro.workloads — trace-driven dynamic workloads.
+
+The static search evaluates every candidate at one fixed
+``(isl, osl, concurrency)`` point; this package supplies the dynamic
+axis the paper's production claim rests on:
+
+- :mod:`~repro.workloads.trace` — the versioned JSONL trace format
+  (:class:`TraceRequest` / :class:`WorkloadTrace`, lossless round-trip).
+- :mod:`~repro.workloads.generators` — seeded, deterministic trace
+  generators: Poisson / bursty / diurnal arrivals × fixed / uniform /
+  lognormal / ShareGPT-like length mixes × multi-tenant splits, all
+  reproducible from ``(spec, seed)``.
+- :mod:`~repro.workloads.slo` — tail-latency :class:`SLOSpec` and the
+  goodput objective.
+- :mod:`~repro.workloads.frontier` — replay the analytical top-K
+  through the open-loop simulator (``ServingSimulator.replay``) and
+  re-rank by goodput under the SLO; the result lands in the
+  ``workload`` section of a schema-v3 SearchReport.
+
+Canonical flow::
+
+    from repro.workloads import (ArrivalSpec, SLOSpec, TenantSpec,
+                                 TraceSpec, generate_trace)
+
+    trace = generate_trace(TraceSpec(
+        n_requests=200,
+        arrivals=ArrivalSpec(kind="bursty", rate_rps=2.0),
+        tenants=(TenantSpec(name="chat", weight=0.7, priority=1),
+                 TenantSpec(name="batch", weight=0.3))), seed=7)
+    trace.save("trace.jsonl")
+
+    report = cfg.evaluate_frontier("trace.jsonl",
+                                   SLOSpec(ttft_p99_ms=2000,
+                                           tpot_p99_ms=80))
+    report.workload_eval["ranking"]  # goodput order, not analytical order
+"""
+from repro.workloads.generators import (ARRIVAL_KINDS, LENGTH_KINDS,
+                                        ArrivalSpec, LengthSpec, TenantSpec,
+                                        TraceSpec, constant_trace,
+                                        generate_trace)
+from repro.workloads.frontier import candidate_from_projection, replay_frontier
+from repro.workloads.slo import SLOSpec
+from repro.workloads.trace import (SUPPORTED_TRACE_SCHEMA_VERSIONS,
+                                   TRACE_SCHEMA_VERSION, TraceRequest,
+                                   WorkloadTrace)
+
+__all__ = [
+    "ARRIVAL_KINDS", "ArrivalSpec", "LENGTH_KINDS", "LengthSpec",
+    "SLOSpec", "SUPPORTED_TRACE_SCHEMA_VERSIONS", "TRACE_SCHEMA_VERSION",
+    "TenantSpec", "TraceRequest", "TraceSpec", "WorkloadTrace",
+    "candidate_from_projection", "constant_trace", "generate_trace",
+    "replay_frontier",
+]

@@ -1,0 +1,116 @@
+"""SLO-aware frontier re-ranking: replay the analytical leaders under a
+dynamic trace and rank them by goodput.
+
+The analytical search ranks candidates by steady-state tok/s/chip at one
+fixed ``(isl, osl, concurrency)`` point.  Under a bursty multi-tenant
+trace, the ordering can flip: a throughput-optimal config with small
+headroom queues during bursts and blows its p99 TTFT, while a slightly
+"slower" config absorbs them.  :func:`replay_frontier` replays the
+top-K analytical candidates through the discrete-event simulator
+(open-loop, queueing counted) and re-ranks by goodput under the SLO —
+the result is the ``workload_eval`` section of a schema-v3 SearchReport.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import pareto
+from repro.core.config import (CandidateConfig, ParallelismConfig,
+                               Projection, RuntimeFlags, SLA)
+from repro.serving.sim import ReplayMetrics
+from repro.workloads.slo import SLOSpec
+from repro.workloads.trace import WorkloadTrace
+
+
+def candidate_from_projection(p: Projection) -> Optional[CandidateConfig]:
+    """Rebuild the CandidateConfig a projection priced, or None when the
+    projection is not a single-engine deployment (disaggregated
+    composites run two pools; the one-engine simulator cannot replay
+    them)."""
+    cfg = p.config or {}
+    if p.mode == "disaggregated" or "parallel" not in cfg:
+        return None
+    par = ParallelismConfig(**cfg["parallel"])
+    flags = (RuntimeFlags(**cfg["flags"]) if "flags" in cfg
+             else RuntimeFlags())
+    return CandidateConfig(parallel=par, batch_size=p.batch_size,
+                           flags=flags)
+
+
+def replay_frontier(runner, projections: Sequence[Projection],
+                    trace: WorkloadTrace, slo: SLOSpec,
+                    top_k: int = 5,
+                    sla: Optional[SLA] = None,
+                    max_steps: int = 200_000) -> Dict:
+    """Replay the top-K analytical candidates; return the ``workload``
+    report section.
+
+    ``runner`` is a :class:`repro.core.task_runner.TaskRunner` (its
+    session prices the simulator's iterations, so replay and search
+    share one PerfDatabase).  ``projections`` is the full priced list
+    (report order); indices in the returned section refer into it.
+    Candidates the simulator cannot replay (disaggregated composites)
+    are recorded as skipped, not silently dropped.
+    """
+    if top_k < 1:
+        raise ValueError(f"top_k must be >= 1, got {top_k}")
+    sla = sla if sla is not None else runner.w.sla
+    leaders = pareto.top_k(list(projections), sla, top_k)
+    if not leaders:
+        # nothing SLA-valid: fall back to raw throughput order so the
+        # dynamic view still says something about the space
+        leaders = sorted(projections,
+                         key=lambda p: -p.tokens_per_s_per_chip)[:top_k]
+    index_of = {id(p): i for i, p in enumerate(projections)}
+
+    candidates: List[Dict] = []
+    ranked: List[tuple] = []
+    for rank, p in enumerate(leaders):
+        entry: Dict = {
+            "index": index_of[id(p)],
+            "analytical_rank": rank,
+            "mode": p.mode,
+            "describe": p.config.get("describe", ""),
+            "tokens_per_s_per_chip": p.tokens_per_s_per_chip,
+            "replay": None,
+            "skipped": None,
+        }
+        cand = candidate_from_projection(p)
+        if cand is None:
+            entry["skipped"] = ("disaggregated composite: not replayable "
+                                "on the single-engine simulator")
+            candidates.append(entry)
+            continue
+        sim = runner.simulator(cand, priority_admission=True)
+        metrics: ReplayMetrics = sim.replay(trace, slo=slo,
+                                            max_steps=max_steps)
+        entry["replay"] = metrics.to_dict()
+        candidates.append(entry)
+        ranked.append((metrics.goodput_tok_s or 0.0,
+                       metrics.slo_attainment or 0.0, rank, entry["index"]))
+
+    # goodput-first ordering; ties (including a zero-signal replay where
+    # nothing attains the SLO) fall back to the analytical order, so
+    # ``reranked`` is only True when replay actually discriminated
+    ranked.sort(key=lambda t: (-t[0], -t[1], t[2]))
+    goodput_ranking = [idx for _, _, _, idx in ranked]
+    analytical_ranking = [c["index"] for c in candidates
+                          if c["replay"] is not None]
+    return {
+        "trace": {"digest": trace.digest(),
+                  "n_requests": trace.n_requests,
+                  "duration_s": trace.duration_s,
+                  "tenants": trace.tenants,
+                  "meta": trace.meta},
+        "slo": slo.to_dict(),
+        # the PerfDatabase that priced the replay iterations — auditable
+        # against the report's own `database` section (they differ when a
+        # loaded report is replayed on a fresh, e.g. uncalibrated, db)
+        "database": runner.session.db.fingerprint(),
+        "top_k": top_k,
+        "candidates": candidates,
+        "ranking": goodput_ranking,
+        "analytical_ranking": analytical_ranking,
+        "best_index": goodput_ranking[0] if goodput_ranking else None,
+        "reranked": goodput_ranking != analytical_ranking,
+    }

@@ -1,0 +1,288 @@
+"""Seeded workload-trace generators: arrival processes × length mixes.
+
+Every generator is a pure function of ``(spec, seed)`` — arrivals and
+lengths come from one ``random.Random(seed)`` stream, never ambient time
+or global RNG state — so a :class:`TraceSpec` plus a seed IS the trace
+(and both are embedded in the trace's metadata for provenance).
+
+Arrival processes (:class:`ArrivalSpec`):
+  ``poisson``   homogeneous Poisson at ``rate_rps``
+  ``bursty``    on/off-modulated Poisson: Gamma-distributed ON bursts at
+                ``rate_rps * burst_factor`` alternating with quiet OFF
+                periods at ``rate_rps / burst_factor``
+  ``diurnal``   non-homogeneous Poisson via thinning, rate modulated by
+                ``1 + amplitude * sin(2*pi*t / period_s)``
+
+Length distributions (:class:`LengthSpec`):
+  ``fixed``     every request is (isl, osl)
+  ``uniform``   isl ~ U[isl_lo, isl_hi], osl ~ U[osl_lo, osl_hi]
+  ``lognormal`` lognormal lengths around (isl, osl) medians with
+                ``sigma`` spread, clamped to [1, 4*median]
+  ``sharegpt``  a ShareGPT-like mixture: mostly short chat turns, a
+                long-context tail, and a code-generation slice
+
+Multi-tenant mixes: each :class:`TenantSpec` carries a weight, a
+priority, and its own length distribution; the arrival process is
+global and each arrival is assigned a tenant by weighted draw.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict, List, Sequence, Tuple
+
+from repro.workloads.trace import TraceRequest, WorkloadTrace
+
+ARRIVAL_KINDS = ("poisson", "bursty", "diurnal")
+LENGTH_KINDS = ("fixed", "uniform", "lognormal", "sharegpt")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    kind: str = "poisson"
+    rate_rps: float = 1.0             # mean request rate
+    # bursty knobs
+    burst_factor: float = 4.0         # ON rate multiplier (OFF divides)
+    mean_on_s: float = 10.0           # mean Gamma burst duration
+    mean_off_s: float = 20.0          # mean quiet-period duration
+    # diurnal knobs
+    period_s: float = 120.0
+    amplitude: float = 0.8            # in [0, 1)
+
+    def __post_init__(self):
+        if self.kind not in ARRIVAL_KINDS:
+            raise ValueError(f"unknown arrival kind {self.kind!r}; "
+                             f"valid: {', '.join(ARRIVAL_KINDS)}")
+        if self.rate_rps <= 0:
+            raise ValueError(f"rate_rps must be positive, got {self.rate_rps}")
+        if self.kind == "bursty" and (self.burst_factor <= 1
+                                      or self.mean_on_s <= 0
+                                      or self.mean_off_s <= 0):
+            raise ValueError("bursty arrivals need burst_factor > 1 and "
+                             "positive mean_on_s/mean_off_s")
+        if self.kind == "diurnal" and not (0 <= self.amplitude < 1):
+            raise ValueError(f"amplitude must be in [0, 1), "
+                             f"got {self.amplitude}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LengthSpec:
+    kind: str = "fixed"
+    isl: int = 512
+    osl: int = 128
+    isl_lo: int = 64
+    isl_hi: int = 2048
+    osl_lo: int = 16
+    osl_hi: int = 512
+    sigma: float = 0.5                # lognormal spread
+
+    def __post_init__(self):
+        if self.kind not in LENGTH_KINDS:
+            raise ValueError(f"unknown length kind {self.kind!r}; "
+                             f"valid: {', '.join(LENGTH_KINDS)}")
+        if min(self.isl, self.osl, self.isl_lo, self.osl_lo) < 1:
+            raise ValueError("lengths must be >= 1")
+        if self.isl_hi < self.isl_lo or self.osl_hi < self.osl_lo:
+            raise ValueError("length ranges must satisfy lo <= hi")
+        if self.sigma <= 0:
+            raise ValueError(f"sigma must be positive, got {self.sigma}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    name: str = "default"
+    weight: float = 1.0
+    priority: int = 0
+    lengths: LengthSpec = dataclasses.field(default_factory=LengthSpec)
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"tenant weight must be positive, "
+                             f"got {self.weight}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Everything a deterministic trace generation needs except the seed."""
+    n_requests: int = 100
+    arrivals: ArrivalSpec = dataclasses.field(default_factory=ArrivalSpec)
+    tenants: Tuple[TenantSpec, ...] = (TenantSpec(),)
+
+    def __post_init__(self):
+        if self.n_requests < 1:
+            raise ValueError(f"n_requests must be >= 1, "
+                             f"got {self.n_requests}")
+        if not self.tenants:
+            raise ValueError("at least one tenant required")
+        names = [t.name for t in self.tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {names}")
+
+    # -- serialization (embedded in trace meta; drives the CLI) --------------
+    def to_dict(self) -> Dict:
+        return {
+            "n_requests": self.n_requests,
+            "arrivals": dataclasses.asdict(self.arrivals),
+            "tenants": [dataclasses.asdict(t) for t in self.tenants],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "TraceSpec":
+        tenants = tuple(
+            TenantSpec(name=t["name"], weight=t["weight"],
+                       priority=t["priority"],
+                       lengths=LengthSpec(**t["lengths"]))
+            for t in d["tenants"])
+        return cls(n_requests=d["n_requests"],
+                   arrivals=ArrivalSpec(**d["arrivals"]),
+                   tenants=tenants)
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def _poisson_arrivals(rng: random.Random, n: int, rate: float) -> List[float]:
+    t, out = 0.0, []
+    for _ in range(n):
+        t += rng.expovariate(rate)
+        out.append(t)
+    return out
+
+
+def _bursty_arrivals(rng: random.Random, n: int, a: ArrivalSpec) -> List[float]:
+    """On/off-modulated Poisson (Gamma-distributed burst durations).
+
+    The ON/OFF rates keep a burst_factor**2 contrast but are normalized
+    by the expected phase-time split so the *time-weighted mean* rate
+    stays ``rate_rps`` — raising burst_factor changes burstiness, not
+    offered load.
+    """
+    f_on = a.mean_on_s / (a.mean_on_s + a.mean_off_s)
+    norm = f_on * a.burst_factor + (1.0 - f_on) / a.burst_factor
+    on_rate = a.rate_rps * a.burst_factor / norm
+    off_rate = a.rate_rps / (a.burst_factor * norm)
+    out: List[float] = []
+    t = 0.0
+    on = True                         # start inside a burst
+    # Gamma(shape=2) keeps durations away from 0 while staying skewed
+    phase_end = t + rng.gammavariate(2.0, a.mean_on_s / 2.0)
+    while len(out) < n:
+        rate = on_rate if on else off_rate
+        gap = rng.expovariate(rate)
+        if t + gap > phase_end:
+            # no arrival before the phase flips: advance to the boundary
+            t = phase_end
+            on = not on
+            mean = a.mean_on_s if on else a.mean_off_s
+            phase_end = t + rng.gammavariate(2.0, mean / 2.0)
+            continue
+        t += gap
+        out.append(t)
+    return out
+
+
+def _diurnal_arrivals(rng: random.Random, n: int, a: ArrivalSpec) -> List[float]:
+    """Thinned non-homogeneous Poisson with sinusoidal rate modulation."""
+    peak = a.rate_rps * (1.0 + a.amplitude)
+    t, out = 0.0, []
+    while len(out) < n:
+        t += rng.expovariate(peak)
+        rate_t = a.rate_rps * (
+            1.0 + a.amplitude * math.sin(2.0 * math.pi * t / a.period_s))
+        if rng.random() * peak <= rate_t:
+            out.append(t)
+    return out
+
+
+def _arrivals(rng: random.Random, n: int, a: ArrivalSpec) -> List[float]:
+    if a.kind == "poisson":
+        return _poisson_arrivals(rng, n, a.rate_rps)
+    if a.kind == "bursty":
+        return _bursty_arrivals(rng, n, a)
+    return _diurnal_arrivals(rng, n, a)
+
+
+# ---------------------------------------------------------------------------
+# length distributions
+# ---------------------------------------------------------------------------
+
+def _lognormal_len(rng: random.Random, median: int, sigma: float) -> int:
+    val = median * math.exp(rng.gauss(0.0, sigma))
+    return max(1, min(int(round(val)), 4 * median))
+
+
+#: ShareGPT-like mixture: (weight, isl_median, osl_median, sigma)
+_SHAREGPT_MIX = (
+    (0.60, 330, 180, 0.6),            # short chat turns
+    (0.30, 1800, 320, 0.5),           # long-context / document turns
+    (0.10, 900, 650, 0.4),            # code generation (long outputs)
+)
+
+
+def _draw_lengths(rng: random.Random, spec: LengthSpec) -> Tuple[int, int]:
+    if spec.kind == "fixed":
+        return spec.isl, spec.osl
+    if spec.kind == "uniform":
+        return (rng.randint(spec.isl_lo, spec.isl_hi),
+                rng.randint(spec.osl_lo, spec.osl_hi))
+    if spec.kind == "lognormal":
+        return (_lognormal_len(rng, spec.isl, spec.sigma),
+                _lognormal_len(rng, spec.osl, spec.sigma))
+    # sharegpt mixture
+    u = rng.random()
+    acc = 0.0
+    for w, isl_m, osl_m, sigma in _SHAREGPT_MIX:
+        acc += w
+        if u <= acc:
+            return (_lognormal_len(rng, isl_m, sigma),
+                    _lognormal_len(rng, osl_m, sigma))
+    w, isl_m, osl_m, sigma = _SHAREGPT_MIX[-1]
+    return (_lognormal_len(rng, isl_m, sigma),
+            _lognormal_len(rng, osl_m, sigma))
+
+
+# ---------------------------------------------------------------------------
+# generation
+# ---------------------------------------------------------------------------
+
+def _pick_tenant(rng: random.Random,
+                 tenants: Sequence[TenantSpec]) -> TenantSpec:
+    total = sum(t.weight for t in tenants)
+    u = rng.random() * total
+    acc = 0.0
+    for t in tenants:
+        acc += t.weight
+        if u <= acc:
+            return t
+    return tenants[-1]
+
+
+def generate_trace(spec: TraceSpec, seed: int = 0) -> WorkloadTrace:
+    """Deterministically expand ``(spec, seed)`` into a WorkloadTrace."""
+    rng = random.Random(seed)
+    arrivals = _arrivals(rng, spec.n_requests, spec.arrivals)
+    reqs = []
+    for arrival in arrivals:
+        tenant = _pick_tenant(rng, spec.tenants)
+        isl, osl = _draw_lengths(rng, tenant.lengths)
+        reqs.append(TraceRequest(arrival_s=arrival, isl=isl, osl=osl,
+                                 tenant=tenant.name,
+                                 priority=tenant.priority))
+    meta = {"generator": {"spec": spec.to_dict(), "seed": seed}}
+    return WorkloadTrace(requests=tuple(reqs), meta=meta)
+
+
+def constant_trace(isl: int, osl: int, n_requests: int,
+                   rate_rps: float) -> WorkloadTrace:
+    """Evenly-spaced fixed-length trace (the closed-loop-equivalence
+    reference used by the property tests)."""
+    gap = 1.0 / rate_rps
+    reqs = tuple(TraceRequest(arrival_s=i * gap, isl=isl, osl=osl)
+                 for i in range(n_requests))
+    return WorkloadTrace(requests=reqs,
+                         meta={"generator": {"constant": {
+                             "isl": isl, "osl": osl,
+                             "n_requests": n_requests,
+                             "rate_rps": rate_rps}}})

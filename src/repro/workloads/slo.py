@@ -1,0 +1,47 @@
+"""Tail-latency SLOs and goodput: the ranking objective for replayed
+candidates.
+
+A deployment meets its SLO when its *tail* latencies stay under the
+targets; :class:`SLOSpec` carries the p99 TTFT/TPOT thresholds and
+scores each replayed request against them.  **Goodput** is then the
+token throughput contributed only by requests that individually met
+both thresholds — the production metric the analytical static view
+cannot see (a config can win on steady-state tok/s/chip while queueing
+bursts push its p99 TTFT far past the SLO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """Per-request tail-latency targets."""
+    ttft_p99_ms: float = 2000.0
+    tpot_p99_ms: float = 100.0
+
+    def __post_init__(self):
+        if self.ttft_p99_ms <= 0 or self.tpot_p99_ms <= 0:
+            raise ValueError(
+                f"SLO thresholds must be positive, got "
+                f"ttft_p99_ms={self.ttft_p99_ms}, "
+                f"tpot_p99_ms={self.tpot_p99_ms}")
+
+    def request_meets(self, ttft_s: float,
+                      tpot_s: Optional[float]) -> bool:
+        """Does one completed request meet both targets?  ``tpot_s`` is
+        ``None`` for single-token outputs (no decode interval exists),
+        which vacuously satisfies the TPOT target."""
+        if 1e3 * ttft_s > self.ttft_p99_ms:
+            return False
+        return tpot_s is None or 1e3 * tpot_s <= self.tpot_p99_ms
+
+    def to_dict(self) -> Dict:
+        return {"ttft_p99_ms": self.ttft_p99_ms,
+                "tpot_p99_ms": self.tpot_p99_ms}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "SLOSpec":
+        return cls(ttft_p99_ms=d["ttft_p99_ms"],
+                   tpot_p99_ms=d["tpot_p99_ms"])

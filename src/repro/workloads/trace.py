@@ -1,0 +1,178 @@
+"""Workload traces: the dynamic-traffic record the replay layer consumes.
+
+A :class:`WorkloadTrace` is an ordered sequence of :class:`TraceRequest`
+records — arrival time, prompt/output lengths, tenant, priority — plus
+provenance metadata (the generator spec and seed that produced it, when
+one did).  Traces serialize to a versioned JSONL format: one header
+record carrying ``schema_version`` and metadata, then one record per
+request.  ``WorkloadTrace.from_jsonl(t.to_jsonl()) == t`` is exact
+(floats survive via JSON's shortest-round-trip repr), so the trace file
+— not the generator invocation — is the interchange artifact between
+``workload generate``, ``workload replay``, and ``search --trace``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import statistics
+from typing import Dict, List, Sequence, Tuple
+
+from repro.serving.sim import percentile
+
+#: Bump on any backwards-incompatible change to the JSONL layout.
+TRACE_SCHEMA_VERSION = 1
+SUPPORTED_TRACE_SCHEMA_VERSIONS = (1,)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One request in a dynamic workload trace."""
+    arrival_s: float              # seconds since trace start (>= 0)
+    isl: int                      # input (prompt) length, tokens
+    osl: int                      # output length, tokens
+    tenant: str = "default"
+    priority: int = 0             # higher value = scheduled first
+
+    def to_dict(self) -> Dict:
+        return {"arrival_s": self.arrival_s, "isl": self.isl,
+                "osl": self.osl, "tenant": self.tenant,
+                "priority": self.priority}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "TraceRequest":
+        return cls(arrival_s=d["arrival_s"], isl=d["isl"], osl=d["osl"],
+                   tenant=d.get("tenant", "default"),
+                   priority=d.get("priority", 0))
+
+
+def _validate(requests: Sequence[TraceRequest]) -> None:
+    prev = 0.0
+    for i, r in enumerate(requests):
+        if r.arrival_s < 0:
+            raise ValueError(
+                f"request {i}: negative arrival {r.arrival_s}")
+        if r.arrival_s < prev:
+            raise ValueError(
+                f"request {i}: arrivals must be non-decreasing "
+                f"({r.arrival_s} after {prev})")
+        if r.isl < 1 or r.osl < 1:
+            raise ValueError(
+                f"request {i}: isl/osl must be >= 1, got "
+                f"{r.isl}/{r.osl}")
+        prev = r.arrival_s
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadTrace:
+    """An immutable, validated, serializable dynamic workload."""
+    requests: Tuple[TraceRequest, ...]
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "requests", tuple(self.requests))
+        _validate(self.requests)
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def n_requests(self) -> int:
+        return len(self.requests)
+
+    @property
+    def duration_s(self) -> float:
+        return self.requests[-1].arrival_s if self.requests else 0.0
+
+    @property
+    def tenants(self) -> List[str]:
+        return sorted({r.tenant for r in self.requests})
+
+    def mean_isl(self) -> int:
+        if not self.requests:
+            return 1
+        return max(1, round(statistics.mean(r.isl for r in self.requests)))
+
+    def mean_osl(self) -> int:
+        if not self.requests:
+            return 1
+        return max(1, round(statistics.mean(r.osl for r in self.requests)))
+
+    def arrival_rate_rps(self) -> float:
+        """Mean arrival rate over the trace span (0 for <2 requests)."""
+        if self.n_requests < 2 or self.duration_s <= 0:
+            return 0.0
+        return self.n_requests / self.duration_s
+
+    def describe(self) -> Dict:
+        """Summary statistics (the ``workload describe`` payload)."""
+        def dist(vals: List[float]) -> Dict:
+            return {"mean": statistics.mean(vals),
+                    "p50": percentile(vals, 0.50),
+                    "p95": percentile(vals, 0.95), "max": max(vals)}
+
+        per_tenant: Dict[str, int] = {}
+        for r in self.requests:
+            per_tenant[r.tenant] = per_tenant.get(r.tenant, 0) + 1
+        out = {
+            "schema_version": TRACE_SCHEMA_VERSION,
+            "n_requests": self.n_requests,
+            "duration_s": self.duration_s,
+            "arrival_rate_rps": self.arrival_rate_rps(),
+            "tenants": per_tenant,
+            "digest": self.digest(),
+            "meta": self.meta,
+        }
+        if self.requests:
+            out["isl"] = dist([float(r.isl) for r in self.requests])
+            out["osl"] = dist([float(r.osl) for r in self.requests])
+        return out
+
+    # -- serialization -------------------------------------------------------
+    def to_jsonl(self) -> str:
+        header = {"type": "header",
+                  "schema_version": TRACE_SCHEMA_VERSION,
+                  "n_requests": self.n_requests,
+                  "meta": self.meta}
+        lines = [json.dumps(header, sort_keys=True)]
+        lines += [json.dumps(r.to_dict(), sort_keys=True)
+                  for r in self.requests]
+        return "\n".join(lines) + "\n"
+
+    @classmethod
+    def from_jsonl(cls, text: str) -> "WorkloadTrace":
+        lines = [ln for ln in text.splitlines() if ln.strip()]
+        if not lines:
+            raise ValueError("empty trace file (missing header record)")
+        header = json.loads(lines[0])
+        if header.get("type") != "header":
+            raise ValueError("trace file must start with a header record "
+                             "({'type': 'header', ...})")
+        version = header.get("schema_version")
+        if version not in SUPPORTED_TRACE_SCHEMA_VERSIONS:
+            raise ValueError(
+                f"unsupported trace schema_version {version!r}; this "
+                f"build reads versions "
+                f"{', '.join(map(str, SUPPORTED_TRACE_SCHEMA_VERSIONS))}")
+        try:
+            reqs = [TraceRequest.from_dict(json.loads(ln))
+                    for ln in lines[1:]]
+        except (KeyError, TypeError) as e:
+            raise ValueError(f"malformed trace record: {e}") from e
+        declared = header.get("n_requests")
+        if declared is not None and declared != len(reqs):
+            raise ValueError(f"trace header declares {declared} requests "
+                             f"but file carries {len(reqs)}")
+        return cls(requests=tuple(reqs), meta=header.get("meta", {}))
+
+    def digest(self) -> str:
+        """Stable content identity over the canonical JSONL serialization."""
+        return hashlib.sha256(self.to_jsonl().encode()).hexdigest()[:16]
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_jsonl())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "WorkloadTrace":
+        with open(path) as f:
+            return cls.from_jsonl(f.read())

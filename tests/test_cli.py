@@ -6,6 +6,7 @@ import re
 
 import pytest
 
+from repro.api import SCHEMA_VERSION
 from repro.core import cli
 
 _STREAM_ARGS = ["--model", "llama3.1-8b", "--isl", "256", "--osl", "64",
@@ -64,7 +65,7 @@ def test_cli_stream_emits_parseable_jsonl_with_summary(capsys):
     assert summary["early_exit"] is None
     assert summary["n_candidates"] == priced[-1]
     assert summary["best"] is not None
-    assert summary["schema_version"] == 2
+    assert summary["schema_version"] == SCHEMA_VERSION
     assert summary["database"]["platform"] == "tpu_v5e"
 
 
@@ -130,7 +131,7 @@ def test_cli_stream_honors_save_flags(tmp_path, capsys):
     assert rc == 0
     capsys.readouterr()
     saved = json.load(open(rep_path))
-    assert saved["schema_version"] == 2
+    assert saved["schema_version"] == SCHEMA_VERSION
     assert saved["search"]["early_exit"]["reason"] == "stop_after_n_valid(2)"
     launch = json.load(open(launch_path))
     assert launch == saved["launch"]["raw"]

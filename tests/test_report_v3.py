@@ -1,0 +1,174 @@
+"""SearchReport schema v3: the ``workload_eval`` section (trace replay +
+SLO re-ranking) round-trips, and both v1 and v2 golden fixtures still
+migrate losslessly."""
+import json
+import os
+
+import pytest
+
+from repro.api import (Configurator, SCHEMA_VERSION,
+                       SUPPORTED_SCHEMA_VERSIONS, SearchReport)
+from repro.workloads import (ArrivalSpec, LengthSpec, SLOSpec, TenantSpec,
+                             TraceSpec, generate_trace)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+V1_FIXTURE = os.path.join(FIXTURES, "search_report_v1.json")
+V2_FIXTURE = os.path.join(FIXTURES, "search_report_v2.json")
+
+
+def _small_configurator():
+    return (Configurator.for_model("llama3.1-8b")
+            .traffic(isl=256, osl=64)
+            .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+            .cluster(chips=8).backend("repro-jax").dtype("fp8")
+            .modes("aggregated"))
+
+
+def _small_trace(seed=3):
+    return generate_trace(TraceSpec(
+        n_requests=40,
+        arrivals=ArrivalSpec(kind="bursty", rate_rps=6.0),
+        tenants=(TenantSpec(name="chat", weight=0.7, priority=1,
+                            lengths=LengthSpec(kind="lognormal",
+                                               isl=256, osl=64)),
+                 TenantSpec(name="batch", weight=0.3,
+                            lengths=LengthSpec(kind="lognormal",
+                                               isl=512, osl=96)))),
+        seed=seed)
+
+
+@pytest.fixture(scope="module")
+def evaluated():
+    cfg = _small_configurator()
+    return cfg.evaluate_frontier(_small_trace(),
+                                 SLOSpec(ttft_p99_ms=1500, tpot_p99_ms=60),
+                                 top_k=3)
+
+
+# ---------------------------------------------------------------------------
+# the v3 workload_eval section
+# ---------------------------------------------------------------------------
+
+def test_schema_version_is_3():
+    assert SCHEMA_VERSION == 3
+    assert set(SUPPORTED_SCHEMA_VERSIONS) == {1, 2, 3}
+
+
+def test_workload_eval_section_structure(evaluated):
+    we = evaluated.workload_eval
+    assert we is not None
+    assert set(we) >= {"trace", "slo", "candidates", "ranking",
+                       "analytical_ranking", "best_index", "reranked"}
+    assert we["slo"] == {"ttft_p99_ms": 1500, "tpot_p99_ms": 60}
+    assert we["trace"]["n_requests"] == 40
+    assert len(we["trace"]["digest"]) == 16
+    # replayed entries carry the full open-loop metric set
+    replayed = [c for c in we["candidates"] if c["replay"] is not None]
+    assert replayed
+    for c in replayed:
+        r = c["replay"]
+        assert set(r["ttft_ms"]) == {"p50", "p95", "p99"}
+        assert r["ttft_ms"]["p50"] <= r["ttft_ms"]["p99"]
+        assert r["goodput_tok_s"] <= r["throughput_tok_s"] + 1e-9
+        assert 0.0 <= r["slo_attainment"] <= 1.0
+        assert r["completed"] + r["rejected"] + r["unfinished"] \
+            == r["n_requests"]
+    # rankings index into report.projections
+    for idx in we["ranking"]:
+        assert 0 <= idx < len(evaluated.projections)
+    assert sorted(we["ranking"]) == sorted(we["analytical_ranking"])
+    assert we["best_index"] == we["ranking"][0]
+
+
+def test_v3_roundtrip_preserves_workload_eval(evaluated):
+    blob = evaluated.to_json()
+    assert json.loads(blob)["schema_version"] == 3
+    back = SearchReport.from_json(blob)
+    assert back == evaluated
+    assert back.workload_eval == evaluated.workload_eval
+    assert back.to_json() == blob            # byte-stable second hop
+
+
+def test_summary_mentions_workload_replay(evaluated):
+    text = evaluated.summary()
+    assert "workload replay" in text
+    assert evaluated.workload_eval["trace"]["digest"] in text
+
+
+def test_evaluate_frontier_reuses_supplied_report(evaluated):
+    cfg = _small_configurator()
+    report = cfg.search(generate_launch=False)
+    n_before = report.n_candidates
+    out = cfg.evaluate_frontier(_small_trace(),
+                                SLOSpec(ttft_p99_ms=1500, tpot_p99_ms=60),
+                                top_k=2, report=report)
+    assert out is report                     # filled in place
+    assert report.n_candidates == n_before   # no re-search
+    assert report.workload_eval["top_k"] == 2
+
+
+def test_zero_signal_replay_keeps_analytical_order(evaluated):
+    """When nothing attains the SLO every goodput is 0; ties must fall
+    back to the analytical order, so reranked stays False."""
+    cfg = _small_configurator()
+    report = cfg.search(generate_launch=False)
+    out = cfg.evaluate_frontier(
+        _small_trace(), SLOSpec(ttft_p99_ms=1e-6, tpot_p99_ms=1e-6),
+        top_k=3, report=report)
+    we = out.workload_eval
+    replayed = [c for c in we["candidates"] if c["replay"] is not None]
+    assert all(c["replay"]["goodput_tok_s"] == 0.0 for c in replayed)
+    assert we["ranking"] == we["analytical_ranking"]
+    assert we["reranked"] is False
+
+
+def test_workload_eval_records_replay_database(evaluated):
+    """The replay pricing identity is auditable next to the search's."""
+    we = evaluated.workload_eval
+    assert we["database"]["platform"] == "tpu_v5e"
+    assert we["database"]["backend"] == "repro-jax"
+    # same (platform, backend) pair that priced the analytical search;
+    # grid_hash may differ (replay collects extra grids lazily)
+    assert we["database"]["platform"] == evaluated.fingerprint["platform"]
+    assert we["database"]["backend"] == evaluated.fingerprint["backend"]
+    assert len(we["database"]["grid_hash"]) == 16
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures: v1 and v2 still read losslessly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path,version", [(V1_FIXTURE, 1), (V2_FIXTURE, 2)])
+def test_golden_fixture_migrates(path, version):
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["schema_version"] == version
+    rep = SearchReport.load(path)
+    assert rep.schema_version == SCHEMA_VERSION
+    # shared-by-all-versions fields survive byte-exact
+    assert rep.n_candidates == payload["search"]["n_candidates"]
+    assert rep.elapsed_s == payload["search"]["elapsed_s"]
+    assert rep.frontier_indices == payload["frontier"]
+    assert rep.best_index == payload["best"]
+    assert len(rep.projections) == len(payload["projections"])
+    for proj, raw in zip(rep.projections, payload["projections"]):
+        assert proj.tokens_per_s_per_chip == raw["tokens_per_s_per_chip"]
+        assert proj.config == raw["config"]
+    # sections the version never carried default to None
+    assert rep.workload_eval is None
+    if version == 1:
+        assert rep.fingerprint is None and rep.early_exit is None
+
+
+def test_v2_golden_fixture_keeps_v2_sections():
+    with open(V2_FIXTURE) as f:
+        payload = json.load(f)
+    rep = SearchReport.load(V2_FIXTURE)
+    assert rep.fingerprint == payload["database"]
+    assert rep.early_exit == payload["search"]["early_exit"]
+    assert rep.early_exit is not None        # fixture recorded an early exit
+    # and it re-serializes as v3 with workload_eval defaulting to null
+    d = rep.to_dict()
+    assert d["schema_version"] == 3
+    assert d["workload_eval"] is None
+    assert SearchReport.from_json(rep.to_json()) == rep

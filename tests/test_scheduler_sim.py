@@ -1,5 +1,6 @@
 """Scheduler invariants (hypothesis) + discrete-event simulator behaviour."""
 import dataclasses
+from collections import deque
 
 import pytest
 try:
@@ -81,3 +82,117 @@ def test_sim_concurrency_tradeoff():
     hi = sim.run(isl=128, osl=32, concurrency=32, max_requests=32)
     assert hi.throughput_tok_s > lo.throughput_tok_s
     assert hi.tpot_ms >= lo.tpot_ms - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# per-request metrics regression: no None -> 0.0 coercion
+# ---------------------------------------------------------------------------
+
+def test_per_request_carries_none_tpot_for_single_token_outputs():
+    """osl=1 requests have no decode interval, so tpot is undefined; it
+    must surface as None, not 0.0 (a 0.0 silently drags down any
+    percentile computed over per_request)."""
+    sim = ServingSimulator(SchedulerConfig(max_batch=4, max_num_tokens=512),
+                           _lat)
+    m = sim.run(isl=64, osl=1, concurrency=4, max_requests=8, warmup=0)
+    assert m.completed == 8
+    assert len(m.per_request) == 8
+    for ttft, tpot in m.per_request:
+        assert ttft is not None and ttft > 0
+        assert tpot is None                       # carried, not coerced
+    # a percentile over the defined samples only sees real values
+    tpots = [t for _, t in m.per_request if t is not None]
+    assert tpots == []
+
+
+def test_per_request_has_no_zero_placeholders():
+    sim = ServingSimulator(SchedulerConfig(max_batch=8, max_num_tokens=2048),
+                           _lat)
+    m = sim.run(isl=256, osl=32, concurrency=8, max_requests=16)
+    assert len(m.per_request) == m.completed
+    for ttft, tpot in m.per_request:
+        assert ttft > 0.0
+        assert tpot is not None and tpot > 0.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler edge cases (ISSUE 4 satellites)
+# ---------------------------------------------------------------------------
+
+def test_non_chunked_oversized_prompt_admitted_not_livelocked():
+    """chunked_prefill=False with isl > max_num_tokens: the scheduler
+    admits the whole prompt over budget on a fresh iteration rather than
+    waiting forever for a budget that can never be big enough."""
+    sched = ContinuousBatchingScheduler(SchedulerConfig(
+        max_batch=2, max_num_tokens=100, chunked_prefill=False))
+    sched.add(Request(rid=0, isl=250, osl=2))
+    plan = sched.plan(0.0)
+    assert len(plan.prefill) == 1
+    assert plan.prefill[0].length == 250          # over-budget admission
+    finished = sched.commit(plan, 1.0)
+    assert sched.waiting == deque() and len(sched.decoding) == 1
+    assert not finished
+
+
+def test_non_chunked_oversized_prompt_waits_for_fresh_iteration():
+    """With part of the budget already consumed, a non-chunked oversized
+    prompt defers instead of stacking over-budget work."""
+    sched = ContinuousBatchingScheduler(SchedulerConfig(
+        max_batch=2, max_num_tokens=100, chunked_prefill=False))
+    sched.add(Request(rid=0, isl=60, osl=2))
+    sched.add(Request(rid=1, isl=250, osl=2))
+    plan = sched.plan(0.0)
+    # the small prompt consumed budget; the big one must wait
+    assert [c.req.rid for c in plan.prefill] == [0]
+    sched.commit(plan, 1.0)
+    plan2 = sched.plan(1.0)
+    assert [c.req.rid for c in plan2.prefill] == [1]
+    assert plan2.prefill[0].length == 250
+
+
+def test_max_queue_rejection_path():
+    sched = ContinuousBatchingScheduler(SchedulerConfig(
+        max_batch=1, max_queue=2))
+    assert sched.add(Request(rid=0, isl=8, osl=2))
+    assert sched.add(Request(rid=1, isl=8, osl=2))
+    rejected = Request(rid=2, isl=8, osl=2)
+    assert not sched.add(rejected)
+    assert rejected not in sched.waiting
+    assert sched.active == 2                      # rejected never counted
+    # draining the queue reopens admission
+    plan = sched.plan(0.0)
+    sched.commit(plan, 1.0)
+    assert sched.add(Request(rid=3, isl=8, osl=2))
+
+
+def test_osl_1_finishes_on_prefill_commit():
+    """A request with osl=1 produces its only token when prefill
+    completes: the same commit must finish it and free its slot."""
+    sched = ContinuousBatchingScheduler(SchedulerConfig(
+        max_batch=1, max_num_tokens=512))
+    req = Request(rid=0, isl=64, osl=1)
+    sched.add(req)
+    plan = sched.plan(0.0)
+    finished = sched.commit(plan, 1.0)
+    assert finished == [req]
+    assert req.phase == Phase.DONE
+    assert req.generated == 1
+    assert req.t_first_token == 1.0 and req.t_finish == 1.0
+    assert req.tpot is None                       # no decode interval
+    assert len(sched._free_slots) == 1            # slot returned
+    assert sched.active == 0
+
+
+def test_osl_1_chunked_prefill_finishes_after_last_chunk():
+    sched = ContinuousBatchingScheduler(SchedulerConfig(
+        max_batch=1, max_num_tokens=100, chunked_prefill=True))
+    req = Request(rid=0, isl=250, osl=1)
+    sched.add(req)
+    t, finished = 0.0, []
+    while sched.active and t < 10:
+        plan = sched.plan(t)
+        t += 1.0
+        finished += sched.commit(plan, t)
+    assert finished == [req]
+    assert req.prefill_done == 250 and req.generated == 1
+    assert req.t_finish == req.t_first_token      # done the same commit

@@ -1,0 +1,150 @@
+"""CLI surface of the workloads subsystem: `workload generate | describe |
+replay` and `search --trace` (SLO-aware frontier re-ranking)."""
+import json
+
+import pytest
+
+from repro.core import cli
+from repro.workloads import WorkloadTrace
+
+_GEN_ARGS = ["workload", "generate", "--arrivals", "bursty", "--rate", "4",
+             "--n", "40", "--lengths", "lognormal", "--isl", "256",
+             "--osl", "64", "--tenants", "chat:0.7:1,batch:0.3",
+             "--seed", "7"]
+
+
+@pytest.fixture()
+def trace_path(tmp_path, capsys):
+    path = str(tmp_path / "trace.jsonl")
+    rc = cli.main(_GEN_ARGS + ["--out", path])
+    capsys.readouterr()
+    assert rc == 0
+    return path
+
+
+def test_workload_generate_writes_versioned_jsonl(trace_path):
+    trace = WorkloadTrace.load(trace_path)
+    assert trace.n_requests == 40
+    assert set(trace.tenants) == {"batch", "chat"}
+    assert trace.meta["generator"]["seed"] == 7
+    with open(trace_path) as f:
+        header = json.loads(f.readline())
+    assert header["type"] == "header" and header["schema_version"] == 1
+
+
+def test_workload_generate_deterministic(tmp_path, capsys):
+    a, b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    assert cli.main(_GEN_ARGS + ["--out", a, "--json"]) == 0
+    rec_a = json.loads(capsys.readouterr().out)
+    assert cli.main(_GEN_ARGS + ["--out", b, "--json"]) == 0
+    rec_b = json.loads(capsys.readouterr().out)
+    assert rec_a["describe"]["digest"] == rec_b["describe"]["digest"]
+    assert open(a).read() == open(b).read()
+
+
+def test_workload_generate_from_spec_file(tmp_path, capsys):
+    spec = {"n_requests": 12,
+            "arrivals": {"kind": "poisson", "rate_rps": 2.0,
+                         "burst_factor": 4.0, "mean_on_s": 10.0,
+                         "mean_off_s": 20.0, "period_s": 120.0,
+                         "amplitude": 0.8},
+            "tenants": [{"name": "only", "weight": 1.0, "priority": 0,
+                         "lengths": {"kind": "fixed", "isl": 128, "osl": 32,
+                                     "isl_lo": 64, "isl_hi": 2048,
+                                     "osl_lo": 16, "osl_hi": 512,
+                                     "sigma": 0.5}}]}
+    spec_path = tmp_path / "spec.json"
+    spec_path.write_text(json.dumps(spec))
+    out = str(tmp_path / "t.jsonl")
+    rc = cli.main(["workload", "generate", "--spec", str(spec_path),
+                   "--out", out, "--json"])
+    assert rc == 0
+    rec = json.loads(capsys.readouterr().out)
+    assert rec["describe"]["n_requests"] == 12
+    trace = WorkloadTrace.load(out)
+    assert all(r.isl == 128 and r.osl == 32 for r in trace.requests)
+
+
+def test_workload_describe(trace_path, capsys):
+    rc = cli.main(["workload", "describe", "--trace", trace_path, "--json"])
+    assert rc == 0
+    desc = json.loads(capsys.readouterr().out)
+    assert desc["n_requests"] == 40
+    assert set(desc["tenants"]) == {"batch", "chat"}
+    assert desc["isl"]["p50"] <= desc["isl"]["p95"]
+    # human-readable variant mentions the tenants
+    rc = cli.main(["workload", "describe", "--trace", trace_path])
+    text = capsys.readouterr().out
+    assert rc == 0 and "tenant chat" in text
+
+
+def test_workload_replay_json(trace_path, capsys):
+    rc = cli.main(["workload", "replay", "--trace", trace_path,
+                   "--model", "llama3.1-8b", "--tp", "2", "--batch", "64",
+                   "--dtype", "fp8", "--slo-ttft-p99", "1500",
+                   "--slo-tpot-p99", "60", "--json"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    m = payload["metrics"]
+    assert m["n_requests"] == 40
+    assert m["completed"] + m["rejected"] + m["unfinished"] == 40
+    assert m["goodput_tok_s"] >= 0.0
+    assert m["goodput_tok_s"] <= m["throughput_tok_s"] + 1e-9
+    assert set(m["ttft_ms"]) == {"p50", "p95", "p99"}
+    assert payload["trace"]["digest"] == WorkloadTrace.load(trace_path).digest()
+    assert payload["config"]["describe"] == "TP2 b64"
+
+
+def test_workload_replay_human_output(trace_path, capsys):
+    rc = cli.main(["workload", "replay", "--trace", trace_path,
+                   "--model", "llama3.1-8b", "--tp", "1", "--batch", "32",
+                   "--dtype", "fp8"])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "SLO attainment" in text and "goodput" in text
+
+
+def test_search_with_trace_rerank(trace_path, capsys):
+    rc = cli.main(["search", "--model", "llama3.1-8b", "--isl", "256",
+                   "--osl", "64", "--ttft", "2000", "--min-speed", "10",
+                   "--chips", "8", "--dtype", "fp8", "--modes", "aggregated",
+                   "--trace", trace_path, "--slo-ttft-p99", "1500",
+                   "--slo-tpot-p99", "60", "--replay-top-k", "2", "--json"])
+    assert rc == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["schema_version"] == 3
+    we = report["workload_eval"]
+    assert we is not None
+    assert we["top_k"] == 2
+    assert len(we["ranking"]) <= 2
+    replayed = [c for c in we["candidates"] if c["replay"] is not None]
+    assert replayed
+    for c in replayed:
+        assert c["replay"]["slo"] == {"ttft_p99_ms": 1500.0,
+                                      "tpot_p99_ms": 60.0}
+
+
+def test_search_without_trace_has_no_workload_eval(capsys):
+    rc = cli.main(["search", "--model", "llama3.1-8b", "--isl", "256",
+                   "--osl", "64", "--ttft", "2000", "--min-speed", "10",
+                   "--chips", "8", "--dtype", "fp8", "--modes", "aggregated",
+                   "--json"])
+    assert rc == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["schema_version"] == 3
+    assert report["workload_eval"] is None
+
+
+def test_workload_bad_inputs_exit_2(tmp_path, capsys):
+    missing = str(tmp_path / "nope.jsonl")
+    assert cli.main(["workload", "describe", "--trace", missing]) == 2
+    capsys.readouterr()
+    # malformed tenant spec
+    assert cli.main(["workload", "generate", "--tenants", "justname",
+                     "--out", str(tmp_path / "x.jsonl")]) == 2
+    capsys.readouterr()
+    # corrupt trace file
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text("not json\n")
+    assert cli.main(["workload", "replay", "--trace", str(bad),
+                     "--model", "llama3.1-8b"]) == 2

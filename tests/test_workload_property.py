@@ -1,0 +1,81 @@
+"""Property tests for repro.workloads (hypothesis, with the deterministic
+compat shim on bare environments): every seeded generator spec yields a
+trace whose JSONL round-trip is exact and whose arrivals are sorted and
+non-negative, and open-loop replay of a concurrency-equivalent constant
+trace matches the closed-loop simulator's throughput within tolerance."""
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare environment: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
+
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.sim import ServingSimulator, StepSpec
+from repro.workloads import (ArrivalSpec, LengthSpec, TenantSpec, TraceSpec,
+                             WorkloadTrace, constant_trace, generate_trace)
+
+
+def _lat(spec: StepSpec) -> float:
+    return 1e-3 + 1e-6 * sum(c for c, _ in spec.prefill) \
+        + 1e-5 * len(spec.decode)
+
+
+@given(st.sampled_from(["poisson", "bursty", "diurnal"]),
+       st.sampled_from(["fixed", "uniform", "lognormal", "sharegpt"]),
+       st.floats(0.2, 20.0),       # rate_rps
+       st.integers(1, 60),         # n_requests
+       st.integers(1, 3),          # n_tenants
+       st.integers(0, 10_000))     # seed
+@settings(max_examples=40, deadline=None)
+def test_generated_trace_roundtrips_and_is_well_formed(
+        arrival_kind, length_kind, rate, n, n_tenants, seed):
+    spec = TraceSpec(
+        n_requests=n,
+        arrivals=ArrivalSpec(kind=arrival_kind, rate_rps=rate),
+        tenants=tuple(
+            TenantSpec(name=f"t{i}", weight=float(i + 1), priority=i,
+                       lengths=LengthSpec(kind=length_kind))
+            for i in range(n_tenants)))
+    trace = generate_trace(spec, seed=seed)
+
+    # exact JSONL round-trip (floats survive shortest-repr serialization)
+    back = WorkloadTrace.from_jsonl(trace.to_jsonl())
+    assert back == trace
+    assert back.digest() == trace.digest()
+
+    # arrivals sorted, non-negative; lengths positive; tenants known
+    arrivals = [r.arrival_s for r in trace.requests]
+    assert len(arrivals) == n
+    assert arrivals == sorted(arrivals)
+    assert all(a >= 0.0 for a in arrivals)
+    names = {t.name for t in spec.tenants}
+    for r in trace.requests:
+        assert r.isl >= 1 and r.osl >= 1
+        assert r.tenant in names
+
+    # and (spec, seed) fully determines the trace
+    assert generate_trace(spec, seed=seed) == trace
+
+
+@given(st.integers(32, 256),       # isl
+       st.integers(2, 24),         # osl
+       st.sampled_from([2, 4, 8]))  # concurrency == max_batch
+@settings(max_examples=15, deadline=None)
+def test_replay_of_saturating_constant_trace_matches_closed_loop(
+        isl, osl, concurrency):
+    """A constant trace whose arrivals all but saturate the slot count is
+    the open-loop twin of the closed-loop run: both keep `concurrency`
+    requests in flight, so steady-state throughput must agree within
+    tolerance (ramp-up/drain edges are the only difference)."""
+    n = 8 * concurrency
+    sim = ServingSimulator(
+        SchedulerConfig(max_batch=concurrency, max_num_tokens=4096), _lat)
+    closed = sim.run(isl=isl, osl=osl, concurrency=concurrency,
+                     max_requests=n, warmup=0)
+    # arrivals effectively instantaneous: the queue stays full like the
+    # closed loop's injector
+    trace = constant_trace(isl=isl, osl=osl, n_requests=n, rate_rps=1e9)
+    replayed = sim.replay(trace)
+    assert replayed.completed == closed.completed == n
+    assert replayed.throughput_tok_s == pytest.approx(
+        closed.throughput_tok_s, rel=0.15)

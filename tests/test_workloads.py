@@ -1,0 +1,299 @@
+"""repro.workloads: trace model, seeded generators, SLO/goodput scoring,
+open-loop replay, and priority admission."""
+import json
+import math
+
+import pytest
+
+from repro.serving.request import Request
+from repro.serving.scheduler import ContinuousBatchingScheduler, SchedulerConfig
+from repro.serving.sim import ServingSimulator, StepSpec, percentile
+from repro.workloads import (ARRIVAL_KINDS, ArrivalSpec, LengthSpec, SLOSpec,
+                             TenantSpec, TraceRequest, TraceSpec,
+                             WorkloadTrace, constant_trace, generate_trace)
+
+
+def _lat(spec: StepSpec) -> float:
+    return 1e-3 + 1e-6 * sum(c for c, _ in spec.prefill) \
+        + 1e-5 * len(spec.decode)
+
+
+def _sim(**kw) -> ServingSimulator:
+    return ServingSimulator(SchedulerConfig(**kw), _lat)
+
+
+# ---------------------------------------------------------------------------
+# trace model
+# ---------------------------------------------------------------------------
+
+def test_trace_roundtrip_exact():
+    t = WorkloadTrace(requests=(
+        TraceRequest(arrival_s=0.0, isl=10, osl=5),
+        TraceRequest(arrival_s=0.123456789012345, isl=2048, osl=512,
+                     tenant="batch", priority=-1)),
+        meta={"note": "hand-built"})
+    t2 = WorkloadTrace.from_jsonl(t.to_jsonl())
+    assert t2 == t
+    assert t2.requests[1].arrival_s == t.requests[1].arrival_s  # float-exact
+    assert t2.digest() == t.digest()
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="non-decreasing"):
+        WorkloadTrace(requests=(TraceRequest(1.0, 8, 8),
+                                TraceRequest(0.5, 8, 8)))
+    with pytest.raises(ValueError, match="negative"):
+        WorkloadTrace(requests=(TraceRequest(-0.1, 8, 8),))
+    with pytest.raises(ValueError, match="isl/osl"):
+        WorkloadTrace(requests=(TraceRequest(0.0, 0, 8),))
+
+
+def test_trace_jsonl_format_rejections():
+    with pytest.raises(ValueError, match="header"):
+        WorkloadTrace.from_jsonl('{"arrival_s": 0, "isl": 1, "osl": 1}\n')
+    with pytest.raises(ValueError, match="schema_version"):
+        WorkloadTrace.from_jsonl(
+            '{"type": "header", "schema_version": 99}\n')
+    with pytest.raises(ValueError, match="declares"):
+        WorkloadTrace.from_jsonl(
+            '{"type": "header", "schema_version": 1, "n_requests": 5}\n'
+            '{"arrival_s": 0.0, "isl": 4, "osl": 4}\n')
+
+
+def test_trace_describe_and_views():
+    t = generate_trace(TraceSpec(
+        n_requests=50, arrivals=ArrivalSpec(rate_rps=10.0),
+        tenants=(TenantSpec(name="a", weight=1.0),
+                 TenantSpec(name="b", weight=1.0))), seed=1)
+    d = t.describe()
+    assert d["n_requests"] == 50
+    assert sum(d["tenants"].values()) == 50
+    assert set(d["tenants"]) == {"a", "b"} == set(t.tenants)
+    assert d["isl"]["p50"] <= d["isl"]["p95"] <= d["isl"]["max"]
+    assert t.mean_isl() >= 1 and t.mean_osl() >= 1
+    assert t.arrival_rate_rps() > 0
+    assert d["meta"]["generator"]["seed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# generators: determinism + distribution shape
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ARRIVAL_KINDS)
+def test_generator_deterministic_and_sorted(kind):
+    spec = TraceSpec(n_requests=80,
+                     arrivals=ArrivalSpec(kind=kind, rate_rps=5.0))
+    a = generate_trace(spec, seed=42)
+    b = generate_trace(spec, seed=42)
+    assert a == b and a.digest() == b.digest()
+    assert generate_trace(spec, seed=43) != a
+    arr = [r.arrival_s for r in a.requests]
+    assert arr == sorted(arr)
+    assert all(x >= 0 for x in arr)
+    assert len(arr) == 80
+
+
+def test_bursty_mean_rate_invariant_to_burst_factor():
+    """rate_rps is the *time-weighted mean*: raising burst_factor must
+    change burstiness, not offered load."""
+    rates = {}
+    for bf in (1.5, 4.0, 8.0):
+        t = generate_trace(TraceSpec(
+            n_requests=2000,
+            arrivals=ArrivalSpec(kind="bursty", rate_rps=4.0,
+                                 burst_factor=bf)), seed=17)
+        rates[bf] = t.arrival_rate_rps()
+    for bf, rate in rates.items():
+        assert rate == pytest.approx(4.0, rel=0.35), (bf, rate)
+    # and the realized rate is not monotonically inflated by burstiness
+    assert max(rates.values()) < 2 * min(rates.values())
+
+
+def test_spec_roundtrip():
+    spec = TraceSpec(
+        n_requests=10,
+        arrivals=ArrivalSpec(kind="diurnal", rate_rps=2.0, amplitude=0.5),
+        tenants=(TenantSpec(name="x", weight=2.0, priority=3,
+                            lengths=LengthSpec(kind="uniform")),))
+    assert TraceSpec.from_dict(spec.to_dict()) == spec
+    # and the embedded meta makes the trace regenerable
+    t = generate_trace(spec, seed=5)
+    g = t.meta["generator"]
+    assert generate_trace(TraceSpec.from_dict(g["spec"]), g["seed"]) == t
+
+
+def test_length_distributions_respect_bounds():
+    uni = generate_trace(TraceSpec(
+        n_requests=60, tenants=(TenantSpec(lengths=LengthSpec(
+            kind="uniform", isl_lo=100, isl_hi=200,
+            osl_lo=10, osl_hi=20)),)), seed=0)
+    assert all(100 <= r.isl <= 200 and 10 <= r.osl <= 20
+               for r in uni.requests)
+    fixed = generate_trace(TraceSpec(
+        n_requests=5, tenants=(TenantSpec(lengths=LengthSpec(
+            kind="fixed", isl=77, osl=11)),)), seed=0)
+    assert all(r.isl == 77 and r.osl == 11 for r in fixed.requests)
+    logn = generate_trace(TraceSpec(
+        n_requests=200, tenants=(TenantSpec(lengths=LengthSpec(
+            kind="lognormal", isl=500, osl=100, sigma=0.4)),)), seed=0)
+    assert all(1 <= r.isl <= 2000 and 1 <= r.osl <= 400
+               for r in logn.requests)
+    share = generate_trace(TraceSpec(
+        n_requests=300, tenants=(TenantSpec(lengths=LengthSpec(
+            kind="sharegpt")),)), seed=0)
+    assert len({r.isl for r in share.requests}) > 20   # a real mixture
+    assert all(r.isl >= 1 and r.osl >= 1 for r in share.requests)
+
+
+def test_tenant_mix_and_priorities():
+    t = generate_trace(TraceSpec(
+        n_requests=400,
+        tenants=(TenantSpec(name="big", weight=0.9, priority=2),
+                 TenantSpec(name="small", weight=0.1))), seed=9)
+    counts = t.describe()["tenants"]
+    assert counts["big"] > counts["small"]
+    assert all(r.priority == 2 for r in t.requests if r.tenant == "big")
+
+
+def test_bad_specs_rejected():
+    with pytest.raises(ValueError, match="arrival kind"):
+        ArrivalSpec(kind="lunar")
+    with pytest.raises(ValueError, match="rate_rps"):
+        ArrivalSpec(rate_rps=0)
+    with pytest.raises(ValueError, match="amplitude"):
+        ArrivalSpec(kind="diurnal", amplitude=1.5)
+    with pytest.raises(ValueError, match="length kind"):
+        LengthSpec(kind="zipf")
+    with pytest.raises(ValueError, match="weight"):
+        TenantSpec(weight=0)
+    with pytest.raises(ValueError, match="duplicate"):
+        TraceSpec(tenants=(TenantSpec(name="a"), TenantSpec(name="a")))
+    with pytest.raises(ValueError, match="n_requests"):
+        TraceSpec(n_requests=0)
+
+
+# ---------------------------------------------------------------------------
+# SLO / percentile helpers
+# ---------------------------------------------------------------------------
+
+def test_slo_spec():
+    slo = SLOSpec(ttft_p99_ms=1000, tpot_p99_ms=50)
+    assert SLOSpec.from_dict(slo.to_dict()) == slo
+    assert slo.request_meets(0.5, 0.02)
+    assert not slo.request_meets(1.5, 0.02)       # TTFT blown
+    assert not slo.request_meets(0.5, 0.08)       # TPOT blown
+    assert slo.request_meets(0.5, None)           # single-token output
+    with pytest.raises(ValueError, match="positive"):
+        SLOSpec(ttft_p99_ms=0)
+
+
+def test_percentile_interpolation():
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(vals, 0.0) == 1.0
+    assert percentile(vals, 1.0) == 4.0
+    assert percentile(vals, 0.5) == pytest.approx(2.5)
+    assert percentile([7.0], 0.99) == 7.0
+    assert math.isnan(percentile([], 0.5))
+
+
+# ---------------------------------------------------------------------------
+# open-loop replay
+# ---------------------------------------------------------------------------
+
+def test_replay_counts_queueing_into_ttft():
+    """All requests arriving at t=0 on a 1-slot engine: the Nth request's
+    TTFT includes waiting for the previous N-1, so the p99 far exceeds
+    the p50 even though every request is identical."""
+    trace = constant_trace(isl=64, osl=16, n_requests=16, rate_rps=1e6)
+    m = _sim(max_batch=1, max_num_tokens=256).replay(trace)
+    assert m.completed == 16
+    # TTFTs ramp linearly with queue position: the tail is ~2x the median
+    assert m.ttft_ms["p99"] > 1.8 * m.ttft_ms["p50"]
+    assert m.queue_depth_max > 0
+
+
+def test_replay_idle_engine_jumps_to_next_arrival():
+    trace = constant_trace(isl=32, osl=4, n_requests=5, rate_rps=0.5)
+    m = _sim(max_batch=8, max_num_tokens=256).replay(trace)
+    assert m.completed == 5
+    # widely-spaced arrivals: no queueing, makespan spans the trace
+    assert m.queue_depth_max == 0
+    assert m.duration_s >= trace.duration_s
+    assert m.ttft_ms["p99"] < 100.0
+
+
+def test_replay_goodput_under_slo():
+    trace = constant_trace(isl=64, osl=16, n_requests=12, rate_rps=1e6)
+    strict = SLOSpec(ttft_p99_ms=1e-6, tpot_p99_ms=1e-6)
+    loose = SLOSpec(ttft_p99_ms=1e9, tpot_p99_ms=1e9)
+    sim = _sim(max_batch=2, max_num_tokens=256)
+    m_strict = sim.replay(trace, slo=strict)
+    m_loose = sim.replay(trace, slo=loose)
+    assert m_strict.slo_attainment == 0.0 and m_strict.goodput_tok_s == 0.0
+    assert m_loose.slo_attainment == 1.0
+    assert m_loose.goodput_tok_s == pytest.approx(
+        12 * 16 / m_loose.duration_s)
+    assert m_loose.goodput_tok_s <= m_loose.throughput_tok_s + 1e-9
+
+
+def test_replay_rejects_on_max_queue_and_counts_misses():
+    trace = constant_trace(isl=32, osl=8, n_requests=20, rate_rps=1e6)
+    m = _sim(max_batch=1, max_num_tokens=64, max_queue=4).replay(
+        trace, slo=SLOSpec(ttft_p99_ms=1e9, tpot_p99_ms=1e9))
+    assert m.rejected > 0
+    assert m.completed + m.rejected + m.unfinished == 20
+    # rejected requests count as SLO misses
+    assert m.slo_attainment == pytest.approx(m.completed / 20)
+
+
+def test_replay_accepts_plain_record_sequences():
+    """Duck-typing: any records with arrival_s/isl/osl replay fine."""
+    reqs = [TraceRequest(arrival_s=0.1 * i, isl=16, osl=4)
+            for i in range(6)]
+    m = _sim(max_batch=4, max_num_tokens=64).replay(reqs)
+    assert m.completed == 6
+
+
+def test_replay_metrics_to_dict_is_json_safe():
+    trace = constant_trace(isl=16, osl=4, n_requests=4, rate_rps=10.0)
+    m = _sim(max_batch=4, max_num_tokens=64).replay(
+        trace, slo=SLOSpec(ttft_p99_ms=100, tpot_p99_ms=100))
+    d = m.to_dict()
+    assert "per_request" not in d
+    json.dumps(d)
+    assert d["slo"] == {"ttft_p99_ms": 100, "tpot_p99_ms": 100}
+
+
+# ---------------------------------------------------------------------------
+# priority admission (multi-tenant)
+# ---------------------------------------------------------------------------
+
+def test_priority_admission_orders_waiting_queue():
+    sched = ContinuousBatchingScheduler(SchedulerConfig(
+        max_batch=1, priority_admission=True))
+    sched.add(Request(rid=0, isl=8, osl=2, priority=0))
+    sched.add(Request(rid=1, isl=8, osl=2, priority=5))
+    sched.add(Request(rid=2, isl=8, osl=2, priority=5))
+    sched.add(Request(rid=3, isl=8, osl=2, priority=-1))
+    assert [r.rid for r in sched.waiting] == [1, 2, 0, 3]
+
+
+def test_priority_admission_off_is_fifo():
+    sched = ContinuousBatchingScheduler(SchedulerConfig(max_batch=1))
+    for rid, prio in ((0, 0), (1, 5), (2, -1)):
+        sched.add(Request(rid=rid, isl=8, osl=2, priority=prio))
+    assert [r.rid for r in sched.waiting] == [0, 1, 2]
+
+
+def test_high_priority_tenant_gets_better_ttft():
+    reqs = tuple(TraceRequest(arrival_s=0.0, isl=64, osl=8,
+                              tenant="lo" if i % 2 else "hi",
+                              priority=0 if i % 2 else 1)
+                 for i in range(12))
+    trace = WorkloadTrace(requests=reqs)
+    sim = ServingSimulator(SchedulerConfig(max_batch=1, max_num_tokens=128,
+                                           priority_admission=True), _lat)
+    m = sim.replay(trace)
+    hi = [ttft for ten, ttft, _ in m.per_request if ten == "hi"]
+    lo = [ttft for ten, ttft, _ in m.per_request if ten == "lo"]
+    assert max(hi) < min(lo)
