@@ -1,0 +1,93 @@
+"""Capacity ladder — goodput and cost-per-attained-token vs replicas.
+
+Replays one seeded bursty trace across a ladder of replica counts for
+each routing policy, recording aggregate goodput, SLO attainment, p99
+TTFT, load imbalance, and the planner's cost metric: chip-seconds per
+thousand attained tokens (``total_chips / goodput * 1000``).  Goodput
+saturates once the deployment absorbs the bursts — beyond that point
+extra replicas only raise the cost column, which is exactly the
+trade-off ``plan_min_chips`` automates.
+
+    PYTHONPATH=src python -m benchmarks.capacity_ladder [--quick]
+"""
+from __future__ import annotations
+
+from benchmarks.common import write_csv
+from repro.api import Configurator
+from repro.capacity import DeploymentSpec, ROUTING_POLICIES
+from repro.core.task_runner import TaskRunner
+from repro.workloads import (ArrivalSpec, LengthSpec, SLOSpec, TenantSpec,
+                             TraceSpec, candidate_from_projection,
+                             generate_trace)
+
+LADDER = (1, 2, 4, 8)
+SEED = 7
+
+
+def _trace(n: int):
+    return generate_trace(TraceSpec(
+        n_requests=n,
+        arrivals=ArrivalSpec(kind="bursty", rate_rps=60.0, burst_factor=4.0),
+        tenants=(
+            TenantSpec(name="chat", weight=0.7, priority=1,
+                       lengths=LengthSpec(kind="lognormal", isl=256,
+                                          osl=64)),
+            TenantSpec(name="batch", weight=0.3,
+                       lengths=LengthSpec(kind="lognormal", isl=512,
+                                          osl=96)),
+        )), seed=SEED)
+
+
+def run(quick: bool = False):
+    ladder = LADDER[:3] if quick else LADDER
+    routings = ("round_robin",) if quick else ROUTING_POLICIES
+    trace = _trace(40 if quick else 80)
+    slo = SLOSpec(ttft_p99_ms=400, tpot_p99_ms=50)
+
+    cfg = (Configurator.for_model("llama3.1-8b")
+           .traffic(isl=256, osl=64)
+           .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+           .cluster(chips=8, platform="tpu_v5e")
+           .dtype("fp8")
+           .modes("aggregated"))
+    report = cfg.search(generate_launch=False)
+    candidate = candidate_from_projection(report.top_k(1)[0])
+    runner = TaskRunner(report.workload)
+
+    rows = []
+    min_chips = None
+    for routing in routings:
+        for replicas in ladder:
+            dep = DeploymentSpec(candidate=candidate, replicas=replicas)
+            m = runner.cluster_simulator(dep, routing=routing).replay(
+                trace, slo=slo)
+            attains = m.slo_attainment >= 0.95
+            cost = (dep.total_chips / m.goodput_tok_s * 1000
+                    if m.goodput_tok_s else float("inf"))
+            if routing == routings[0] and attains and min_chips is None:
+                min_chips = dep.total_chips
+            rows.append([routing, replicas, dep.total_chips,
+                         f"{m.goodput_tok_s:.1f}",
+                         f"{100 * m.slo_attainment:.1f}",
+                         f"{m.ttft_ms['p99']:.1f}",
+                         f"{m.imbalance['routed_cv']:.3f}",
+                         f"{cost:.3f}", int(attains)])
+            print(f"  {routing:18s} x{replicas}: goodput "
+                  f"{m.goodput_tok_s:8.1f} tok/s  attainment "
+                  f"{100 * m.slo_attainment:5.1f}%  "
+                  f"chip-s/ktok {cost:7.3f}  "
+                  f"{'ATTAINS' if attains else 'misses'}")
+
+    path = write_csv(
+        "capacity_ladder.csv",
+        ["routing", "replicas", "total_chips", "goodput_tok_s",
+         "slo_attainment_pct", "p99_ttft_ms", "routed_cv",
+         "chip_s_per_ktok", "attains"], rows)
+    print(f"  min-chip deployment ({routings[0]}): "
+          f"{min_chips if min_chips is not None else 'none on ladder'}")
+    return {"csv": path, "min_chips": min_chips, "n_points": len(rows)}
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

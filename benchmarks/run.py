@@ -16,7 +16,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks import (ablation_sol, cpu_silicon_fidelity,
+from benchmarks import (ablation_sol, capacity_ladder, cpu_silicon_fidelity,
                         engine_calibration, fig1_pareto, fig5_powerlaw,
                         fig6_fidelity, fig7_disagg_fidelity, roofline,
                         spec_decode, table1_search_efficiency,
@@ -51,6 +51,9 @@ BENCHES = [
     ("workload_goodput_rerank", workload_goodput.run,
      lambda r: f"reranked={r.get('n_reranked', 0)}"
                f"/{r.get('n_points', 0)}"),
+    ("capacity_ladder", capacity_ladder.run,
+     lambda r: f"min_chips={r.get('min_chips')}"
+               f";n_points={r.get('n_points', 0)}"),
 ]
 
 

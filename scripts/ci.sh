@@ -22,7 +22,7 @@ report = json.load(sys.stdin)
 version = report["schema_version"]
 n_projections = len(report["projections"])
 best_index = report["best"]
-assert version == 3, version
+assert version == 4, version
 assert n_projections > 0, "search produced no projections"
 assert report["database"]["platform"] == "tpu_v5e", report["database"]
 assert len(report["memory"]["per_candidate_bytes_per_chip"]) \
@@ -143,5 +143,47 @@ print(f"ok: trace {digest}, {m['completed']} completed, goodput "
       f"{100 * m['slo_attainment']:.0f}% attainment")
 PY
 rm -rf "$wl_dir"
+
+echo "=== smoke: capacity sweep --json finds a deterministic min-chip plan ==="
+# Seeded bursty trace over a 3-rung ladder: the sweep must report a
+# finite min-chip plan and emit byte-identical records across two runs.
+cap_dir=$(mktemp -d)
+PYTHONPATH=src python -m repro.core.cli workload generate \
+    --arrivals bursty --rate 60 --burst-factor 4 --n 60 \
+    --lengths lognormal --isl 256 --osl 64 \
+    --tenants "chat:0.7:1,batch:0.3" --seed 7 \
+    --out "$cap_dir/trace.jsonl" > /dev/null
+for i in 1 2; do
+    PYTHONPATH=src python -m repro.core.cli capacity sweep \
+        --trace "$cap_dir/trace.jsonl" --model llama3.1-8b \
+        --tp 1 --batch 64 --dtype fp8 --ladder 1,2,4 \
+        --routing least_outstanding \
+        --slo-ttft-p99 400 --slo-tpot-p99 50 --json \
+      > "$cap_dir/sweep$i.jsonl"
+done
+cmp "$cap_dir/sweep1.jsonl" "$cap_dir/sweep2.jsonl" \
+    || { echo "capacity sweep output is not deterministic" >&2; exit 1; }
+PYTHONPATH=src python - "$cap_dir/sweep1.jsonl" <<'PY'
+import json
+import math
+import sys
+
+records = [json.loads(line) for line in open(sys.argv[1])]
+summary = records[-1]
+assert summary["type"] == "summary", summary
+plan = summary["plan"]
+assert plan is not None, "expected a min-chip plan on the ladder"
+assert math.isfinite(plan["goodput_tok_s"]), plan
+assert plan["total_chips"] >= 1, plan
+rungs = [r for r in records[:-1] if r["pruned"] is None]
+cheaper = [r for r in rungs if r["total_chips"] < plan["total_chips"]]
+assert cheaper and all(not r["attains"] for r in cheaper), \
+    "expected every cheaper rung to miss the SLO"
+print(f"ok: min-chip {plan['deployment']['describe']} = "
+      f"{plan['total_chips']} chips "
+      f"({100 * plan['slo_attainment']:.0f}% attainment), "
+      f"deterministic across runs")
+PY
+rm -rf "$cap_dir"
 
 echo "=== ci passed ==="

@@ -68,6 +68,17 @@ tail-latency SLO — recorded in the schema-v3 ``workload_eval`` section::
                                            tpot_p99_ms=80), top_k=3)
     report.workload_eval["ranking"]     # goodput order, with replay
                                         # percentiles per candidate
+
+Capacity planning (``repro.capacity``, docs/capacity.md): scale the
+replay from one engine to N replicas behind a routing policy and find
+the minimum-chip deployment that holds the SLO through the bursts —
+recorded in the schema-v4 ``capacity`` section::
+
+    report = cfg.plan_capacity("trace.jsonl",
+                               SLOSpec(ttft_p99_ms=2000, tpot_p99_ms=80),
+                               ladder=(1, 2, 4),
+                               routing="least_outstanding")
+    report.capacity["plan"]             # cheapest attaining deployment
 """
 from repro.api.configurator import Comparison, Configurator, StreamingSearch
 from repro.api.policies import (SearchEvent, callback, deadline_s,

@@ -336,6 +336,80 @@ class Configurator:
             sla=w.sla, max_steps=max_steps)
         return report
 
+    def plan_capacity(self, trace, slo, ladder: Sequence[int] = (1, 2, 4),
+                      top_k: int = 1, routing: str = "round_robin",
+                      attain_target: float = 0.95,
+                      report: Optional[SearchReport] = None,
+                      max_steps: int = 200_000) -> SearchReport:
+        """Size the deployment: replay ``trace`` across a ladder of
+        replica counts and record the cheapest deployment whose goodput
+        attains ``slo`` in the report's schema-v4 ``capacity`` section.
+
+        ``trace``/``slo`` accept the same forms as
+        :meth:`evaluate_frontier` (trace object or path; ``SLOSpec`` or
+        dict).  ``ladder`` is the ascending replica-count ladder; with
+        ``top_k > 1`` the analytical top-K replayable candidates are
+        each tried at every rung, so the planner can trade a bigger
+        engine at few replicas against a smaller engine at many.
+        Without ``report``, runs :meth:`search` first on this
+        instance's memoized PerfDatabase/session.  Disaggregated
+        composites among the leaders are recorded as skipped (the
+        cluster simulator replays single-engine replicas).  Returns the
+        report with ``capacity`` filled: every evaluated rung (and the
+        cost-pruned ones), per-replica load-imbalance stats, and the
+        min-chip plan.
+        """
+        import os
+        from repro.capacity.planner import sweep_ladder
+        from repro.workloads import (DISAGG_SKIP_REASON, SLOSpec,
+                                     WorkloadTrace, analytical_leaders,
+                                     candidate_from_projection)
+        if isinstance(trace, (str, bytes, os.PathLike)):
+            trace = WorkloadTrace.load(trace)
+        if isinstance(slo, dict):
+            slo = SLOSpec.from_dict(slo)
+        if top_k < 1:                      # fail before the search runs
+            raise ValueError(f"top_k must be >= 1, got {top_k}")
+        if report is None:
+            report = self.search()
+        w = report.workload
+        try:
+            own = self.workload()
+        except ValueError:
+            own = None
+        runner = (TaskRunner(w, session=self._session_for(w))
+                  if own == w else TaskRunner(w))
+        leaders = analytical_leaders(report.projections, w.sla, top_k)
+        index_of = {id(p): i for i, p in enumerate(report.projections)}
+        candidates, cand_meta, skipped = [], [], []
+        for rank, p in enumerate(leaders):
+            cand = candidate_from_projection(p)
+            if cand is None:
+                skipped.append({
+                    "index": index_of[id(p)], "analytical_rank": rank,
+                    "mode": p.mode, "describe": p.config.get("describe", ""),
+                    "reason": DISAGG_SKIP_REASON})
+                continue
+            candidates.append(cand)
+            cand_meta.append({
+                "index": index_of[id(p)],
+                "analytical_rank": rank, "mode": p.mode,
+                "describe": p.config.get("describe", ""),
+                "tokens_per_s_per_chip": p.tokens_per_s_per_chip})
+        if not candidates:
+            raise ValueError(
+                "no replayable candidate among the analytical top-"
+                f"{top_k} (all disaggregated composites); raise top_k or "
+                "search with modes('aggregated')")
+        section = sweep_ladder(runner, candidates, trace, slo,
+                               ladder=ladder, routing=routing,
+                               attain_target=attain_target,
+                               max_steps=max_steps)
+        section["candidates"] = cand_meta
+        section["skipped"] = skipped
+        report.capacity = section
+        return report
+
     # -- internals -----------------------------------------------------------
     def _variant(self, overrides: Dict) -> "Configurator":
         c = copy.copy(self)          # shares self._dbs on purpose

@@ -22,7 +22,14 @@ v1 ``workload`` descriptor key) records the trace identity, the
 tail-latency SLO, each replayed frontier candidate's open-loop metrics,
 and the goodput-based re-ranking next to the analytical one.
 
-``from_json`` still accepts v1 and v2 payloads and migrates them
+Schema v4 adds the cluster axis: a ``capacity`` section (written by
+``Configurator.plan_capacity`` / ``repro.capacity.sweep_ladder``)
+records the minimum-chip autoscaling sweep — the trace and SLO, the
+routing policy, every evaluated (replica-count × candidate) rung with
+its aggregate cluster replay metrics and per-replica load-imbalance
+stats, and the cheapest deployment whose goodput attains the SLO.
+
+``from_json`` still accepts v1, v2 and v3 payloads and migrates them
 losslessly (sections a version never carried default to empty/None).
 """
 from __future__ import annotations
@@ -39,9 +46,10 @@ from repro.core.generator import LaunchConfig
 #: Bump on any backwards-incompatible change to the JSON layout.
 #: v1: initial layout.  v2: + database fingerprint, memory footprints,
 #: early-exit record.  v3: + workload section (trace replay / SLO
-#: re-ranking).  ``from_json`` reads every version listed here.
-SCHEMA_VERSION = 3
-SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3)
+#: re-ranking).  v4: + capacity section (multi-replica ladder sweep /
+#: min-chip plan).  ``from_json`` reads every version listed here.
+SCHEMA_VERSION = 4
+SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4)
 
 
 def workload_to_dict(w: WorkloadDescriptor) -> Dict:
@@ -95,6 +103,7 @@ class SearchReport:
     fingerprint: Optional[Dict] = None     # PerfDatabase identity (v2)
     early_exit: Optional[Dict] = None      # streaming policy stop record (v2)
     workload_eval: Optional[Dict] = None   # trace replay / SLO re-rank (v3)
+    capacity: Optional[Dict] = None        # replica-ladder min-chip plan (v4)
     schema_version: int = SCHEMA_VERSION
 
     # -- construction --------------------------------------------------------
@@ -154,6 +163,20 @@ class SearchReport:
                 f"[{wb.mode}] {wb.config.get('describe', '')}"
                 + (" (re-ranked vs analytical)"
                    if we.get("reranked") else ""))
+        cap = self.capacity
+        if cap:
+            plan = cap.get("plan") or {}
+            if plan.get("attained"):
+                dep = plan["deployment"]
+                lines.append(
+                    f"capacity plan (trace {cap['trace']['digest']}, "
+                    f"routing {cap['routing']}): min-chip "
+                    f"{dep['describe']} = {plan['total_chips']} chips at "
+                    f"{100 * plan['slo_attainment']:.1f}% attainment")
+            else:
+                lines.append(
+                    f"capacity plan (trace {cap['trace']['digest']}): no "
+                    f"deployment on ladder {cap['ladder']} attains the SLO")
         return "\n".join(lines)
 
     # -- serialization -------------------------------------------------------
@@ -182,6 +205,7 @@ class SearchReport:
                        if self.launch is not None else None),
             "speculative": self.speculative,
             "workload_eval": self.workload_eval,
+            "capacity": self.capacity,
         }
 
     def to_json(self, indent: Optional[int] = 2) -> str:
@@ -222,6 +246,7 @@ class SearchReport:
             early_exit=(d["search"].get("early_exit")
                         if version >= 2 else None),
             workload_eval=d.get("workload_eval") if version >= 3 else None,
+            capacity=d.get("capacity") if version >= 4 else None,
             schema_version=SCHEMA_VERSION)
 
     @classmethod

@@ -1,0 +1,47 @@
+"""repro.capacity — multi-replica cluster simulation and capacity planning.
+
+The search and replay layers evaluate one engine instance; production
+deployments run N instances behind a router and are sized by the
+smallest chip count that still holds the SLO through the bursts.  This
+package supplies that cluster layer:
+
+- :mod:`~repro.capacity.deployment` — :class:`DeploymentSpec`: one
+  :class:`~repro.core.config.CandidateConfig` times a replica count,
+  with the derived ``total_chips`` budget.
+- :mod:`~repro.capacity.routing` — deterministic routing policies
+  (``round_robin``, ``least_outstanding``, ``tenant_affinity``).
+- :mod:`~repro.capacity.cluster` — :class:`ClusterSimulator`: fans one
+  :class:`~repro.workloads.trace.WorkloadTrace` across N per-replica
+  schedulers through a routing policy, producing aggregate
+  :class:`ClusterReplayMetrics` plus per-replica load-imbalance stats.
+- :mod:`~repro.capacity.planner` — :func:`iter_ladder` /
+  :func:`sweep_ladder` / :func:`plan_min_chips`: replay a trace across
+  a ladder of replica counts (and optionally across the analytical
+  top-K candidates at each rung) and report the cheapest deployment
+  whose goodput attains the :class:`~repro.workloads.slo.SLOSpec`,
+  with monotone-cost pruning.
+
+Canonical flow::
+
+    from repro.workloads import SLOSpec
+
+    report = cfg.plan_capacity("trace.jsonl",
+                               SLOSpec(ttft_p99_ms=2000, tpot_p99_ms=100),
+                               ladder=(1, 2, 4), routing="round_robin")
+    report.capacity["plan"]          # min-chip deployment + attainment
+
+CLI: ``python -m repro.core.cli capacity plan|sweep`` (docs/capacity.md).
+"""
+from repro.capacity.cluster import ClusterReplayMetrics, ClusterSimulator
+from repro.capacity.deployment import DeploymentSpec
+from repro.capacity.planner import (CAPACITY_SCHEMA_VERSION, CapacityPlan,
+                                    DEFAULT_ATTAIN_TARGET, iter_ladder,
+                                    plan_min_chips, sweep_ladder)
+from repro.capacity.routing import ROUTING_POLICIES, Router, get_router
+
+__all__ = [
+    "CAPACITY_SCHEMA_VERSION", "CapacityPlan", "ClusterReplayMetrics",
+    "ClusterSimulator", "DEFAULT_ATTAIN_TARGET", "DeploymentSpec",
+    "ROUTING_POLICIES", "Router", "get_router", "iter_ladder",
+    "plan_min_chips", "sweep_ladder",
+]

@@ -1,0 +1,264 @@
+"""Multi-replica cluster simulation: one trace, N engines, one router.
+
+Scales the open-loop replay (`ServingSimulator.replay`) from a single
+engine to a deployment: every replica runs its own
+continuous-batching scheduler and virtual clock, a routing policy
+places each request at its arrival instant, and the aggregate
+:class:`ClusterReplayMetrics` carries the same tail-percentile /
+goodput surface as the single-engine :class:`ReplayMetrics` plus
+per-replica load-imbalance statistics.
+
+Simulation is interleaved, not split-then-replay: before a request is
+routed, every replica is advanced (iteration by iteration) to the
+arrival time, so ``least_outstanding`` reads real queue states rather
+than an analytical load estimate, and TTFT keeps its open-loop meaning
+(first token time minus trace arrival, queueing included).  All
+replicas share one latency callback — they are identical engines — but
+never share scheduler state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.serving.request import Request
+from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                     SchedulerConfig)
+from repro.serving.sim import StepSpec, _pctl_dict, run_iteration
+
+from repro.capacity.routing import ROUTING_POLICIES, get_router
+
+
+class _ReplicaEngine:
+    """One engine instance inside the cluster: scheduler + private clock."""
+
+    def __init__(self, idx: int, sched_cfg: SchedulerConfig,
+                 latency_fn: Callable[[StepSpec], float]):
+        self.idx = idx
+        self.sched = ContinuousBatchingScheduler(sched_cfg)
+        self.latency_fn = latency_fn
+        self.t = 0.0
+        self.busy_s = 0.0                  # time spent executing iterations
+        self.steps = 0
+        self.gen_tokens = 0
+        self.depth_sum = 0
+        self.depth_max = 0
+        self.routed = 0
+        self.rejected = 0
+        self.done: List[Request] = []
+
+    @property
+    def outstanding(self) -> int:
+        """Requests queued or in flight — what the router load-balances."""
+        return self.sched.active
+
+    def admit(self, record, rid: int) -> None:
+        self.routed += 1
+        req = Request(rid=rid, isl=record.isl, osl=record.osl,
+                      arrival=record.arrival_s,
+                      tenant=getattr(record, "tenant", "default"),
+                      priority=getattr(record, "priority", 0))
+        if not self.sched.add(req):
+            self.rejected += 1
+
+    def step(self) -> bool:
+        """Execute one iteration (the shared ``run_iteration`` body, so
+        single- and multi-engine accounting cannot drift); False when
+        the engine has no work."""
+        out = run_iteration(self.sched, self.latency_fn, self.t)
+        if out is None:
+            return False
+        self.depth_sum += out.waiting_depth
+        self.depth_max = max(self.depth_max, out.waiting_depth)
+        self.t = out.t
+        self.busy_s += out.dt
+        self.steps += 1
+        self.gen_tokens += out.gen_tokens
+        self.done.extend(out.finished)
+        return True
+
+    def advance_to(self, t_target: float, budget: int) -> int:
+        """Simulate pending work up to ``t_target``; idle clocks jump.
+
+        Returns the number of iterations executed (bounded by
+        ``budget``).  A replica may overshoot ``t_target`` by a
+        fraction of an iteration — admission happens at iteration
+        boundaries, exactly as in the single-engine replay.
+        """
+        used = 0
+        while self.t < t_target and used < budget:
+            if not self.step():
+                break
+            used += 1
+        if self.t < t_target and self.sched.active == 0:
+            self.t = t_target           # idle engine: clock jumps forward
+        return used
+
+    def drain(self, budget: int) -> int:
+        """Run until the engine empties (or the step budget is gone)."""
+        used = 0
+        while used < budget:
+            if not self.step():
+                break
+            used += 1
+        return used
+
+
+@dataclasses.dataclass
+class ClusterReplayMetrics:
+    """Aggregate open-loop outcome of a trace across N replicas."""
+    replicas: int
+    routing: str
+    n_requests: int
+    completed: int
+    rejected: int
+    unfinished: int
+    steps: int                             # iterations summed over replicas
+    duration_s: float                      # cluster makespan (max replica clock)
+    throughput_tok_s: float                # generated tokens / makespan
+    ttft_ms: Dict[str, float]              # percentiles over ALL completed reqs
+    tpot_ms: Dict[str, float]
+    queue_depth_mean: float                # step-weighted across replicas
+    queue_depth_max: int
+    #: one row per replica: routed/completed/rejected counts, generated
+    #: tokens, busy time, final clock, queue stats
+    per_replica: List[Dict] = dataclasses.field(default_factory=list)
+    #: load-imbalance view over the per-replica rows
+    imbalance: Dict = dataclasses.field(default_factory=dict)
+    #: (tenant, replica, ttft_s, tpot_s) per finished request
+    per_request: List[Tuple[str, int, float, Optional[float]]] = \
+        dataclasses.field(default_factory=list)
+    slo: Optional[Dict] = None
+    slo_attainment: Optional[float] = None
+    goodput_tok_s: Optional[float] = None
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.pop("per_request")               # raw samples stay in-process
+        return d
+
+
+def _imbalance(rows: List[Dict]) -> Dict:
+    """Load spread across replicas: how unevenly the router dealt work."""
+    routed = [r["routed"] for r in rows]
+    tokens = [r["gen_tokens"] for r in rows]
+
+    def max_over_mean(vals):
+        m = statistics.mean(vals) if vals else 0.0
+        return max(vals) / m if m > 0 else 0.0
+
+    def cv(vals):
+        m = statistics.mean(vals) if vals else 0.0
+        if m <= 0 or len(vals) < 2:
+            return 0.0
+        return statistics.pstdev(vals) / m
+
+    return {
+        "routed_max_over_mean": max_over_mean(routed),
+        "routed_cv": cv(routed),
+        "tokens_max_over_mean": max_over_mean(tokens),
+        "tokens_cv": cv(tokens),
+    }
+
+
+class ClusterSimulator:
+    """N identical replica engines behind a routing policy.
+
+    Constructed like a :class:`~repro.serving.sim.ServingSimulator`
+    (scheduler config + latency callback) plus the replica count and
+    the routing policy name (:data:`~repro.capacity.routing.ROUTING_POLICIES`).
+    """
+
+    def __init__(self, sched_cfg: SchedulerConfig,
+                 latency_fn: Callable[[StepSpec], float],
+                 replicas: int, routing: str = "round_robin"):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if routing not in ROUTING_POLICIES:
+            raise ValueError(f"unknown routing policy {routing!r}; valid "
+                             f"choices: {', '.join(ROUTING_POLICIES)}")
+        self.sched_cfg = sched_cfg
+        self.latency_fn = latency_fn
+        self.replicas = replicas
+        self.routing = routing
+
+    # ------------------------------------------------------------------
+    def replay(self, trace, slo=None,
+               max_steps: int = 200_000) -> ClusterReplayMetrics:
+        """Open-loop replay of ``trace`` across the whole deployment.
+
+        ``max_steps`` bounds the *total* iteration count summed over
+        replicas; requests still in flight when it runs out are counted
+        as unfinished (and as SLO misses when ``slo`` is given) — a
+        degenerate or saturating trace yields explicitly zeroed, always
+        finite metrics, mirroring ``ServingSimulator.replay``.
+        """
+        records = list(getattr(trace, "requests", trace))
+        router = get_router(self.routing)
+        engines = [_ReplicaEngine(i, self.sched_cfg, self.latency_fn)
+                   for i in range(self.replicas)]
+        budget = max_steps
+
+        for seq, rec in enumerate(records):
+            for eng in engines:
+                budget -= eng.advance_to(rec.arrival_s, budget)
+            target = router.select(engines, rec, seq)
+            engines[target].admit(rec, rid=seq)
+            if budget <= 0:
+                break
+        for eng in engines:
+            budget -= eng.drain(budget)
+
+        completed = [(eng.idx, r) for eng in engines for r in eng.done
+                     if r.ttft is not None]
+        rejected = sum(eng.rejected for eng in engines)
+        steps = sum(eng.steps for eng in engines)
+        gen_total = sum(eng.gen_tokens for eng in engines)
+        makespan = max((eng.t for eng in engines), default=0.0)
+        depth_sum = sum(eng.depth_sum for eng in engines)
+
+        per_replica = [{
+            "replica": eng.idx,
+            "routed": eng.routed,
+            "completed": sum(1 for r in eng.done if r.ttft is not None),
+            "rejected": eng.rejected,
+            "steps": eng.steps,
+            "gen_tokens": eng.gen_tokens,
+            "busy_s": eng.busy_s,
+            "final_clock_s": eng.t,
+            "queue_depth_max": eng.depth_max,
+        } for eng in engines]
+
+        ttfts_ms = [1e3 * r.ttft for _, r in completed]
+        tpots_ms = [1e3 * r.tpot for _, r in completed if r.tpot is not None]
+        metrics = ClusterReplayMetrics(
+            replicas=self.replicas,
+            routing=self.routing,
+            n_requests=len(records),
+            completed=len(completed),
+            rejected=rejected,
+            unfinished=len(records) - rejected - len(completed),
+            steps=steps,
+            duration_s=makespan,
+            throughput_tok_s=gen_total / makespan if makespan > 0 else 0.0,
+            ttft_ms=_pctl_dict(ttfts_ms),
+            tpot_ms=_pctl_dict(tpots_ms),
+            queue_depth_mean=depth_sum / steps if steps else 0.0,
+            queue_depth_max=max((eng.depth_max for eng in engines),
+                                default=0),
+            per_replica=per_replica,
+            imbalance=_imbalance(per_replica),
+            per_request=[(r.tenant, idx, r.ttft, r.tpot)
+                         for idx, r in completed],
+        )
+        if slo is not None:
+            attaining = [r for _, r in completed
+                         if slo.request_meets(r.ttft, r.tpot)]
+            metrics.slo = {"ttft_p99_ms": slo.ttft_p99_ms,
+                           "tpot_p99_ms": slo.tpot_p99_ms}
+            metrics.slo_attainment = (len(attaining) / len(records)
+                                      if records else 0.0)
+            metrics.goodput_tok_s = (sum(r.osl for r in attaining) / makespan
+                                     if makespan > 0 else 0.0)
+        return metrics

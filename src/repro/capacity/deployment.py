@@ -1,0 +1,68 @@
+"""Deployment specs: a serving candidate scaled out to N replicas.
+
+The analytical search prices one engine instance; a production
+deployment runs N identical instances behind a router.  A
+:class:`DeploymentSpec` names that scale-out point — one
+:class:`~repro.core.config.CandidateConfig` times a replica count —
+and derives the ``total_chips`` budget the capacity planner minimizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.config import (CandidateConfig, ParallelismConfig,
+                               RuntimeFlags)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentSpec:
+    """One engine candidate replicated ``replicas`` times behind a router."""
+    candidate: CandidateConfig
+    replicas: int
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        if self.candidate.parallel.dp != 1:
+            # the cluster simulator runs one engine per replica; a dp>1
+            # candidate would be billed for dp instances while only one
+            # is simulated — replicas IS the data-parallel axis here
+            raise ValueError(
+                f"candidate has dp={self.candidate.parallel.dp}; "
+                "DeploymentSpec.replicas supersedes ParallelismConfig.dp "
+                "— use a dp=1 candidate and set replicas instead")
+
+    @property
+    def chips_per_replica(self) -> int:
+        return self.candidate.parallel.chips_per_instance
+
+    @property
+    def total_chips(self) -> int:
+        """The chip budget this deployment occupies — the planner's cost."""
+        return self.replicas * self.chips_per_replica
+
+    def describe(self) -> str:
+        return f"{self.replicas}x[{self.candidate.describe()}]"
+
+    def to_dict(self) -> Dict:
+        return {
+            "replicas": self.replicas,
+            "total_chips": self.total_chips,
+            "describe": self.describe(),
+            "candidate": {
+                "parallel": dataclasses.asdict(self.candidate.parallel),
+                "batch_size": self.candidate.batch_size,
+                "flags": dataclasses.asdict(self.candidate.flags),
+            },
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "DeploymentSpec":
+        c = d["candidate"]
+        return cls(
+            candidate=CandidateConfig(
+                parallel=ParallelismConfig(**c["parallel"]),
+                batch_size=c["batch_size"],
+                flags=RuntimeFlags(**c.get("flags", {}))),
+            replicas=d["replicas"])

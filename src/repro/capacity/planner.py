@@ -1,0 +1,210 @@
+"""Minimum-chip capacity planning: replay a trace up a replica ladder.
+
+The autoscaling question the static search cannot answer: *how small a
+deployment still holds the SLO through the bursts?*  ``iter_ladder``
+replays one trace across a ladder of replica counts (optionally across
+several engine candidates per rung), yielding one stream-friendly
+record per evaluated deployment; ``sweep_ladder`` drains it into the
+``capacity`` section of a schema-v4 SearchReport; ``plan_min_chips``
+returns the cheapest attaining :class:`DeploymentSpec`.
+
+Attainment is ``slo_attainment >= attain_target`` under the
+:class:`~repro.workloads.slo.SLOSpec` — rejected and unfinished
+requests count as misses, so a rung cannot attain by shedding load.
+
+Pruning is monotonicity-aware in *cost*, not in replica count: once
+some deployment attains at ``total_chips == C``, any deployment with
+``total_chips >= C`` is recorded as pruned without simulation (it can
+never be the minimum), and the ascending sweep stops outright when
+every remaining rung is at least that expensive.  Cheaper rungs are
+still evaluated, so the planner never assumes "more replicas always
+attain" — it only assumes "more chips never get cheaper".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence
+
+from repro.core.config import CandidateConfig
+from repro.workloads.slo import SLOSpec
+from repro.workloads.trace import WorkloadTrace
+
+from repro.capacity.deployment import DeploymentSpec
+from repro.capacity.routing import ROUTING_POLICIES
+
+#: Capacity sections written by :func:`sweep_ladder` carry this marker.
+CAPACITY_SCHEMA_VERSION = 1
+
+DEFAULT_ATTAIN_TARGET = 0.95
+
+
+def _validate(ladder: Sequence[int], routing: str,
+              attain_target: float) -> List[int]:
+    rungs = list(ladder)
+    if not rungs or any(r < 1 for r in rungs):
+        raise ValueError(f"ladder must be non-empty positive replica "
+                         f"counts, got {list(ladder)!r}")
+    if rungs != sorted(rungs):
+        raise ValueError(f"ladder must be ascending, got {rungs!r}")
+    if len(set(rungs)) != len(rungs):
+        raise ValueError(f"ladder has duplicate rungs: {rungs!r}")
+    if routing not in ROUTING_POLICIES:
+        raise ValueError(f"unknown routing policy {routing!r}; valid "
+                         f"choices: {', '.join(ROUTING_POLICIES)}")
+    if not 0.0 < attain_target <= 1.0:
+        raise ValueError(f"attain_target must be in (0, 1], got "
+                         f"{attain_target}")
+    return rungs
+
+
+def iter_ladder(runner, candidates: Sequence[CandidateConfig],
+                trace: WorkloadTrace, slo: SLOSpec,
+                ladder: Sequence[int] = (1, 2, 4),
+                routing: str = "round_robin",
+                attain_target: float = DEFAULT_ATTAIN_TARGET,
+                max_steps: int = 200_000,
+                priority_admission: bool = True,
+                max_queue: int = 100_000) -> Iterator[Dict]:
+    """Yield one record per (rung, candidate) deployment, cheapest-cost
+    pruning applied online.
+
+    ``runner`` is a :class:`repro.core.task_runner.TaskRunner`; its
+    memoized session prices every replica's iterations, so the whole
+    ladder shares one PerfDatabase with the analytical search.  Record
+    shape::
+
+        {"replicas", "candidate_rank", "deployment": {...},
+         "total_chips", "pruned": None | reason,
+         "attains": bool | None, "metrics": {...} | None}
+    """
+    if not candidates:
+        raise ValueError("at least one candidate is required")
+    rungs = _validate(ladder, routing, attain_target)
+    best_cost: Optional[int] = None
+    for replicas in rungs:
+        cheapest_next = min(replicas * c.parallel.chips for c in candidates)
+        if best_cost is not None and cheapest_next >= best_cost:
+            # every deployment at this rung (and, ladder ascending, at
+            # every later one) costs at least the attained minimum
+            return
+        for rank, cand in enumerate(candidates):
+            dep = DeploymentSpec(candidate=cand, replicas=replicas)
+            record: Dict = {
+                "replicas": replicas,
+                "candidate_rank": rank,
+                "deployment": dep.to_dict(),
+                "total_chips": dep.total_chips,
+                "pruned": None,
+                "attains": None,
+                "metrics": None,
+            }
+            if best_cost is not None and dep.total_chips >= best_cost:
+                record["pruned"] = (f"{dep.total_chips} chips >= attained "
+                                    f"minimum {best_cost}")
+                yield record
+                continue
+            sim = runner.cluster_simulator(
+                dep, routing=routing,
+                priority_admission=priority_admission, max_queue=max_queue)
+            metrics = sim.replay(trace, slo=slo, max_steps=max_steps)
+            record["metrics"] = metrics.to_dict()
+            record["attains"] = (metrics.slo_attainment or 0.0) \
+                >= attain_target
+            if record["attains"]:
+                best_cost = (dep.total_chips if best_cost is None
+                             else min(best_cost, dep.total_chips))
+            yield record
+
+
+def sweep_ladder(runner, candidates: Sequence[CandidateConfig],
+                 trace: WorkloadTrace, slo: SLOSpec,
+                 ladder: Sequence[int] = (1, 2, 4),
+                 routing: str = "round_robin",
+                 attain_target: float = DEFAULT_ATTAIN_TARGET,
+                 max_steps: int = 200_000,
+                 priority_admission: bool = True,
+                 max_queue: int = 100_000) -> Dict:
+    """Drain :func:`iter_ladder` into the report-ready ``capacity``
+    section (every rung record plus the min-chip plan)."""
+    rungs = list(iter_ladder(
+        runner, candidates, trace, slo, ladder=ladder, routing=routing,
+        attain_target=attain_target, max_steps=max_steps,
+        priority_admission=priority_admission, max_queue=max_queue))
+    # attained records always carry distinct total_chips: once a cost
+    # attains, every deployment at or above it is pruned unevaluated,
+    # so the minimum needs no tiebreaker
+    attained = [r for r in rungs if r["attains"]]
+    best = (min(attained, key=lambda r: r["total_chips"])
+            if attained else None)
+    evaluated = [r for r in rungs if r["pruned"] is None]
+    return {
+        "schema_version": CAPACITY_SCHEMA_VERSION,
+        "trace": {"digest": trace.digest(),
+                  "n_requests": trace.n_requests,
+                  "duration_s": trace.duration_s,
+                  "tenants": trace.tenants,
+                  "meta": trace.meta},
+        "slo": slo.to_dict(),
+        "routing": routing,
+        "attain_target": attain_target,
+        "ladder": list(ladder),
+        "database": runner.session.db.fingerprint(),
+        "rungs": rungs,
+        "n_evaluated": len(evaluated),
+        "n_pruned": len(rungs) - len(evaluated),
+        "plan": {
+            "attained": best is not None,
+            "deployment": best["deployment"] if best else None,
+            "total_chips": best["total_chips"] if best else None,
+            "goodput_tok_s": (best["metrics"]["goodput_tok_s"]
+                              if best else None),
+            "slo_attainment": (best["metrics"]["slo_attainment"]
+                               if best else None),
+        },
+    }
+
+
+@dataclasses.dataclass
+class CapacityPlan:
+    """The planner's answer: the cheapest attaining deployment (if any)
+    plus the full ``capacity`` section it was derived from."""
+    deployment: Optional[DeploymentSpec]
+    section: Dict
+
+    @property
+    def attained(self) -> bool:
+        return self.deployment is not None
+
+    @property
+    def total_chips(self) -> Optional[int]:
+        return self.deployment.total_chips if self.deployment else None
+
+    def summary(self) -> str:
+        plan = self.section["plan"]
+        if not self.attained:
+            return (f"no deployment on the ladder "
+                    f"{self.section['ladder']} attains "
+                    f"{100 * self.section['attain_target']:.0f}% of the SLO")
+        return (f"min-chip deployment: {self.deployment.describe()} "
+                f"({self.total_chips} chips, routing "
+                f"{self.section['routing']}) — goodput "
+                f"{plan['goodput_tok_s']:.1f} tok/s at "
+                f"{100 * plan['slo_attainment']:.1f}% attainment")
+
+
+def plan_min_chips(runner, candidates: Sequence[CandidateConfig],
+                   trace: WorkloadTrace, slo: SLOSpec,
+                   ladder: Sequence[int] = (1, 2, 4),
+                   routing: str = "round_robin",
+                   attain_target: float = DEFAULT_ATTAIN_TARGET,
+                   max_steps: int = 200_000,
+                   priority_admission: bool = True,
+                   max_queue: int = 100_000) -> CapacityPlan:
+    """Sweep the ladder and return the minimum-chip plan."""
+    section = sweep_ladder(
+        runner, candidates, trace, slo, ladder=ladder, routing=routing,
+        attain_target=attain_target, max_steps=max_steps,
+        priority_admission=priority_admission, max_queue=max_queue)
+    dep = (DeploymentSpec.from_dict(section["plan"]["deployment"])
+           if section["plan"]["attained"] else None)
+    return CapacityPlan(deployment=dep, section=section)

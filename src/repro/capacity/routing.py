@@ -1,0 +1,93 @@
+"""Routing policies: which replica admits each arriving request.
+
+The cluster simulator advances every replica's virtual clock to each
+request's arrival time before asking the router to place it, so a
+policy sees the replicas' *actual* state at the arrival instant — no
+service-rate estimator sits between routing and simulation.
+
+Policies are deterministic (ties break toward the lowest replica
+index; tenant hashing uses sha256, never Python's per-process ``hash``)
+so a capacity sweep is digest-stable across runs.
+
+``tenant_affinity`` pins each tenant to one replica.  Today that is a
+load/latency trade-off knob; it is also the hook the prefix-caching
+roadmap item will exploit — a tenant's shared prompt prefixes only pay
+off when that tenant's requests keep landing on the replica holding
+the warm cache.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, Sequence
+
+#: Every routing policy the cluster simulator accepts.
+ROUTING_POLICIES = ("round_robin", "least_outstanding", "tenant_affinity")
+
+
+def _tenant_slot(tenant: str, n: int) -> int:
+    """Stable tenant -> replica hash (sha256; identical across runs)."""
+    digest = hashlib.sha256(tenant.encode()).digest()
+    return int.from_bytes(digest[:8], "big") % n
+
+
+class Router:
+    """Base router: ``select`` returns the replica index for one request.
+
+    ``replicas`` is the live replica list; each element exposes
+    ``outstanding`` (queued + in-flight requests, already advanced to
+    the request's arrival time).  ``seq`` is the 0-based arrival
+    ordinal of the request within the trace.
+    """
+    name = "base"
+
+    def select(self, replicas: Sequence, request, seq: int) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    """Cycle through replicas in arrival order — the baseline spreader."""
+    name = "round_robin"
+
+    def select(self, replicas, request, seq):
+        return seq % len(replicas)
+
+
+class LeastOutstandingRouter(Router):
+    """Send each request to the replica with the fewest outstanding
+    requests at its arrival instant (join-the-shortest-queue); ties go
+    to the lowest index."""
+    name = "least_outstanding"
+
+    def select(self, replicas, request, seq):
+        return min(range(len(replicas)),
+                   key=lambda i: (replicas[i].outstanding, i))
+
+
+class TenantAffinityRouter(Router):
+    """Hash each request's tenant onto a fixed replica, keeping one
+    tenant's traffic (and, later, its shared prompt prefixes) on one
+    engine.  Load balance then depends on the tenant mix."""
+    name = "tenant_affinity"
+
+    def select(self, replicas, request, seq):
+        return _tenant_slot(getattr(request, "tenant", "default"),
+                            len(replicas))
+
+
+_ROUTERS: dict = {
+    "round_robin": RoundRobinRouter,
+    "least_outstanding": LeastOutstandingRouter,
+    "tenant_affinity": TenantAffinityRouter,
+}
+
+
+def get_router(name: str) -> Router:
+    """Instantiate a routing policy by name (``ROUTING_POLICIES``)."""
+    try:
+        return _ROUTERS[name]()
+    except KeyError:
+        raise ValueError(f"unknown routing policy {name!r}; valid choices: "
+                         f"{', '.join(ROUTING_POLICIES)}") from None
+
+
+RouterFactory = Callable[[], Router]

@@ -22,6 +22,11 @@ The paper's user workflow (Fig. 2) as subcommands:
     python -m repro.core.cli search --model qwen3-32b --isl 4000 --osl 500 \\
         --chips 16 --trace trace.jsonl --slo-ttft-p99 2000 \\
         --slo-tpot-p99 80 --replay-top-k 3
+    python -m repro.core.cli capacity sweep --trace trace.jsonl \\
+        --model qwen3-32b --tp 4 --batch 64 --ladder 1,2,4 \\
+        --routing least_outstanding --json
+    python -m repro.core.cli capacity plan --model qwen3-32b --isl 4000 \\
+        --osl 500 --chips 16 --trace trace.jsonl --ladder 1,2,4 --top-k 3
 
 Every subcommand accepts ``--json`` to emit machine-readable output
 (``search --json`` prints the schema-versioned SearchReport) on stdout,
@@ -48,6 +53,7 @@ import sys
 
 from repro.api import (Comparison, Configurator, SearchReport,
                        stop_after_n_valid)
+from repro.capacity.routing import ROUTING_POLICIES
 from repro.configs import list_archs
 from repro.core.backends.base import all_backends, backend_capabilities
 from repro.core.generator import generate
@@ -58,7 +64,7 @@ EXIT_NO_CONFIG = 1
 EXIT_USAGE = 2
 
 _SUBCOMMANDS = ("search", "generate", "compare", "list", "calibrate",
-                "workload")
+                "workload", "capacity")
 
 
 # ---------------------------------------------------------------------------
@@ -516,23 +522,32 @@ def _slo_from_args(args):
                    tpot_p99_ms=args.slo_tpot_p99)
 
 
-def cmd_workload_replay(args) -> int:
-    """Replay a trace against one explicit serving configuration."""
+def _explicit_candidate(args, trace, n_chips=None):
+    """One explicit serving candidate from ``--tp/--pp/--ep/--batch``
+    flags plus a trace-shaped workload descriptor — shared by
+    ``workload replay`` and ``capacity sweep``."""
     from repro.core.config import (CandidateConfig, ClusterSpec,
-                                  ParallelismConfig, RuntimeFlags, SLA,
-                                  WorkloadDescriptor)
-    from repro.core.task_runner import TaskRunner
-    from repro.workloads import WorkloadTrace
-    trace = WorkloadTrace.load(args.trace)
+                                   ParallelismConfig, RuntimeFlags, SLA,
+                                   WorkloadDescriptor)
     w = WorkloadDescriptor(
         model=args.model, isl=trace.mean_isl(), osl=trace.mean_osl(),
-        sla=SLA(), cluster=ClusterSpec(n_chips=args.tp * args.pp,
-                                       platform=args.platform),
+        sla=SLA(), cluster=ClusterSpec(
+            n_chips=n_chips if n_chips is not None else args.tp * args.pp,
+            platform=args.platform),
         backend=args.backend, modes=("aggregated",), dtype=args.dtype)
     cand = CandidateConfig(
         parallel=ParallelismConfig(tp=args.tp, pp=args.pp, ep=args.ep),
         batch_size=args.batch,
         flags=RuntimeFlags(max_num_tokens=args.max_num_tokens))
+    return w, cand
+
+
+def cmd_workload_replay(args) -> int:
+    """Replay a trace against one explicit serving configuration."""
+    from repro.core.task_runner import TaskRunner
+    from repro.workloads import WorkloadTrace
+    trace = WorkloadTrace.load(args.trace)
+    w, cand = _explicit_candidate(args, trace)
     runner = TaskRunner(w)
     sim = runner.simulator(cand, priority_admission=True,
                            max_queue=args.max_queue)
@@ -560,6 +575,126 @@ def cmd_workload_replay(args) -> int:
               f"{m.goodput_tok_s:.1f} tok/s at "
               f"{100 * m.slo_attainment:.1f}% SLO attainment")
     return EXIT_OK if metrics.completed > 0 else EXIT_NO_CONFIG
+
+
+# ---------------------------------------------------------------------------
+# capacity
+# ---------------------------------------------------------------------------
+
+def _parse_ladder(text: str) -> tuple:
+    """``1,2,4`` -> ascending replica-count ladder."""
+    try:
+        return tuple(int(b) for b in text.split(","))
+    except ValueError:
+        raise ValueError(f"bad ladder {text!r}; expected a comma list of "
+                         "replica counts, e.g. 1,2,4") from None
+
+
+def cmd_capacity_sweep(args) -> int:
+    """Ladder sweep of one explicit candidate: stream-friendly per-rung
+    records (JSON-lines with ``--json``) plus a min-chip summary."""
+    from repro.capacity import iter_ladder
+    from repro.core.task_runner import TaskRunner
+    from repro.workloads import WorkloadTrace
+    trace = WorkloadTrace.load(args.trace)
+    ladder = _parse_ladder(args.ladder)
+    w, cand = _explicit_candidate(args, trace,
+                                  n_chips=args.tp * args.pp * max(ladder))
+    runner = TaskRunner(w)
+    best = None
+    records = []
+    for rec in iter_ladder(runner, [cand], trace, _slo_from_args(args),
+                           ladder=ladder, routing=args.routing,
+                           attain_target=args.attain_target,
+                           max_steps=args.max_steps,
+                           max_queue=args.max_queue):
+        records.append(rec)
+        if rec["attains"] and (best is None
+                               or rec["total_chips"] < best["total_chips"]):
+            best = rec
+        if args.json:
+            m = rec["metrics"]
+            # "describe" is always the string form; the summary record's
+            # "deployment" is always the full dict — one shape per key
+            print(json.dumps({
+                "type": "rung", "replicas": rec["replicas"],
+                "describe": rec["deployment"]["describe"],
+                "total_chips": rec["total_chips"],
+                "pruned": rec["pruned"], "attains": rec["attains"],
+                "goodput_tok_s": m["goodput_tok_s"] if m else None,
+                "slo_attainment": m["slo_attainment"] if m else None,
+                "p99_ttft_ms": m["ttft_ms"]["p99"] if m else None,
+                "imbalance": m["imbalance"] if m else None,
+            }), flush=True)
+        else:
+            if rec["pruned"]:
+                print(f"  {rec['deployment']['describe']:>16s} "
+                      f"{rec['total_chips']:4d} chips  pruned "
+                      f"({rec['pruned']})")
+            else:
+                m = rec["metrics"]
+                print(f"  {rec['deployment']['describe']:>16s} "
+                      f"{rec['total_chips']:4d} chips  goodput "
+                      f"{m['goodput_tok_s']:9.1f} tok/s  attainment "
+                      f"{100 * m['slo_attainment']:5.1f}%  p99 TTFT "
+                      f"{m['ttft_ms']['p99']:8.1f}ms  "
+                      f"{'ATTAINS' if rec['attains'] else 'misses SLO'}")
+    if args.json:
+        print(json.dumps({
+            "type": "summary", "trace": trace.digest(),
+            "routing": args.routing, "ladder": list(ladder),
+            "attain_target": args.attain_target,
+            "n_rungs": len(records),
+            "plan": (None if best is None else {
+                "deployment": best["deployment"],
+                "total_chips": best["total_chips"],
+                "goodput_tok_s": best["metrics"]["goodput_tok_s"],
+                "slo_attainment": best["metrics"]["slo_attainment"],
+            }),
+        }), flush=True)
+    elif best is None:
+        print(f"no rung on ladder {list(ladder)} attains "
+              f"{100 * args.attain_target:.0f}% of the SLO")
+    else:
+        print(f"min-chip plan: {best['deployment']['describe']} = "
+              f"{best['total_chips']} chips "
+              f"({100 * best['metrics']['slo_attainment']:.1f}% attainment)")
+    return EXIT_OK if best is not None else EXIT_NO_CONFIG
+
+
+def cmd_capacity_plan(args) -> int:
+    """Search, then size the deployment: analytical top-K × ladder →
+    min-chip plan, recorded in the schema-v4 SearchReport."""
+    cfg = _configurator(args)
+    report = cfg.plan_capacity(
+        args.trace, _slo_from_args(args), ladder=_parse_ladder(args.ladder),
+        top_k=args.top_k, routing=args.routing,
+        attain_target=args.attain_target, max_steps=args.max_steps)
+    if args.save_report:
+        report.save(args.save_report)
+    if args.json:
+        print(report.to_json())
+        return (EXIT_OK if report.capacity["plan"]["attained"]
+                else EXIT_NO_CONFIG)
+    cap = report.capacity
+    print(report.summary())
+    print(f"\nladder {cap['ladder']} (routing {cap['routing']}, target "
+          f"{100 * cap['attain_target']:.0f}% attainment, trace "
+          f"{cap['trace']['digest']}):")
+    for rec in cap["rungs"]:
+        if rec["pruned"]:
+            print(f"  {rec['deployment']['describe']:>16s} "
+                  f"{rec['total_chips']:4d} chips  pruned ({rec['pruned']})")
+            continue
+        m = rec["metrics"]
+        print(f"  {rec['deployment']['describe']:>16s} "
+              f"{rec['total_chips']:4d} chips  goodput "
+              f"{m['goodput_tok_s']:9.1f} tok/s  attainment "
+              f"{100 * m['slo_attainment']:5.1f}%  "
+              f"{'ATTAINS' if rec['attains'] else 'misses SLO'}")
+    for s in cap.get("skipped", []):
+        print(f"  -- [{s['mode']}] {s['describe']} skipped: {s['reason']}")
+    return EXIT_OK if cap["plan"]["attained"] else EXIT_NO_CONFIG
 
 
 # ---------------------------------------------------------------------------
@@ -600,6 +735,24 @@ def _add_slo_args(ap: argparse.ArgumentParser):
                     help="tail SLO: p99 TPOT target in ms")
 
 
+def _add_candidate_args(ap: argparse.ArgumentParser):
+    """The explicit-candidate flag block `workload replay` and
+    `capacity sweep` share (consumed by ``_explicit_candidate``)."""
+    ap.add_argument("--model", required=True,
+                    help=f"one of {', '.join(list_archs(True))}")
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--pp", type=int, default=1)
+    ap.add_argument("--ep", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=64,
+                    help="decode slot count (max_batch)")
+    ap.add_argument("--max-num-tokens", type=int, default=8192)
+    ap.add_argument("--max-queue", type=int, default=100_000)
+    ap.add_argument("--platform", default="tpu_v5e")
+    ap.add_argument("--backend", default="repro-jax")
+    ap.add_argument("--dtype", default="bf16",
+                    choices=["bf16", "fp16", "fp8"])
+
+
 def _build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="repro.core.cli",
@@ -625,11 +778,14 @@ def _build_parser() -> argparse.ArgumentParser:
                          "found (early exit; prices fewer candidates)")
     sp.add_argument("--trace", default="",
                     help="workload trace JSONL (from `workload generate`): "
-                         "replay the frontier's top-K under it and re-rank "
+                         "replay the frontier's top-K under it open-loop "
+                         "(queueing delay counts into TTFT) and re-rank "
                          "by goodput (SearchReport workload_eval section)")
     _add_slo_args(sp)
     sp.add_argument("--replay-top-k", type=int, default=3, metavar="K",
-                    help="how many analytical leaders to replay")
+                    help="how many analytical leaders to replay "
+                         "(disaggregated composites are skipped, not "
+                         "replayed)")
     sp.set_defaults(func=cmd_search)
 
     gp = sub.add_parser("generate", help="emit the launch artifact")
@@ -737,25 +893,56 @@ def _build_parser() -> argparse.ArgumentParser:
     wd.set_defaults(func=cmd_workload_describe)
 
     wr = wlsub.add_parser(
-        "replay", help="open-loop replay against one serving config")
+        "replay", help="open-loop replay against one serving config "
+                       "(arrival-time-driven: queueing delay counts "
+                       "into TTFT)")
     wr.add_argument("--trace", required=True)
-    wr.add_argument("--model", required=True,
-                    help=f"one of {', '.join(list_archs(True))}")
-    wr.add_argument("--tp", type=int, default=1)
-    wr.add_argument("--pp", type=int, default=1)
-    wr.add_argument("--ep", type=int, default=1)
-    wr.add_argument("--batch", type=int, default=64,
-                    help="decode slot count (max_batch)")
-    wr.add_argument("--max-num-tokens", type=int, default=8192)
-    wr.add_argument("--max-queue", type=int, default=100_000)
+    _add_candidate_args(wr)
     wr.add_argument("--max-steps", type=int, default=200_000)
-    wr.add_argument("--platform", default="tpu_v5e")
-    wr.add_argument("--backend", default="repro-jax")
-    wr.add_argument("--dtype", default="bf16",
-                    choices=["bf16", "fp16", "fp8"])
     _add_slo_args(wr)
     wr.add_argument("--json", action="store_true")
     wr.set_defaults(func=cmd_workload_replay)
+
+    cap = sub.add_parser(
+        "capacity",
+        help="multi-replica capacity planning: plan | sweep")
+    capsub = cap.add_subparsers(dest="action")
+
+    def _add_capacity_args(p):
+        p.add_argument("--trace", required=True,
+                       help="workload trace JSONL (from `workload generate`)")
+        p.add_argument("--ladder", default="1,2,4", metavar="N,N,...",
+                       help="ascending replica-count ladder to sweep")
+        p.add_argument("--routing", default="round_robin",
+                       choices=list(ROUTING_POLICIES),
+                       help="how requests are routed across replicas")
+        p.add_argument("--attain-target", type=float, default=0.95,
+                       help="fraction of requests that must meet the SLO "
+                            "for a rung to attain")
+        p.add_argument("--max-steps", type=int, default=200_000,
+                       help="total iteration budget across all replicas")
+        _add_slo_args(p)
+        p.add_argument("--json", action="store_true")
+
+    cs = capsub.add_parser(
+        "sweep", help="replay one explicit candidate up the replica "
+                      "ladder; per-rung records (JSON-lines with --json)")
+    _add_capacity_args(cs)
+    _add_candidate_args(cs)
+    cs.set_defaults(func=cmd_capacity_sweep)
+
+    cpl = capsub.add_parser(
+        "plan", help="search, then find the minimum-chip deployment "
+                     "whose goodput attains the SLO (schema-v4 report)")
+    _add_workload_args(cpl)
+    _add_capacity_args(cpl)
+    cpl.add_argument("--top-k", type=int, default=1, metavar="K",
+                     help="try the analytical top-K replayable candidates "
+                          "at every rung (disaggregated composites are "
+                          "skipped)")
+    cpl.add_argument("--save-report", default="",
+                     help="write the schema-v4 SearchReport JSON here")
+    cpl.set_defaults(func=cmd_capacity_plan)
 
     lp = sub.add_parser("list", help="enumerate models/backends/platforms")
     lp.add_argument("what", nargs="?", default="all",

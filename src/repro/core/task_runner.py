@@ -146,6 +146,32 @@ class TaskRunner:
 
         return ServingSimulator(sched_cfg, latency_s)
 
+    def cluster_simulator(self, deployment, routing: str = "round_robin",
+                          priority_admission: bool = True,
+                          max_queue: int = 100_000):
+        """Multi-replica cluster simulator for one
+        :class:`~repro.capacity.deployment.DeploymentSpec` — N identical
+        engines behind a routing policy, every replica priced by this
+        runner's (memoized) session, so a whole capacity ladder shares
+        the PerfDatabase that priced the analytical search."""
+        from repro.capacity.cluster import ClusterSimulator
+        from repro.serving.scheduler import SchedulerConfig
+        cand = deployment.candidate
+        sched_cfg = SchedulerConfig(
+            max_batch=cand.batch_size,
+            max_num_tokens=cand.flags.max_num_tokens,
+            chunked_prefill=cand.flags.enable_chunked_context,
+            priority_admission=priority_admission,
+            max_queue=max_queue)
+        par, flags = cand.parallel, cand.flags
+
+        def latency_s(spec) -> float:
+            return self.session.spec_latency_ms(par, spec, flags) / 1e3
+
+        return ClusterSimulator(sched_cfg, latency_s,
+                                replicas=deployment.replicas,
+                                routing=routing)
+
     # ------------------------------------------------------------------
     def iter_search(self, sweep_flags: bool = False,
                     keep_all_disagg: bool = False,

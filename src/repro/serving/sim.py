@@ -40,6 +40,43 @@ class StepSpec:
     decode: Tuple[int, ...]                # kv length per decode row
 
 
+@dataclasses.dataclass(frozen=True)
+class StepOutcome:
+    """One executed scheduler iteration (see :func:`run_iteration`)."""
+    t: float                               # clock after the iteration
+    dt: float                              # iteration latency
+    gen_tokens: int                        # tokens produced this iteration
+    finished: List                         # requests that completed
+    waiting_depth: int                     # queue depth when planned
+
+
+def run_iteration(sched, latency_fn, t: float) -> Optional[StepOutcome]:
+    """Plan and execute one scheduler iteration at clock ``t``.
+
+    The single shared step body of every replay engine — the open-loop
+    :meth:`ServingSimulator.replay` and the per-replica engines of
+    ``repro.capacity.cluster`` — so iteration accounting (latency-spec
+    assembly, generated-token counting including prefills that finish
+    this step) can never drift between the single- and multi-engine
+    views.  Returns ``None`` when the scheduler has nothing to run.
+    """
+    plan = sched.plan(t)
+    if plan.empty:
+        return None
+    depth = len(sched.waiting)
+    spec = StepSpec(
+        prefill=tuple((c.length, c.start) for c in plan.prefill),
+        decode=tuple(r.isl + r.generated for r in plan.decode),
+    )
+    dt = latency_fn(spec)
+    t += dt
+    gen = plan.gen_tokens + sum(
+        1 for c in plan.prefill
+        if c.start + c.length >= c.req.isl)
+    return StepOutcome(t=t, dt=dt, gen_tokens=gen,
+                       finished=sched.commit(plan, t), waiting_depth=depth)
+
+
 @dataclasses.dataclass
 class SimMetrics:
     ttft_ms: float
@@ -71,6 +108,11 @@ def percentile(values: Sequence[float], q: float) -> float:
 
 
 def _pctl_dict(values_ms: Sequence[float]) -> Dict[str, float]:
+    """p50/p95/p99 over a sample; an empty sample (degenerate trace,
+    nothing completed) yields explicit zeros, never NaN — replay
+    metrics stay finite and JSON-comparable."""
+    if not values_ms:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
     return {"p50": percentile(values_ms, 0.50),
             "p95": percentile(values_ms, 0.95),
             "p99": percentile(values_ms, 0.99)}
@@ -210,34 +252,31 @@ class ServingSimulator:
 
         admit_arrived()
         while (i < len(records) or sched.active > 0) and steps < max_steps:
-            plan = sched.plan(t)
-            if plan.empty:
+            out = run_iteration(sched, self.latency_fn, t)
+            if out is None:
                 if i < len(records):
                     # engine idle, arrivals pending: jump to the next one
                     t = max(t, records[i].arrival_s)
                     admit_arrived()
                     continue
                 break
-            depth = len(sched.waiting)
-            depth_sum += depth
-            depth_max = max(depth_max, depth)
-            spec = StepSpec(
-                prefill=tuple((c.length, c.start) for c in plan.prefill),
-                decode=tuple(r.isl + r.generated for r in plan.decode),
-            )
-            t += self.latency_fn(spec)
+            depth_sum += out.waiting_depth
+            depth_max = max(depth_max, out.waiting_depth)
+            t = out.t
             steps += 1
-            gen_total += plan.gen_tokens + sum(
-                1 for c in plan.prefill
-                if c.start + c.length >= c.req.isl)
-            done.extend(sched.commit(plan, t))
+            gen_total += out.gen_tokens
+            done.extend(out.finished)
             admit_arrived()
 
         completed = [r for r in done if r.ttft is not None]
         unfinished = len(records) - rejected - len(completed)
         ttfts_ms = [1e3 * r.ttft for r in completed]
         tpots_ms = [1e3 * r.tpot for r in completed if r.tpot is not None]
-        duration = max(t, 1e-9)
+        # degenerate traces — empty, or every request bounced off
+        # max_queue — take explicit zero branches rather than hiding a
+        # division behind max(..., 1): the metrics stay finite and a
+        # capacity rung replaying such a trace reads as zero goodput,
+        # never NaN
         metrics = ReplayMetrics(
             n_requests=len(records),
             completed=len(completed),
@@ -245,10 +284,10 @@ class ServingSimulator:
             unfinished=unfinished,
             steps=steps,
             duration_s=t,
-            throughput_tok_s=gen_total / duration,
+            throughput_tok_s=gen_total / t if t > 0 else 0.0,
             ttft_ms=_pctl_dict(ttfts_ms),
             tpot_ms=_pctl_dict(tpots_ms),
-            queue_depth_mean=depth_sum / max(steps, 1),
+            queue_depth_mean=depth_sum / steps if steps else 0.0,
             queue_depth_max=depth_max,
             per_request=[(r.tenant, r.ttft, r.tpot) for r in completed],
         )
@@ -257,9 +296,10 @@ class ServingSimulator:
                          if slo.request_meets(r.ttft, r.tpot)]
             metrics.slo = {"ttft_p99_ms": slo.ttft_p99_ms,
                            "tpot_p99_ms": slo.tpot_p99_ms}
-            metrics.slo_attainment = len(attaining) / max(len(records), 1)
-            metrics.goodput_tok_s = \
-                sum(r.osl for r in attaining) / duration
+            metrics.slo_attainment = (len(attaining) / len(records)
+                                      if records else 0.0)
+            metrics.goodput_tok_s = (sum(r.osl for r in attaining) / t
+                                     if t > 0 else 0.0)
         return metrics
 
 

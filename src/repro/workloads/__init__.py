@@ -38,16 +38,19 @@ from repro.workloads.generators import (ARRIVAL_KINDS, LENGTH_KINDS,
                                         ArrivalSpec, LengthSpec, TenantSpec,
                                         TraceSpec, constant_trace,
                                         generate_trace)
-from repro.workloads.frontier import candidate_from_projection, replay_frontier
+from repro.workloads.frontier import (DISAGG_SKIP_REASON,
+                                      analytical_leaders,
+                                      candidate_from_projection,
+                                      replay_frontier)
 from repro.workloads.slo import SLOSpec
 from repro.workloads.trace import (SUPPORTED_TRACE_SCHEMA_VERSIONS,
                                    TRACE_SCHEMA_VERSION, TraceRequest,
                                    WorkloadTrace)
 
 __all__ = [
-    "ARRIVAL_KINDS", "ArrivalSpec", "LENGTH_KINDS", "LengthSpec",
-    "SLOSpec", "SUPPORTED_TRACE_SCHEMA_VERSIONS", "TRACE_SCHEMA_VERSION",
-    "TenantSpec", "TraceRequest", "TraceSpec", "WorkloadTrace",
-    "candidate_from_projection", "constant_trace", "generate_trace",
-    "replay_frontier",
+    "ARRIVAL_KINDS", "ArrivalSpec", "DISAGG_SKIP_REASON", "LENGTH_KINDS",
+    "LengthSpec", "SLOSpec", "SUPPORTED_TRACE_SCHEMA_VERSIONS",
+    "TRACE_SCHEMA_VERSION", "TenantSpec", "TraceRequest", "TraceSpec",
+    "WorkloadTrace", "analytical_leaders", "candidate_from_projection",
+    "constant_trace", "generate_trace", "replay_frontier",
 ]

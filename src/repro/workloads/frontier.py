@@ -22,6 +22,30 @@ from repro.workloads.slo import SLOSpec
 from repro.workloads.trace import WorkloadTrace
 
 
+#: Why a disaggregated composite cannot be replayed: both the frontier
+#: re-ranker and the capacity planner drive single-engine simulators
+#: (one scheduler per engine/replica), and a composite runs two pools.
+#: One string, shared, so report consumers can match on it.
+DISAGG_SKIP_REASON = ("disaggregated composite: not replayable on the "
+                      "single-engine simulator")
+
+
+def analytical_leaders(projections: Sequence[Projection], sla: SLA,
+                       top_k: int) -> List[Projection]:
+    """The top-K candidates the dynamic views replay: SLA-valid Pareto
+    leaders, falling back to raw throughput order when nothing is
+    SLA-valid (so the dynamic view still says something about the
+    space).  Shared by :func:`replay_frontier` and
+    ``Configurator.plan_capacity`` — one selection policy."""
+    if top_k < 1:
+        raise ValueError(f"top_k must be >= 1, got {top_k}")
+    leaders = pareto.top_k(list(projections), sla, top_k)
+    if not leaders:
+        leaders = sorted(projections,
+                         key=lambda p: -p.tokens_per_s_per_chip)[:top_k]
+    return leaders
+
+
 def candidate_from_projection(p: Projection) -> Optional[CandidateConfig]:
     """Rebuild the CandidateConfig a projection priced, or None when the
     projection is not a single-engine deployment (disaggregated
@@ -52,15 +76,8 @@ def replay_frontier(runner, projections: Sequence[Projection],
     Candidates the simulator cannot replay (disaggregated composites)
     are recorded as skipped, not silently dropped.
     """
-    if top_k < 1:
-        raise ValueError(f"top_k must be >= 1, got {top_k}")
     sla = sla if sla is not None else runner.w.sla
-    leaders = pareto.top_k(list(projections), sla, top_k)
-    if not leaders:
-        # nothing SLA-valid: fall back to raw throughput order so the
-        # dynamic view still says something about the space
-        leaders = sorted(projections,
-                         key=lambda p: -p.tokens_per_s_per_chip)[:top_k]
+    leaders = analytical_leaders(projections, sla, top_k)
     index_of = {id(p): i for i, p in enumerate(projections)}
 
     candidates: List[Dict] = []
@@ -77,8 +94,7 @@ def replay_frontier(runner, projections: Sequence[Projection],
         }
         cand = candidate_from_projection(p)
         if cand is None:
-            entry["skipped"] = ("disaggregated composite: not replayable "
-                                "on the single-engine simulator")
+            entry["skipped"] = DISAGG_SKIP_REASON
             candidates.append(entry)
             continue
         sim = runner.simulator(cand, priority_admission=True)

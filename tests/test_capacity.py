@@ -1,0 +1,413 @@
+"""repro.capacity: deployment specs, routing policies, the multi-replica
+cluster simulator, and the minimum-chip ladder planner — unit tests on a
+synthetic latency model plus the end-to-end ``Configurator.plan_capacity``
+acceptance path."""
+import dataclasses
+
+import pytest
+
+from repro.api import Configurator
+from repro.capacity import (ClusterSimulator, DeploymentSpec, get_router,
+                            iter_ladder, plan_min_chips, sweep_ladder)
+from repro.capacity.routing import (LeastOutstandingRouter, RoundRobinRouter,
+                                    TenantAffinityRouter, _tenant_slot)
+from repro.core.config import CandidateConfig, ParallelismConfig
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.sim import ServingSimulator, StepSpec
+from repro.workloads import (ArrivalSpec, LengthSpec, SLOSpec, TenantSpec,
+                             TraceRequest, TraceSpec, WorkloadTrace,
+                             constant_trace, generate_trace)
+
+
+def _lat(spec: StepSpec) -> float:
+    return 1e-3 + 1e-6 * sum(c for c, _ in spec.prefill) \
+        + 1e-5 * len(spec.decode)
+
+
+def _cluster(replicas, routing="round_robin", **sched_kw) -> ClusterSimulator:
+    return ClusterSimulator(SchedulerConfig(**sched_kw), _lat,
+                            replicas=replicas, routing=routing)
+
+
+def _bursty_trace(rate=50.0, n=60, seed=7):
+    return generate_trace(TraceSpec(
+        n_requests=n,
+        arrivals=ArrivalSpec(kind="bursty", rate_rps=rate, burst_factor=4.0),
+        tenants=(TenantSpec(name="chat", weight=0.7, priority=1,
+                            lengths=LengthSpec(kind="lognormal",
+                                               isl=256, osl=64)),
+                 TenantSpec(name="batch", weight=0.3,
+                            lengths=LengthSpec(kind="lognormal",
+                                               isl=512, osl=96)))),
+        seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# DeploymentSpec
+# ---------------------------------------------------------------------------
+
+def test_deployment_spec_chips_and_roundtrip():
+    dep = DeploymentSpec(
+        candidate=CandidateConfig(
+            parallel=ParallelismConfig(tp=2, pp=2), batch_size=32),
+        replicas=3)
+    assert dep.chips_per_replica == 4
+    assert dep.total_chips == 12
+    assert dep.describe() == "3x[TP2PP2 b32]"
+    assert DeploymentSpec.from_dict(dep.to_dict()) == dep
+    with pytest.raises(ValueError, match="replicas"):
+        DeploymentSpec(candidate=dep.candidate, replicas=0)
+
+
+def test_deployment_spec_rejects_dp_candidates():
+    """replicas IS the data-parallel axis: a dp>1 candidate would be
+    billed for dp engines while the cluster simulator runs one per
+    replica, so it is rejected rather than mis-costed."""
+    with pytest.raises(ValueError, match="supersedes"):
+        DeploymentSpec(
+            candidate=CandidateConfig(
+                parallel=ParallelismConfig(tp=2, dp=2), batch_size=8),
+            replicas=1)
+
+
+# ---------------------------------------------------------------------------
+# routing policies
+# ---------------------------------------------------------------------------
+
+def test_get_router_by_name_and_rejection():
+    assert isinstance(get_router("round_robin"), RoundRobinRouter)
+    assert isinstance(get_router("least_outstanding"),
+                      LeastOutstandingRouter)
+    assert isinstance(get_router("tenant_affinity"), TenantAffinityRouter)
+    with pytest.raises(ValueError, match="routing policy"):
+        get_router("random")
+
+
+def test_round_robin_cycles():
+    r = RoundRobinRouter()
+    assert [r.select([None] * 3, None, seq) for seq in range(6)] \
+        == [0, 1, 2, 0, 1, 2]
+
+
+def test_least_outstanding_picks_min_with_index_tiebreak():
+    @dataclasses.dataclass
+    class Stub:
+        outstanding: int
+    r = LeastOutstandingRouter()
+    assert r.select([Stub(4), Stub(1), Stub(2)], None, 0) == 1
+    assert r.select([Stub(2), Stub(2), Stub(2)], None, 0) == 0
+
+
+def test_tenant_affinity_is_stable_and_process_independent():
+    # sha256-based, never Python's per-process hash: the slot for a given
+    # (tenant, n) pair is a fixed value across runs and machines
+    assert _tenant_slot("chat", 4) == _tenant_slot("chat", 4)
+    assert _tenant_slot("default", 2) in (0, 1)
+    r = TenantAffinityRouter()
+    req = TraceRequest(arrival_s=0.0, isl=8, osl=2, tenant="chat")
+    assert r.select([None] * 4, req, 0) == _tenant_slot("chat", 4)
+
+
+# ---------------------------------------------------------------------------
+# ClusterSimulator
+# ---------------------------------------------------------------------------
+
+def test_single_replica_cluster_matches_single_engine_replay():
+    trace = _bursty_trace()
+    slo = SLOSpec(ttft_p99_ms=500, tpot_p99_ms=100)
+    kw = dict(max_batch=8, max_num_tokens=2048)
+    single = ServingSimulator(SchedulerConfig(**kw), _lat).replay(
+        trace, slo=slo)
+    clus = _cluster(1, **kw).replay(trace, slo=slo)
+    assert clus.completed == single.completed
+    assert clus.rejected == single.rejected
+    assert clus.steps == single.steps
+    assert clus.ttft_ms == single.ttft_ms
+    assert clus.tpot_ms == single.tpot_ms
+    assert clus.slo_attainment == single.slo_attainment
+    assert clus.goodput_tok_s == pytest.approx(single.goodput_tok_s)
+
+
+@pytest.mark.parametrize("routing", ["round_robin", "least_outstanding",
+                                     "tenant_affinity"])
+def test_cluster_accounting_is_consistent(routing):
+    trace = _bursty_trace()
+    m = _cluster(3, routing=routing, max_batch=4,
+                 max_num_tokens=1024).replay(
+        trace, slo=SLOSpec(ttft_p99_ms=2000, tpot_p99_ms=100))
+    assert m.replicas == 3 and m.routing == routing
+    assert m.completed + m.rejected + m.unfinished == trace.n_requests
+    assert sum(r["routed"] for r in m.per_replica) == trace.n_requests
+    assert sum(r["completed"] for r in m.per_replica) == m.completed
+    assert sum(r["steps"] for r in m.per_replica) == m.steps
+    assert m.duration_s == max(r["final_clock_s"] for r in m.per_replica)
+    assert 0.0 <= m.slo_attainment <= 1.0
+    assert m.goodput_tok_s <= m.throughput_tok_s + 1e-9
+    assert set(m.imbalance) == {"routed_max_over_mean", "routed_cv",
+                                "tokens_max_over_mean", "tokens_cv"}
+    d = m.to_dict()
+    assert "per_request" not in d and len(d["per_replica"]) == 3
+
+
+def test_more_replicas_absorb_a_burst():
+    """A closed burst that saturates one engine clears faster — and with
+    better tail TTFT — on four."""
+    trace = constant_trace(isl=128, osl=32, n_requests=32, rate_rps=1e6)
+    m1 = _cluster(1, max_batch=2, max_num_tokens=512).replay(trace)
+    m4 = _cluster(4, max_batch=2, max_num_tokens=512).replay(trace)
+    assert m1.completed == m4.completed == 32
+    assert m4.ttft_ms["p99"] < m1.ttft_ms["p99"]
+    assert m4.duration_s < m1.duration_s
+
+
+def test_tenant_affinity_pins_each_tenant_to_one_replica():
+    trace = _bursty_trace()
+    m = _cluster(4, routing="tenant_affinity", max_batch=8,
+                 max_num_tokens=2048).replay(trace)
+    seen = {}
+    for tenant, replica, _ttft, _tpot in m.per_request:
+        seen.setdefault(tenant, set()).add(replica)
+    assert seen and all(len(replicas) == 1 for replicas in seen.values())
+
+
+def test_least_outstanding_balances_a_skewed_tenant_mix():
+    """90% of traffic from one tenant: affinity routing piles it on one
+    replica while least-outstanding spreads it."""
+    trace = generate_trace(TraceSpec(
+        n_requests=80,
+        arrivals=ArrivalSpec(kind="poisson", rate_rps=100.0),
+        tenants=(TenantSpec(name="whale", weight=0.9),
+                 TenantSpec(name="minnow", weight=0.1))), seed=5)
+    aff = _cluster(4, routing="tenant_affinity", max_batch=2,
+                   max_num_tokens=512).replay(trace)
+    lo = _cluster(4, routing="least_outstanding", max_batch=2,
+                  max_num_tokens=512).replay(trace)
+    assert lo.imbalance["routed_cv"] < aff.imbalance["routed_cv"]
+
+
+def test_cluster_replay_empty_trace_zeroed_and_finite():
+    m = _cluster(2, max_batch=2).replay(WorkloadTrace(requests=()),
+                                        slo=SLOSpec())
+    assert m.n_requests == m.completed == m.rejected == m.steps == 0
+    assert m.ttft_ms == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert m.throughput_tok_s == 0.0 and m.queue_depth_mean == 0.0
+    assert m.slo_attainment == 0.0 and m.goodput_tok_s == 0.0
+
+
+def test_cluster_replay_respects_total_step_budget():
+    trace = constant_trace(isl=64, osl=64, n_requests=64, rate_rps=1e6)
+    m = _cluster(2, max_batch=1, max_num_tokens=128).replay(
+        trace, slo=SLOSpec(), max_steps=10)
+    assert m.steps <= 10
+    assert m.unfinished > 0
+    assert m.completed + m.rejected + m.unfinished == 64
+
+
+def test_cluster_rejects_on_per_replica_max_queue():
+    trace = constant_trace(isl=32, osl=8, n_requests=24, rate_rps=1e6)
+    m = _cluster(2, max_batch=1, max_num_tokens=64, max_queue=2).replay(
+        trace, slo=SLOSpec(ttft_p99_ms=1e9, tpot_p99_ms=1e9))
+    assert m.rejected > 0
+    assert m.slo_attainment == pytest.approx(m.completed / 24)
+
+
+def test_cluster_validates_inputs():
+    with pytest.raises(ValueError, match="replicas"):
+        _cluster(0)
+    with pytest.raises(ValueError, match="routing policy"):
+        _cluster(2, routing="lunar")
+
+
+# ---------------------------------------------------------------------------
+# ladder planner (stub runner: synthetic latency, no PerfDatabase)
+# ---------------------------------------------------------------------------
+
+class _StubRunner:
+    """Just enough TaskRunner surface for the planner: a
+    cluster_simulator factory and a fingerprintable session.db."""
+
+    class _DB:
+        def fingerprint(self):
+            return {"platform": "stub", "backend": "stub",
+                    "grid_hash": "0" * 16}
+
+    class _Session:
+        db = None
+
+    def __init__(self):
+        self.session = self._Session()
+        self.session.db = self._DB()
+        self.n_simulated = 0
+
+    def cluster_simulator(self, dep, routing="round_robin",
+                          priority_admission=True, max_queue=100_000):
+        self.n_simulated += 1
+        cfg = SchedulerConfig(max_batch=dep.candidate.batch_size,
+                              max_num_tokens=512,
+                              priority_admission=priority_admission,
+                              max_queue=max_queue)
+        tp = dep.candidate.parallel.tp     # bigger engine = faster steps
+
+        def lat(spec):
+            return _lat(spec) / tp
+
+        return ClusterSimulator(cfg, lat, replicas=dep.replicas,
+                                routing=routing)
+
+
+def _cand(tp=1, batch=2):
+    return CandidateConfig(parallel=ParallelismConfig(tp=tp),
+                           batch_size=batch)
+
+
+# one saturating burst: a single small engine blows the tail SLO, two clear it
+_PLANNER_TRACE = constant_trace(isl=128, osl=16, n_requests=24, rate_rps=1e6)
+_PLANNER_SLO = SLOSpec(ttft_p99_ms=120, tpot_p99_ms=100)
+
+
+def test_plan_min_chips_finds_cheapest_attaining_rung():
+    runner = _StubRunner()
+    plan = plan_min_chips(runner, [_cand()], _PLANNER_TRACE, _PLANNER_SLO,
+                          ladder=(1, 2, 4))
+    assert plan.attained
+    assert plan.total_chips == 2
+    assert plan.deployment.replicas == 2
+    rungs = {r["replicas"]: r for r in plan.section["rungs"]}
+    assert rungs[1]["attains"] is False
+    assert rungs[2]["attains"] is True
+    # monotone-cost early stop: rung 4 never evaluated (4 chips >= 2)
+    assert 4 not in rungs
+    assert plan.section["plan"]["total_chips"] == 2
+    assert "min-chip deployment" in plan.summary()
+
+
+def test_ladder_prunes_deployments_at_or_above_attained_cost():
+    """Candidates at 1 and 4 chips/replica: the 4-chip engine attains at
+    rung 1 (cost 4), so its rung-2 deployment (8 chips) is pruned
+    without simulation, while the cheaper 1-chip engine is still
+    evaluated at rung 2 — where it attains at cost 2 and becomes the
+    plan; rung 4 (cheapest deployment 4 chips >= 2) is never visited."""
+    runner = _StubRunner()
+    section = sweep_ladder(runner, [_cand(tp=1), _cand(tp=4)],
+                           _PLANNER_TRACE, _PLANNER_SLO, ladder=(1, 2, 4))
+    recs = section["rungs"]
+    by_key = {(r["replicas"], r["candidate_rank"]): r for r in recs}
+    assert by_key[(1, 0)]["attains"] is False          # 1 chip: too small
+    assert by_key[(1, 1)]["attains"] is True           # 4 chips: attains
+    assert by_key[(2, 0)]["attains"] is True           # 2 chips: cheaper win
+    assert by_key[(2, 1)]["pruned"] is not None        # 8 chips >= 4
+    assert by_key[(2, 1)]["metrics"] is None
+    assert (4, 0) not in by_key and (4, 1) not in by_key  # early stop
+    assert section["n_pruned"] == 1
+    assert section["plan"]["total_chips"] == 2
+    # simulations ran only for the non-pruned records
+    assert runner.n_simulated == section["n_evaluated"]
+
+
+def test_plan_without_attaining_rung_reports_none():
+    runner = _StubRunner()
+    plan = plan_min_chips(runner, [_cand()], _PLANNER_TRACE,
+                          SLOSpec(ttft_p99_ms=1e-6, tpot_p99_ms=1e-6),
+                          ladder=(1, 2))
+    assert not plan.attained
+    assert plan.deployment is None and plan.total_chips is None
+    assert all(r["attains"] is False for r in plan.section["rungs"])
+    assert "no deployment" in plan.summary()
+
+
+def test_attain_target_changes_the_verdict():
+    runner = _StubRunner()
+    m = runner.cluster_simulator(
+        DeploymentSpec(_cand(), 1)).replay(_PLANNER_TRACE,
+                                           slo=_PLANNER_SLO)
+    partial = m.slo_attainment
+    assert 0.0 < partial < 0.95
+    easy = sweep_ladder(runner, [_cand()], _PLANNER_TRACE, _PLANNER_SLO,
+                        ladder=(1,), attain_target=partial / 2)
+    assert easy["plan"]["attained"] is True
+
+
+def test_ladder_validation():
+    runner = _StubRunner()
+    kw = dict(trace=_PLANNER_TRACE, slo=_PLANNER_SLO)
+    with pytest.raises(ValueError, match="ascending"):
+        list(iter_ladder(runner, [_cand()], ladder=(2, 1), **kw))
+    with pytest.raises(ValueError, match="duplicate"):
+        list(iter_ladder(runner, [_cand()], ladder=(1, 1), **kw))
+    with pytest.raises(ValueError, match="non-empty"):
+        list(iter_ladder(runner, [_cand()], ladder=(), **kw))
+    with pytest.raises(ValueError, match="routing"):
+        list(iter_ladder(runner, [_cand()], ladder=(1,), routing="x", **kw))
+    with pytest.raises(ValueError, match="attain_target"):
+        list(iter_ladder(runner, [_cand()], ladder=(1,),
+                         attain_target=1.5, **kw))
+    with pytest.raises(ValueError, match="candidate"):
+        list(iter_ladder(runner, [], ladder=(1,), **kw))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: Configurator.plan_capacity (the acceptance path)
+# ---------------------------------------------------------------------------
+
+def _capacity_configurator():
+    return (Configurator.for_model("llama3.1-8b")
+            .traffic(isl=256, osl=64)
+            .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+            .cluster(chips=8).backend("repro-jax").dtype("fp8")
+            .modes("aggregated"))
+
+
+_E2E_SLO = SLOSpec(ttft_p99_ms=400, tpot_p99_ms=50)
+
+
+def test_plan_capacity_min_chip_attains_while_next_cheaper_misses():
+    """The acceptance property: the planned deployment attains the SLO
+    and every strictly cheaper evaluated rung does not."""
+    cfg = _capacity_configurator()
+    report = cfg.plan_capacity(_bursty_trace(rate=60.0), _E2E_SLO,
+                               ladder=(1, 2, 4), top_k=1)
+    cap = report.capacity
+    plan = cap["plan"]
+    assert plan["attained"] is True
+    assert plan["slo_attainment"] >= cap["attain_target"]
+    cheaper = [r for r in cap["rungs"]
+               if r["pruned"] is None
+               and r["total_chips"] < plan["total_chips"]]
+    assert cheaper, "the min-chip rung must not be the cheapest evaluated"
+    assert all(r["attains"] is False for r in cheaper)
+    # section carries the provenance the report consumer audits
+    assert cap["trace"]["digest"] == _bursty_trace(rate=60.0).digest()
+    assert cap["slo"] == _E2E_SLO.to_dict()
+    assert cap["database"]["platform"] == "tpu_v5e"
+    assert cap["candidates"][0]["analytical_rank"] == 0
+    assert report.schema_version == 4
+    assert "capacity plan" in report.summary()
+
+
+def test_plan_capacity_is_deterministic_across_sessions():
+    trace = _bursty_trace(rate=60.0)
+    cap1 = _capacity_configurator().plan_capacity(
+        trace, _E2E_SLO, ladder=(1, 2), top_k=2).capacity
+    cap2 = _capacity_configurator().plan_capacity(
+        trace, _E2E_SLO, ladder=(1, 2), top_k=2).capacity
+    assert cap1 == cap2
+
+
+def test_plan_capacity_reuses_supplied_report():
+    cfg = _capacity_configurator()
+    report = cfg.search(generate_launch=False)
+    n_before = report.n_candidates
+    out = cfg.plan_capacity(_bursty_trace(rate=60.0), _E2E_SLO,
+                            ladder=(1, 2), report=report)
+    assert out is report
+    assert report.n_candidates == n_before        # no re-search
+    assert report.capacity is not None
+
+
+def test_plan_capacity_accepts_trace_path_and_slo_dict(tmp_path):
+    p = tmp_path / "t.jsonl"
+    _bursty_trace(rate=60.0).save(str(p))
+    report = _capacity_configurator().plan_capacity(
+        str(p), {"ttft_p99_ms": 400.0, "tpot_p99_ms": 50.0}, ladder=(2,))
+    assert report.capacity["slo"] == {"ttft_p99_ms": 400.0,
+                                      "tpot_p99_ms": 50.0}

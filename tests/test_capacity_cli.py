@@ -1,0 +1,117 @@
+"""CLI ``capacity plan|sweep``: per-rung JSON-lines records, min-chip
+summary, digest-stable output across runs, and stable exit codes."""
+import json
+
+import pytest
+
+from repro.core import cli
+
+_TRACE_ARGS = ["workload", "generate", "--arrivals", "bursty", "--rate",
+               "60", "--burst-factor", "4", "--n", "60", "--lengths",
+               "lognormal", "--isl", "256", "--osl", "64", "--tenants",
+               "chat:0.7:1,batch:0.3", "--seed", "7"]
+
+_SWEEP_ARGS = ["--model", "llama3.1-8b", "--tp", "1", "--batch", "64",
+               "--dtype", "fp8", "--ladder", "1,2,4",
+               "--slo-ttft-p99", "400", "--slo-tpot-p99", "50"]
+
+
+@pytest.fixture(scope="module")
+def trace_path(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("cap") / "trace.jsonl")
+    assert cli.main(_TRACE_ARGS + ["--out", path]) == 0
+    return path
+
+
+def _records(capsys):
+    lines = capsys.readouterr().out.strip().splitlines()
+    return [json.loads(line) for line in lines if line.strip()]
+
+
+def test_capacity_sweep_json_emits_rungs_and_plan(trace_path, capsys):
+    rc = cli.main(["capacity", "sweep", "--trace", trace_path]
+                  + _SWEEP_ARGS + ["--json"])
+    records = _records(capsys)
+    assert rc == 0
+    rungs, summary = records[:-1], records[-1]
+    assert all(r["type"] == "rung" for r in rungs)
+    assert summary["type"] == "summary"
+    # the seeded scenario: 1 replica misses, 2 attains, rung 4 early-stopped
+    by_replicas = {r["replicas"]: r for r in rungs}
+    assert by_replicas[1]["attains"] is False
+    assert by_replicas[2]["attains"] is True
+    assert 4 not in by_replicas
+    plan = summary["plan"]
+    assert plan["total_chips"] == 2
+    assert plan["slo_attainment"] >= summary["attain_target"]
+    assert by_replicas[2]["imbalance"]["routed_max_over_mean"] >= 1.0
+
+
+def test_capacity_sweep_json_digest_stable_across_runs(trace_path, capsys):
+    rc1 = cli.main(["capacity", "sweep", "--trace", trace_path]
+                   + _SWEEP_ARGS + ["--json"])
+    out1 = capsys.readouterr().out
+    rc2 = cli.main(["capacity", "sweep", "--trace", trace_path]
+                   + _SWEEP_ARGS + ["--json"])
+    out2 = capsys.readouterr().out
+    assert rc1 == rc2 == 0
+    assert out1 == out2                      # byte-identical, not merely close
+
+
+def test_capacity_sweep_human_output(trace_path, capsys):
+    rc = cli.main(["capacity", "sweep", "--trace", trace_path]
+                  + _SWEEP_ARGS)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "min-chip plan" in out
+    assert "ATTAINS" in out and "misses SLO" in out
+
+
+def test_capacity_sweep_unattainable_exits_1(trace_path, capsys):
+    rc = cli.main(["capacity", "sweep", "--trace", trace_path,
+                   "--model", "llama3.1-8b", "--ladder", "1,2",
+                   "--slo-ttft-p99", "0.001", "--slo-tpot-p99", "0.001",
+                   "--json"])
+    records = _records(capsys)
+    assert rc == 1
+    assert records[-1]["plan"] is None
+
+
+def test_capacity_sweep_bad_inputs_exit_2(trace_path, capsys):
+    assert cli.main(["capacity", "sweep", "--trace", "/nonexistent.jsonl",
+                     "--model", "llama3.1-8b"]) == 2
+    capsys.readouterr()
+    assert cli.main(["capacity", "sweep", "--trace", trace_path,
+                     "--model", "llama3.1-8b", "--ladder", "4,2,1"]) == 2
+    assert "ascending" in capsys.readouterr().err
+
+
+def test_capacity_plan_json_schema_v4_report(trace_path, capsys, tmp_path):
+    saved = str(tmp_path / "report.json")
+    rc = cli.main(["capacity", "plan", "--model", "llama3.1-8b",
+                   "--isl", "256", "--osl", "64", "--ttft", "2000",
+                   "--min-speed", "10", "--chips", "8", "--dtype", "fp8",
+                   "--modes", "aggregated", "--trace", trace_path,
+                   "--ladder", "1,2,4", "--top-k", "2",
+                   "--slo-ttft-p99", "400", "--slo-tpot-p99", "50",
+                   "--save-report", saved, "--json"])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert report["schema_version"] == 4
+    cap = report["capacity"]
+    assert cap["plan"]["attained"] is True
+    assert cap["plan"]["total_chips"] is not None
+    assert len(cap["candidates"]) >= 1
+    assert json.load(open(saved))["capacity"] == cap
+
+
+def test_capacity_plan_human_output(trace_path, capsys):
+    rc = cli.main(["capacity", "plan", "--model", "llama3.1-8b",
+                   "--isl", "256", "--osl", "64", "--ttft", "2000",
+                   "--min-speed", "10", "--chips", "8", "--dtype", "fp8",
+                   "--modes", "aggregated", "--trace", trace_path,
+                   "--slo-ttft-p99", "400", "--slo-tpot-p99", "50"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "capacity plan" in out
+    assert "ladder" in out

@@ -154,3 +154,29 @@ def test_legacy_shim_matches_subcommand_with_new_flags(capsys):
     assert "deprecated" in captured.err
     assert rc_old == rc_new == 0
     assert _normalize_timing(captured.out) == _normalize_timing(out_new)
+
+
+# ---------------------------------------------------------------------------
+# help text stays honest about replay semantics
+# ---------------------------------------------------------------------------
+
+def _help_text(argv, capsys):
+    with pytest.raises(SystemExit) as exc:
+        cli.main(argv)
+    assert exc.value.code == 0
+    # undo argparse's line wrapping so assertions survive reflowing
+    return re.sub(r"\s+", " ", capsys.readouterr().out)
+
+
+def test_search_help_documents_replay_semantics(capsys):
+    """`search --trace` replays open-loop (queueing counts into TTFT) and
+    `--replay-top-k` skips disaggregated composites — the help must say
+    so rather than drift from the implementation."""
+    text = _help_text(["search", "--help"], capsys)
+    assert "queueing delay counts into TTFT" in text
+    assert "disaggregated composites are skipped" in text
+
+
+def test_workload_replay_help_documents_queueing_ttft(capsys):
+    text = _help_text(["workload", "--help"], capsys)
+    assert "queueing delay counts" in text

@@ -49,9 +49,9 @@ def evaluated():
 # the v3 workload_eval section
 # ---------------------------------------------------------------------------
 
-def test_schema_version_is_3():
-    assert SCHEMA_VERSION == 3
-    assert set(SUPPORTED_SCHEMA_VERSIONS) == {1, 2, 3}
+def test_schema_versions_supported():
+    assert SCHEMA_VERSION == 4
+    assert set(SUPPORTED_SCHEMA_VERSIONS) == {1, 2, 3, 4}
 
 
 def test_workload_eval_section_structure(evaluated):
@@ -82,7 +82,7 @@ def test_workload_eval_section_structure(evaluated):
 
 def test_v3_roundtrip_preserves_workload_eval(evaluated):
     blob = evaluated.to_json()
-    assert json.loads(blob)["schema_version"] == 3
+    assert json.loads(blob)["schema_version"] == SCHEMA_VERSION
     back = SearchReport.from_json(blob)
     assert back == evaluated
     assert back.workload_eval == evaluated.workload_eval
@@ -167,8 +167,9 @@ def test_v2_golden_fixture_keeps_v2_sections():
     assert rep.fingerprint == payload["database"]
     assert rep.early_exit == payload["search"]["early_exit"]
     assert rep.early_exit is not None        # fixture recorded an early exit
-    # and it re-serializes as v3 with workload_eval defaulting to null
+    # and it re-serializes as the current version with workload_eval
+    # defaulting to null
     d = rep.to_dict()
-    assert d["schema_version"] == 3
+    assert d["schema_version"] == SCHEMA_VERSION
     assert d["workload_eval"] is None
     assert SearchReport.from_json(rep.to_json()) == rep

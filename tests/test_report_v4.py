@@ -1,0 +1,150 @@
+"""SearchReport schema v4: the ``capacity`` section round-trips, the new
+v3 golden fixture migrates losslessly — its ``workload_eval`` section
+byte-for-byte — and every older golden still loads."""
+import json
+import os
+
+import pytest
+
+from repro.api import Configurator, SCHEMA_VERSION, SearchReport
+from repro.capacity import CAPACITY_SCHEMA_VERSION
+from repro.workloads import (ArrivalSpec, LengthSpec, SLOSpec, TenantSpec,
+                             TraceSpec, generate_trace)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+V3_FIXTURE = os.path.join(FIXTURES, "search_report_v3.json")
+
+_SLO = SLOSpec(ttft_p99_ms=400, tpot_p99_ms=50)
+
+
+def _configurator():
+    return (Configurator.for_model("llama3.1-8b")
+            .traffic(isl=256, osl=64)
+            .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+            .cluster(chips=8).backend("repro-jax").dtype("fp8")
+            .modes("aggregated"))
+
+
+def _trace(seed=7):
+    return generate_trace(TraceSpec(
+        n_requests=60,
+        arrivals=ArrivalSpec(kind="bursty", rate_rps=60.0, burst_factor=4.0),
+        tenants=(TenantSpec(name="chat", weight=0.7, priority=1,
+                            lengths=LengthSpec(kind="lognormal",
+                                               isl=256, osl=64)),
+                 TenantSpec(name="batch", weight=0.3,
+                            lengths=LengthSpec(kind="lognormal",
+                                               isl=512, osl=96)))),
+        seed=seed)
+
+
+@pytest.fixture(scope="module")
+def planned():
+    return _configurator().plan_capacity(_trace(), _SLO,
+                                         ladder=(1, 2, 4), top_k=2)
+
+
+# ---------------------------------------------------------------------------
+# the v4 capacity section
+# ---------------------------------------------------------------------------
+
+def test_capacity_section_structure(planned):
+    cap = planned.capacity
+    assert cap is not None
+    assert cap["schema_version"] == CAPACITY_SCHEMA_VERSION
+    assert set(cap) >= {"trace", "slo", "routing", "attain_target",
+                        "ladder", "database", "rungs", "plan",
+                        "candidates", "skipped"}
+    for rec in cap["rungs"]:
+        assert set(rec) == {"replicas", "candidate_rank", "deployment",
+                            "total_chips", "pruned", "attains", "metrics"}
+        if rec["pruned"] is None:
+            m = rec["metrics"]
+            assert m["replicas"] == rec["replicas"]
+            assert len(m["per_replica"]) == rec["replicas"]
+            assert set(m["imbalance"]) == {"routed_max_over_mean",
+                                           "routed_cv",
+                                           "tokens_max_over_mean",
+                                           "tokens_cv"}
+    # candidate_rank indexes into the candidates metadata
+    for rec in cap["rungs"]:
+        assert 0 <= rec["candidate_rank"] < len(cap["candidates"])
+
+
+def test_v4_roundtrip_preserves_capacity(planned):
+    blob = planned.to_json()
+    assert json.loads(blob)["schema_version"] == 4
+    back = SearchReport.from_json(blob)
+    assert back == planned
+    assert back.capacity == planned.capacity
+    assert back.to_json() == blob            # byte-stable second hop
+
+
+def test_summary_mentions_capacity_plan(planned):
+    text = planned.summary()
+    assert "capacity plan" in text
+    assert planned.capacity["trace"]["digest"] in text
+
+
+def test_plan_capacity_composes_with_workload_eval(planned):
+    """capacity (v4) and workload_eval (v3) coexist in one report."""
+    cfg = _configurator()
+    report = cfg.evaluate_frontier(_trace(), _SLO, top_k=2)
+    report = cfg.plan_capacity(_trace(), _SLO,
+                               ladder=(1, 2), report=report)
+    assert report.workload_eval is not None
+    assert report.capacity is not None
+    back = SearchReport.from_json(report.to_json())
+    assert back.workload_eval == report.workload_eval
+    assert back.capacity == report.capacity
+
+
+# ---------------------------------------------------------------------------
+# golden fixture: v3 migrates losslessly, workload_eval byte-for-byte
+# ---------------------------------------------------------------------------
+
+def test_v3_golden_fixture_migrates_losslessly():
+    with open(V3_FIXTURE) as f:
+        payload = json.load(f)
+    assert payload["schema_version"] == 3
+    rep = SearchReport.load(V3_FIXTURE)
+    assert rep.schema_version == SCHEMA_VERSION
+    assert rep.n_candidates == payload["search"]["n_candidates"]
+    assert rep.elapsed_s == payload["search"]["elapsed_s"]
+    assert rep.frontier_indices == payload["frontier"]
+    assert rep.best_index == payload["best"]
+    assert rep.fingerprint == payload["database"]
+    assert len(rep.projections) == len(payload["projections"])
+    for proj, raw in zip(rep.projections, payload["projections"]):
+        assert proj.tokens_per_s_per_chip == raw["tokens_per_s_per_chip"]
+        assert proj.config == raw["config"]
+    # v3 never carried a capacity section: it defaults to None
+    assert rep.capacity is None
+
+
+def test_v3_golden_migration_preserves_workload_eval_bytes():
+    """The v3 fixture's workload_eval must survive the v3→v4 migration
+    byte-for-byte: identical JSON serialization, not merely equal-ish."""
+    with open(V3_FIXTURE) as f:
+        payload = json.load(f)
+    assert payload["workload_eval"] is not None
+    rep = SearchReport.load(V3_FIXTURE)
+    assert rep.workload_eval == payload["workload_eval"]
+    reserialized = rep.to_dict()
+    assert json.dumps(reserialized["workload_eval"], sort_keys=True) \
+        == json.dumps(payload["workload_eval"], sort_keys=True)
+    # and the whole report keeps round-tripping after migration
+    again = SearchReport.from_json(rep.to_json())
+    assert again == rep
+
+
+def test_all_golden_fixtures_still_load():
+    for name, version in (("search_report_v1.json", 1),
+                          ("search_report_v2.json", 2),
+                          ("search_report_v3.json", 3)):
+        path = os.path.join(FIXTURES, name)
+        with open(path) as f:
+            assert json.load(f)["schema_version"] == version
+        rep = SearchReport.load(path)
+        assert rep.schema_version == SCHEMA_VERSION
+        assert rep.capacity is None

@@ -4,6 +4,7 @@ import json
 
 import pytest
 
+from repro.api import SCHEMA_VERSION
 from repro.core import cli
 from repro.workloads import WorkloadTrace
 
@@ -112,7 +113,7 @@ def test_search_with_trace_rerank(trace_path, capsys):
                    "--slo-tpot-p99", "60", "--replay-top-k", "2", "--json"])
     assert rc == 0
     report = json.loads(capsys.readouterr().out)
-    assert report["schema_version"] == 3
+    assert report["schema_version"] == SCHEMA_VERSION
     we = report["workload_eval"]
     assert we is not None
     assert we["top_k"] == 2
@@ -131,7 +132,7 @@ def test_search_without_trace_has_no_workload_eval(capsys):
                    "--json"])
     assert rc == 0
     report = json.loads(capsys.readouterr().out)
-    assert report["schema_version"] == 3
+    assert report["schema_version"] == SCHEMA_VERSION
     assert report["workload_eval"] is None
 
 

@@ -297,3 +297,127 @@ def test_high_priority_tenant_gets_better_ttft():
     hi = [ttft for ten, ttft, _ in m.per_request if ten == "hi"]
     lo = [ttft for ten, ttft, _ in m.per_request if ten == "lo"]
     assert max(hi) < min(lo)
+
+
+# ---------------------------------------------------------------------------
+# degenerate traces: explicit zeroed metrics, never NaN or masked division
+# ---------------------------------------------------------------------------
+
+def _assert_finite_replay(m):
+    d = m.to_dict()
+    json.dumps(d)
+    for axis in ("ttft_ms", "tpot_ms"):
+        for q, v in d[axis].items():
+            assert math.isfinite(v), (axis, q, v)
+    assert math.isfinite(d["throughput_tok_s"])
+    assert math.isfinite(d["queue_depth_mean"])
+    assert math.isfinite(d["slo_attainment"])
+    assert math.isfinite(d["goodput_tok_s"])
+
+
+def test_replay_empty_trace_returns_explicit_zeros():
+    m = _sim(max_batch=2, max_num_tokens=64).replay(
+        WorkloadTrace(requests=()), slo=SLOSpec())
+    assert m.n_requests == 0 and m.completed == 0 and m.rejected == 0
+    assert m.steps == 0 and m.duration_s == 0.0
+    assert m.ttft_ms == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert m.tpot_ms == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert m.throughput_tok_s == 0.0
+    assert m.queue_depth_mean == 0.0 and m.queue_depth_max == 0
+    assert m.slo_attainment == 0.0 and m.goodput_tok_s == 0.0
+    assert m.per_request == []
+    _assert_finite_replay(m)
+
+
+def test_replay_all_rejected_trace_returns_explicit_zeros():
+    """max_queue=0 bounces every request: no steps ever execute, yet the
+    metrics must stay finite and the rejections count as SLO misses."""
+    trace = constant_trace(isl=32, osl=8, n_requests=10, rate_rps=1e6)
+    m = _sim(max_batch=1, max_num_tokens=64, max_queue=0).replay(
+        trace, slo=SLOSpec(ttft_p99_ms=1e9, tpot_p99_ms=1e9))
+    assert m.rejected == 10 and m.completed == 0 and m.unfinished == 0
+    assert m.steps == 0
+    assert m.ttft_ms == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert m.slo_attainment == 0.0 and m.goodput_tok_s == 0.0
+    _assert_finite_replay(m)
+
+
+def test_replay_single_token_outputs_zero_tpot_percentiles():
+    """osl==1 requests finish on prefill and carry no decode interval:
+    the TPOT sample set is empty and must read as explicit zeros."""
+    trace = constant_trace(isl=16, osl=1, n_requests=4, rate_rps=10.0)
+    m = _sim(max_batch=4, max_num_tokens=64).replay(trace, slo=SLOSpec())
+    assert m.completed == 4
+    assert m.tpot_ms == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert m.slo_attainment == 1.0          # None tpot meets vacuously
+    _assert_finite_replay(m)
+
+
+# ---------------------------------------------------------------------------
+# frontier replay: the skipped (disagg composite) path
+# ---------------------------------------------------------------------------
+
+def _aggregated_projection(describe="TP1 b4", tps=100.0):
+    from repro.core.config import Projection
+    return Projection(
+        ttft_ms=50.0, tpot_ms=10.0, tokens_per_s_user=100.0,
+        tokens_per_s_per_chip=tps, chips=1, batch_size=4,
+        mode="aggregated",
+        config={"describe": describe,
+                "parallel": {"tp": 1, "pp": 1, "ep": 1, "dp": 1}})
+
+
+def _disagg_projection(tps=500.0):
+    from repro.core.config import Projection
+    return Projection(
+        ttft_ms=40.0, tpot_ms=8.0, tokens_per_s_user=125.0,
+        tokens_per_s_per_chip=tps, chips=4, batch_size=16,
+        mode="disaggregated",
+        config={"describe": "1P(TP2 b2)1D(TP2 b16)",
+                "prefill": {}, "decode": {}})
+
+
+def test_candidate_from_projection_none_branches():
+    from repro.core.config import Projection
+    from repro.workloads import candidate_from_projection
+    # disaggregated composites are not single-engine deployments
+    assert candidate_from_projection(_disagg_projection()) is None
+    # nor is a projection whose config never carried a parallelism block
+    bare = Projection(ttft_ms=1.0, tpot_ms=1.0, tokens_per_s_user=1.0,
+                      tokens_per_s_per_chip=1.0, chips=1, batch_size=1,
+                      mode="aggregated", config={})
+    assert candidate_from_projection(bare) is None
+    # while a replayable aggregated projection rebuilds its candidate
+    cand = candidate_from_projection(_aggregated_projection())
+    assert cand is not None and cand.parallel.tp == 1
+
+
+def test_replay_frontier_records_disagg_composite_as_skipped():
+    """A disagg composite among the leaders must surface as a skipped
+    entry — excluded from the goodput ranking, not silently dropped."""
+    from repro.core.config import (ClusterSpec, SLA, WorkloadDescriptor)
+    from repro.core.task_runner import TaskRunner
+    from repro.workloads import replay_frontier
+    w = WorkloadDescriptor(
+        model="llama3.1-8b", isl=64, osl=16,
+        sla=SLA(ttft_ms=1e6, min_tokens_per_s_user=None),
+        cluster=ClusterSpec(n_chips=4), modes=("aggregated",), dtype="fp8")
+    runner = TaskRunner(w)
+    projections = [_disagg_projection(tps=500.0),
+                   _aggregated_projection(tps=100.0)]
+    trace = constant_trace(isl=64, osl=16, n_requests=6, rate_rps=10.0)
+    section = replay_frontier(runner, projections, trace,
+                              SLOSpec(ttft_p99_ms=1e9, tpot_p99_ms=1e9),
+                              top_k=2)
+    by_index = {c["index"]: c for c in section["candidates"]}
+    skipped = by_index[0]
+    assert skipped["mode"] == "disaggregated"
+    assert skipped["replay"] is None
+    assert "not replayable" in skipped["skipped"]
+    replayed = by_index[1]
+    assert replayed["skipped"] is None
+    assert replayed["replay"]["completed"] == 6
+    # rankings only cover replayable candidates
+    assert section["ranking"] == [1]
+    assert section["analytical_ranking"] == [1]
+    assert section["best_index"] == 1
