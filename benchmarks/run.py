@@ -16,10 +16,10 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks import (ablation_sol, capacity_ladder, cpu_silicon_fidelity,
-                        engine_calibration, fig1_pareto, fig5_powerlaw,
-                        fig6_fidelity, fig7_disagg_fidelity, roofline,
-                        spec_decode, table1_search_efficiency,
+from benchmarks import (ablation_sol, autoscale_diurnal, capacity_ladder,
+                        cpu_silicon_fidelity, engine_calibration, fig1_pareto,
+                        fig5_powerlaw, fig6_fidelity, fig7_disagg_fidelity,
+                        roofline, spec_decode, table1_search_efficiency,
                         table2_case_study, workload_goodput)
 
 BENCHES = [
@@ -53,6 +53,9 @@ BENCHES = [
                f"/{r.get('n_points', 0)}"),
     ("capacity_ladder", capacity_ladder.run,
      lambda r: f"min_chips={r.get('min_chips')}"
+               f";n_points={r.get('n_points', 0)}"),
+    ("autoscale_diurnal", autoscale_diurnal.run,
+     lambda r: f"best_saved_pct={r.get('best_saved_pct')}"
                f";n_points={r.get('n_points', 0)}"),
 ]
 

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 CI: fast suite, slow suite, CLI JSON smoke test, streaming smoke,
-# calibration smoke, workload-trace smoke.
+# calibration smoke, workload-trace smoke, capacity smoke, autoscale smoke.
 # Run from the repo root: bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -22,7 +22,7 @@ report = json.load(sys.stdin)
 version = report["schema_version"]
 n_projections = len(report["projections"])
 best_index = report["best"]
-assert version == 4, version
+assert version == 5, version
 assert n_projections > 0, "search produced no projections"
 assert report["database"]["platform"] == "tpu_v5e", report["database"]
 assert len(report["memory"]["per_candidate_bytes_per_chip"]) \
@@ -185,5 +185,53 @@ print(f"ok: min-chip {plan['deployment']['describe']} = "
       f"deterministic across runs")
 PY
 rm -rf "$cap_dir"
+
+echo "=== smoke: autoscale compare --json saves chips while holding the SLO ==="
+# Seeded diurnal trace: the autoscaled run must spend fewer chip-seconds
+# than the static min-chip plan, hold the attainment target, and emit
+# byte-identical output across two runs.
+asc_dir=$(mktemp -d)
+PYTHONPATH=src python -m repro.core.cli workload generate \
+    --arrivals diurnal --rate 1.2 --period 60 --amplitude 0.9 --n 250 \
+    --lengths fixed --isl 512 --osl 128 --seed 11 \
+    --out "$asc_dir/trace.jsonl" > /dev/null
+for i in 1 2; do
+    PYTHONPATH=src python -m repro.core.cli autoscale compare \
+        --trace "$asc_dir/trace.jsonl" --model qwen3-32b \
+        --tp 1 --batch 16 --ladder 1,2,4 \
+        --policy target_queue_depth --target-depth 6 --max-replicas 2 \
+        --up-cooldown 2 --down-cooldown 8 --window 5 \
+        --tick 1 --cold-start 2 \
+        --slo-ttft-p99 2500 --slo-tpot-p99 100 --json \
+      > "$asc_dir/compare$i.jsonl"
+done
+cmp "$asc_dir/compare1.jsonl" "$asc_dir/compare2.jsonl" \
+    || { echo "autoscale compare output is not deterministic" >&2; exit 1; }
+PYTHONPATH=src python - "$asc_dir/compare1.jsonl" <<'PY'
+import json
+import math
+import sys
+
+records = [json.loads(line) for line in open(sys.argv[1])]
+summary = records[-1]
+assert summary["type"] == "summary", summary["type"]
+static = summary["static"]
+assert static is not None, "expected an attaining static plan"
+run = summary["run"]
+assert math.isfinite(run["chip_seconds"]), run["chip_seconds"]
+assert run["chip_seconds"] < static["chip_seconds"], \
+    (run["chip_seconds"], static["chip_seconds"])
+savings = summary["savings"]
+assert savings["holds_attainment"], savings
+samples = [r for r in records[:-1] if r["type"] == "sample"]
+assert samples, "expected timeline sample records"
+assert len(samples) == run["timeline"]["n_samples"], \
+    (len(samples), run["timeline"]["n_samples"])
+print(f"ok: {run['chip_seconds']:.0f} chip-s autoscaled vs "
+      f"{static['chip_seconds']:.0f} static "
+      f"({savings['chip_seconds_pct']:.1f}% saved), attainment held, "
+      f"deterministic across runs")
+PY
+rm -rf "$asc_dir"
 
 echo "=== ci passed ==="

@@ -79,6 +79,19 @@ recorded in the schema-v4 ``capacity`` section::
                                ladder=(1, 2, 4),
                                routing="least_outstanding")
     report.capacity["plan"]             # cheapest attaining deployment
+
+Reactive autoscaling (``repro.autoscale``, docs/autoscale.md): replay
+the trace under a tick-driven control loop that resizes the fleet —
+cold starts, drain-before-removal, asymmetric cooldowns — and compare
+its chip-seconds against the static plan, recorded in the schema-v5
+``autoscale`` section::
+
+    from repro.autoscale import TargetQueueDepth
+
+    report = cfg.autoscale("trace.jsonl",
+                           SLOSpec(ttft_p99_ms=2000, tpot_p99_ms=80),
+                           policy=TargetQueueDepth(max_replicas=4))
+    report.autoscale["savings"]         # chip-seconds vs the static plan
 """
 from repro.api.configurator import Comparison, Configurator, StreamingSearch
 from repro.api.policies import (SearchEvent, callback, deadline_s,

@@ -410,6 +410,88 @@ class Configurator:
         report.capacity = section
         return report
 
+    def autoscale(self, trace, slo, policy=None,
+                  ladder: Sequence[int] = (1, 2, 4),
+                  routing: str = "round_robin",
+                  attain_target: float = 0.95,
+                  tick_s: float = 1.0, cold_start_s: float = 5.0,
+                  initial_replicas: Optional[int] = None,
+                  top_k: int = 3,
+                  report: Optional[SearchReport] = None,
+                  max_steps: int = 200_000) -> SearchReport:
+        """Ride the load curve: run a reactive autoscaling control loop
+        over ``trace`` next to the static min-chip plan and record both
+        cost views in the report's schema-v5 ``autoscale`` section.
+
+        ``trace``/``slo`` accept the same forms as
+        :meth:`evaluate_frontier`.  ``policy`` is an
+        :class:`~repro.autoscale.AutoscalerPolicy` (default:
+        ``TargetQueueDepth()``).  The best replayable candidate among
+        the analytical top-``top_k`` is used for both sides (its
+        disaggregated betters, if any, are recorded as skipped); the
+        autoscaler starts at the static plan's replica count and earns
+        its savings by scaling down through the troughs.  Without
+        ``report``, runs :meth:`search` first on this instance's
+        memoized PerfDatabase/session.  Returns the report with
+        ``autoscale`` filled: the policy and tick/cold-start model, the
+        static baseline, the autoscaled run (chip-seconds, peak/mean
+        replicas, scaling-event log, timeline digest), and the savings.
+        """
+        import os
+        from repro.autoscale import TargetQueueDepth, build_autoscale_section
+        from repro.workloads import (DISAGG_SKIP_REASON, SLOSpec,
+                                     WorkloadTrace, analytical_leaders,
+                                     candidate_from_projection)
+        if isinstance(trace, (str, bytes, os.PathLike)):
+            trace = WorkloadTrace.load(trace)
+        if isinstance(slo, dict):
+            slo = SLOSpec.from_dict(slo)
+        if top_k < 1:                      # fail before the search runs
+            raise ValueError(f"top_k must be >= 1, got {top_k}")
+        if policy is None:
+            policy = TargetQueueDepth()
+        if report is None:
+            report = self.search()
+        w = report.workload
+        try:
+            own = self.workload()
+        except ValueError:
+            own = None
+        runner = (TaskRunner(w, session=self._session_for(w))
+                  if own == w else TaskRunner(w))
+        leaders = analytical_leaders(report.projections, w.sla, top_k)
+        index_of = {id(p): i for i, p in enumerate(report.projections)}
+        chosen = cand = None
+        skipped = []
+        for rank, p in enumerate(leaders):
+            c = candidate_from_projection(p)
+            if c is None:
+                skipped.append({
+                    "index": index_of[id(p)], "analytical_rank": rank,
+                    "mode": p.mode, "describe": p.config.get("describe", ""),
+                    "reason": DISAGG_SKIP_REASON})
+                continue
+            chosen, cand = p, c
+            break
+        if cand is None:
+            raise ValueError(
+                "no replayable candidate among the analytical top-"
+                f"{top_k} (all disaggregated composites); raise top_k or "
+                "search with modes('aggregated')")
+        section, _ = build_autoscale_section(
+            runner, cand, trace, slo, policy, ladder=ladder,
+            routing=routing, attain_target=attain_target, tick_s=tick_s,
+            cold_start_s=cold_start_s, initial_replicas=initial_replicas,
+            max_steps=max_steps)
+        section["candidate"] = {
+            "index": index_of[id(chosen)],
+            "mode": chosen.mode,
+            "describe": chosen.config.get("describe", ""),
+            "tokens_per_s_per_chip": chosen.tokens_per_s_per_chip}
+        section["skipped"] = skipped
+        report.autoscale = section
+        return report
+
     # -- internals -----------------------------------------------------------
     def _variant(self, overrides: Dict) -> "Configurator":
         c = copy.copy(self)          # shares self._dbs on purpose

@@ -29,7 +29,16 @@ routing policy, every evaluated (replica-count × candidate) rung with
 its aggregate cluster replay metrics and per-replica load-imbalance
 stats, and the cheapest deployment whose goodput attains the SLO.
 
-``from_json`` still accepts v1, v2 and v3 payloads and migrates them
+Schema v5 adds the elasticity axis: an ``autoscale`` section (written
+by ``Configurator.autoscale`` /
+``repro.autoscale.build_autoscale_section``) records a reactive
+autoscaling run next to the static min-chip baseline on the same trace
+— the policy and its knobs, the tick/cold-start model, both cost views
+(chip-seconds, peak/mean replicas, the scaling-event log), the
+timeline-artifact digest, and the chip-seconds saved while holding SLO
+attainment.
+
+``from_json`` still accepts v1 through v4 payloads and migrates them
 losslessly (sections a version never carried default to empty/None).
 """
 from __future__ import annotations
@@ -47,9 +56,10 @@ from repro.core.generator import LaunchConfig
 #: v1: initial layout.  v2: + database fingerprint, memory footprints,
 #: early-exit record.  v3: + workload section (trace replay / SLO
 #: re-ranking).  v4: + capacity section (multi-replica ladder sweep /
-#: min-chip plan).  ``from_json`` reads every version listed here.
-SCHEMA_VERSION = 4
-SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4)
+#: min-chip plan).  v5: + autoscale section (reactive autoscaling vs
+#: the static plan).  ``from_json`` reads every version listed here.
+SCHEMA_VERSION = 5
+SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5)
 
 
 def workload_to_dict(w: WorkloadDescriptor) -> Dict:
@@ -104,6 +114,7 @@ class SearchReport:
     early_exit: Optional[Dict] = None      # streaming policy stop record (v2)
     workload_eval: Optional[Dict] = None   # trace replay / SLO re-rank (v3)
     capacity: Optional[Dict] = None        # replica-ladder min-chip plan (v4)
+    autoscale: Optional[Dict] = None       # reactive autoscale vs static (v5)
     schema_version: int = SCHEMA_VERSION
 
     # -- construction --------------------------------------------------------
@@ -177,6 +188,23 @@ class SearchReport:
                 lines.append(
                     f"capacity plan (trace {cap['trace']['digest']}): no "
                     f"deployment on ladder {cap['ladder']} attains the SLO")
+        asc = self.autoscale
+        if asc:
+            run = asc["run"]
+            m = run["metrics"]
+            attain = (f"{100 * m['slo_attainment']:.1f}%"
+                      if m.get("slo_attainment") is not None else "n/a")
+            line = (f"autoscale [{asc['policy']['name']}] (trace "
+                    f"{asc['trace']['digest']}): "
+                    f"{run['chip_seconds']:.1f} chip-s, replicas mean "
+                    f"{run['mean_replicas']:.2f} peak "
+                    f"{run['peak_replicas']}, attainment {attain}")
+            sv = asc.get("savings")
+            if sv is not None:
+                line += (f" — saves {sv['chip_seconds']:.1f} chip-s "
+                         f"({sv['chip_seconds_pct']:.1f}%) vs the "
+                         f"static plan")
+            lines.append(line)
         return "\n".join(lines)
 
     # -- serialization -------------------------------------------------------
@@ -206,6 +234,7 @@ class SearchReport:
             "speculative": self.speculative,
             "workload_eval": self.workload_eval,
             "capacity": self.capacity,
+            "autoscale": self.autoscale,
         }
 
     def to_json(self, indent: Optional[int] = 2) -> str:
@@ -247,6 +276,7 @@ class SearchReport:
                         if version >= 2 else None),
             workload_eval=d.get("workload_eval") if version >= 3 else None,
             capacity=d.get("capacity") if version >= 4 else None,
+            autoscale=d.get("autoscale") if version >= 5 else None,
             schema_version=SCHEMA_VERSION)
 
     @classmethod

@@ -1,0 +1,59 @@
+"""repro.autoscale — reactive autoscaling over the cluster simulator.
+
+``repro.capacity`` (PR 5) sizes a *static* fleet for a whole trace;
+production fleets ride the load curve.  This package closes that gap
+with a tick-driven control loop on top of the same per-replica engines:
+
+- :mod:`~repro.autoscale.timeline` — :class:`ClusterTimeline`: a
+  versioned, Date-free, JSONL-serializable time series of per-replica
+  and aggregate cluster metrics (QPS, queue depth, outstanding work,
+  utilization, active replicas, windowed SLO attainment), sampled on a
+  fixed tick by :class:`TimelineRecorder` through the ``on_tick``
+  emission hook of ``ClusterSimulator.replay`` or the autoscale loop.
+- :mod:`~repro.autoscale.policy` — the :class:`AutoscalerPolicy`
+  protocol plus concrete policies (``target_queue_depth``,
+  ``slo_attainment``, ``static``) with scale-step sizes, min/max
+  replica bounds, and asymmetric up/down cooldowns.
+- :mod:`~repro.autoscale.simulator` — :class:`AutoscaleSimulator`:
+  evaluates the policy each tick against the rolling window, spawns
+  replicas with modeled cold start (route-eligible only after
+  ``cold_start_s``), drains before removal, and reports
+  :class:`AutoscaleReport` — chip-seconds, peak/mean replicas, the
+  scaling-event log, and the familiar cluster replay metrics.
+- :mod:`~repro.autoscale.report` — :func:`build_autoscale_section`:
+  the static ``plan_min_chips`` baseline and the autoscaled run on the
+  same trace, folded into the SearchReport schema-v5 ``autoscale``
+  section.
+
+Canonical flow::
+
+    from repro.autoscale import TargetQueueDepth
+    from repro.workloads import SLOSpec
+
+    report = cfg.autoscale("trace.jsonl",
+                           SLOSpec(ttft_p99_ms=2000, tpot_p99_ms=100),
+                           policy=TargetQueueDepth(max_replicas=4))
+    report.autoscale["savings"]      # chip-seconds vs the static plan
+
+CLI: ``python -m repro.core.cli autoscale run|compare``
+(docs/autoscale.md).
+"""
+from repro.autoscale.policy import (AUTOSCALER_POLICIES, AutoscalerPolicy,
+                                    SLOAttainmentWindow, StaticPolicy,
+                                    TargetQueueDepth, get_policy)
+from repro.autoscale.report import (AUTOSCALE_SCHEMA_VERSION,
+                                    build_autoscale_section)
+from repro.autoscale.simulator import (AutoscaleReport, AutoscaleSimulator,
+                                       ScalableReplicaEngine)
+from repro.autoscale.timeline import (ClusterTimeline, ReplicaSample,
+                                      TIMELINE_SCHEMA_VERSION,
+                                      TimelineRecorder, TimelineSample)
+
+__all__ = [
+    "AUTOSCALER_POLICIES", "AUTOSCALE_SCHEMA_VERSION", "AutoscaleReport",
+    "AutoscaleSimulator", "AutoscalerPolicy", "ClusterTimeline",
+    "ReplicaSample", "SLOAttainmentWindow", "ScalableReplicaEngine",
+    "StaticPolicy", "TIMELINE_SCHEMA_VERSION", "TargetQueueDepth",
+    "TimelineRecorder", "TimelineSample", "build_autoscale_section",
+    "get_policy",
+]

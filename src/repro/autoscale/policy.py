@@ -1,0 +1,181 @@
+"""Autoscaler policies: how many replicas the fleet *should* have.
+
+A policy looks at the rolling window of :class:`TimelineSample
+<repro.autoscale.timeline.TimelineSample>` records and returns a
+*desired* replica count plus a human-readable reason.  The control loop
+(:class:`~repro.autoscale.simulator.AutoscaleSimulator`) owns actuation:
+it clamps the desired count to ``[min_replicas, max_replicas]``, limits
+each move to ``scale_up_step``/``scale_down_step``, and enforces the
+asymmetric ``up_cooldown_s``/``down_cooldown_s`` — scaling up is
+typically allowed to react fast while scaling down waits out the noise
+(the Ray Serve autoscaler shape).
+
+Concrete policies:
+
+``target_queue_depth``
+    Proportional control on load: size the fleet so the window-mean
+    outstanding work per replica sits at ``target_depth`` (desired =
+    ceil(mean outstanding / target_depth)).  Reacts to queue growth
+    before the SLO is breached.
+``slo_attainment``
+    Feedback control on the objective itself: scale up while the
+    window's completion-weighted SLO attainment is below
+    ``attain_target``, scale down only when attainment holds *and* mean
+    utilization is below ``scale_down_util`` (attainment alone cannot
+    distinguish "healthy" from "overprovisioned").
+``static``
+    Never scales — the control-loop identity: an autoscaled run under
+    ``static`` reproduces ``ClusterSimulator.replay`` exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import ClassVar, Dict, Sequence, Tuple
+
+#: Every policy name :func:`get_policy` accepts.
+AUTOSCALER_POLICIES = ("target_queue_depth", "slo_attainment", "static")
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalerPolicy:
+    """Shared knobs + the ``desired_replicas`` protocol.
+
+    Subclasses implement :meth:`desired_replicas`; the bounds, step
+    sizes, and cooldowns declared here are enforced by the control
+    loop, not by the policy itself.
+    """
+    name: ClassVar[str] = "base"
+    min_replicas: int = 1
+    max_replicas: int = 8
+    scale_up_step: int = 1                 # max replicas added per move
+    scale_down_step: int = 1               # max replicas drained per move
+    up_cooldown_s: float = 5.0             # min gap between scale-ups
+    down_cooldown_s: float = 30.0          # min gap between scale-downs
+    window_s: float = 10.0                 # rolling evaluation window
+
+    def __post_init__(self):
+        if self.min_replicas < 1:
+            raise ValueError(f"min_replicas must be >= 1, got "
+                             f"{self.min_replicas}")
+        if self.max_replicas < self.min_replicas:
+            raise ValueError(
+                f"max_replicas ({self.max_replicas}) must be >= "
+                f"min_replicas ({self.min_replicas})")
+        if self.scale_up_step < 1 or self.scale_down_step < 1:
+            raise ValueError("scale steps must be >= 1")
+        if self.up_cooldown_s < 0 or self.down_cooldown_s < 0:
+            raise ValueError("cooldowns must be >= 0")
+        if self.window_s <= 0:
+            raise ValueError(f"window_s must be positive, got "
+                             f"{self.window_s}")
+
+    def desired_replicas(self, window: Sequence,
+                         provisioned: int) -> Tuple[int, str]:
+        """(desired replica count, reason) for the current window.
+
+        ``window`` is the rolling list of ``TimelineSample`` records
+        ending at the current tick; ``provisioned`` counts replicas
+        that are neither retired nor draining.
+        """
+        raise NotImplementedError
+
+    def to_dict(self) -> Dict:
+        return {"name": self.name, **dataclasses.asdict(self)}
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticPolicy(AutoscalerPolicy):
+    """Never scale: the fleet stays at its initial size."""
+    name: ClassVar[str] = "static"
+
+    def desired_replicas(self, window, provisioned):
+        return provisioned, "static fleet"
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetQueueDepth(AutoscalerPolicy):
+    """Hold window-mean outstanding work per replica at ``target_depth``."""
+    name: ClassVar[str] = "target_queue_depth"
+    target_depth: float = 4.0
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.target_depth <= 0:
+            raise ValueError(f"target_depth must be positive, got "
+                             f"{self.target_depth}")
+
+    def desired_replicas(self, window, provisioned):
+        if not window:
+            return provisioned, "no samples yet"
+        mean_out = sum(s.outstanding for s in window) / len(window)
+        desired = max(1, math.ceil(mean_out / self.target_depth))
+        return desired, (f"mean outstanding {mean_out:.1f} over "
+                         f"{len(window)} ticks / target "
+                         f"{self.target_depth:g} -> {desired}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOAttainmentWindow(AutoscalerPolicy):
+    """Scale on the objective: up while windowed attainment misses
+    ``attain_target``, down only when it holds and the fleet idles."""
+    name: ClassVar[str] = "slo_attainment"
+    attain_target: float = 0.95
+    scale_down_util: float = 0.5           # mean utilization floor
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not 0.0 < self.attain_target <= 1.0:
+            raise ValueError(f"attain_target must be in (0, 1], got "
+                             f"{self.attain_target}")
+        if not 0.0 <= self.scale_down_util <= 1.0:
+            raise ValueError(f"scale_down_util must be in [0, 1], got "
+                             f"{self.scale_down_util}")
+
+    def desired_replicas(self, window, provisioned):
+        if not window:
+            return provisioned, "no samples yet"
+        done = sum(s.completed for s in window
+                   if s.slo_window_attainment is not None)
+        met = sum(s.completed * s.slo_window_attainment for s in window
+                  if s.slo_window_attainment is not None)
+        util = sum(s.utilization for s in window) / len(window)
+        if done > 0:
+            attain = met / done
+            if attain < self.attain_target:
+                return provisioned + self.scale_up_step, (
+                    f"window attainment {attain:.2f} < target "
+                    f"{self.attain_target:g}")
+            if util < self.scale_down_util:
+                return provisioned - self.scale_down_step, (
+                    f"attainment {attain:.2f} holds, utilization "
+                    f"{util:.2f} < {self.scale_down_util:g}")
+            return provisioned, (f"attainment {attain:.2f} holds, "
+                                 f"utilization {util:.2f}")
+        if util < self.scale_down_util:
+            return provisioned - self.scale_down_step, (
+                f"no completions, utilization {util:.2f} < "
+                f"{self.scale_down_util:g}")
+        return provisioned, "no completions in window"
+
+
+_POLICIES: dict = {
+    "target_queue_depth": TargetQueueDepth,
+    "slo_attainment": SLOAttainmentWindow,
+    "static": StaticPolicy,
+}
+
+
+def get_policy(name: str, **overrides) -> AutoscalerPolicy:
+    """Instantiate a policy by name (:data:`AUTOSCALER_POLICIES`) with
+    field overrides — the CLI's policy factory."""
+    try:
+        cls = _POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown autoscaler policy {name!r}; valid "
+                         f"choices: {', '.join(AUTOSCALER_POLICIES)}") \
+            from None
+    try:
+        return cls(**overrides)
+    except TypeError as e:
+        raise ValueError(f"bad {name} policy parameters: {e}") from None

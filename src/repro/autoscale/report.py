@@ -1,0 +1,123 @@
+"""Autoscale-vs-static comparison: the SearchReport v5 ``autoscale``
+section.
+
+:func:`build_autoscale_section` runs both sides on the *same* trace,
+SLO, and memoized perf session: the static baseline is the cheapest
+attaining deployment from :func:`~repro.capacity.planner.plan_min_chips`
+(billed for its full chip count over the replay makespan), the dynamic
+side is an :class:`~repro.autoscale.simulator.AutoscaleSimulator` run
+starting from the static plan's replica count (so the comparison
+isolates the *policy*, not the starting size).  The section records
+both cost views plus the savings — the number the ROADMAP's reactive
+autoscaling item asks for: chip-seconds saved while holding SLO
+attainment.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.capacity.planner import (DEFAULT_ATTAIN_TARGET, plan_min_chips)
+from repro.workloads.slo import SLOSpec
+from repro.workloads.trace import WorkloadTrace
+
+from repro.autoscale.policy import AutoscalerPolicy
+from repro.autoscale.simulator import AutoscaleReport
+
+#: Autoscale sections written by :func:`build_autoscale_section`.
+AUTOSCALE_SCHEMA_VERSION = 1
+
+
+def _static_cost(section: Dict) -> Optional[Dict]:
+    """The baseline cost view from a capacity sweep section: the
+    attaining rung's chips × its replay makespan."""
+    plan = section["plan"]
+    if not plan["attained"]:
+        return None
+    rung = next(r for r in section["rungs"]
+                if r["pruned"] is None and r["attains"]
+                and r["total_chips"] == plan["total_chips"])
+    m = rung["metrics"]
+    return {
+        "deployment": plan["deployment"],
+        "total_chips": plan["total_chips"],
+        "duration_s": m["duration_s"],
+        "chip_seconds": plan["total_chips"] * m["duration_s"],
+        "slo_attainment": m["slo_attainment"],
+        "goodput_tok_s": m["goodput_tok_s"],
+        "truncated": m["truncated"],
+    }
+
+
+def build_autoscale_section(runner, candidate, trace: WorkloadTrace,
+                            slo: SLOSpec, policy: AutoscalerPolicy,
+                            ladder: Sequence[int] = (1, 2, 4),
+                            routing: str = "round_robin",
+                            attain_target: float = DEFAULT_ATTAIN_TARGET,
+                            tick_s: float = 1.0,
+                            cold_start_s: float = 5.0,
+                            initial_replicas: Optional[int] = None,
+                            max_steps: int = 200_000,
+                            priority_admission: bool = True,
+                            max_queue: int = 100_000
+                            ) -> Tuple[Dict, AutoscaleReport]:
+    """Run the static plan and the autoscaled replay side by side.
+
+    ``runner`` is a :class:`~repro.core.task_runner.TaskRunner` (both
+    simulators price through its memoized session).  Returns the
+    report-ready section dict plus the full :class:`AutoscaleReport`
+    (which carries the timeline the section only references by digest).
+
+    ``initial_replicas`` defaults to the static plan's replica count
+    when the plan attains (policy-bounds-clamped), else to the policy's
+    ``min_replicas`` — the autoscaler starts where the static planner
+    would deploy and earns its savings by riding the load curve down.
+    """
+    plan = plan_min_chips(
+        runner, [candidate], trace, slo, ladder=ladder, routing=routing,
+        attain_target=attain_target, max_steps=max_steps,
+        priority_admission=priority_admission, max_queue=max_queue)
+    static = _static_cost(plan.section)
+
+    if initial_replicas is None:
+        if plan.attained:
+            initial_replicas = max(policy.min_replicas,
+                                   min(policy.max_replicas,
+                                       plan.deployment.replicas))
+        else:
+            initial_replicas = policy.min_replicas
+    sim = runner.autoscale_simulator(
+        candidate, policy, routing=routing,
+        initial_replicas=initial_replicas, tick_s=tick_s,
+        cold_start_s=cold_start_s, priority_admission=priority_admission,
+        max_queue=max_queue)
+    run = sim.run(trace, slo=slo, max_steps=max_steps)
+
+    savings = None
+    if static is not None:
+        saved = static["chip_seconds"] - run.chip_seconds
+        savings = {
+            "chip_seconds": saved,
+            "chip_seconds_pct": (100.0 * saved / static["chip_seconds"]
+                                 if static["chip_seconds"] > 0 else 0.0),
+            "holds_attainment": (run.metrics.slo_attainment or 0.0)
+            >= attain_target,
+        }
+    return {
+        "schema_version": AUTOSCALE_SCHEMA_VERSION,
+        "trace": {"digest": trace.digest(),
+                  "n_requests": trace.n_requests,
+                  "duration_s": trace.duration_s,
+                  "tenants": trace.tenants,
+                  "meta": trace.meta},
+        "slo": slo.to_dict(),
+        "routing": routing,
+        "attain_target": attain_target,
+        "ladder": list(ladder),
+        "tick_s": tick_s,
+        "cold_start_s": cold_start_s,
+        "policy": policy.to_dict(),
+        "database": runner.session.db.fingerprint(),
+        "static": static,
+        "run": run.to_dict(),
+        "savings": savings,
+    }, run

@@ -1,0 +1,317 @@
+"""The autoscale control loop: a cluster replay that resizes itself.
+
+:class:`AutoscaleSimulator` replays a workload trace exactly like
+:class:`~repro.capacity.cluster.ClusterSimulator` — same per-replica
+engines, same routing policies, same shared ``run_iteration`` step body
+— but between arrivals it pauses at fixed tick boundaries to sample a
+:class:`~repro.autoscale.timeline.TimelineRecorder` and evaluate an
+:class:`~repro.autoscale.policy.AutoscalerPolicy` on the rolling
+window:
+
+- **Scale-up** spawns new replicas with a modeled cold start: a replica
+  pays for its chips from the spawn tick but only becomes
+  route-eligible once ``cold_start_s`` has elapsed.
+- **Scale-down** drains before removal: the youngest non-draining
+  replicas stop receiving traffic immediately but keep executing their
+  outstanding work; a draining replica is retired (and stops billing)
+  at the first tick where it sits empty.
+- Cooldowns are asymmetric and enforced here (not in the policy):
+  scale-ups and scale-downs each wait out their own cooldown clock.
+
+Under the ``static`` policy the loop provably degenerates to
+``ClusterSimulator.replay``: ticks advance engines *without* idle-clock
+jumps, so they execute exactly the iterations the plain replay would,
+and the aggregate metrics come out identical (the equivalence test in
+``tests/test_autoscale.py`` asserts field-for-field equality).
+
+The result object — :class:`AutoscaleReport` — carries the cost view
+(chip-seconds, peak/mean replicas, the scaling-event log), the same
+:class:`~repro.capacity.cluster.ClusterReplayMetrics` surface as a
+static replay, and the full :class:`ClusterTimeline` artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.capacity.cluster import ReplicaEngine, aggregate_cluster_metrics
+from repro.capacity.routing import ROUTING_POLICIES, get_router
+from repro.serving.scheduler import SchedulerConfig
+
+from repro.autoscale.policy import AutoscalerPolicy
+from repro.autoscale.timeline import ClusterTimeline, TimelineRecorder
+
+
+class ScalableReplicaEngine(ReplicaEngine):
+    """A replica engine with a lifecycle: spawn → (warm) → drain → retire."""
+
+    def __init__(self, idx: int, sched_cfg, latency_fn,
+                 spawned_at: float = 0.0, warm_at: float = 0.0):
+        super().__init__(idx, sched_cfg, latency_fn)
+        self.t = spawned_at
+        self.spawned_at = spawned_at
+        self.warm_at = warm_at            # route-eligible from here on
+        self.draining = False
+        self.retired_at: Optional[float] = None
+
+    def state(self, t: float) -> str:
+        if self.draining:
+            return "draining"
+        return "cold" if t < self.warm_at else "warm"
+
+
+@dataclasses.dataclass
+class AutoscaleReport:
+    """One autoscaled run: cost, scaling history, metrics, timeline."""
+    policy: Dict                           # policy.to_dict()
+    routing: str
+    tick_s: float
+    cold_start_s: float
+    chips_per_replica: int
+    initial_replicas: int
+    horizon_s: float                       # final tick (virtual seconds)
+    chip_seconds: float                    # sum over replica lifetimes
+    peak_replicas: int                     # max provisioned at any tick
+    mean_replicas: float                   # time-weighted over the horizon
+    n_scale_ups: int
+    n_scale_downs: int
+    #: scaling-event log: {"t_s", "action": scale_up | scale_down |
+    #: retire, ...} — spawn/drain events carry "from"/"to"/"reason",
+    #: retire events carry "replica"
+    events: List[Dict]
+    metrics: "ClusterReplayMetrics"        # noqa: F821 — same class as replay
+    timeline: ClusterTimeline
+
+    def to_dict(self, include_timeline: bool = False) -> Dict:
+        d = {
+            "policy": self.policy,
+            "routing": self.routing,
+            "tick_s": self.tick_s,
+            "cold_start_s": self.cold_start_s,
+            "chips_per_replica": self.chips_per_replica,
+            "initial_replicas": self.initial_replicas,
+            "horizon_s": self.horizon_s,
+            "chip_seconds": self.chip_seconds,
+            "peak_replicas": self.peak_replicas,
+            "mean_replicas": self.mean_replicas,
+            "n_scale_ups": self.n_scale_ups,
+            "n_scale_downs": self.n_scale_downs,
+            "events": self.events,
+            "metrics": self.metrics.to_dict(),
+            "timeline": {"digest": self.timeline.digest(),
+                         "tick_s": self.timeline.tick_s,
+                         "n_samples": self.timeline.n_samples},
+        }
+        if include_timeline:
+            d["timeline"]["samples"] = [s.to_dict()
+                                        for s in self.timeline.samples]
+        return d
+
+    def summary(self) -> str:
+        m = self.metrics
+        attain = ("" if m.slo_attainment is None
+                  else f" at {100 * m.slo_attainment:.1f}% attainment")
+        return (f"autoscale [{self.policy['name']}]: "
+                f"{self.chip_seconds:.1f} chip-s over "
+                f"{self.horizon_s:.1f}s (replicas mean "
+                f"{self.mean_replicas:.2f}, peak {self.peak_replicas}; "
+                f"{self.n_scale_ups} up / {self.n_scale_downs} down)"
+                f"{attain}")
+
+
+class AutoscaleSimulator:
+    """Replay a trace while a policy resizes the replica fleet each tick."""
+
+    def __init__(self, sched_cfg: SchedulerConfig,
+                 latency_fn: Callable, policy: AutoscalerPolicy,
+                 routing: str = "round_robin",
+                 initial_replicas: Optional[int] = None,
+                 chips_per_replica: int = 1,
+                 tick_s: float = 1.0, cold_start_s: float = 5.0):
+        if routing not in ROUTING_POLICIES:
+            raise ValueError(f"unknown routing policy {routing!r}; valid "
+                             f"choices: {', '.join(ROUTING_POLICIES)}")
+        if tick_s <= 0:
+            raise ValueError(f"tick_s must be positive, got {tick_s}")
+        if cold_start_s < 0:
+            raise ValueError(f"cold_start_s must be >= 0, got "
+                             f"{cold_start_s}")
+        if chips_per_replica < 1:
+            raise ValueError(f"chips_per_replica must be >= 1, got "
+                             f"{chips_per_replica}")
+        if initial_replicas is None:
+            initial_replicas = policy.min_replicas
+        if not policy.min_replicas <= initial_replicas \
+                <= policy.max_replicas:
+            raise ValueError(
+                f"initial_replicas {initial_replicas} outside the policy "
+                f"bounds [{policy.min_replicas}, {policy.max_replicas}]")
+        self.sched_cfg = sched_cfg
+        self.latency_fn = latency_fn
+        self.policy = policy
+        self.routing = routing
+        self.initial_replicas = initial_replicas
+        self.chips_per_replica = chips_per_replica
+        self.tick_s = tick_s
+        self.cold_start_s = cold_start_s
+
+    # ------------------------------------------------------------------
+    def _spawn(self, idx: int, t: float, warm_at: float
+               ) -> ScalableReplicaEngine:
+        return ScalableReplicaEngine(idx, self.sched_cfg, self.latency_fn,
+                                     spawned_at=t, warm_at=warm_at)
+
+    def run(self, trace, slo=None, max_steps: int = 200_000
+            ) -> AutoscaleReport:
+        """Drive the control loop over ``trace``.
+
+        Arrivals are routed exactly as in ``ClusterSimulator.replay``
+        (all engines advanced to the arrival instant, idle clocks
+        jumping), restricted to *eligible* replicas — warm and not
+        draining.  Between arrivals the loop pauses at every tick
+        boundary: engines advance to the boundary without idle jumps,
+        the timeline is sampled, drained replicas are retired, and the
+        policy's desired count is actuated under step/bound/cooldown
+        constraints.  After the last arrival the loop keeps ticking
+        until the fleet drains (one trailing sample covers the final
+        partial window).
+        """
+        policy = self.policy
+        records = list(getattr(trace, "requests", trace))
+        router = get_router(self.routing)
+        fleet: List[ScalableReplicaEngine] = [
+            self._spawn(i, 0.0, warm_at=0.0)
+            for i in range(self.initial_replicas)]
+        retired: List[ScalableReplicaEngine] = []
+        recorder = TimelineRecorder(self.tick_s, slo=slo)
+        events: List[Dict] = []
+        n_ups = n_downs = 0
+        last_up = last_down = float("-inf")
+        next_idx = self.initial_replicas
+        peak = self.initial_replicas
+        budget = max_steps
+        k = 0                              # completed ticks
+        i = 0                              # next trace record
+
+        def eligible_at(t: float) -> List[ScalableReplicaEngine]:
+            ready = [e for e in fleet
+                     if not e.draining and e.warm_at <= t]
+            if ready:
+                return ready
+            # every non-draining replica is still cold (or the fleet is
+            # all-draining, which the min-replicas floor prevents):
+            # fall back rather than dropping the request
+            return [e for e in fleet if not e.draining] or fleet
+
+        while budget > 0:
+            boundary = (k + 1) * self.tick_s
+            if i < len(records) and records[i].arrival_s <= boundary:
+                rec = records[i]
+                for eng in fleet:
+                    budget -= eng.advance_to(rec.arrival_s, budget)
+                pool = eligible_at(rec.arrival_s)
+                target = router.select(pool, rec, i)
+                pool[target].admit(rec, rid=i)
+                i += 1
+                continue
+
+            # -- tick boundary: advance (no idle jumps), sample, actuate
+            budget_before = budget
+            for eng in fleet:
+                budget -= eng.advance_to(boundary, budget, jump_idle=False)
+            busy = [e for e in fleet if e.outstanding > 0]
+            if budget == budget_before and i >= len(records) and busy \
+                    and all(e.t < boundary for e in busy):
+                # no arrivals left, and every engine holding work sat
+                # below the boundary yet executed nothing (a scheduler
+                # that refuses to plan): it will never step again, so
+                # don't tick forever — leftover work counts as
+                # unfinished, exactly as in the plain replay
+                break
+            k += 1
+            t = k * self.tick_s
+            recorder.on_tick(t, fleet,
+                             states=[e.state(t) for e in fleet])
+            for eng in [e for e in fleet
+                        if e.draining and e.outstanding == 0]:
+                eng.retired_at = t
+                retired.append(eng)
+                fleet.remove(eng)
+                events.append({"t_s": t, "action": "retire",
+                               "replica": eng.idx})
+            if i >= len(records) \
+                    and not any(e.outstanding > 0 for e in fleet) \
+                    and not any(e.draining for e in fleet):
+                break
+
+            provisioned = sum(1 for e in fleet if not e.draining)
+            window = recorder.window(policy.window_s)
+            desired, reason = policy.desired_replicas(window, provisioned)
+            desired = max(policy.min_replicas,
+                          min(policy.max_replicas, desired))
+            delta = desired - provisioned
+            if delta > 0 and t - last_up >= policy.up_cooldown_s:
+                delta = min(delta, policy.scale_up_step)
+                for _ in range(delta):
+                    fleet.append(self._spawn(
+                        next_idx, t, warm_at=t + self.cold_start_s))
+                    next_idx += 1
+                last_up = t
+                n_ups += 1
+                events.append({"t_s": t, "action": "scale_up",
+                               "from": provisioned,
+                               "to": provisioned + delta,
+                               "reason": reason})
+                peak = max(peak, len(fleet))
+            elif delta < 0 and t - last_down >= policy.down_cooldown_s:
+                delta = max(delta, -policy.scale_down_step)
+                victims = sorted((e for e in fleet if not e.draining),
+                                 key=lambda e: e.idx,
+                                 reverse=True)[:-delta]
+                for eng in victims:
+                    eng.draining = True
+                last_down = t
+                n_downs += 1
+                events.append({"t_s": t, "action": "scale_down",
+                               "from": provisioned,
+                               "to": provisioned + delta,
+                               "reason": reason,
+                               "draining": [e.idx for e in victims]})
+
+        horizon = k * self.tick_s
+        all_engines = sorted(fleet + retired, key=lambda e: e.idx)
+        routed = sum(e.routed for e in all_engines)
+        truncated = budget <= 0 and (
+            routed < len(records)
+            or any(e.outstanding > 0 for e in all_engines))
+        metrics = aggregate_cluster_metrics(
+            all_engines, n_requests=len(records), routing=self.routing,
+            replicas=len(all_engines), truncated=truncated, slo=slo)
+        chip_seconds = self.chips_per_replica * sum(
+            (e.retired_at if e.retired_at is not None else horizon)
+            - e.spawned_at
+            for e in all_engines)
+        mean_replicas = (chip_seconds / self.chips_per_replica / horizon
+                         if horizon > 0 else float(self.initial_replicas))
+        return AutoscaleReport(
+            policy=policy.to_dict(),
+            routing=self.routing,
+            tick_s=self.tick_s,
+            cold_start_s=self.cold_start_s,
+            chips_per_replica=self.chips_per_replica,
+            initial_replicas=self.initial_replicas,
+            horizon_s=horizon,
+            chip_seconds=chip_seconds,
+            peak_replicas=peak,
+            mean_replicas=mean_replicas,
+            n_scale_ups=n_ups,
+            n_scale_downs=n_downs,
+            events=events,
+            metrics=metrics,
+            timeline=recorder.timeline(meta={
+                "policy": policy.to_dict(),
+                "routing": self.routing,
+                "cold_start_s": self.cold_start_s,
+                "initial_replicas": self.initial_replicas,
+            }),
+        )

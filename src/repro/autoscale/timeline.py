@@ -1,0 +1,269 @@
+"""ClusterTimeline: the versioned time-series artifact of a cluster run.
+
+A :class:`ClusterTimeline` is an ordered sequence of
+:class:`TimelineSample` records — one per fixed-width tick of virtual
+time — each carrying the aggregate cluster view (QPS, queue depth,
+outstanding work, active/provisioned replica counts, utilization,
+windowed SLO attainment) plus one :class:`ReplicaSample` row per
+provisioned replica.  It is Date-free by construction: every timestamp
+is virtual seconds since trace start, so two runs of the same seeded
+trace serialize byte-identically.
+
+Serialization follows the workload-trace JSONL idiom (one header record
+carrying ``schema_version``/``tick_s``/metadata, then one record per
+sample; ``ClusterTimeline.from_jsonl(t.to_jsonl()) == t`` is exact and
+``digest()`` is a stable content identity) — the timeline file, not the
+simulator invocation, is the interchange artifact between ``autoscale
+run``, dashboards, and downstream analysis.
+
+:class:`TimelineRecorder` builds the samples live: it subscribes to the
+``on_tick`` emission hook of :meth:`ClusterSimulator.replay
+<repro.capacity.cluster.ClusterSimulator.replay>` (or is driven
+directly by the :class:`~repro.autoscale.simulator.AutoscaleSimulator`
+control loop) and differences each engine's cumulative counters into
+per-window rates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: Bump on any backwards-incompatible change to the JSONL layout.
+TIMELINE_SCHEMA_VERSION = 1
+SUPPORTED_TIMELINE_SCHEMA_VERSIONS = (1,)
+
+#: Lifecycle states a replica can be sampled in.
+REPLICA_STATES = ("warm", "cold", "draining")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSample:
+    """One replica's view at one tick (counts are per-window deltas)."""
+    replica: int                  # engine index (stable across the run)
+    state: str                    # warm | cold | draining
+    queue_depth: int              # waiting at the sample instant
+    outstanding: int              # waiting + in flight at the instant
+    routed: int                   # requests routed to it this window
+    completed: int                # requests it finished this window
+    gen_tokens: int               # tokens it generated this window
+    busy_s: float                 # execution time accrued this window
+    utilization: float            # busy_s / tick_s (can exceed 1.0 when
+                                  # an iteration overshoots the boundary)
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ReplicaSample":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineSample:
+    """The aggregate cluster view at one tick boundary."""
+    t_s: float                    # virtual seconds since trace start
+    qps: float                    # requests routed this window / tick_s
+    queue_depth: int              # total waiting across replicas
+    outstanding: int              # total waiting + in flight
+    active_replicas: int          # route-eligible (warm, not draining)
+    provisioned_replicas: int     # all chip-occupying replicas
+    utilization: float            # mean per-replica utilization
+    completed: int                # requests finished this window
+    gen_tokens: int               # tokens generated this window
+    throughput_tok_s: float       # gen_tokens / tick_s
+    #: fraction of this window's completions meeting the SLO; None when
+    #: no SLO was supplied or nothing completed in the window
+    slo_window_attainment: Optional[float]
+    replicas: Tuple[ReplicaSample, ...]
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["replicas"] = [r.to_dict() for r in self.replicas]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "TimelineSample":
+        kw = dict(d)
+        kw["replicas"] = tuple(ReplicaSample.from_dict(r)
+                               for r in d["replicas"])
+        return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterTimeline:
+    """An immutable, serializable cluster-metrics time series."""
+    tick_s: float
+    samples: Tuple[TimelineSample, ...]
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "samples", tuple(self.samples))
+        if self.tick_s <= 0:
+            raise ValueError(f"tick_s must be positive, got {self.tick_s}")
+        prev = 0.0
+        for i, s in enumerate(self.samples):
+            if s.t_s <= prev and i > 0:
+                raise ValueError(
+                    f"sample {i}: tick times must be increasing "
+                    f"({s.t_s} after {prev})")
+            prev = s.t_s
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def n_samples(self) -> int:
+        return len(self.samples)
+
+    @property
+    def duration_s(self) -> float:
+        return self.samples[-1].t_s if self.samples else 0.0
+
+    def peak_provisioned(self) -> int:
+        return max((s.provisioned_replicas for s in self.samples),
+                   default=0)
+
+    def window(self, t_s: float, window_s: float) -> List[TimelineSample]:
+        """Samples with ``t`` in the half-open window ``(t_s - window_s,
+        t_s]`` — the rolling view autoscaler policies evaluate."""
+        return [s for s in self.samples
+                if t_s - window_s < s.t_s <= t_s]
+
+    # -- serialization -------------------------------------------------------
+    def to_jsonl(self) -> str:
+        header = {"type": "header",
+                  "schema_version": TIMELINE_SCHEMA_VERSION,
+                  "tick_s": self.tick_s,
+                  "n_samples": self.n_samples,
+                  "meta": self.meta}
+        lines = [json.dumps(header, sort_keys=True)]
+        lines += [json.dumps(s.to_dict(), sort_keys=True)
+                  for s in self.samples]
+        return "\n".join(lines) + "\n"
+
+    @classmethod
+    def from_jsonl(cls, text: str) -> "ClusterTimeline":
+        lines = [ln for ln in text.splitlines() if ln.strip()]
+        if not lines:
+            raise ValueError("empty timeline file (missing header record)")
+        header = json.loads(lines[0])
+        if header.get("type") != "header":
+            raise ValueError("timeline file must start with a header "
+                             "record ({'type': 'header', ...})")
+        version = header.get("schema_version")
+        if version not in SUPPORTED_TIMELINE_SCHEMA_VERSIONS:
+            raise ValueError(
+                f"unsupported timeline schema_version {version!r}; this "
+                f"build reads versions "
+                f"{', '.join(map(str, SUPPORTED_TIMELINE_SCHEMA_VERSIONS))}")
+        try:
+            samples = tuple(TimelineSample.from_dict(json.loads(ln))
+                            for ln in lines[1:])
+        except (KeyError, TypeError) as e:
+            raise ValueError(f"malformed timeline record: {e}") from e
+        declared = header.get("n_samples")
+        if declared is not None and declared != len(samples):
+            raise ValueError(f"timeline header declares {declared} samples "
+                             f"but file carries {len(samples)}")
+        return cls(tick_s=header["tick_s"], samples=samples,
+                   meta=header.get("meta", {}))
+
+    def digest(self) -> str:
+        """Stable content identity over the canonical JSONL form."""
+        return hashlib.sha256(self.to_jsonl().encode()).hexdigest()[:16]
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_jsonl())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ClusterTimeline":
+        with open(path) as f:
+            return cls.from_jsonl(f.read())
+
+
+class TimelineRecorder:
+    """Differences cumulative replica-engine counters into timeline
+    samples, one per tick.
+
+    ``on_tick(t, engines[, states])`` matches the emission-hook
+    signature of :meth:`ClusterSimulator.replay
+    <repro.capacity.cluster.ClusterSimulator.replay>`; ``states`` (one
+    of :data:`REPLICA_STATES` per engine, in order) is supplied by the
+    autoscale control loop — a static replay's replicas are always
+    ``warm``.  Engines retired between ticks simply stop appearing;
+    their last partial window is captured because the autoscale loop
+    samples *before* retiring drained replicas.
+    """
+
+    def __init__(self, tick_s: float, slo=None):
+        if tick_s <= 0:
+            raise ValueError(f"tick_s must be positive, got {tick_s}")
+        self.tick_s = tick_s
+        self.slo = slo
+        self.samples: List[TimelineSample] = []
+        # cumulative (routed, done_idx, gen_tokens, busy_s) per engine idx
+        self._seen: Dict[int, Tuple[int, int, int, float]] = {}
+
+    def on_tick(self, t: float, engines: Sequence,
+                states: Optional[Sequence[str]] = None) -> None:
+        if states is None:
+            states = ["warm"] * len(engines)
+        rows: List[ReplicaSample] = []
+        met_win = 0
+        done_win = 0
+        for eng, state in zip(engines, states):
+            routed0, done0, gen0, busy0 = self._seen.get(
+                eng.idx, (0, 0, 0, 0.0))
+            finished = eng.done[done0:]
+            completed = sum(1 for r in finished if r.ttft is not None)
+            if self.slo is not None:
+                done_win += completed
+                met_win += sum(1 for r in finished
+                               if r.ttft is not None
+                               and self.slo.request_meets(r.ttft, r.tpot))
+            busy_delta = eng.busy_s - busy0
+            rows.append(ReplicaSample(
+                replica=eng.idx,
+                state=state,
+                queue_depth=len(eng.sched.waiting),
+                outstanding=eng.outstanding,
+                routed=eng.routed - routed0,
+                completed=completed,
+                gen_tokens=eng.gen_tokens - gen0,
+                busy_s=busy_delta,
+                utilization=busy_delta / self.tick_s,
+            ))
+            self._seen[eng.idx] = (eng.routed, len(eng.done),
+                                   eng.gen_tokens, eng.busy_s)
+        gen_win = sum(r.gen_tokens for r in rows)
+        n = len(rows)
+        self.samples.append(TimelineSample(
+            t_s=t,
+            qps=sum(r.routed for r in rows) / self.tick_s,
+            queue_depth=sum(r.queue_depth for r in rows),
+            outstanding=sum(r.outstanding for r in rows),
+            active_replicas=sum(1 for r in rows if r.state == "warm"),
+            provisioned_replicas=n,
+            utilization=(sum(r.utilization for r in rows) / n) if n else 0.0,
+            completed=sum(r.completed for r in rows),
+            gen_tokens=gen_win,
+            throughput_tok_s=gen_win / self.tick_s,
+            slo_window_attainment=(met_win / done_win
+                                   if self.slo is not None and done_win
+                                   else None),
+            replicas=tuple(rows),
+        ))
+
+    def window(self, window_s: float) -> List[TimelineSample]:
+        """The rolling window ending at the latest sample."""
+        if not self.samples:
+            return []
+        t = self.samples[-1].t_s
+        return [s for s in self.samples if t - window_s < s.t_s <= t]
+
+    def timeline(self, meta: Optional[Dict] = None) -> ClusterTimeline:
+        return ClusterTimeline(tick_s=self.tick_s,
+                               samples=tuple(self.samples),
+                               meta=meta or {})

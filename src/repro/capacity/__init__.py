@@ -32,7 +32,8 @@ Canonical flow::
 
 CLI: ``python -m repro.core.cli capacity plan|sweep`` (docs/capacity.md).
 """
-from repro.capacity.cluster import ClusterReplayMetrics, ClusterSimulator
+from repro.capacity.cluster import (ClusterReplayMetrics, ClusterSimulator,
+                                    ReplicaEngine, aggregate_cluster_metrics)
 from repro.capacity.deployment import DeploymentSpec
 from repro.capacity.planner import (CAPACITY_SCHEMA_VERSION, CapacityPlan,
                                     DEFAULT_ATTAIN_TARGET, iter_ladder,
@@ -42,6 +43,7 @@ from repro.capacity.routing import ROUTING_POLICIES, Router, get_router
 __all__ = [
     "CAPACITY_SCHEMA_VERSION", "CapacityPlan", "ClusterReplayMetrics",
     "ClusterSimulator", "DEFAULT_ATTAIN_TARGET", "DeploymentSpec",
-    "ROUTING_POLICIES", "Router", "get_router", "iter_ladder",
+    "ROUTING_POLICIES", "ReplicaEngine", "Router",
+    "aggregate_cluster_metrics", "get_router", "iter_ladder",
     "plan_min_chips", "sweep_ladder",
 ]

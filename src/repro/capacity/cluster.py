@@ -30,8 +30,14 @@ from repro.serving.sim import StepSpec, _pctl_dict, run_iteration
 from repro.capacity.routing import ROUTING_POLICIES, get_router
 
 
-class _ReplicaEngine:
-    """One engine instance inside the cluster: scheduler + private clock."""
+class ReplicaEngine:
+    """One engine instance inside the cluster: scheduler + private clock.
+
+    Also the building block of ``repro.autoscale`` — the autoscale
+    control loop subclasses it with spawn/drain lifecycle state, so
+    per-iteration accounting stays byte-identical between a static
+    cluster replay and an autoscaled run.
+    """
 
     def __init__(self, idx: int, sched_cfg: SchedulerConfig,
                  latency_fn: Callable[[StepSpec], float]):
@@ -78,20 +84,26 @@ class _ReplicaEngine:
         self.done.extend(out.finished)
         return True
 
-    def advance_to(self, t_target: float, budget: int) -> int:
+    def advance_to(self, t_target: float, budget: int,
+                   jump_idle: bool = True) -> int:
         """Simulate pending work up to ``t_target``; idle clocks jump.
 
         Returns the number of iterations executed (bounded by
         ``budget``).  A replica may overshoot ``t_target`` by a
         fraction of an iteration — admission happens at iteration
         boundaries, exactly as in the single-engine replay.
+
+        ``jump_idle=False`` leaves an idle engine's clock where it is —
+        used when advancing to a *sampling tick* rather than an arrival,
+        so instrumented replays execute exactly the iterations an
+        uninstrumented replay would and the metrics stay byte-identical.
         """
         used = 0
         while self.t < t_target and used < budget:
             if not self.step():
                 break
             used += 1
-        if self.t < t_target and self.sched.active == 0:
+        if jump_idle and self.t < t_target and self.sched.active == 0:
             self.t = t_target           # idle engine: clock jumps forward
         return used
 
@@ -103,6 +115,10 @@ class _ReplicaEngine:
                 break
             used += 1
         return used
+
+
+#: Backwards-compatible alias (pre-autoscale private name).
+_ReplicaEngine = ReplicaEngine
 
 
 @dataclasses.dataclass
@@ -121,6 +137,10 @@ class ClusterReplayMetrics:
     tpot_ms: Dict[str, float]
     queue_depth_mean: float                # step-weighted across replicas
     queue_depth_max: int
+    #: True when the ``max_steps`` budget (not the trace) ended the
+    #: run — unrouted arrivals or in-flight work remained when the
+    #: shared iteration budget ran out
+    truncated: bool
     #: one row per replica: routed/completed/rejected counts, generated
     #: tokens, busy time, final clock, queue stats
     per_replica: List[Dict] = dataclasses.field(default_factory=list)
@@ -162,6 +182,68 @@ def _imbalance(rows: List[Dict]) -> Dict:
     }
 
 
+def aggregate_cluster_metrics(engines: List[ReplicaEngine],
+                              n_requests: int, routing: str,
+                              replicas: int, truncated: bool,
+                              slo=None) -> ClusterReplayMetrics:
+    """Fold a list of (possibly retired) replica engines into one
+    :class:`ClusterReplayMetrics` — shared by the static
+    :meth:`ClusterSimulator.replay` and the autoscale control loop, so
+    the two views aggregate identically by construction."""
+    completed = [(eng.idx, r) for eng in engines for r in eng.done
+                 if r.ttft is not None]
+    rejected = sum(eng.rejected for eng in engines)
+    steps = sum(eng.steps for eng in engines)
+    gen_total = sum(eng.gen_tokens for eng in engines)
+    makespan = max((eng.t for eng in engines), default=0.0)
+    depth_sum = sum(eng.depth_sum for eng in engines)
+
+    per_replica = [{
+        "replica": eng.idx,
+        "routed": eng.routed,
+        "completed": sum(1 for r in eng.done if r.ttft is not None),
+        "rejected": eng.rejected,
+        "steps": eng.steps,
+        "gen_tokens": eng.gen_tokens,
+        "busy_s": eng.busy_s,
+        "final_clock_s": eng.t,
+        "queue_depth_max": eng.depth_max,
+    } for eng in engines]
+
+    ttfts_ms = [1e3 * r.ttft for _, r in completed]
+    tpots_ms = [1e3 * r.tpot for _, r in completed if r.tpot is not None]
+    metrics = ClusterReplayMetrics(
+        replicas=replicas,
+        routing=routing,
+        n_requests=n_requests,
+        completed=len(completed),
+        rejected=rejected,
+        unfinished=n_requests - rejected - len(completed),
+        steps=steps,
+        duration_s=makespan,
+        throughput_tok_s=gen_total / makespan if makespan > 0 else 0.0,
+        ttft_ms=_pctl_dict(ttfts_ms),
+        tpot_ms=_pctl_dict(tpots_ms),
+        queue_depth_mean=depth_sum / steps if steps else 0.0,
+        queue_depth_max=max((eng.depth_max for eng in engines), default=0),
+        truncated=truncated,
+        per_replica=per_replica,
+        imbalance=_imbalance(per_replica),
+        per_request=[(r.tenant, idx, r.ttft, r.tpot)
+                     for idx, r in completed],
+    )
+    if slo is not None:
+        attaining = [r for _, r in completed
+                     if slo.request_meets(r.ttft, r.tpot)]
+        metrics.slo = {"ttft_p99_ms": slo.ttft_p99_ms,
+                       "tpot_p99_ms": slo.tpot_p99_ms}
+        metrics.slo_attainment = (len(attaining) / n_requests
+                                  if n_requests else 0.0)
+        metrics.goodput_tok_s = (sum(r.osl for r in attaining) / makespan
+                                 if makespan > 0 else 0.0)
+    return metrics
+
+
 class ClusterSimulator:
     """N identical replica engines behind a routing policy.
 
@@ -184,8 +266,9 @@ class ClusterSimulator:
         self.routing = routing
 
     # ------------------------------------------------------------------
-    def replay(self, trace, slo=None,
-               max_steps: int = 200_000) -> ClusterReplayMetrics:
+    def replay(self, trace, slo=None, max_steps: int = 200_000,
+               tick_s: Optional[float] = None,
+               on_tick: Optional[Callable] = None) -> ClusterReplayMetrics:
         """Open-loop replay of ``trace`` across the whole deployment.
 
         ``max_steps`` bounds the *total* iteration count summed over
@@ -193,72 +276,63 @@ class ClusterSimulator:
         as unfinished (and as SLO misses when ``slo`` is given) — a
         degenerate or saturating trace yields explicitly zeroed, always
         finite metrics, mirroring ``ServingSimulator.replay``.
+        ``metrics.truncated`` records whether the budget (not the
+        trace) ended the run.
+
+        ``tick_s``/``on_tick`` instrument the replay with a fixed-tick
+        emission hook: before each arrival past a tick boundary (and
+        through the final drain), every engine is advanced to the
+        boundary *without* idle-clock jumps and ``on_tick(t, engines)``
+        is called — the ``repro.autoscale`` timeline recorder
+        subscribes here.  The hook observes the same iteration sequence
+        an uninstrumented replay executes (ticks never add or reorder
+        work), so metrics are identical with or without it.
         """
         records = list(getattr(trace, "requests", trace))
         router = get_router(self.routing)
-        engines = [_ReplicaEngine(i, self.sched_cfg, self.latency_fn)
+        engines = [ReplicaEngine(i, self.sched_cfg, self.latency_fn)
                    for i in range(self.replicas)]
         budget = max_steps
+        if tick_s is not None and tick_s <= 0:
+            raise ValueError(f"tick_s must be positive, got {tick_s}")
+        ticking = tick_s is not None and on_tick is not None
+        k = 0                              # ticks emitted so far
 
         for seq, rec in enumerate(records):
+            while ticking and (k + 1) * tick_s <= rec.arrival_s \
+                    and budget > 0:
+                boundary = (k + 1) * tick_s
+                for eng in engines:
+                    budget -= eng.advance_to(boundary, budget,
+                                             jump_idle=False)
+                k += 1
+                on_tick(boundary, engines)
             for eng in engines:
                 budget -= eng.advance_to(rec.arrival_s, budget)
             target = router.select(engines, rec, seq)
             engines[target].admit(rec, rid=seq)
             if budget <= 0:
                 break
-        for eng in engines:
-            budget -= eng.drain(budget)
+        if ticking:
+            # drain in tick-sized rounds so the hook keeps sampling; one
+            # trailing tick covers the final partial window
+            while budget > 0:
+                boundary = (k + 1) * tick_s
+                for eng in engines:
+                    budget -= eng.advance_to(boundary, budget,
+                                             jump_idle=False)
+                k += 1
+                on_tick(boundary, engines)
+                if not any(eng.outstanding > 0 for eng in engines):
+                    break
+        else:
+            for eng in engines:
+                budget -= eng.drain(budget)
 
-        completed = [(eng.idx, r) for eng in engines for r in eng.done
-                     if r.ttft is not None]
-        rejected = sum(eng.rejected for eng in engines)
-        steps = sum(eng.steps for eng in engines)
-        gen_total = sum(eng.gen_tokens for eng in engines)
-        makespan = max((eng.t for eng in engines), default=0.0)
-        depth_sum = sum(eng.depth_sum for eng in engines)
-
-        per_replica = [{
-            "replica": eng.idx,
-            "routed": eng.routed,
-            "completed": sum(1 for r in eng.done if r.ttft is not None),
-            "rejected": eng.rejected,
-            "steps": eng.steps,
-            "gen_tokens": eng.gen_tokens,
-            "busy_s": eng.busy_s,
-            "final_clock_s": eng.t,
-            "queue_depth_max": eng.depth_max,
-        } for eng in engines]
-
-        ttfts_ms = [1e3 * r.ttft for _, r in completed]
-        tpots_ms = [1e3 * r.tpot for _, r in completed if r.tpot is not None]
-        metrics = ClusterReplayMetrics(
-            replicas=self.replicas,
-            routing=self.routing,
-            n_requests=len(records),
-            completed=len(completed),
-            rejected=rejected,
-            unfinished=len(records) - rejected - len(completed),
-            steps=steps,
-            duration_s=makespan,
-            throughput_tok_s=gen_total / makespan if makespan > 0 else 0.0,
-            ttft_ms=_pctl_dict(ttfts_ms),
-            tpot_ms=_pctl_dict(tpots_ms),
-            queue_depth_mean=depth_sum / steps if steps else 0.0,
-            queue_depth_max=max((eng.depth_max for eng in engines),
-                                default=0),
-            per_replica=per_replica,
-            imbalance=_imbalance(per_replica),
-            per_request=[(r.tenant, idx, r.ttft, r.tpot)
-                         for idx, r in completed],
-        )
-        if slo is not None:
-            attaining = [r for _, r in completed
-                         if slo.request_meets(r.ttft, r.tpot)]
-            metrics.slo = {"ttft_p99_ms": slo.ttft_p99_ms,
-                           "tpot_p99_ms": slo.tpot_p99_ms}
-            metrics.slo_attainment = (len(attaining) / len(records)
-                                      if records else 0.0)
-            metrics.goodput_tok_s = (sum(r.osl for r in attaining) / makespan
-                                     if makespan > 0 else 0.0)
-        return metrics
+        routed = sum(eng.routed for eng in engines)
+        truncated = budget <= 0 and (
+            routed < len(records)
+            or any(eng.outstanding > 0 for eng in engines))
+        return aggregate_cluster_metrics(
+            engines, n_requests=len(records), routing=self.routing,
+            replicas=self.replicas, truncated=truncated, slo=slo)

@@ -75,7 +75,12 @@ def iter_ladder(runner, candidates: Sequence[CandidateConfig],
 
         {"replicas", "candidate_rank", "deployment": {...},
          "total_chips", "pruned": None | reason,
-         "attains": bool | None, "metrics": {...} | None}
+         "attains": bool | None, "truncated": bool | None,
+         "metrics": {...} | None}
+
+    ``truncated`` surfaces the replay's step-budget flag per evaluated
+    rung (``None`` for cost-pruned rungs): a rung that "misses the SLO"
+    with ``truncated=True`` ran out of ``max_steps``, not of workload.
     """
     if not candidates:
         raise ValueError("at least one candidate is required")
@@ -96,6 +101,7 @@ def iter_ladder(runner, candidates: Sequence[CandidateConfig],
                 "total_chips": dep.total_chips,
                 "pruned": None,
                 "attains": None,
+                "truncated": None,
                 "metrics": None,
             }
             if best_cost is not None and dep.total_chips >= best_cost:
@@ -108,6 +114,7 @@ def iter_ladder(runner, candidates: Sequence[CandidateConfig],
                 priority_admission=priority_admission, max_queue=max_queue)
             metrics = sim.replay(trace, slo=slo, max_steps=max_steps)
             record["metrics"] = metrics.to_dict()
+            record["truncated"] = metrics.truncated
             record["attains"] = (metrics.slo_attainment or 0.0) \
                 >= attain_target
             if record["attains"]:

@@ -27,6 +27,11 @@ The paper's user workflow (Fig. 2) as subcommands:
         --routing least_outstanding --json
     python -m repro.core.cli capacity plan --model qwen3-32b --isl 4000 \\
         --osl 500 --chips 16 --trace trace.jsonl --ladder 1,2,4 --top-k 3
+    python -m repro.core.cli autoscale run --trace trace.jsonl \\
+        --model qwen3-32b --tp 4 --batch 64 --policy target_queue_depth \\
+        --max-replicas 4 --save-timeline timeline.jsonl
+    python -m repro.core.cli autoscale compare --trace trace.jsonl \\
+        --model qwen3-32b --tp 4 --batch 64 --ladder 1,2,4 --json
 
 Every subcommand accepts ``--json`` to emit machine-readable output
 (``search --json`` prints the schema-versioned SearchReport) on stdout,
@@ -64,7 +69,7 @@ EXIT_NO_CONFIG = 1
 EXIT_USAGE = 2
 
 _SUBCOMMANDS = ("search", "generate", "compare", "list", "calibrate",
-                "workload", "capacity")
+                "workload", "capacity", "autoscale")
 
 
 # ---------------------------------------------------------------------------
@@ -698,6 +703,127 @@ def cmd_capacity_plan(args) -> int:
 
 
 # ---------------------------------------------------------------------------
+# autoscale
+# ---------------------------------------------------------------------------
+
+def _policy_from_args(args):
+    """Build the AutoscalerPolicy selected by ``--policy`` plus its
+    tuning flags (policy-specific knobs only reach their own policy)."""
+    from repro.autoscale import get_policy
+    kw = dict(min_replicas=args.min_replicas,
+              max_replicas=args.max_replicas,
+              scale_up_step=args.up_step,
+              scale_down_step=args.down_step,
+              up_cooldown_s=args.up_cooldown,
+              down_cooldown_s=args.down_cooldown,
+              window_s=args.window)
+    if args.policy == "target_queue_depth":
+        kw["target_depth"] = args.target_depth
+    elif args.policy == "slo_attainment":
+        kw["attain_target"] = args.attain_target
+        kw["scale_down_util"] = args.scale_down_util
+    return get_policy(args.policy, **kw)
+
+
+def _emit_timeline(timeline, args) -> None:
+    """Stream the timeline (JSON-lines sample records with ``--json``)
+    and honor ``--save-timeline``."""
+    if args.json:
+        for s in timeline.samples:
+            print(json.dumps({"type": "sample", **s.to_dict()},
+                             sort_keys=True), flush=True)
+    if args.save_timeline:
+        timeline.save(args.save_timeline)
+
+
+def cmd_autoscale_run(args) -> int:
+    """Autoscaled replay of one explicit candidate: JSON-lines timeline
+    samples plus a summary record."""
+    from repro.core.task_runner import TaskRunner
+    from repro.workloads import WorkloadTrace
+    trace = WorkloadTrace.load(args.trace)
+    policy = _policy_from_args(args)
+    w, cand = _explicit_candidate(
+        args, trace, n_chips=args.tp * args.pp * policy.max_replicas)
+    runner = TaskRunner(w)
+    sim = runner.autoscale_simulator(
+        cand, policy, routing=args.routing,
+        initial_replicas=args.initial_replicas, tick_s=args.tick,
+        cold_start_s=args.cold_start, max_queue=args.max_queue)
+    report = sim.run(trace, slo=_slo_from_args(args),
+                     max_steps=args.max_steps)
+    _emit_timeline(report.timeline, args)
+    if args.json:
+        print(json.dumps({"type": "summary",
+                          "trace": {"path": args.trace,
+                                    "digest": trace.digest()},
+                          "config": {"model": args.model,
+                                     "describe": cand.describe()},
+                          **report.to_dict()}, sort_keys=True), flush=True)
+    else:
+        m = report.metrics
+        print(report.summary())
+        print(f"  {m.completed} completed, {m.rejected} rejected, "
+              f"{m.unfinished} unfinished"
+              + (" (budget truncated)" if m.truncated else ""))
+        print(f"  goodput {m.goodput_tok_s:.1f} tok/s; events: "
+              f"{len(report.events)} "
+              f"({report.n_scale_ups} up, {report.n_scale_downs} down)")
+        for ev in report.events:
+            extra = (f" {ev['from']}->{ev['to']} ({ev['reason']})"
+                     if "from" in ev else f" replica {ev['replica']}")
+            print(f"    t={ev['t_s']:8.1f}s {ev['action']:<10s}{extra}")
+    return EXIT_OK if report.metrics.completed > 0 else EXIT_NO_CONFIG
+
+
+def cmd_autoscale_compare(args) -> int:
+    """Autoscaled run vs the static min-chip plan on the same trace,
+    candidate, and SLO — the chip-seconds savings view."""
+    from repro.autoscale import build_autoscale_section
+    from repro.core.task_runner import TaskRunner
+    from repro.workloads import WorkloadTrace
+    trace = WorkloadTrace.load(args.trace)
+    ladder = _parse_ladder(args.ladder)
+    policy = _policy_from_args(args)
+    w, cand = _explicit_candidate(
+        args, trace,
+        n_chips=args.tp * args.pp * max(max(ladder), policy.max_replicas))
+    runner = TaskRunner(w)
+    section, run = build_autoscale_section(
+        runner, cand, trace, _slo_from_args(args), policy, ladder=ladder,
+        routing=args.routing, attain_target=args.attain_target,
+        tick_s=args.tick, cold_start_s=args.cold_start,
+        initial_replicas=args.initial_replicas, max_steps=args.max_steps,
+        max_queue=args.max_queue)
+    _emit_timeline(run.timeline, args)
+    ok = (section["static"] is not None
+          and section["savings"]["holds_attainment"])
+    if args.json:
+        print(json.dumps({"type": "summary", **section}, sort_keys=True),
+              flush=True)
+        return EXIT_OK if ok else EXIT_NO_CONFIG
+    static = section["static"]
+    if static is None:
+        print(f"no rung on ladder {list(ladder)} attains "
+              f"{100 * args.attain_target:.0f}% of the SLO; no static "
+              f"baseline to compare against")
+        print(run.summary())
+        return EXIT_NO_CONFIG
+    print(f"static plan: {static['deployment']['describe']} = "
+          f"{static['total_chips']} chips x {static['duration_s']:.1f}s "
+          f"= {static['chip_seconds']:.1f} chip-s "
+          f"({100 * static['slo_attainment']:.1f}% attainment)")
+    print(run.summary())
+    sv = section["savings"]
+    verdict = ("holds attainment" if sv["holds_attainment"]
+               else "DROPS below target")
+    print(f"savings: {sv['chip_seconds']:.1f} chip-s "
+          f"({sv['chip_seconds_pct']:.1f}%), {verdict} "
+          f"({100 * args.attain_target:.0f}% target)")
+    return EXIT_OK if ok else EXIT_NO_CONFIG
+
+
+# ---------------------------------------------------------------------------
 # list
 # ---------------------------------------------------------------------------
 
@@ -943,6 +1069,77 @@ def _build_parser() -> argparse.ArgumentParser:
     cpl.add_argument("--save-report", default="",
                      help="write the schema-v4 SearchReport JSON here")
     cpl.set_defaults(func=cmd_capacity_plan)
+
+    asc = sub.add_parser(
+        "autoscale",
+        help="reactive autoscaling over the cluster simulator: "
+             "run | compare")
+    ascsub = asc.add_subparsers(dest="action")
+
+    def _add_autoscale_args(p):
+        from repro.autoscale import AUTOSCALER_POLICIES
+        p.add_argument("--trace", required=True,
+                       help="workload trace JSONL (from `workload "
+                            "generate`)")
+        p.add_argument("--routing", default="round_robin",
+                       choices=list(ROUTING_POLICIES))
+        p.add_argument("--policy", default="target_queue_depth",
+                       choices=list(AUTOSCALER_POLICIES),
+                       help="autoscaler policy evaluated each tick")
+        p.add_argument("--target-depth", type=float, default=4.0,
+                       help="target_queue_depth: outstanding requests "
+                            "per replica to aim for")
+        p.add_argument("--attain-target", type=float, default=0.95,
+                       help="fraction of requests that must meet the SLO "
+                            "(slo_attainment policy target; also the "
+                            "static plan's bar under `compare`)")
+        p.add_argument("--scale-down-util", type=float, default=0.5,
+                       help="slo_attainment: scale down only below this "
+                            "mean utilization")
+        p.add_argument("--min-replicas", type=int, default=1)
+        p.add_argument("--max-replicas", type=int, default=8)
+        p.add_argument("--up-step", type=int, default=1,
+                       help="max replicas added per scale-up")
+        p.add_argument("--down-step", type=int, default=1,
+                       help="max replicas drained per scale-down")
+        p.add_argument("--up-cooldown", type=float, default=5.0,
+                       help="seconds between scale-ups")
+        p.add_argument("--down-cooldown", type=float, default=30.0,
+                       help="seconds between scale-downs")
+        p.add_argument("--window", type=float, default=10.0,
+                       help="rolling metrics window the policy sees (s)")
+        p.add_argument("--tick", type=float, default=1.0,
+                       help="control-loop tick width (virtual s)")
+        p.add_argument("--cold-start", type=float, default=5.0,
+                       help="spawn-to-route-eligible delay (virtual s)")
+        p.add_argument("--initial-replicas", type=int, default=None,
+                       help="starting fleet size (default: policy "
+                            "min-replicas; under `compare`, the static "
+                            "plan's replica count)")
+        p.add_argument("--max-steps", type=int, default=200_000,
+                       help="total iteration budget across all replicas")
+        p.add_argument("--save-timeline", default="",
+                       help="write the ClusterTimeline JSONL here")
+        _add_slo_args(p)
+        p.add_argument("--json", action="store_true",
+                       help="JSON-lines: one record per timeline sample, "
+                            "then a terminal summary record")
+
+    ar = ascsub.add_parser(
+        "run", help="autoscaled replay of one explicit candidate; "
+                    "timeline samples as JSON-lines with --json")
+    _add_autoscale_args(ar)
+    _add_candidate_args(ar)
+    ar.set_defaults(func=cmd_autoscale_run)
+
+    ac = ascsub.add_parser(
+        "compare", help="autoscaled run vs the static min-chip plan on "
+                        "the same trace (chip-seconds savings)")
+    _add_autoscale_args(ac)
+    _add_candidate_args(ac)
+    ac.add_argument("--ladder", default="1,2,4", metavar="N,N,...",
+                    help="replica ladder for the static baseline plan")
+    ac.set_defaults(func=cmd_autoscale_compare)
 
     lp = sub.add_parser("list", help="enumerate models/backends/platforms")
     lp.add_argument("what", nargs="?", default="all",

@@ -172,6 +172,37 @@ class TaskRunner:
                                 replicas=deployment.replicas,
                                 routing=routing)
 
+    def autoscale_simulator(self, cand, policy,
+                            routing: str = "round_robin",
+                            initial_replicas=None,
+                            tick_s: float = 1.0,
+                            cold_start_s: float = 5.0,
+                            priority_admission: bool = True,
+                            max_queue: int = 100_000):
+        """Autoscaling control loop for one candidate engine — the
+        policy resizes a fleet of replicas (each priced by this
+        runner's memoized session) on a fixed tick, so the autoscaled
+        run, the static capacity ladder, and the analytical search all
+        share one PerfDatabase."""
+        from repro.autoscale.simulator import AutoscaleSimulator
+        from repro.serving.scheduler import SchedulerConfig
+        sched_cfg = SchedulerConfig(
+            max_batch=cand.batch_size,
+            max_num_tokens=cand.flags.max_num_tokens,
+            chunked_prefill=cand.flags.enable_chunked_context,
+            priority_admission=priority_admission,
+            max_queue=max_queue)
+        par, flags = cand.parallel, cand.flags
+
+        def latency_s(spec) -> float:
+            return self.session.spec_latency_ms(par, spec, flags) / 1e3
+
+        return AutoscaleSimulator(
+            sched_cfg, latency_s, policy, routing=routing,
+            initial_replicas=initial_replicas,
+            chips_per_replica=par.chips_per_instance,
+            tick_s=tick_s, cold_start_s=cold_start_s)
+
     # ------------------------------------------------------------------
     def iter_search(self, sweep_flags: bool = False,
                     keep_all_disagg: bool = False,

@@ -132,6 +132,10 @@ class ReplayMetrics:
     tpot_ms: Dict[str, float]
     queue_depth_mean: float
     queue_depth_max: int
+    #: True when the ``max_steps`` budget (not the trace) ended the
+    #: run — work was still pending when the iteration budget ran out,
+    #: so ``unfinished`` reflects the budget, not the workload
+    truncated: bool
     #: (tenant, ttft_s, tpot_s) per finished request, tpot_s None when
     #: no decode interval exists (osl == 1)
     per_request: List[Tuple[str, float, Optional[float]]]
@@ -270,6 +274,8 @@ class ServingSimulator:
 
         completed = [r for r in done if r.ttft is not None]
         unfinished = len(records) - rejected - len(completed)
+        truncated = steps >= max_steps \
+            and (i < len(records) or sched.active > 0)
         ttfts_ms = [1e3 * r.ttft for r in completed]
         tpots_ms = [1e3 * r.tpot for r in completed if r.tpot is not None]
         # degenerate traces — empty, or every request bounced off
@@ -289,6 +295,7 @@ class ServingSimulator:
             tpot_ms=_pctl_dict(tpots_ms),
             queue_depth_mean=depth_sum / steps if steps else 0.0,
             queue_depth_max=depth_max,
+            truncated=truncated,
             per_request=[(r.tenant, r.ttft, r.tpot) for r in completed],
         )
         if slo is not None:

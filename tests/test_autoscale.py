@@ -1,0 +1,511 @@
+"""repro.autoscale: timeline artifact, autoscaler policies, the
+control-loop simulator (never-scale equivalence, cold starts,
+drain-before-removal, cooldowns), the autoscale-vs-static section, and
+the end-to-end ``Configurator.autoscale`` acceptance property."""
+import json
+
+import pytest
+
+from repro.autoscale import (AutoscaleSimulator, ClusterTimeline,
+                             SLOAttainmentWindow, StaticPolicy,
+                             TargetQueueDepth, TimelineRecorder,
+                             build_autoscale_section, get_policy)
+from repro.capacity import ClusterSimulator, plan_min_chips
+from repro.core.config import CandidateConfig, ParallelismConfig
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.sim import StepSpec
+from repro.workloads import (ArrivalSpec, LengthSpec, SLOSpec, TenantSpec,
+                             TraceSpec, constant_trace, generate_trace)
+
+
+def _lat(spec: StepSpec) -> float:
+    return 1e-3 + 1e-6 * sum(c for c, _ in spec.prefill) \
+        + 1e-5 * len(spec.decode)
+
+
+def _slow_lat(spec: StepSpec) -> float:
+    """A heavier step model: one replica saturates around 10 req/s."""
+    return 2e-2 + 1e-6 * sum(c for c, _ in spec.prefill) \
+        + 1e-3 * len(spec.decode)
+
+
+def _diurnal_trace(rate=10.0, period=12.0, amplitude=0.9, n=240, seed=13):
+    return generate_trace(TraceSpec(
+        n_requests=n,
+        arrivals=ArrivalSpec(kind="diurnal", rate_rps=rate,
+                             period_s=period, amplitude=amplitude),
+        tenants=(TenantSpec(name="chat", weight=1.0,
+                            lengths=LengthSpec(kind="fixed",
+                                               isl=64, osl=8)),)),
+        seed=seed)
+
+
+_CFG = dict(max_batch=4, max_num_tokens=256)
+
+
+def _autoscaler(policy, latency=_lat, **kw):
+    return AutoscaleSimulator(SchedulerConfig(**_CFG), latency, policy, **kw)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+def test_policy_registry_and_overrides():
+    p = get_policy("target_queue_depth", target_depth=2.0, max_replicas=3)
+    assert isinstance(p, TargetQueueDepth)
+    assert p.target_depth == 2.0 and p.max_replicas == 3
+    assert isinstance(get_policy("slo_attainment"), SLOAttainmentWindow)
+    assert isinstance(get_policy("static"), StaticPolicy)
+    with pytest.raises(ValueError, match="unknown autoscaler policy"):
+        get_policy("psychic")
+    with pytest.raises(ValueError, match="bad static policy"):
+        get_policy("static", target_depth=2.0)   # base policy knob-free
+    assert p.to_dict()["name"] == "target_queue_depth"
+    assert p.to_dict()["target_depth"] == 2.0
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="min_replicas"):
+        TargetQueueDepth(min_replicas=0)
+    with pytest.raises(ValueError, match="max_replicas"):
+        TargetQueueDepth(min_replicas=4, max_replicas=2)
+    with pytest.raises(ValueError, match="target_depth"):
+        TargetQueueDepth(target_depth=0.0)
+    with pytest.raises(ValueError, match="window_s"):
+        TargetQueueDepth(window_s=-1.0)
+    with pytest.raises(ValueError, match="attain_target"):
+        SLOAttainmentWindow(attain_target=1.5)
+
+
+def test_target_queue_depth_desired_math():
+    p = TargetQueueDepth(target_depth=4.0, max_replicas=8)
+    # empty window: hold steady
+    assert p.desired_replicas([], 3) == (3, "no samples yet")
+
+    class _S:
+        def __init__(self, outstanding):
+            self.outstanding = outstanding
+
+    desired, reason = p.desired_replicas([_S(8), _S(16)], 1)
+    assert desired == 3                    # ceil(mean 12 / target 4)
+    assert "12.0" in reason
+    desired, _ = p.desired_replicas([_S(0), _S(0)], 5)
+    assert desired == 1                    # floor at one replica
+
+
+def test_static_policy_never_moves():
+    p = StaticPolicy(max_replicas=4)
+    assert p.desired_replicas([], 2) == (2, "static fleet")
+
+
+# ---------------------------------------------------------------------------
+# never-scale equivalence: the control loop degenerates to the replay
+# ---------------------------------------------------------------------------
+
+def test_static_policy_reproduces_cluster_replay_exactly():
+    """The ISSUE acceptance property: with a never-scaling policy and
+    zero cold start, every metrics field equals a plain
+    ``ClusterSimulator.replay`` of the same trace — the tick machinery
+    adds observation, not perturbation."""
+    trace = _diurnal_trace()
+    slo = SLOSpec(ttft_p99_ms=600.0, tpot_p99_ms=100.0)
+    sim = _autoscaler(StaticPolicy(min_replicas=2, max_replicas=2),
+                      initial_replicas=2, tick_s=1.0, cold_start_s=0.0)
+    auto = sim.run(trace, slo=slo)
+    plain = ClusterSimulator(SchedulerConfig(**_CFG), _lat,
+                             replicas=2).replay(trace, slo=slo)
+    assert auto.metrics.to_dict() == plain.to_dict()
+    assert auto.metrics.per_request == plain.per_request
+    assert auto.n_scale_ups == auto.n_scale_downs == 0
+    assert auto.peak_replicas == 2
+    # static fleet: chip-seconds is exactly replicas x horizon
+    assert auto.chip_seconds == pytest.approx(2 * auto.horizon_s)
+    assert auto.mean_replicas == pytest.approx(2.0)
+
+
+def test_instrumented_cluster_replay_matches_uninstrumented():
+    """The on_tick emission hook observes without perturbing: metrics
+    are identical with and without a recorder attached."""
+    trace = _diurnal_trace(n=120)
+    slo = SLOSpec(ttft_p99_ms=600.0, tpot_p99_ms=100.0)
+    rec = TimelineRecorder(tick_s=0.5, slo=slo)
+    sim = ClusterSimulator(SchedulerConfig(**_CFG), _lat, replicas=2)
+    instrumented = sim.replay(trace, slo=slo, tick_s=0.5,
+                              on_tick=rec.on_tick)
+    plain = ClusterSimulator(SchedulerConfig(**_CFG), _lat,
+                             replicas=2).replay(trace, slo=slo)
+    assert instrumented.to_dict() == plain.to_dict()
+    tl = rec.timeline()
+    assert tl.n_samples > 0
+    # the timeline tells the same completion story as the metrics
+    assert sum(s.completed for s in tl.samples) == instrumented.completed
+    assert sum(s.gen_tokens for s in tl.samples) \
+        == sum(r["gen_tokens"] for r in instrumented.per_replica)
+    assert all(s.provisioned_replicas == 2 for s in tl.samples)
+    assert all(r.state == "warm"
+               for s in tl.samples for r in s.replicas)
+
+
+def test_cluster_replay_tick_validation():
+    sim = ClusterSimulator(SchedulerConfig(**_CFG), _lat, replicas=1)
+    with pytest.raises(ValueError, match="tick_s"):
+        sim.replay(constant_trace(isl=8, osl=2, n_requests=2,
+                                  rate_rps=1.0), tick_s=0.0,
+                   on_tick=lambda t, engines: None)
+
+
+# ---------------------------------------------------------------------------
+# timeline artifact
+# ---------------------------------------------------------------------------
+
+def _timeline():
+    trace = _diurnal_trace(n=100)
+    slo = SLOSpec(ttft_p99_ms=600.0, tpot_p99_ms=100.0)
+    sim = _autoscaler(TargetQueueDepth(target_depth=3.0, max_replicas=3,
+                                       up_cooldown_s=1.0,
+                                       down_cooldown_s=4.0, window_s=3.0),
+                      latency=_slow_lat,
+                      initial_replicas=1, tick_s=0.5, cold_start_s=0.5)
+    return sim.run(trace, slo=slo).timeline
+
+
+def test_timeline_jsonl_roundtrip_exact_and_digest_stable():
+    tl = _timeline()
+    blob = tl.to_jsonl()
+    back = ClusterTimeline.from_jsonl(blob)
+    assert back == tl
+    assert back.to_jsonl() == blob
+    assert back.digest() == tl.digest()
+    header = json.loads(blob.splitlines()[0])
+    assert header["type"] == "header"
+    assert header["schema_version"] == 1
+    assert header["n_samples"] == tl.n_samples
+    assert header["meta"]["policy"]["name"] == "target_queue_depth"
+
+
+def test_timeline_save_load(tmp_path):
+    tl = _timeline()
+    path = str(tmp_path / "timeline.jsonl")
+    tl.save(path)
+    assert ClusterTimeline.load(path) == tl
+
+
+def test_timeline_rejects_malformed_input():
+    tl = _timeline()
+    with pytest.raises(ValueError, match="empty timeline"):
+        ClusterTimeline.from_jsonl("")
+    with pytest.raises(ValueError, match="header"):
+        ClusterTimeline.from_jsonl('{"type": "sample"}\n')
+    bad_version = tl.to_jsonl().replace('"schema_version": 1',
+                                        '"schema_version": 99')
+    with pytest.raises(ValueError, match="unsupported timeline"):
+        ClusterTimeline.from_jsonl(bad_version)
+    truncated = "\n".join(tl.to_jsonl().splitlines()[:-1]) + "\n"
+    with pytest.raises(ValueError, match="declares"):
+        ClusterTimeline.from_jsonl(truncated)
+    with pytest.raises(ValueError, match="increasing"):
+        ClusterTimeline(tick_s=1.0,
+                        samples=(tl.samples[1], tl.samples[0]))
+    with pytest.raises(ValueError, match="tick_s"):
+        ClusterTimeline(tick_s=0.0, samples=())
+
+
+def test_timeline_window_is_half_open():
+    tl = _timeline()
+    assert tl.n_samples >= 6
+    t = tl.samples[5].t_s
+    win = tl.window(t, 2 * tl.tick_s)
+    assert [s.t_s for s in win] == [tl.samples[4].t_s, tl.samples[5].t_s]
+    assert tl.duration_s == tl.samples[-1].t_s
+    assert tl.peak_provisioned() >= 1
+
+
+# ---------------------------------------------------------------------------
+# control loop mechanics
+# ---------------------------------------------------------------------------
+
+def test_simulator_validation():
+    pol = TargetQueueDepth(min_replicas=2, max_replicas=4)
+    with pytest.raises(ValueError, match="routing"):
+        _autoscaler(pol, routing="lunar")
+    with pytest.raises(ValueError, match="tick_s"):
+        _autoscaler(pol, tick_s=0.0)
+    with pytest.raises(ValueError, match="cold_start_s"):
+        _autoscaler(pol, cold_start_s=-1.0)
+    with pytest.raises(ValueError, match="chips_per_replica"):
+        _autoscaler(pol, chips_per_replica=0)
+    with pytest.raises(ValueError, match="bounds"):
+        _autoscaler(pol, initial_replicas=1)
+    # default initial size is the policy floor
+    assert _autoscaler(pol).initial_replicas == 2
+
+
+def test_cold_replicas_receive_no_traffic_until_warm():
+    """A spawned replica is billed immediately but only routed to after
+    cold_start_s: its timeline rows show routed == 0 while cold."""
+    trace = _diurnal_trace()
+    slo = SLOSpec(ttft_p99_ms=600.0, tpot_p99_ms=100.0)
+    run = _autoscaler(TargetQueueDepth(target_depth=3.0, max_replicas=2,
+                                       up_cooldown_s=1.0,
+                                       down_cooldown_s=1e9, window_s=3.0),
+                      latency=_slow_lat, initial_replicas=1, tick_s=0.5,
+                      cold_start_s=3.0).run(trace, slo=slo)
+    assert run.n_scale_ups >= 1
+    cold_rows = [r for s in run.timeline.samples for r in s.replicas
+                 if r.state == "cold"]
+    assert cold_rows, "expected the spawned replica to be sampled cold"
+    assert all(r.routed == 0 and r.completed == 0 for r in cold_rows)
+    warm_later = [r for s in run.timeline.samples for r in s.replicas
+                  if r.replica == cold_rows[0].replica
+                  and r.state == "warm"]
+    assert warm_later, "the cold replica must eventually warm up"
+    # billing starts at spawn, not at warm-up: chip-seconds exceed the
+    # sum of warm time alone
+    up = next(e for e in run.events if e["action"] == "scale_up")
+    assert run.chip_seconds > (run.horizon_s - up["t_s"] - 3.0)
+
+
+def test_scale_down_drains_before_removal():
+    """Draining replicas finish their outstanding work — no request is
+    lost to a scale-down — and retire only once empty."""
+    trace = _diurnal_trace()
+    slo = SLOSpec(ttft_p99_ms=600.0, tpot_p99_ms=100.0)
+    run = _autoscaler(TargetQueueDepth(target_depth=3.0, max_replicas=2,
+                                       up_cooldown_s=1.0,
+                                       down_cooldown_s=4.0, window_s=3.0),
+                      latency=_slow_lat, initial_replicas=2, tick_s=0.5,
+                      cold_start_s=0.5).run(trace, slo=slo)
+    assert run.n_scale_downs >= 1
+    m = run.metrics
+    assert m.completed + m.rejected + m.unfinished == m.n_requests
+    assert m.unfinished == 0
+    retire = [e for e in run.events if e["action"] == "retire"]
+    downs = [e for e in run.events if e["action"] == "scale_down"]
+    assert retire, "a drained replica must eventually retire"
+    drained = {i for e in downs for i in e["draining"]}
+    assert {e["replica"] for e in retire} <= drained
+    # every retire happens at-or-after its scale_down mark
+    first_down = {i: min(e["t_s"] for e in downs if i in e["draining"])
+                  for i in drained}
+    for e in retire:
+        assert e["t_s"] >= first_down[e["replica"]]
+    # draining rows appear in the timeline
+    states = {r.state for s in run.timeline.samples for r in s.replicas}
+    assert "draining" in states
+
+
+def test_cooldowns_rate_limit_scaling():
+    """The cooldown clocks gate *repeat* events: the first move in each
+    direction is free, then an effectively-infinite cooldown blocks all
+    further ones, while a short cooldown lets them through."""
+    trace = _diurnal_trace()
+    pol = dict(target_depth=3.0, max_replicas=4, window_s=3.0)
+    fast = _autoscaler(TargetQueueDepth(up_cooldown_s=1.0,
+                                        down_cooldown_s=2.0, **pol),
+                       latency=_slow_lat, initial_replicas=1, tick_s=0.5,
+                       cold_start_s=0.5).run(trace)
+    slow = _autoscaler(TargetQueueDepth(up_cooldown_s=1e9,
+                                        down_cooldown_s=1e9, **pol),
+                       latency=_slow_lat, initial_replicas=1, tick_s=0.5,
+                       cold_start_s=0.5).run(trace)
+    assert slow.n_scale_ups <= 1 and slow.n_scale_downs <= 1
+    assert fast.n_scale_ups > slow.n_scale_ups
+    # consecutive same-direction events respect the cooldown spacing
+    for run, up_cd, down_cd in ((fast, 1.0, 2.0),):
+        ups = [e["t_s"] for e in run.events if e["action"] == "scale_up"]
+        downs = [e["t_s"] for e in run.events
+                 if e["action"] == "scale_down"]
+        assert all(b - a >= up_cd for a, b in zip(ups, ups[1:]))
+        assert all(b - a >= down_cd for a, b in zip(downs, downs[1:]))
+
+
+def test_scale_steps_and_bounds_are_enforced():
+    trace = _diurnal_trace()
+    run = _autoscaler(TargetQueueDepth(target_depth=1.0, max_replicas=3,
+                                       scale_up_step=2, up_cooldown_s=0.0,
+                                       down_cooldown_s=1e9, window_s=2.0),
+                      latency=_slow_lat, initial_replicas=1, tick_s=0.5,
+                      cold_start_s=0.5).run(trace)
+    assert run.peak_replicas <= 3          # hard ceiling
+    ups = [e for e in run.events if e["action"] == "scale_up"]
+    assert any(e["to"] - e["from"] == 2 for e in ups)  # step respected
+    assert all(e["to"] - e["from"] <= 2 for e in ups)
+
+
+def test_truncated_run_is_flagged():
+    trace = _diurnal_trace(n=60)
+    run = _autoscaler(StaticPolicy(), initial_replicas=1,
+                      tick_s=0.5).run(trace, max_steps=5)
+    assert run.metrics.truncated is True
+    full = _autoscaler(StaticPolicy(), initial_replicas=1,
+                       tick_s=0.5).run(trace)
+    assert full.metrics.truncated is False
+
+
+def test_run_is_deterministic():
+    trace = _diurnal_trace()
+    slo = SLOSpec(ttft_p99_ms=600.0, tpot_p99_ms=100.0)
+
+    def go():
+        return _autoscaler(
+            TargetQueueDepth(target_depth=3.0, max_replicas=2,
+                             up_cooldown_s=1.0, down_cooldown_s=4.0,
+                             window_s=3.0),
+            latency=_slow_lat, initial_replicas=2, tick_s=0.5,
+            cold_start_s=0.5).run(trace, slo=slo)
+
+    a, b = go(), go()
+    assert json.dumps(a.to_dict(include_timeline=True), sort_keys=True) \
+        == json.dumps(b.to_dict(include_timeline=True), sort_keys=True)
+    assert a.timeline.digest() == b.timeline.digest()
+
+
+def test_report_to_dict_shapes():
+    run = _autoscaler(StaticPolicy(), initial_replicas=1,
+                      tick_s=1.0).run(_diurnal_trace(n=60))
+    d = run.to_dict()
+    assert set(d["timeline"]) == {"digest", "tick_s", "n_samples"}
+    json.dumps(d)                          # JSON-safe without the samples
+    full = run.to_dict(include_timeline=True)
+    assert len(full["timeline"]["samples"]) == run.timeline.n_samples
+    assert "chip-s" in run.summary()
+
+
+# ---------------------------------------------------------------------------
+# autoscale vs the static plan (stub runner: synthetic latency)
+# ---------------------------------------------------------------------------
+
+class _StubRunner:
+    """Just enough TaskRunner surface for build_autoscale_section: the
+    two simulator factories plus a fingerprintable session.db."""
+
+    class _DB:
+        def fingerprint(self):
+            return {"platform": "stub", "backend": "stub",
+                    "grid_hash": "0" * 16}
+
+    class _Session:
+        db = None
+
+    def __init__(self):
+        self.session = self._Session()
+        self.session.db = self._DB()
+
+    def cluster_simulator(self, dep, routing="round_robin",
+                          priority_admission=True, max_queue=100_000):
+        return ClusterSimulator(SchedulerConfig(**_CFG), _slow_lat,
+                                replicas=dep.replicas, routing=routing)
+
+    def autoscale_simulator(self, cand, policy, routing="round_robin",
+                            initial_replicas=None, tick_s=1.0,
+                            cold_start_s=5.0, priority_admission=True,
+                            max_queue=100_000):
+        return AutoscaleSimulator(
+            SchedulerConfig(**_CFG), _slow_lat, policy, routing=routing,
+            initial_replicas=initial_replicas,
+            chips_per_replica=cand.parallel.chips_per_instance,
+            tick_s=tick_s, cold_start_s=cold_start_s)
+
+
+_CAND = CandidateConfig(parallel=ParallelismConfig(tp=1), batch_size=4)
+_SAVE_SLO = SLOSpec(ttft_p99_ms=600.0, tpot_p99_ms=100.0)
+_SAVE_POLICY = TargetQueueDepth(target_depth=3.0, min_replicas=1,
+                                max_replicas=2, up_cooldown_s=1.0,
+                                down_cooldown_s=4.0, window_s=3.0)
+
+
+def test_autoscaler_beats_static_plan_on_diurnal_trace():
+    """The ISSUE acceptance property: on a seeded diurnal trace the
+    autoscaler spends strictly fewer chip-seconds than the static
+    min-chip plan while holding the attainment target."""
+    trace = _diurnal_trace()
+    runner = _StubRunner()
+    plan = plan_min_chips(runner, [_CAND], trace, _SAVE_SLO,
+                          ladder=(1, 2, 4))
+    assert plan.attained and plan.deployment.replicas == 2
+    section, run = build_autoscale_section(
+        runner, _CAND, trace, _SAVE_SLO, _SAVE_POLICY, ladder=(1, 2, 4),
+        tick_s=0.5, cold_start_s=0.5)
+    static = section["static"]
+    assert static["total_chips"] == 2
+    assert run.chip_seconds < static["chip_seconds"]
+    assert run.metrics.slo_attainment >= section["attain_target"]
+    sv = section["savings"]
+    assert sv["chip_seconds"] > 0 and sv["holds_attainment"]
+    assert sv["chip_seconds_pct"] == pytest.approx(
+        100.0 * sv["chip_seconds"] / static["chip_seconds"])
+    # the autoscaler started from the static plan's size
+    assert run.initial_replicas == 2
+    assert section["run"]["timeline"]["digest"] == run.timeline.digest()
+
+
+def test_build_section_without_attaining_static_plan():
+    """An unattainable ladder yields static=None and savings=None; the
+    autoscaled run still happens (from the policy floor)."""
+    trace = _diurnal_trace()
+    tight = SLOSpec(ttft_p99_ms=1.0, tpot_p99_ms=1.0)
+    section, run = build_autoscale_section(
+        _StubRunner(), _CAND, trace, tight, _SAVE_POLICY, ladder=(1,),
+        tick_s=0.5, cold_start_s=0.5)
+    assert section["static"] is None
+    assert section["savings"] is None
+    assert run.initial_replicas == _SAVE_POLICY.min_replicas
+    assert section["run"]["chip_seconds"] > 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: Configurator.autoscale (the acceptance path)
+# ---------------------------------------------------------------------------
+
+def test_configurator_autoscale_records_v5_section():
+    from repro.api import Configurator
+    cfg = (Configurator.for_model("llama3.1-8b")
+           .traffic(isl=256, osl=64)
+           .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+           .cluster(chips=8).backend("repro-jax").dtype("fp8")
+           .modes("aggregated"))
+    trace = generate_trace(TraceSpec(
+        n_requests=150,
+        arrivals=ArrivalSpec(kind="diurnal", rate_rps=30.0,
+                             period_s=20.0, amplitude=0.9),
+        tenants=(TenantSpec(name="chat", weight=1.0,
+                            lengths=LengthSpec(kind="lognormal",
+                                               isl=256, osl=64)),)),
+        seed=5)
+    slo = SLOSpec(ttft_p99_ms=1000, tpot_p99_ms=50)
+    report = cfg.autoscale(
+        trace, slo,
+        policy=TargetQueueDepth(target_depth=6.0, max_replicas=4,
+                                up_cooldown_s=1.0, down_cooldown_s=4.0,
+                                window_s=3.0),
+        ladder=(1, 2, 4), tick_s=0.5, cold_start_s=1.0)
+    a = report.autoscale
+    assert report.schema_version == 5
+    assert a["trace"]["digest"] == trace.digest()
+    assert a["candidate"]["describe"]
+    assert a["candidate"]["index"] >= 0
+    assert a["policy"]["name"] == "target_queue_depth"
+    assert a["run"]["chip_seconds"] > 0
+    # determinism across fresh sessions
+    again = (Configurator.for_model("llama3.1-8b")
+             .traffic(isl=256, osl=64)
+             .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+             .cluster(chips=8).backend("repro-jax").dtype("fp8")
+             .modes("aggregated")).autoscale(
+        trace, slo,
+        policy=TargetQueueDepth(target_depth=6.0, max_replicas=4,
+                                up_cooldown_s=1.0, down_cooldown_s=4.0,
+                                window_s=3.0),
+        ladder=(1, 2, 4), tick_s=0.5, cold_start_s=1.0)
+    assert again.autoscale == a
+
+
+def test_configurator_autoscale_validates_top_k():
+    from repro.api import Configurator
+    cfg = (Configurator.for_model("llama3.1-8b")
+           .traffic(isl=256, osl=64)
+           .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+           .cluster(chips=8).backend("repro-jax").dtype("fp8"))
+    with pytest.raises(ValueError, match="top_k"):
+        cfg.autoscale(_diurnal_trace(n=10), _SAVE_SLO, top_k=0)

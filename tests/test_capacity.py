@@ -201,6 +201,38 @@ def test_cluster_replay_respects_total_step_budget():
     assert m.steps <= 10
     assert m.unfinished > 0
     assert m.completed + m.rejected + m.unfinished == 64
+    assert m.truncated is True
+
+
+def test_cluster_truncated_false_on_full_replay():
+    trace = constant_trace(isl=32, osl=8, n_requests=12, rate_rps=50.0)
+    m = _cluster(2, max_batch=4, max_num_tokens=64).replay(trace)
+    assert m.unfinished == 0
+    assert m.truncated is False
+    assert m.to_dict()["truncated"] is False
+
+
+def test_iter_ladder_records_truncation_per_rung():
+    """A starved step budget marks evaluated rungs truncated; pruned
+    rungs keep the None placeholder."""
+    trace = _bursty_trace(rate=200.0, n=80)
+    cand = CandidateConfig(parallel=ParallelismConfig(tp=1), batch_size=4)
+    cfg = SchedulerConfig(max_batch=4, max_num_tokens=128)
+
+    class _Runner:
+        def cluster_simulator(self, dep, routing="round_robin", **kw):
+            return ClusterSimulator(cfg, _lat, replicas=dep.replicas,
+                                    routing=routing)
+
+    slo = SLOSpec(ttft_p99_ms=1e9, tpot_p99_ms=1e9)
+    starved = list(iter_ladder(_Runner(), [cand], trace, slo,
+                               ladder=(1,), max_steps=6))
+    assert starved[0]["truncated"] is True
+    assert starved[0]["metrics"]["truncated"] is True
+    full = list(iter_ladder(_Runner(), [cand], trace, slo, ladder=(1, 2)))
+    assert full[0]["truncated"] is False
+    pruned = [r for r in full if r["pruned"] is not None]
+    assert all(r["truncated"] is None for r in pruned)
 
 
 def test_cluster_rejects_on_per_replica_max_queue():
@@ -380,7 +412,7 @@ def test_plan_capacity_min_chip_attains_while_next_cheaper_misses():
     assert cap["slo"] == _E2E_SLO.to_dict()
     assert cap["database"]["platform"] == "tpu_v5e"
     assert cap["candidates"][0]["analytical_rank"] == 0
-    assert report.schema_version == 4
+    assert report.schema_version == 5
     assert "capacity plan" in report.summary()
 
 

@@ -97,7 +97,7 @@ def test_capacity_plan_json_schema_v4_report(trace_path, capsys, tmp_path):
                    "--save-report", saved, "--json"])
     report = json.loads(capsys.readouterr().out)
     assert rc == 0
-    assert report["schema_version"] == 4
+    assert report["schema_version"] == 5
     cap = report["capacity"]
     assert cap["plan"]["attained"] is True
     assert cap["plan"]["total_chips"] is not None

@@ -57,7 +57,8 @@ def test_capacity_section_structure(planned):
                         "candidates", "skipped"}
     for rec in cap["rungs"]:
         assert set(rec) == {"replicas", "candidate_rank", "deployment",
-                            "total_chips", "pruned", "attains", "metrics"}
+                            "total_chips", "pruned", "attains", "truncated",
+                            "metrics"}
         if rec["pruned"] is None:
             m = rec["metrics"]
             assert m["replicas"] == rec["replicas"]
@@ -73,7 +74,7 @@ def test_capacity_section_structure(planned):
 
 def test_v4_roundtrip_preserves_capacity(planned):
     blob = planned.to_json()
-    assert json.loads(blob)["schema_version"] == 4
+    assert json.loads(blob)["schema_version"] == 5
     back = SearchReport.from_json(blob)
     assert back == planned
     assert back.capacity == planned.capacity

@@ -1,0 +1,150 @@
+"""SearchReport schema v5: the ``autoscale`` section round-trips, the
+new v4 golden fixture migrates losslessly — its ``capacity`` and
+``workload_eval`` sections byte-for-byte — and every older golden still
+loads."""
+import json
+import os
+
+import pytest
+
+from repro.api import Configurator, SCHEMA_VERSION, SearchReport
+from repro.autoscale import (AUTOSCALE_SCHEMA_VERSION, TargetQueueDepth)
+from repro.workloads import (ArrivalSpec, LengthSpec, SLOSpec, TenantSpec,
+                             TraceSpec, generate_trace)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+V4_FIXTURE = os.path.join(FIXTURES, "search_report_v4.json")
+
+_SLO = SLOSpec(ttft_p99_ms=1000, tpot_p99_ms=50)
+
+
+def _configurator():
+    return (Configurator.for_model("llama3.1-8b")
+            .traffic(isl=256, osl=64)
+            .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+            .cluster(chips=8).backend("repro-jax").dtype("fp8")
+            .modes("aggregated"))
+
+
+def _diurnal_trace(seed=5):
+    return generate_trace(TraceSpec(
+        n_requests=120,
+        arrivals=ArrivalSpec(kind="diurnal", rate_rps=30.0, period_s=20.0,
+                             amplitude=0.9),
+        tenants=(TenantSpec(name="chat", weight=1.0,
+                            lengths=LengthSpec(kind="lognormal",
+                                               isl=256, osl=64)),)),
+        seed=seed)
+
+
+@pytest.fixture(scope="module")
+def autoscaled():
+    return _configurator().autoscale(
+        _diurnal_trace(), _SLO,
+        policy=TargetQueueDepth(target_depth=6.0, max_replicas=4,
+                                up_cooldown_s=1.0, down_cooldown_s=4.0,
+                                window_s=3.0),
+        ladder=(1, 2, 4), tick_s=0.5, cold_start_s=1.0)
+
+
+# ---------------------------------------------------------------------------
+# the v5 autoscale section
+# ---------------------------------------------------------------------------
+
+def test_autoscale_section_structure(autoscaled):
+    a = autoscaled.autoscale
+    assert a is not None
+    assert a["schema_version"] == AUTOSCALE_SCHEMA_VERSION
+    assert set(a) >= {"trace", "slo", "routing", "attain_target", "ladder",
+                      "tick_s", "cold_start_s", "policy", "database",
+                      "static", "run", "savings", "candidate", "skipped"}
+    run = a["run"]
+    assert run["policy"]["name"] == "target_queue_depth"
+    assert run["chip_seconds"] > 0
+    assert run["peak_replicas"] >= run["metrics"]["replicas"] >= 1 \
+        or run["peak_replicas"] >= 1
+    # the section references the timeline by identity, not by value
+    assert set(run["timeline"]) == {"digest", "tick_s", "n_samples"}
+    assert a["candidate"]["describe"]
+
+
+def test_v5_roundtrip_preserves_autoscale(autoscaled):
+    blob = autoscaled.to_json()
+    assert json.loads(blob)["schema_version"] == 5
+    back = SearchReport.from_json(blob)
+    assert back == autoscaled
+    assert back.autoscale == autoscaled.autoscale
+    assert back.to_json() == blob            # byte-stable second hop
+
+
+def test_summary_mentions_autoscale(autoscaled):
+    text = autoscaled.summary()
+    assert "autoscale" in text
+    assert autoscaled.autoscale["trace"]["digest"] in text
+
+
+def test_autoscale_composes_with_capacity(autoscaled):
+    """autoscale (v5) coexists with capacity (v4) in one report."""
+    cfg = _configurator()
+    report = cfg.plan_capacity(_diurnal_trace(), _SLO, ladder=(1, 2))
+    report = cfg.autoscale(_diurnal_trace(), _SLO, ladder=(1, 2),
+                           report=report)
+    assert report.capacity is not None
+    assert report.autoscale is not None
+    back = SearchReport.from_json(report.to_json())
+    assert back.capacity == report.capacity
+    assert back.autoscale == report.autoscale
+
+
+# ---------------------------------------------------------------------------
+# golden fixture: v4 migrates losslessly, capacity byte-for-byte
+# ---------------------------------------------------------------------------
+
+def test_v4_golden_fixture_migrates_losslessly():
+    with open(V4_FIXTURE) as f:
+        payload = json.load(f)
+    assert payload["schema_version"] == 4
+    rep = SearchReport.load(V4_FIXTURE)
+    assert rep.schema_version == SCHEMA_VERSION
+    assert rep.n_candidates == payload["search"]["n_candidates"]
+    assert rep.elapsed_s == payload["search"]["elapsed_s"]
+    assert rep.frontier_indices == payload["frontier"]
+    assert rep.best_index == payload["best"]
+    assert rep.fingerprint == payload["database"]
+    assert len(rep.projections) == len(payload["projections"])
+    for proj, raw in zip(rep.projections, payload["projections"]):
+        assert proj.tokens_per_s_per_chip == raw["tokens_per_s_per_chip"]
+        assert proj.config == raw["config"]
+    # v4 never carried an autoscale section: it defaults to None
+    assert rep.autoscale is None
+
+
+def test_v4_golden_migration_preserves_sections_bytes():
+    """The v4 fixture's capacity and workload_eval must survive the
+    v4→v5 migration byte-for-byte: identical JSON serialization, not
+    merely equal-ish."""
+    with open(V4_FIXTURE) as f:
+        payload = json.load(f)
+    assert payload["capacity"] is not None
+    assert payload["workload_eval"] is not None
+    rep = SearchReport.load(V4_FIXTURE)
+    reserialized = rep.to_dict()
+    for section in ("capacity", "workload_eval"):
+        assert json.dumps(reserialized[section], sort_keys=True) \
+            == json.dumps(payload[section], sort_keys=True), section
+    # and the whole report keeps round-tripping after migration
+    again = SearchReport.from_json(rep.to_json())
+    assert again == rep
+
+
+def test_all_golden_fixtures_still_load():
+    for name, version in (("search_report_v1.json", 1),
+                          ("search_report_v2.json", 2),
+                          ("search_report_v3.json", 3),
+                          ("search_report_v4.json", 4)):
+        path = os.path.join(FIXTURES, name)
+        with open(path) as f:
+            assert json.load(f)["schema_version"] == version
+        rep = SearchReport.load(path)
+        assert rep.schema_version == SCHEMA_VERSION
+        assert rep.autoscale is None

@@ -109,6 +109,39 @@ def test_bursty_mean_rate_invariant_to_burst_factor():
     assert max(rates.values()) < 2 * min(rates.values())
 
 
+def test_diurnal_modulates_arrival_density():
+    """With amplitude > 0 the peak half-cycle (sin > 0) must carry
+    visibly more arrivals than the trough half-cycle at a fixed seed."""
+    period = 50.0
+    t = generate_trace(TraceSpec(
+        n_requests=2000,
+        arrivals=ArrivalSpec(kind="diurnal", rate_rps=4.0,
+                             period_s=period, amplitude=0.8)), seed=23)
+    phases = [(r.arrival_s % period) / period for r in t.requests]
+    peak_half = sum(1 for p in phases if p < 0.5)
+    trough_half = len(phases) - peak_half
+    assert peak_half > 1.5 * trough_half, (peak_half, trough_half)
+
+
+def test_diurnal_amplitude_zero_reduces_to_poisson():
+    """amplitude=0 accepts every thinning candidate: arrivals are exactly
+    homogeneous Poisson at rate_rps, with one extra rng.random() burned
+    per arrival (the vestigial accept draw)."""
+    import random
+    rate, n, seed = 3.0, 120, 9
+    t = generate_trace(TraceSpec(
+        n_requests=n,
+        arrivals=ArrivalSpec(kind="diurnal", rate_rps=rate,
+                             amplitude=0.0)), seed=seed)
+    rng = random.Random(seed)
+    expect, clock = [], 0.0
+    for _ in range(n):
+        clock += rng.expovariate(rate)
+        rng.random()                       # the always-true accept draw
+        expect.append(clock)
+    assert [r.arrival_s for r in t.requests] == expect
+
+
 def test_spec_roundtrip():
     spec = TraceSpec(
         n_requests=10,
@@ -252,6 +285,20 @@ def test_replay_accepts_plain_record_sequences():
             for i in range(6)]
     m = _sim(max_batch=4, max_num_tokens=64).replay(reqs)
     assert m.completed == 6
+
+
+def test_replay_truncated_flag_set_only_by_budget():
+    trace = constant_trace(isl=32, osl=16, n_requests=30, rate_rps=100.0)
+    full = _sim(max_batch=4, max_num_tokens=256).replay(trace)
+    assert full.truncated is False
+    cut = _sim(max_batch=4, max_num_tokens=256).replay(trace, max_steps=5)
+    assert cut.truncated is True
+    assert cut.unfinished > 0
+    # a budget that exactly covers the work is not a truncation
+    exact = _sim(max_batch=4, max_num_tokens=256).replay(
+        trace, max_steps=full.steps)
+    assert exact.completed == 30
+    assert exact.truncated is False
 
 
 def test_replay_metrics_to_dict_is_json_safe():
