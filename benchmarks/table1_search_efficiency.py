@@ -5,16 +5,28 @@ three models, against two baselines: (a) our own step-accurate simulator
 as the exhaustive-evaluation stand-in (measured on this machine), and
 (b) the paper's reported GPU-benchmarking medians (4 / 5.4 / 11.5 min per
 config on H100) for the speedup column.
+
+``--batched`` runs the vectorized-pricing arm instead: for each model's
+whole candidate space it times the scalar per-operator walk
+(``PerfDatabase.sequence_latency`` over pre-built op lists, memos cold)
+against the fused batch kernel (``sequence_latency_batch`` over the
+pre-encoded ``OpBatch``), checks float parity and frontier identity of
+the two search paths, and gates on >=50x kernel speedup (>=10x under
+``--quick``).  Encode time is reported separately — the comparison
+boundary is pricing, with op-list construction excluded from both arms.
 """
 from __future__ import annotations
 
 import statistics
 import time
 
+import numpy as np
+
 from benchmarks.common import Timer, sim_latency_fn, write_csv
 from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
                         WorkloadDescriptor)
 from repro.core.config import CandidateConfig, ParallelismConfig, RuntimeFlags
+from repro.core.decompose import encode_iteration_batch, iteration_ops
 from repro.core.session import InferenceSession
 from repro.serving.scheduler import SchedulerConfig
 from repro.serving.sim import ServingSimulator
@@ -73,5 +85,125 @@ def run(quick: bool = False):
                 float(r[3]) for r in rows)}
 
 
+def _workload(model, dtype):
+    return WorkloadDescriptor(
+        model=model, isl=1024, osl=256,
+        sla=SLA(ttft_ms=2000, min_tokens_per_s_user=10),
+        cluster=ClusterSpec(n_chips=64), backend="repro-jax", dtype=dtype)
+
+
+def _record_atoms(w, db):
+    """Every (cfg, par, spec) pricing atom the search evaluates, in order."""
+    runner = TaskRunner(w, db)
+    session, cfg = runner.session, runner.session.cfg
+    items = []
+    for cand in runner.iter_candidates():
+        mem = session._mem_ok(cand)
+        if not mem[0]:
+            continue
+        for mode in w.modes:
+            fn = (session.evaluate_static if mode == "static"
+                  else session.evaluate_aggregated)
+            _, rec = session.record_specs(
+                lambda _f=fn, _c=cand, _m=mem:
+                _f(_c, _mem=_m, _plan_only=True))
+            items.extend((cfg, par, spec) for par, spec, _fl in rec)
+    return items
+
+
+def _frontier_key(result):
+    return ([(p.mode, p.config.get("describe")) for p in result.frontier],
+            result.best.config.get("describe") if result.best else None)
+
+
+def run_batched(quick: bool = False):
+    """Vectorized-pricing arm: parity + speedup of the fused batch kernel."""
+    rows = []
+    speedups = []
+    models = MODELS[:1] if quick else MODELS
+    for model, dtype, _gpu_min in models:
+        w = _workload(model, dtype)
+        db = PerfDatabase("tpu_v5e", "repro-jax")
+
+        # the two search paths must agree exactly on what they find
+        scalar_res = TaskRunner(w, db).run(batched=False)
+        with Timer() as tb:
+            batched_res = TaskRunner(w, db).run(batched=True)
+        if _frontier_key(scalar_res) != _frontier_key(batched_res):
+            raise RuntimeError(f"{model}: batched search frontier diverged "
+                               "from scalar")
+
+        # pricing microbenchmark: same atoms, both arms, min over reps
+        items = _record_atoms(w, db)
+        with Timer() as te:
+            batch = encode_iteration_batch(items, alpha=w.moe_alpha,
+                                           backend=w.backend, dtype=w.dtype)
+        out = db.sequence_latency_batch(batch)      # warms any lazy grids
+        t_kernel = min(
+            (lambda t0: (db.sequence_latency_batch(batch),
+                         time.perf_counter() - t0)[1])(time.perf_counter())
+            for _ in range(5 if quick else 20))
+
+        op_lists = [iteration_ops(c, p, s, backend=w.backend, dtype=w.dtype,
+                                  alpha=w.moe_alpha) for c, p, s in items]
+        db2 = PerfDatabase(db.platform.name, w.backend, use_grid=True)
+        for ol in op_lists:
+            db2.sequence_latency(ol)                # warm every grid
+        t_scalar = float("inf")
+        for _ in range(3 if quick else 5):
+            db2._memo.clear()
+            db2._seq_memo.clear()
+            t0 = time.perf_counter()
+            ref = [db2.sequence_latency(ol) for ol in op_lists]
+            t_scalar = min(t_scalar, time.perf_counter() - t0)
+        ref = np.asarray(ref)
+        maxrel = float(np.max(np.abs(out - ref) / np.maximum(ref, 1e-30)))
+        if maxrel > 1e-9:
+            raise RuntimeError(f"{model}: batch kernel diverged from scalar "
+                               f"pricing (max rel {maxrel:.2e})")
+
+        n = len(items)
+        speedup = t_scalar / t_kernel
+        speedups.append(speedup)
+        rows.append([model, n, batch.n_rows,
+                     f"{t_scalar / n * 1e6:.2f}",
+                     f"{t_kernel / n * 1e6:.3f}",
+                     f"{te.seconds / n * 1e6:.2f}",
+                     f"{speedup:.1f}x",
+                     f"{tb.seconds:.2f}",
+                     f"{maxrel:.2e}"])
+        print(f"  {model}: {n} atoms ({batch.n_rows} rows) "
+              f"scalar {t_scalar / n * 1e6:.1f}us -> kernel "
+              f"{t_kernel / n * 1e6:.2f}us per atom "
+              f"({speedup:.1f}x, encode {te.seconds / n * 1e6:.1f}us, "
+              f"max rel {maxrel:.1e}); batched search {tb.seconds:.2f}s")
+    path = write_csv(
+        "table1_batched_pricing.csv",
+        ["model", "n_atoms", "n_rows", "scalar_us_per_atom",
+         "kernel_us_per_atom", "encode_us_per_atom", "pricing_speedup",
+         "batched_search_s", "max_rel_diff"],
+        rows)
+    gate = 10.0 if quick else 50.0
+    if min(speedups) < gate:
+        raise RuntimeError(
+            f"batched pricing speedup {min(speedups):.1f}x below the "
+            f"{gate:.0f}x gate")
+    return {"csv": path, "pricing_speedup_min": min(speedups),
+            "pricing_speedup_median": statistics.median(speedups)}
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batched", action="store_true",
+                    help="run the vectorized-pricing arm")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    if args.batched:
+        run_batched(quick=args.quick)
+    else:
+        run(quick=args.quick)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -234,4 +234,36 @@ print(f"ok: {run['chip_seconds']:.0f} chip-s autoscaled vs "
 PY
 rm -rf "$asc_dir"
 
+echo "=== smoke: batched pricing matches the scalar frontier, >=10x kernel ==="
+# Quick arm of the Table-1 batched benchmark: runs the scalar and batched
+# search paths on one model, asserts frontier identity + float parity and
+# a >=10x pricing-kernel speedup (the full >=50x gate runs with the
+# benchmark suite, not in CI).
+PYTHONPATH=src:. python benchmarks/table1_search_efficiency.py \
+    --batched --quick
+
+echo "=== smoke: REPRO_BATCHED_PRICING=0/1 agree on the CLI ranking ==="
+bp_dir=$(mktemp -d)
+for b in 0 1; do
+    REPRO_BATCHED_PRICING=$b PYTHONPATH=src python -m repro.core.cli search \
+        --model qwen3-32b --isl 512 --osl 64 --chips 8 --json \
+      > "$bp_dir/search$b.json"
+done
+PYTHONPATH=src python - "$bp_dir" <<'PY'
+import json
+import sys
+
+d = sys.argv[1]
+scalar = json.load(open(f"{d}/search0.json"))
+batched = json.load(open(f"{d}/search1.json"))
+key = lambda r: [(p["mode"], p["config"].get("describe"))
+                 for p in r["projections"]]
+assert key(scalar) == key(batched), \
+    "scalar and batched searches rank candidates differently"
+assert scalar["best"] == batched["best"], (scalar["best"], batched["best"])
+print(f"ok: {len(scalar['projections'])} projections identical, "
+      f"best index {scalar['best']}")
+PY
+rm -rf "$bp_dir"
+
 echo "=== ci passed ==="

@@ -206,24 +206,30 @@ class Configurator:
     # -- operations ----------------------------------------------------------
     def search_iter(self, sweep_flags: bool = False,
                     keep_all_disagg: bool = False,
-                    policies: Sequence[Policy] = ()) -> "StreamingSearch":
+                    policies: Sequence[Policy] = (),
+                    batched: Optional[bool] = None) -> "StreamingSearch":
         """Start an incremental search: a :class:`StreamingSearch` that
         yields one :class:`~repro.api.policies.SearchEvent` per priced
         projection, maintains the Pareto frontier online, consults
         ``policies`` after every yield, and materializes a
         :class:`SearchReport` via ``.report()`` whenever iteration stops
         (drained, policy-stopped, or abandoned).
+
+        ``batched`` selects the fused batch-pricing kernel (``None``
+        defers to ``REPRO_BATCHED_PRICING``); both settings yield the
+        same event stream — see ``TaskRunner.iter_search``.
         """
         w = self.workload()
         runner = TaskRunner(w, session=self._session_for(w))
         return StreamingSearch(workload=w, runner=runner, db=self.database(),
                                sweep_flags=sweep_flags,
                                keep_all_disagg=keep_all_disagg,
-                               policies=policies)
+                               policies=policies, batched=batched)
 
     def search(self, sweep_flags: bool = False, keep_all_disagg: bool = False,
                generate_launch: bool = True,
-               policies: Sequence[Policy] = ()) -> SearchReport:
+               policies: Sequence[Policy] = (),
+               batched: Optional[bool] = None) -> SearchReport:
         """Run the configuration search and return a SearchReport.
 
         Implemented as "drain :meth:`search_iter`": batch and streaming
@@ -234,7 +240,7 @@ class Configurator:
         """
         stream = self.search_iter(sweep_flags=sweep_flags,
                                   keep_all_disagg=keep_all_disagg,
-                                  policies=policies)
+                                  policies=policies, batched=batched)
         for _event in stream:
             pass
         return stream.report(generate_launch=generate_launch)
@@ -555,7 +561,8 @@ class StreamingSearch:
 
     def __init__(self, workload: WorkloadDescriptor, runner: TaskRunner,
                  db: PerfDatabase, sweep_flags: bool, keep_all_disagg: bool,
-                 policies: Sequence[Policy] = ()):
+                 policies: Sequence[Policy] = (),
+                 batched: Optional[bool] = None):
         self.workload = workload
         self.projections: List[Projection] = []
         self.n_valid = 0
@@ -573,7 +580,8 @@ class StreamingSearch:
         # deadline_s) can preempt the non-yielding disaggregated phase
         self._progress.abort = self._check_oob_policies
         self._inner = runner.iter_search(sweep_flags, keep_all_disagg,
-                                         progress=self._progress)
+                                         progress=self._progress,
+                                         batched=batched)
 
     def _check_oob_policies(self) -> bool:
         elapsed = time.perf_counter() - self._t0

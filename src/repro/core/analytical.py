@@ -15,7 +15,7 @@ baseline standing in for Vidur/APEX-style simulators.
 """
 from __future__ import annotations
 
-import math
+import numpy as np
 
 from repro.core import operators as ops
 from repro.core.hardware import Platform
@@ -34,21 +34,24 @@ GATHER_EFF = 0.55     # embedding/gather HBM efficiency
 VPU_FRACTION = 1 / 16  # elementwise throughput relative to MXU peak
 
 
-def _align_eff(dim: int, tile: int) -> float:
-    padded = math.ceil(dim / tile) * tile
+def _align_eff(dim, tile):
+    # np.ceil (not math.ceil) so the curve prices whole coordinate arrays
+    # in one shot during vectorized grid collection
+    padded = np.ceil(dim / tile) * tile
     return dim / padded
 
 
-def gemm_eff(m: int, n: int, k: int, tile_m: int = MXU_TILE_M,
-             tile_n: int = MXU_TILE_N) -> float:
+def gemm_eff(m, n, k, tile_m: int = MXU_TILE_M, tile_n: int = MXU_TILE_N):
     eff = BASE_GEMM_EFF
-    eff *= _align_eff(max(m, 1), tile_m)
-    eff *= _align_eff(max(n, 1), tile_n)
-    eff *= _align_eff(max(k, 1), tile_n)
-    # very skinny K or N can't keep the compute units busy (scaled to tile)
+    eff = eff * _align_eff(np.maximum(m, 1), tile_m)
+    eff = eff * _align_eff(np.maximum(n, 1), tile_n)
+    eff = eff * _align_eff(np.maximum(k, 1), tile_n)
+    # very skinny K or N can't keep the compute units busy (scaled to tile);
+    # the raw (unclamped) k/n feed the skinny term, matching the scalar model
     skinny = 4.0 * tile_n
-    eff *= min(1.0, (k / skinny) ** 0.25, (n / skinny) ** 0.25)
-    return max(eff, 0.02)
+    eff = eff * np.minimum(1.0, np.minimum((k / skinny) ** 0.25,
+                                           (n / skinny) ** 0.25))
+    return np.maximum(eff, 0.02)
 
 
 # ---------------------------------------------------------------------------
@@ -59,7 +62,8 @@ def _gemm(p: Platform, g: ops.GEMM) -> float:
     peak = p.matmul_peak(g.dtype)
     t_c = g.flops() / (peak * gemm_eff(g.m, g.n, g.k, p.tile_m, p.tile_n))
     t_m = g.bytes() / (p.hbm_bw * HBM_STREAM_EFF)
-    return max(t_c, t_m) + p.launch_overhead
+    # float(): keep scalar callers (and JSON artifacts) on python floats
+    return float(max(t_c, t_m) + p.launch_overhead)
 
 
 def _attention(p: Platform, a: ops.Attention) -> float:
@@ -67,7 +71,7 @@ def _attention(p: Platform, a: ops.Attention) -> float:
         eff = FLASH_EFF * _align_eff(a.head_dim, MXU_TILE_N)
         t_c = a.flops() / (p.peak_flops_bf16 * eff)
         t_m = a.bytes() / (p.hbm_bw * HBM_STREAM_EFF)
-        return max(t_c, t_m) + 2 * p.launch_overhead
+        return float(max(t_c, t_m) + 2 * p.launch_overhead)
     # decode: stream the KV cache
     t_m = a.bytes() / (p.hbm_bw * DECODE_ATTN_BW_EFF)
     t_c = a.flops() / (p.peak_flops_bf16 * 0.35)   # skinny matmuls
@@ -76,7 +80,7 @@ def _attention(p: Platform, a: ops.Attention) -> float:
         # latent decompression matmuls
         t_c *= 1.6
         extra += p.launch_overhead
-    return max(t_m, t_c) + extra
+    return float(max(t_m, t_c) + extra)
 
 
 def _moe(p: Platform, m: ops.MoEOp) -> float:
@@ -86,7 +90,7 @@ def _moe(p: Platform, m: ops.MoEOp) -> float:
     t_c = 3 * g.flops() / (peak * gemm_eff(g.m, g.n, g.k, p.tile_m, p.tile_n))
     t_m = m.bytes() / (p.hbm_bw * HBM_STREAM_EFF)
     # dispatch/scatter bookkeeping
-    return max(t_c, t_m) + 3 * p.launch_overhead
+    return float(max(t_c, t_m) + 3 * p.launch_overhead)
 
 
 def _recurrent(p: Platform, r: ops.RecurrentOp) -> float:
@@ -143,6 +147,98 @@ _DISPATCH = {
 def latency(platform: Platform, op) -> float:
     """Calibrated latency estimate (the profiling stand-in)."""
     return _DISPATCH[type(op)](platform, op)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized table builders — whole-grid collection without per-cell loops
+# ---------------------------------------------------------------------------
+# Each builder evaluates the matching per-operator latency model over a full
+# coordinate mesh at once, mirroring the scalar expressions term for term
+# (same operation order and the same raw-vs-clamped operands) so a grid built
+# here is numerically identical to one filled by per-cell ``latency`` calls.
+
+def gemm_table(p: Platform, M, N, K, dtype: str = "bf16") -> np.ndarray:
+    m, n, k = np.meshgrid(np.asarray(M, dtype=np.float64),
+                          np.asarray(N, dtype=np.float64),
+                          np.asarray(K, dtype=np.float64), indexing="ij")
+    b = ops.BYTES[dtype]
+    flops = 2.0 * m * n * k
+    nbytes = b * (m * k + k * n + m * n)
+    t_c = flops / (p.matmul_peak(dtype)
+                   * gemm_eff(m, n, k, p.tile_m, p.tile_n))
+    t_m = nbytes / (p.hbm_bw * HBM_STREAM_EFF)
+    return np.maximum(t_c, t_m) + p.launch_overhead
+
+
+def attn_prefill_table(p: Platform, a: ops.Attention, Q, KV) -> np.ndarray:
+    q, kv = np.meshgrid(np.asarray(Q, dtype=np.float64),
+                        np.asarray(KV, dtype=np.float64), indexing="ij")
+    avg_kv = np.minimum(a.q_offset + (q + 1) / 2.0, kv)
+    flops = 4.0 * a.batch * a.heads * q * avg_kv * a.head_dim
+    kv_row = 576 if a.kind == "mla" else 2 * a.kv_heads * a.head_dim
+    io = a.batch * q * a.heads * a.head_dim * 2
+    cache = a.batch * kv * kv_row
+    nbytes = ops.BYTES[a.dtype] * (io + cache)
+    eff = FLASH_EFF * _align_eff(a.head_dim, MXU_TILE_N)
+    t_c = flops / (p.peak_flops_bf16 * eff)
+    t_m = nbytes / (p.hbm_bw * HBM_STREAM_EFF)
+    return np.maximum(t_c, t_m) + 2 * p.launch_overhead
+
+
+def attn_decode_table(p: Platform, a: ops.Attention, B, KV) -> np.ndarray:
+    bt, kv = np.meshgrid(np.asarray(B, dtype=np.float64),
+                         np.asarray(KV, dtype=np.float64), indexing="ij")
+    flops = 4.0 * bt * a.heads * kv * a.head_dim
+    kv_row = 576 if a.kind == "mla" else 2 * a.kv_heads * a.head_dim
+    io = bt * a.q_len * a.heads * a.head_dim * 2
+    cache = bt * kv * kv_row
+    nbytes = ops.BYTES[a.dtype] * (io + cache)
+    t_m = nbytes / (p.hbm_bw * DECODE_ATTN_BW_EFF)
+    t_c = flops / (p.peak_flops_bf16 * 0.35)
+    extra = 2 * p.launch_overhead
+    if a.kind == "mla":
+        t_c = t_c * 1.6
+        extra += p.launch_overhead
+    return np.maximum(t_m, t_c) + extra
+
+
+def moe_table(p: Platform, m: ops.MoEOp, TOK) -> np.ndarray:
+    rt = np.asarray(TOK, dtype=np.float64)
+    toks = np.maximum(rt, 1.0)
+    t_c = (3 * (2.0 * toks * m.d_ff * m.d_model)
+           / (p.matmul_peak(m.dtype)
+              * gemm_eff(toks, m.d_ff, m.d_model, p.tile_m, p.tile_n)))
+    w = 3 * (m.num_experts / m.ep) * m.d_model * m.d_ff
+    acts = rt * (2 * m.d_model + 2 * m.d_ff)
+    nbytes = ops.BYTES[m.dtype] * (w + acts)
+    t_m = nbytes / (p.hbm_bw * HBM_STREAM_EFF)
+    return np.maximum(t_c, t_m) + 3 * p.launch_overhead
+
+
+def recurrent_table(p: Platform, r: ops.RecurrentOp, TOK) -> np.ndarray:
+    seq = np.asarray(TOK, dtype=np.float64)
+    per_tok = 8.0 * r.width
+    dh = r.width // max(r.heads, 1)
+    if r.kind == "mlstm":
+        per_tok += 4.0 * r.heads * dh * dh
+    if r.kind == "slstm":
+        per_tok += 2.0 * r.heads * dh * 4 * dh
+    flops = r.batch * seq * per_tok
+    state = r.width + (r.heads * dh * dh if r.kind == "mlstm" else 0)
+    nbytes = ops.BYTES[r.dtype] * r.batch * (seq * 4 * r.width
+                                             + 2 * state * 4)
+    t_c = flops / (p.peak_flops_bf16 * VPU_FRACTION)
+    t_m = nbytes / (p.hbm_bw * 0.7)
+    return np.maximum(t_c, t_m) + p.launch_overhead
+
+
+def comm_table(p: Platform, kind: str, n_chips: int, inter_pod: bool,
+               B) -> np.ndarray:
+    # _comm's arithmetic is shape-polymorphic: an array bytes_per_chip
+    # prices the whole axis in one call, guaranteeing scalar parity
+    c = ops.Comm(kind=kind, bytes_per_chip=np.asarray(B, dtype=np.float64),
+                 n_chips=n_chips, inter_pod=inter_pod)
+    return _comm(p, c)
 
 
 def sol_latency(platform: Platform, op) -> float:

@@ -17,8 +17,11 @@ the inference engine backend"):
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import operators as ops
@@ -84,10 +87,16 @@ def _moe_ops(cfg, par, T, dtype, alpha, backend, seed) -> List:
     tp, ep = par.tp, min(par.ep, par.tp)
     b = ops.BYTES[dtype]
     out: List = [ops.GEMM(T, cfg.num_experts, cfg.d_model, dtype)]  # router
-    # dispatch + combine
-    payload = T * cfg.top_k * cfg.d_model * b / max(ep, 1)
+    # dispatch + combine.  Comm convention (see ops.Comm): gather/scatter
+    # collectives take the FULL logical token tensor — the collective model
+    # applies the (n-1)/n sharding itself — while all-to-all takes the
+    # per-chip payload each rank actually sends.
+    a2a = backend in EP_A2A_BACKENDS
+    payload = T * cfg.top_k * cfg.d_model * b
+    if a2a:
+        payload = payload / max(ep, 1)
     if ep > 1:
-        kind = "all_to_all" if backend in EP_A2A_BACKENDS else "all_gather"
+        kind = "all_to_all" if a2a else "all_gather"
         out.append(ops.Comm(kind, payload, ep))
     hot = powerlaw.hot_rank_tokens(T, cfg.top_k, cfg.num_experts, ep,
                                    alpha, seed)
@@ -101,7 +110,7 @@ def _moe_ops(cfg, par, T, dtype, alpha, backend, seed) -> List:
         out += _dense_ffn_ops(cfg, par, T, dtype,
                               d_ff=cfg.n_shared_experts * cfg.moe_d_ff)[:-1]
     if ep > 1:
-        kind = "all_to_all" if backend in EP_A2A_BACKENDS else "reduce_scatter"
+        kind = "all_to_all" if a2a else "reduce_scatter"
         out.append(ops.Comm(kind, payload, ep))
     if tp > 1:
         out.append(ops.Comm("all_reduce", T * cfg.d_model * b, tp))
@@ -256,12 +265,337 @@ def iteration_ops(cfg: ModelConfig, par: ParallelismConfig, spec: StepSpec,
         v_loc = _ceil(cfg.vocab_size, par.tp)
         out.append((ops.GEMM(n_emit, v_loc, cfg.d_model, dtype), 1))
         if par.tp > 1:
-            out.append((ops.Comm("all_gather", n_emit * v_loc * 4, par.tp), 1))
+            # full fp32 logits tensor (tp·v_loc covers the padded vocab) —
+            # all_gather takes the full tensor per the Comm convention
+            out.append((ops.Comm("all_gather", n_emit * v_loc * par.tp * 4,
+                                 par.tp), 1))
 
     # pipeline-parallel inter-stage transfers
     if par.pp > 1:
         out.append((ops.Comm("p2p", T * cfg.d_model * b, 2), par.pp - 1))
     return out
+
+
+# ---------------------------------------------------------------------------
+# batch encoding — struct-of-arrays lowering for
+# PerfDatabase.sequence_latency_batch (the fused whole-space pricing kernel)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GridRows:
+    """All rows of one candidate batch that price through one OpGrid.
+
+    Coordinates are deduplicated at encode time: ``coords`` holds only
+    the U distinct query points, and ``ridx`` maps each of the R logical
+    rows back to its coordinate.  Candidate spaces revisit the same
+    shapes constantly (2.5-6.5x duplication on the Table-1 spaces), so
+    the interpolation kernel runs on U rows while the per-item
+    ``bincount`` still sees all R.
+    """
+    rep_op: object          # representative operator — resolves/builds the grid
+    family: str             # calibration family (ops.op_family name)
+    coords: np.ndarray      # [U, ndim] float64 distinct grid query coordinates
+    mult: np.ndarray        # [R] float64 multiplicity (layer count × batch fold)
+    item: np.ndarray        # [R] int64 owning item index
+    ridx: np.ndarray        # [R] int64 index into coords for each logical row
+
+
+SOL_MEM = 0                 # HBM stream (MemOp): value = bytes moved
+SOL_EMBED = 1               # embedding gather:   value = bytes moved
+
+
+@dataclasses.dataclass
+class SolRows:
+    """Speed-of-light rows — the unprofiled ops the scalar path sends to
+    ``analytical.latency`` directly (no grid, no calibration correction)."""
+    kind: np.ndarray        # [S] int8 (SOL_MEM | SOL_EMBED)
+    value: np.ndarray       # [S] float64 bytes moved
+    mult: np.ndarray        # [S] float64 multiplicity
+    item: np.ndarray        # [S] int64 owning item index
+
+
+@dataclasses.dataclass
+class OpBatch:
+    """One candidate batch, lowered to per-grid stacked arrays."""
+    n_items: int
+    grid_rows: List[GridRows]
+    sol_rows: Optional[SolRows]
+
+    @property
+    def n_rows(self) -> int:
+        rows = sum(len(g.item) for g in self.grid_rows)
+        return rows + (len(self.sol_rows.item) if self.sol_rows else 0)
+
+
+class _BatchAcc:
+    """Mutable row accumulator the per-item encoders append into."""
+    __slots__ = ("groups", "_sol")
+
+    def __init__(self):
+        self.groups: Dict[Tuple, Tuple] = {}
+        self._sol = ([], [], [], [])            # kind, value, mult, item
+
+    def gemm(self, dtype, m, n, k, mult, it):
+        key = ("gemm", dtype)
+        g = self.groups.get(key)
+        if g is None:
+            g = (ops.GEMM(1, 1, 1, dtype), "gemm", [], [], [])
+            self.groups[key] = g
+        g[2].append((m, n, k)); g[3].append(mult); g[4].append(it)
+
+    def attn(self, phase, akind, h_loc, kv_loc, hd, dtype, coords, mult, it):
+        key = ("attn", phase, akind, h_loc, kv_loc, hd, dtype)
+        g = self.groups.get(key)
+        if g is None:
+            rep = ops.Attention(phase, 1, 1, 1, h_loc, kv_loc, hd,
+                                akind, 0, dtype)
+            fam = "attn_prefill" if phase == "prefill" else "attn_decode"
+            g = (rep, fam, [], [], [])
+            self.groups[key] = g
+        g[2].append(coords); g[3].append(mult); g[4].append(it)
+
+    def moe(self, d_model, d_ff, n_exp, top_k, ep, dtype, coords, mult, it):
+        key = ("moe", d_model, d_ff, n_exp, ep, dtype)
+        g = self.groups.get(key)
+        if g is None:
+            rep = ops.MoEOp(tokens=1, d_model=d_model, d_ff=d_ff,
+                            num_experts=n_exp, top_k=top_k, ep=ep,
+                            dtype=dtype)
+            g = (rep, "moe", [], [], [])
+            self.groups[key] = g
+        g[2].append(coords); g[3].append(mult); g[4].append(it)
+
+    def rec(self, rkind, width, heads, dtype, coords, mult, it):
+        key = ("recurrent", rkind, width, heads, dtype)
+        g = self.groups.get(key)
+        if g is None:
+            g = (ops.RecurrentOp(rkind, 1, 1, width, heads, dtype),
+                 "recurrent", [], [], [])
+            self.groups[key] = g
+        g[2].append(coords); g[3].append(mult); g[4].append(it)
+
+    def comm(self, ckind, n_chips, nbytes, mult, it):
+        if n_chips <= 1:            # scalar path prices these at exactly 0
+            return
+        key = ("comm", ckind, n_chips)
+        g = self.groups.get(key)
+        if g is None:
+            g = (ops.Comm(ckind, 1.0, n_chips), "comm", [], [], [])
+            self.groups[key] = g
+        g[2].append((max(nbytes, 1.0),)); g[3].append(mult); g[4].append(it)
+
+    def sol(self, kind, value, mult, it):
+        s = self._sol
+        s[0].append(kind); s[1].append(value); s[2].append(mult); s[3].append(it)
+
+
+def _enc_attn(cfg, par, spec, dtype, window, mb, count, T, it, acc):
+    tp = par.tp
+    hd = cfg.head_dim
+    h_loc = _ceil(cfg.num_heads, tp)
+    kv_loc = _ceil(cfg.num_kv_heads, tp) if cfg.num_kv_heads >= tp else 1
+    b = ops.BYTES[dtype]
+    d = cfg.d_model
+    akind = cfg.attention_kind
+    acc.gemm(dtype, T, (h_loc + 2 * kv_loc) * hd, d, count, it)
+    prefill = spec.prefill[:: max(mb, 1)] if mb > 1 else spec.prefill
+    if prefill:
+        # RLE over identical chunks: each run is one row with multiplicity
+        # run_length × count (mode specs repeat the same chunk per request)
+        run, run_n = prefill[0], 0
+        for ch in prefill:
+            if ch == run:
+                run_n += 1
+                continue
+            clen, past = run
+            kv = past + clen
+            if window:
+                kv = min(kv, window)
+            acc.attn("prefill", akind, h_loc, kv_loc, hd, dtype,
+                     (clen, max(kv, 1)), run_n * count, it)
+            run, run_n = ch, 1
+        clen, past = run
+        kv = past + clen
+        if window:
+            kv = min(kv, window)
+        acc.attn("prefill", akind, h_loc, kv_loc, hd, dtype,
+                 (clen, max(kv, 1)), run_n * count, it)
+    dec = spec.decode[:: mb] if mb > 1 else spec.decode
+    if dec:
+        kv = int(sum(dec) / len(dec))
+        if window:
+            kv = min(kv, window)
+        acc.attn("decode", akind, h_loc, kv_loc, hd, dtype,
+                 (len(dec), max(kv, 1)), count, it)
+        acc.sol(SOL_MEM, len(dec) * 2 * kv_loc * hd * b, count, it)
+    acc.gemm(dtype, T, d, h_loc * hd, count, it)
+    if tp > 1:
+        acc.comm("all_reduce", tp, T * d * b, count, it)
+
+
+def _enc_ffn(cfg, par, dtype, count, T, it, acc, d_ff=None):
+    tp = par.tp
+    d = cfg.d_model
+    f_loc = _ceil(d_ff or cfg.d_ff, tp)
+    acc.gemm(dtype, T, 2 * f_loc, d, count, it)
+    acc.gemm(dtype, T, d, f_loc, count, it)
+    if tp > 1:
+        acc.comm("all_reduce", tp, T * d * ops.BYTES[dtype], count, it)
+
+
+def _enc_moe(cfg, par, dtype, alpha, backend, seed, count, T, it, acc):
+    tp, ep = par.tp, min(par.ep, par.tp)
+    b = ops.BYTES[dtype]
+    d = cfg.d_model
+    acc.gemm(dtype, T, cfg.num_experts, d, count, it)        # router
+    a2a = backend in EP_A2A_BACKENDS
+    payload = T * cfg.top_k * d * b
+    if a2a:
+        payload = payload / max(ep, 1)
+    if ep > 1:
+        acc.comm("all_to_all" if a2a else "all_gather", ep, payload,
+                 count, it)
+    hot = powerlaw.hot_rank_tokens(T, cfg.top_k, cfg.num_experts, ep,
+                                   alpha, seed)
+    acc.moe(d, _ceil(cfg.moe_d_ff, max(tp // ep, 1)), cfg.num_experts,
+            cfg.top_k, ep, dtype, (max(hot, 1),), count, it)
+    if cfg.n_shared_experts:
+        # mirrors _moe_ops's `_dense_ffn_ops(...)[:-1]`: gate+up always,
+        # down-proj only when the dropped trailing entry is the all_reduce
+        sf_loc = _ceil(cfg.n_shared_experts * cfg.moe_d_ff, tp)
+        acc.gemm(dtype, T, 2 * sf_loc, d, count, it)
+        if tp > 1:
+            acc.gemm(dtype, T, d, sf_loc, count, it)
+    if ep > 1:
+        acc.comm("all_to_all" if a2a else "reduce_scatter", ep, payload,
+                 count, it)
+    if tp > 1:
+        acc.comm("all_reduce", tp, T * d * b, count, it)
+
+
+def _enc_rec(cfg, par, spec, dtype, mb, count, T, it, acc):
+    tp = par.tp
+    b = ops.BYTES[dtype]
+    d = cfg.d_model
+    w_loc = _ceil(cfg.lru_width, tp)
+    dec = spec.decode[:: mb] if mb > 1 else spec.decode
+    batch = max(len(dec), 1) if not spec.prefill else 1
+    seq = T if spec.prefill else 1
+    acc.gemm(dtype, T, 2 * w_loc, d, count, it)
+    acc.sol(SOL_MEM, T * w_loc * b * cfg.conv_width, count, it)
+    acc.rec("rglru", w_loc, cfg.num_heads, dtype, (max(seq, 1),),
+            count * batch, it)
+    acc.gemm(dtype, T, d, w_loc, count, it)
+    if tp > 1:
+        acc.comm("all_reduce", tp, T * d * b, count, it)
+
+
+def _enc_mlstm(cfg, par, spec, dtype, count, T, it, acc):
+    from repro.models.xlstm import up_dim
+    tp = par.tp
+    b = ops.BYTES[dtype]
+    d = cfg.d_model
+    u = up_dim(cfg)
+    u_loc = _ceil(u, tp)
+    batch = max(len(spec.decode), 1) if not spec.prefill else 1
+    seq = T if spec.prefill else 1
+    acc.gemm(dtype, T, 2 * u_loc, d, count, it)
+    acc.sol(SOL_MEM, T * u_loc * b * cfg.conv_width, count, it)
+    acc.gemm(dtype, T, 3 * u_loc, u, count, it)
+    acc.rec("mlstm", u_loc, cfg.num_heads, dtype, (max(seq, 1),),
+            count * batch, it)
+    acc.gemm(dtype, T, d, u_loc, count, it)
+    if tp > 1:
+        acc.comm("all_reduce", tp, T * d * b, count, it)
+
+
+def _enc_slstm(cfg, par, spec, dtype, count, T, it, acc):
+    tp = par.tp
+    b = ops.BYTES[dtype]
+    d = cfg.d_model
+    f = int(d * cfg.slstm_proj_factor)
+    batch = max(len(spec.decode), 1) if not spec.prefill else 1
+    seq = T if spec.prefill else 1
+    acc.gemm(dtype, T, _ceil(4 * d, tp), d, count, it)
+    acc.rec("slstm", _ceil(d, tp), cfg.num_heads, dtype, (max(seq, 1),),
+            count * batch, it)
+    acc.gemm(dtype, T, _ceil(2 * f, tp), d, count, it)
+    acc.gemm(dtype, T, d, _ceil(f, tp), count, it)
+    if tp > 1:
+        acc.comm("all_reduce", tp, T * d * b, count, it)
+
+
+def _encode_item(cfg, par, spec, dtype, alpha, backend, seed, it, acc):
+    mb = par.pp
+    T = _tokens(spec, mb)
+    if T == 0:
+        return
+    b = ops.BYTES[dtype]
+    d = cfg.d_model
+    acc.sol(SOL_EMBED, b * T * d * 2, 1, it)
+    if cfg.family == "hybrid":
+        n_attn = sum(1 for k in cfg.block_pattern if k == "attn")
+        _enc_rec(cfg, par, spec, dtype, mb, cfg.num_layers - n_attn, T,
+                 it, acc)
+        _enc_attn(cfg, par, spec, dtype, cfg.local_window, mb, n_attn, T,
+                  it, acc)
+        _enc_ffn(cfg, par, dtype, cfg.num_layers, T, it, acc)
+    elif cfg.family == "ssm":
+        n_m = sum(1 for k in cfg.block_pattern if k == "m")
+        _enc_mlstm(cfg, par, spec, dtype, n_m, T, it, acc)
+        _enc_slstm(cfg, par, spec, dtype, cfg.num_layers - n_m, T, it, acc)
+    else:
+        _enc_attn(cfg, par, spec, dtype, cfg.sliding_window, mb,
+                  cfg.num_layers, T, it, acc)
+        if cfg.num_experts:
+            _enc_moe(cfg, par, dtype, alpha, backend, seed, cfg.num_layers,
+                     T, it, acc)
+        else:
+            _enc_ffn(cfg, par, dtype, cfg.num_layers, T, it, acc)
+    n_emit = len(spec.decode) + len(spec.prefill)
+    if n_emit:
+        v_loc = _ceil(cfg.vocab_size, par.tp)
+        acc.gemm(dtype, n_emit, v_loc, d, 1, it)
+        if par.tp > 1:
+            acc.comm("all_gather", par.tp, n_emit * v_loc * par.tp * 4,
+                     1, it)
+    if par.pp > 1:
+        acc.comm("p2p", 2, T * d * b, par.pp - 1, it)
+
+
+def encode_iteration_batch(items: Sequence[Tuple], *, alpha: float = 1.2,
+                           backend: str = "repro-jax", dtype: str = "bf16",
+                           seed: int = 0) -> Optional[OpBatch]:
+    """Lower ``(cfg, par, spec)`` triples into one :class:`OpBatch`.
+
+    Emits exactly the operator sites :func:`iteration_ops` would, as
+    per-grid stacked coordinate/multiplicity/owner arrays (identical
+    prefill chunks are run-length collapsed — the scalar path memoizes
+    them away; here they fold into one row's multiplicity).  Returns
+    ``None`` when any item needs the scalar path (encoder-decoder models,
+    whose per-request encoder pass has no stacked form yet).
+    """
+    acc = _BatchAcc()
+    for it, (cfg, par, spec) in enumerate(items):
+        if cfg.is_encoder_decoder:
+            return None
+        _encode_item(cfg, par, spec, dtype, alpha, backend, seed, it, acc)
+    grid_rows = []
+    for rep, family, coords, mult, item in acc.groups.values():
+        uniq: Dict[Tuple, int] = {}
+        ridx = [uniq.setdefault(c, len(uniq)) for c in coords]
+        grid_rows.append(GridRows(
+            rep, family,
+            np.asarray(list(uniq), np.float64),
+            np.asarray(mult, np.float64),
+            np.asarray(item, np.int64),
+            np.asarray(ridx, np.int64)))
+    kind, value, mult, item = acc._sol
+    sol = SolRows(np.asarray(kind, np.int8),
+                  np.asarray(value, np.float64),
+                  np.asarray(mult, np.float64),
+                  np.asarray(item, np.int64))
+    return OpBatch(n_items=len(items), grid_rows=grid_rows, sol_rows=sol)
 
 
 # ---------------------------------------------------------------------------
@@ -296,7 +630,11 @@ def kv_bytes_per_chip(cfg: ModelConfig, par: ParallelismConfig, batch: int,
         kind = cfg.block_pattern[li] if cfg.block_pattern else "attn"
         W = cfg.kv_cache_len(seq, kind)
         if kind == "rec":
-            total += cfg.lru_width * 4 + cfg.lru_width * cfg.conv_width * b
+            # recurrent state is tp-sharded exactly like _rec_ops computes
+            # on it (w_loc = ceil(lru_width/tp)); charging the full width
+            # over-counted by tp× and wrongly pruned hybrid configs
+            w_loc = max(_ceil(cfg.lru_width, par.tp), 1)
+            total += w_loc * 4 + w_loc * cfg.conv_width * b
         else:
             total += 2 * W * kv_loc * cfg.head_dim * b
     if cfg.is_encoder_decoder:

@@ -21,13 +21,22 @@ from repro.core.hardware import get_platform
 
 
 def resolve_kv_fraction(workload: WorkloadDescriptor,
-                        par: ParallelismConfig, batch: int) -> float:
-    """Pick the KV fraction that exactly covers the needed cache + margin."""
+                        par: ParallelismConfig, batch: int,
+                        max_num_tokens: Optional[int] = None) -> float:
+    """Pick the KV fraction that exactly covers the needed cache + margin.
+
+    ``max_num_tokens`` must be the candidate's actual RuntimeFlags value so
+    the activation budget here agrees with the ``fits_memory`` model the
+    search applied; defaults to the backend's default token capacity.
+    """
     cfg = get_config(workload.model)
     platform = get_platform(workload.cluster.platform)
     backend = get_backend(workload.backend)
+    if max_num_tokens is None:
+        max_num_tokens = backend.default_max_num_tokens
     p = decompose.param_bytes_per_chip(cfg, par, workload.dtype)
-    a = decompose.activation_bytes_per_chip(cfg, par, 8192, workload.dtype)
+    a = decompose.activation_bytes_per_chip(cfg, par, max_num_tokens,
+                                            workload.dtype)
     need = decompose.kv_bytes_per_chip(cfg, par, batch,
                                        workload.isl + workload.osl,
                                        workload.dtype)
@@ -58,8 +67,9 @@ def generate(workload: WorkloadDescriptor, proj: Projection) -> LaunchConfig:
     if proj.mode == "disaggregated":
         return _generate_disagg(workload, proj, backend)
     par = _parallel_of(proj.config["parallel"])
-    kv_frac = resolve_kv_fraction(workload, par, proj.batch_size)
     flags = proj.config.get("flags", dataclasses.asdict(RuntimeFlags()))
+    kv_frac = resolve_kv_fraction(workload, par, proj.batch_size,
+                                  max_num_tokens=flags["max_num_tokens"])
     knobs = {
         "max_num_tokens": flags["max_num_tokens"],
         "kv_cache_mem_fraction": kv_frac,

@@ -141,7 +141,17 @@ class RecurrentOp:
 
 @dataclasses.dataclass(frozen=True)
 class Comm:
-    """Collective / point-to-point communication."""
+    """Collective / point-to-point communication.
+
+    ``bytes_per_chip`` convention (what every call site must pass):
+
+    * ``all_reduce`` / ``all_gather`` / ``reduce_scatter`` — the **full
+      logical tensor** being reduced/gathered.  The ring-collective cost
+      model scales it by ``(n-1)/n`` (×2 for all_reduce) itself, so
+      passing a pre-sharded payload double-discounts.
+    * ``all_to_all`` / ``p2p`` — the **per-chip payload actually sent**
+      by one rank; no further sharding is applied by the model.
+    """
     kind: str                       # all_reduce | all_gather | reduce_scatter
     #                                 | all_to_all | p2p
     bytes_per_chip: float

@@ -9,6 +9,7 @@ tail latency of the hottest expert.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import numpy as np
@@ -65,10 +66,15 @@ def assignment_matrix(total_tokens: int, counts: np.ndarray) -> np.ndarray:
     return L
 
 
+@functools.lru_cache(maxsize=65536)
 def hot_rank_tokens(total_tokens: int, top_k: int, num_experts: int,
                     ep: int, alpha: float, seed: int = 0) -> int:
     """Expected token count on the hottest EP rank under round-robin expert
-    placement — the quantity the MoE operator's latency follows."""
+    placement — the quantity the MoE operator's latency follows.
+
+    Fully deterministic in its arguments (seeded rng), so the result is
+    memoized: candidate sweeps and the batch encoder ask for the same
+    (tokens, ep) points thousands of times."""
     counts = token_counts(total_tokens, top_k, num_experts, alpha, seed)
     if ep <= 1:
         return int(counts.sum())

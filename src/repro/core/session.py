@@ -36,6 +36,12 @@ class InferenceSession:
                          else get_platform(workload.cluster.platform))
         self.db = db or PerfDatabase(self.platform, workload.backend)
         self.backend = get_backend(workload.backend)
+        # batch pricing state: _price_hook intercepts spec_latency_ms during
+        # the record/replay passes of the batched cursor; _price_memo caches
+        # fused-kernel answers per (parallelism, spec) across the session
+        self._price_hook: Optional[Callable] = None
+        self._price_memo: Dict = {}
+        self._price_epoch: Optional[int] = None
 
     # ------------------------------------------------------------------
     # iteration latencies (ms) — the GETSTEPLATENCY / GETMIXLAT /
@@ -43,6 +49,9 @@ class InferenceSession:
     # ------------------------------------------------------------------
     def spec_latency_ms(self, par: ParallelismConfig, spec: StepSpec,
                         flags: RuntimeFlags) -> float:
+        hook = self._price_hook
+        if hook is not None:
+            return hook(par, spec, flags)
         if self.backend.sequential_prefill and len(spec.prefill) > 1:
             # engine launches one kernel per prompt: no cross-prompt GEMM
             # batching — price each chunk as its own mini-iteration
@@ -89,6 +98,113 @@ class InferenceSession:
             par, StepSpec(prefill=(), decode=(kv,) * batch), flags)
 
     # ------------------------------------------------------------------
+    # batched pricing (record → fused kernel → replay)
+    # ------------------------------------------------------------------
+    def batch_pricing_ok(self) -> bool:
+        """Whether this session's specs can price through the fused batch
+        kernel: grid-backed database and a stackable architecture (the
+        encoder-decoder per-request pass still walks the scalar path)."""
+        return bool(self.db.use_grid) and not self.cfg.is_encoder_decoder
+
+    def record_specs(self, fn) -> Tuple[object, List[Tuple]]:
+        """Run ``fn()`` with spec pricing stubbed to 0.0, returning
+        ``(result, atoms)`` where ``atoms`` is every (par, spec, flags)
+        ``spec_latency_ms`` would have priced, in call order.  Mode
+        algorithms have latency-independent control flow, so the recorded
+        atom sequence equals the real one."""
+        atoms: List[Tuple] = []
+
+        def hook(par, spec, flags):
+            atoms.append((par, spec, flags))
+            return 0.0
+
+        self._price_hook = hook
+        try:
+            return fn(), atoms
+        finally:
+            self._price_hook = None
+
+    def replay_specs(self, fn, values: List[float]):
+        """Run ``fn()`` with ``spec_latency_ms`` answered from ``values``
+        (the batch-priced latencies, in the recorded atom order)."""
+        it = iter(values)
+        self._price_hook = lambda par, spec, flags, _it=it: next(_it)
+        try:
+            return fn()
+        finally:
+            self._price_hook = None
+
+    def price_specs(self, atoms: List[Tuple],
+                    backend_kernel: str = "np") -> List[float]:
+        """Price recorded (par, spec, flags) atoms through
+        ``PerfDatabase.sequence_latency_batch``, returning per-atom
+        latencies in ms.  Semantics mirror ``spec_latency_ms`` exactly:
+        sequential-prefill backends split multi-prompt specs, the backend
+        iteration overhead is added per (sub-)spec, and repeated
+        (parallelism, spec) pairs are memoized for the session (counted as
+        sequence-memo hits, like the scalar path's)."""
+        if self._price_epoch != self.db._epoch:
+            self._price_memo.clear()
+            self._price_epoch = self.db._epoch
+        flat: List[Tuple[int, ParallelismConfig, StepSpec]] = []
+        split = self.backend.sequential_prefill
+        for i, (par, spec, flags) in enumerate(atoms):
+            if split and len(spec.prefill) > 1:
+                for chunk in spec.prefill:
+                    flat.append((i, par,
+                                 StepSpec(prefill=(chunk,), decode=())))
+                if spec.decode:
+                    flat.append((i, par,
+                                 StepSpec(prefill=(), decode=spec.decode)))
+            else:
+                flat.append((i, par, spec))
+        memo = self._price_memo
+        to_price: List[Tuple] = []
+        seen: Dict[Tuple, bool] = {}
+        hits = 0
+        for _, par, spec in flat:
+            key = (par.tp, par.pp, par.ep, par.dp, spec)
+            if key in memo or key in seen:
+                hits += 1
+                continue
+            seen[key] = True
+            to_price.append((key, par, spec))
+        local: Dict[Tuple, float] = {}
+        if to_price:
+            batch = decompose.encode_iteration_batch(
+                [(self.cfg, par, spec) for _, par, spec in to_price],
+                alpha=self.w.moe_alpha, backend=self.w.backend,
+                dtype=self.w.dtype)
+            if batch is None:            # scalar fallback (encoder-decoder)
+                for key, par, spec in to_price:
+                    op_list = decompose.iteration_ops(
+                        self.cfg, par, spec, alpha=self.w.moe_alpha,
+                        backend=self.w.backend, dtype=self.w.dtype)
+                    local[key] = self.db.sequence_latency(op_list)
+            else:
+                vals = self.db.sequence_latency_batch(
+                    batch, backend=backend_kernel)
+                for (key, _, _), v in zip(to_price, vals):
+                    local[key] = float(v)
+            if len(memo) < 500_000:
+                memo.update(local)
+        if hits:
+            self.db.stats.seq_queries += hits
+            self.db.stats.seq_hits += hits
+        out = [0.0] * len(atoms)
+        for i, par, spec in flat:
+            key = (par.tp, par.pp, par.ep, par.dp, spec)
+            raw = memo.get(key)
+            if raw is None:
+                raw = local[key]
+            flags = atoms[i][2]
+            t = raw + self.backend.iteration_overhead(
+                len(spec.prefill), len(spec.decode),
+                flags.enable_graph_capture)
+            out[i] += 1e3 * t
+        return out
+
+    # ------------------------------------------------------------------
     # candidate evaluation
     # ------------------------------------------------------------------
     def _throughput(self, ttft_ms: float, tpot_ms: float, batch: int,
@@ -104,14 +220,17 @@ class InferenceSession:
             self.cfg, cand.parallel, cand.batch_size,
             self.w.isl + self.w.osl, self.platform, cand.flags, self.w.dtype)
 
-    def evaluate_static(self, cand: CandidateConfig) -> Optional[Projection]:
-        ok, mem = self._mem_ok(cand)
+    def evaluate_static(self, cand: CandidateConfig, *, _mem=None,
+                        _plan_only: bool = False) -> Optional[Projection]:
+        ok, mem = self._mem_ok(cand) if _mem is None else _mem
         if not ok:
             return None
         ttft, tpot = modes.static_mode(
             lambda b, s, ph: self.step_latency_ms(cand.parallel, cand.flags,
                                                   b, s, ph),
             self.w.isl, self.w.osl, cand.batch_size, self.w.prefix_len)
+        if _plan_only:
+            return True
         chips = cand.parallel.chips_per_instance
         return Projection(
             ttft_ms=ttft, tpot_ms=tpot,
@@ -124,8 +243,9 @@ class InferenceSession:
                     "describe": cand.describe()},
             mem_bytes_per_chip=mem)
 
-    def evaluate_aggregated(self, cand: CandidateConfig) -> Optional[Projection]:
-        ok, mem = self._mem_ok(cand)
+    def evaluate_aggregated(self, cand: CandidateConfig, *, _mem=None,
+                            _plan_only: bool = False) -> Optional[Projection]:
+        ok, mem = self._mem_ok(cand) if _mem is None else _mem
         if not ok:
             return None
         c_ctx = (cand.flags.max_num_tokens if cand.flags.enable_chunked_context
@@ -136,6 +256,8 @@ class InferenceSession:
             lambda b, i, o: self.gen_lat_ms(cand.parallel, cand.flags, b, i, o),
             self.w.isl, self.w.osl, cand.batch_size, c_ctx,
             f_corr_base=self.backend.f_corr_base)
+        if _plan_only:
+            return True
         chips = cand.parallel.chips_per_instance
         return Projection(
             ttft_ms=ttft, tpot_ms=tpot,

@@ -17,7 +17,7 @@ import itertools
 import time
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
-from repro.core import modes, pareto
+from repro.core import jaxenv, modes, pareto
 from repro.core.config import (CandidateConfig, DisaggConfig,
                                ParallelismConfig, Projection, RuntimeFlags,
                                WorkloadDescriptor)
@@ -206,7 +206,8 @@ class TaskRunner:
     # ------------------------------------------------------------------
     def iter_search(self, sweep_flags: bool = False,
                     keep_all_disagg: bool = False,
-                    progress: Optional[SearchProgress] = None
+                    progress: Optional[SearchProgress] = None,
+                    batched: Optional[bool] = None
                     ) -> Iterator[Tuple[CandidateConfig, Projection]]:
         """Lazily price candidates, yielding ``(candidate, projection)``
         pairs as each one resolves against the PerfDatabase.
@@ -219,23 +220,39 @@ class TaskRunner:
         ``projection.config``), best composite first.  Abandoning the
         iterator early (early-exit policy, ``break`` in a UI loop) skips
         all remaining pricing work.
+
+        ``batched`` selects the fused batch-pricing cursor (record the
+        chunk's spec atoms, price them in one
+        ``sequence_latency_batch`` call, replay the projections);
+        ``None`` defers to ``REPRO_BATCHED_PRICING`` and falls back to
+        scalar whenever the database/model cannot batch.  Both paths
+        yield the identical (candidate, projection) stream; the batched
+        cursor prices at most one chunk (``REPRO_PRICING_CHUNK``,
+        default 64 candidates) ahead of the consumer, so early exits
+        still skip nearly all remaining work.
         """
         progress = progress if progress is not None else SearchProgress()
+        if batched is None:
+            batched = jaxenv.batched_pricing_default()
+        batched = bool(batched) and self.session.batch_pricing_ok()
 
         if "static" in self.w.modes or "aggregated" in self.w.modes:
-            for cand in self.iter_candidates(sweep_flags):
-                if "static" in self.w.modes:
-                    p = self.session.evaluate_static(cand)
-                    progress.n_evaluated += 1
-                    if p:
-                        progress.n_yielded += 1
-                        yield cand, p
-                if "aggregated" in self.w.modes:
-                    p = self.session.evaluate_aggregated(cand)
-                    progress.n_evaluated += 1
-                    if p:
-                        progress.n_yielded += 1
-                        yield cand, p
+            if batched:
+                yield from self._iter_modes_batched(sweep_flags, progress)
+            else:
+                for cand in self.iter_candidates(sweep_flags):
+                    if "static" in self.w.modes:
+                        p = self.session.evaluate_static(cand)
+                        progress.n_evaluated += 1
+                        if p:
+                            progress.n_yielded += 1
+                            yield cand, p
+                    if "aggregated" in self.w.modes:
+                        p = self.session.evaluate_aggregated(cand)
+                        progress.n_evaluated += 1
+                        if p:
+                            progress.n_yielded += 1
+                            yield cand, p
 
         if "disaggregated" in self.w.modes:
             disagg_best, disagg_all = self._run_disagg(keep_all_disagg,
@@ -251,8 +268,58 @@ class TaskRunner:
                     progress.n_yielded += 1
                     yield d.decode.config, self._disagg_projection(d)
 
+    def _iter_modes_batched(self, sweep_flags: bool,
+                            progress: SearchProgress
+                            ) -> Iterator[Tuple[CandidateConfig, Projection]]:
+        """Chunked record → price → replay cursor over the static and
+        aggregated modes.  Per chunk: record every feasible candidate's
+        spec atoms (mode algorithms have latency-independent control
+        flow), price all atoms in one ``InferenceSession.price_specs``
+        call (struct-of-arrays encoding + fused interpolation kernel),
+        then replay each candidate against its latency slice to build
+        the real Projection.  Yield order, n_evaluated accounting, and
+        the projections themselves match the scalar loop."""
+        chunk_n = jaxenv.pricing_chunk()
+        kernel = jaxenv.pricing_backend()
+        session = self.session
+        mode_fns = [(m, session.evaluate_static if m == "static"
+                     else session.evaluate_aggregated)
+                    for m in ("static", "aggregated") if m in self.w.modes]
+        cand_it = self.iter_candidates(sweep_flags)
+        while True:
+            cands = list(itertools.islice(cand_it, chunk_n))
+            if not cands:
+                return
+            # record pass: plan = (cand, fn, mem, atom offset, n_atoms)
+            plans, atoms = [], []
+            for cand in cands:
+                mem = session._mem_ok(cand)
+                for _mode, fn in mode_fns:
+                    if not mem[0]:
+                        plans.append((cand, fn, mem, 0, 0))
+                        continue
+                    _, rec = session.record_specs(
+                        lambda _f=fn, _c=cand, _m=mem:
+                        _f(_c, _mem=_m, _plan_only=True))
+                    plans.append((cand, fn, mem, len(atoms), len(rec)))
+                    atoms.extend(rec)
+            values = session.price_specs(atoms, backend_kernel=kernel) \
+                if atoms else []
+            # replay pass, in the scalar loop's candidate × mode order
+            for cand, fn, mem, start, n in plans:
+                progress.n_evaluated += 1
+                if not mem[0]:
+                    continue
+                p = session.replay_specs(
+                    lambda _f=fn, _c=cand, _m=mem: _f(_c, _mem=_m),
+                    values[start:start + n])
+                if p:
+                    progress.n_yielded += 1
+                    yield cand, p
+
     def run(self, sweep_flags: bool = False,
-            keep_all_disagg: bool = False) -> SearchResult:
+            keep_all_disagg: bool = False,
+            batched: Optional[bool] = None) -> SearchResult:
         """Drain :meth:`iter_search` into a batch SearchResult (single
         pricing code path; the frontier is accumulated online)."""
         t0 = time.perf_counter()
@@ -261,7 +328,7 @@ class TaskRunner:
         acc = pareto.FrontierAccumulator()
         best: Optional[Projection] = None
         for _cand, p in self.iter_search(sweep_flags, keep_all_disagg,
-                                         progress=progress):
+                                         progress=progress, batched=batched):
             projs.append(p)
             acc.add(p)
             if p.meets(self.w.sla) and (

@@ -1,0 +1,335 @@
+"""Vectorized whole-space pricing: the fused batch kernel must agree with
+the scalar path element-for-element.
+
+Covers: OpGrid.query_batch vs OpGrid.query (grid hits, edge clamps,
+interior points — property-tested), the jnp/jit kernel vs the np kernel,
+PerfDatabase.sequence_latency_batch vs per-op sequence_latency across the
+architecture zoo (dense / MoE / hybrid / ssm), calibration corrections on
+the batch path, the GEMM speed-of-light fallback, and the batched
+TaskRunner cursor yielding an identical event stream + frontier as the
+scalar loop (encoder-decoder and SoL databases fall back transparently).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare environment: deterministic fallback shim
+    from _hypothesis_compat import given, settings, st
+
+from repro.api.configurator import Configurator
+from repro.core import decompose, jaxenv
+from repro.core.config import (CandidateConfig, ParallelismConfig,
+                               RuntimeFlags, WorkloadDescriptor,
+                               ClusterSpec, SLA)
+from repro.core.perf_database import OpGrid, PerfDatabase
+from repro.serving.sim import StepSpec
+from repro.core.session import InferenceSession
+from repro.core.task_runner import SearchProgress, TaskRunner
+
+ZOO = ("llama3.1-8b", "qwen3-moe-30b-a3b", "recurrentgemma-2b", "xlstm-350m")
+
+
+def _grid():
+    axes = [[1, 2, 4, 8, 16, 32], [128, 256, 512, 1024]]
+    table = np.empty((6, 4))
+    for i, m in enumerate(axes[0]):
+        for j, n in enumerate(axes[1]):
+            table[i, j] = 1e-6 * m * n + 5e-6
+    return OpGrid(axes, table)
+
+
+# ---------------------------------------------------------------------------
+# query_batch vs query
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.floats(0.25, 64), st.floats(64, 2048)),
+                min_size=1, max_size=32))
+@settings(max_examples=50, deadline=None)
+def test_query_batch_matches_scalar(points):
+    """Interior, clamped-below and clamped-above points all agree."""
+    grid = _grid()
+    batch = grid.query_batch(np.array(points, dtype=np.float64))
+    for got, c in zip(batch, points):
+        assert got == pytest.approx(grid.query(c), rel=1e-12)
+
+
+def test_query_batch_exact_grid_hits():
+    grid = _grid()
+    pts = [(m, n) for m in (1, 8, 32) for n in (128, 512, 1024)]
+    batch = grid.query_batch(np.array(pts, dtype=np.float64))
+    for got, (m, n) in zip(batch, pts):
+        i = [1, 2, 4, 8, 16, 32].index(m)
+        j = [128, 256, 512, 1024].index(n)
+        assert got == pytest.approx(grid.table[i, j], rel=1e-12)
+
+
+def test_query_batch_edge_clamps():
+    grid = _grid()
+    below = grid.query_batch(np.array([[0.01, 1.0]]))[0]
+    above = grid.query_batch(np.array([[1e9, 1e9]]))[0]
+    assert below == pytest.approx(grid.query((0.01, 1.0)), rel=1e-12)
+    assert above == pytest.approx(grid.query((1e9, 1e9)), rel=1e-12)
+    assert below == pytest.approx(grid.table[0, 0], rel=1e-12)
+    assert above == pytest.approx(grid.table[-1, -1], rel=1e-12)
+
+
+def test_query_batch_single_coord_promotes():
+    grid = _grid()
+    out = grid.query_batch(np.array([3.0, 300.0]))
+    assert out.shape == (1,)
+    assert out[0] == pytest.approx(grid.query((3.0, 300.0)), rel=1e-12)
+
+
+def test_query_batch_jax_matches_np():
+    """The jitted jnp kernel agrees with the np kernel (x64 enabled for
+    the comparison, restored afterwards — jax config is global)."""
+    jax = pytest.importorskip("jax")
+    prev = jax.config.read("jax_enable_x64")
+    try:
+        jaxenv.enable_x64(True)
+        grid = _grid()
+        rng = np.random.default_rng(0)
+        pts = np.stack([rng.uniform(0.25, 64, 64),
+                        rng.uniform(64, 2048, 64)], axis=1)
+        np.testing.assert_allclose(grid.query_batch_jax(pts),
+                                   grid.query_batch(pts), rtol=1e-12)
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+# ---------------------------------------------------------------------------
+# sequence_latency_batch vs scalar sequence_latency
+# ---------------------------------------------------------------------------
+
+def _specs_for(cfg_name):
+    """A small spread of step shapes: pure prefill, pure decode, mixed."""
+    return [
+        StepSpec(prefill=((256, 0),), decode=()),
+        StepSpec(prefill=(), decode=(288,) * 8),
+        StepSpec(prefill=((128, 0), (256, 128)), decode=(64, 512, 300)),
+        StepSpec(prefill=((31, 7),), decode=(1,)),
+    ]
+
+
+def _pars():
+    return [ParallelismConfig(tp=1, pp=1, ep=1),
+            ParallelismConfig(tp=4, pp=1, ep=1),
+            ParallelismConfig(tp=4, pp=2, ep=2),
+            ParallelismConfig(tp=8, pp=1, ep=4)]
+
+
+@pytest.mark.parametrize("model", ZOO)
+def test_sequence_latency_batch_matches_scalar(model):
+    from repro.configs import get_config
+    cfg = get_config(model)
+    db = PerfDatabase("tpu_v5e", "repro-jax")
+    items, expected = [], []
+    for par in _pars():
+        for spec in _specs_for(model):
+            op_list = decompose.iteration_ops(cfg, par, spec, dtype="fp8")
+            if not op_list:
+                continue
+            items.append((cfg, par, spec))
+            expected.append(db.sequence_latency(op_list))
+    batch = decompose.encode_iteration_batch(items, dtype="fp8")
+    assert batch is not None and batch.n_items == len(items)
+    got = db.sequence_latency_batch(batch)
+    np.testing.assert_allclose(got, expected, rtol=1e-9)
+
+
+def test_sequence_latency_batch_with_calibration():
+    """Per-family corrections apply identically on the batch path."""
+    from repro.calibrate import DeterministicTimer, run_calibration
+    from repro.configs import get_config
+    artifact = run_calibration("tpu_v5e", "repro-jax",
+                               timer=DeterministicTimer("tpu_v5e"),
+                               created_at="2026-08-01T00:00:00Z",
+                               points_per_axis=2)
+    cfg = get_config("qwen3-moe-30b-a3b")
+    db = PerfDatabase("tpu_v5e", "repro-jax", calibration=artifact)
+    items, expected = [], []
+    for par in _pars():
+        spec = StepSpec(prefill=((256, 0),), decode=(64,) * 4)
+        items.append((cfg, par, spec))
+        expected.append(db.sequence_latency(
+            decompose.iteration_ops(cfg, par, spec)))
+    got = db.sequence_latency_batch(decompose.encode_iteration_batch(items))
+    np.testing.assert_allclose(got, expected, rtol=1e-9)
+
+
+def test_sequence_latency_batch_gemm_sol_fallback():
+    """With the GEMM grid removed, the batch path reproduces the scalar
+    speed-of-light fallback (and counts it in stats)."""
+    from repro.configs import get_config
+    cfg = get_config("llama3.1-8b")
+    db = PerfDatabase("tpu_v5e", "repro-jax")
+    for key in [k for k in db._grids if k[0] == "gemm"]:
+        del db._grids[key]
+    par = ParallelismConfig(tp=2, pp=1, ep=1)
+    spec = StepSpec(prefill=((256, 0),), decode=(64, 64))
+    expected = db.sequence_latency(decompose.iteration_ops(cfg, par, spec))
+    before = db.stats.sol_fallbacks
+    got = db.sequence_latency_batch(
+        decompose.encode_iteration_batch([(cfg, par, spec)]))
+    assert got[0] == pytest.approx(expected, rel=1e-9)
+    assert db.stats.sol_fallbacks > before
+
+
+def test_encoder_decoder_returns_none():
+    from repro.configs import get_config
+    cfg = get_config("whisper-small")
+    par = ParallelismConfig(tp=1, pp=1, ep=1)
+    spec = StepSpec(prefill=((64, 0),), decode=())
+    assert decompose.encode_iteration_batch([(cfg, par, spec)]) is None
+
+
+# ---------------------------------------------------------------------------
+# the batched cursor vs the scalar search loop
+# ---------------------------------------------------------------------------
+
+def _workload(model, modes=("static", "aggregated")):
+    return WorkloadDescriptor(
+        model=model, isl=256, osl=64, sla=SLA(),
+        cluster=ClusterSpec(n_chips=8, platform="tpu_v5e"),
+        backend="repro-jax", modes=modes, dtype="fp8")
+
+
+@pytest.mark.parametrize("model", ZOO)
+def test_batched_iter_search_matches_scalar(model):
+    w = _workload(model)
+    runs = {}
+    for batched in (False, True):
+        runner = TaskRunner(w)
+        progress = SearchProgress()
+        events = [(cand.describe(), p.mode, p.ttft_ms, p.tpot_ms,
+                   p.tokens_per_s_per_chip)
+                  for cand, p in runner.iter_search(progress=progress,
+                                                    batched=batched)]
+        runs[batched] = (events, progress.n_evaluated, progress.n_yielded)
+    scalar, batch = runs[False], runs[True]
+    assert scalar[1:] == batch[1:]              # n_evaluated / n_yielded
+    assert len(scalar[0]) == len(batch[0])
+    for (ds, ms, t1, t2, tc), (db_, mb, u1, u2, uc) in zip(scalar[0],
+                                                           batch[0]):
+        assert (ds, ms) == (db_, mb)            # same candidate, same order
+        assert t1 == pytest.approx(u1, rel=1e-9)
+        assert t2 == pytest.approx(u2, rel=1e-9)
+        assert tc == pytest.approx(uc, rel=1e-9)
+
+
+def test_batched_search_identical_frontier_and_ranking():
+    """Same frontier membership and throughput ranking, batched vs not."""
+    def rep(batched):
+        return (Configurator.for_model("qwen3-moe-30b-a3b")
+                .traffic(isl=256, osl=64)
+                .cluster(chips=8, platform="tpu_v5e")
+                .modes("aggregated")
+                .search(batched=batched, generate_launch=False))
+    rs, rb = rep(False), rep(True)
+    assert len(rs.projections) == len(rb.projections)
+    rank = lambda r: [p.config["describe"] for p in
+                      sorted(r.projections,
+                             key=lambda p: -p.tokens_per_s_per_chip)]
+    assert rank(rs) == rank(rb)
+    front = lambda r: sorted(p.config["describe"] for p in r.frontier)
+    assert front(rs) == front(rb)
+    assert (rs.best is None) == (rb.best is None)
+    if rs.best is not None:
+        assert rs.best.config["describe"] == rb.best.config["describe"]
+
+
+def test_batched_early_exit_prices_at_most_one_chunk():
+    """Abandoning the stream early skips the untouched chunks."""
+    w = _workload("llama3.1-8b", modes=("aggregated",))
+    runner = TaskRunner(w)
+    progress = SearchProgress()
+    it = runner.iter_search(progress=progress, batched=True)
+    for _ in range(3):
+        next(it)
+    it.close()
+    assert progress.n_evaluated <= jaxenv.pricing_chunk() + 3
+
+
+def test_sol_database_falls_back_to_scalar():
+    """use_grid=False databases cannot batch: the cursor must transparently
+    price through the scalar path and still yield projections."""
+    w = _workload("llama3.1-8b", modes=("aggregated",))
+    db = PerfDatabase("tpu_v5e", "repro-jax", use_grid=False)
+    runner = TaskRunner(w, db=db)
+    assert not runner.session.batch_pricing_ok()
+    out = list(runner.iter_search(batched=True))
+    assert out and all(p.ttft_ms > 0 for _, p in out)
+
+
+def test_batched_pricing_env_default(monkeypatch):
+    monkeypatch.setenv("REPRO_BATCHED_PRICING", "0")
+    assert jaxenv.batched_pricing_default() is False
+    monkeypatch.setenv("REPRO_BATCHED_PRICING", "1")
+    assert jaxenv.batched_pricing_default() is True
+    monkeypatch.delenv("REPRO_BATCHED_PRICING")
+    assert jaxenv.batched_pricing_default() is True
+    monkeypatch.setenv("REPRO_PRICING_CHUNK", "7")
+    assert jaxenv.pricing_chunk() == 7
+
+
+# ---------------------------------------------------------------------------
+# memory-model bugfixes the batch path must not inherit
+# ---------------------------------------------------------------------------
+
+def test_hybrid_kv_bytes_recurrent_state_shards_with_tp():
+    """Recurrent-state bytes follow _rec_ops' w_loc = ceil(lru_width/tp):
+    doubling tp must halve the recurrent-only KV footprint (charging the
+    full width over-counted by tp× and wrongly pruned hybrid configs)."""
+    from repro.configs import get_config
+    cfg = get_config("recurrentgemma-2b")
+    rec_only = dataclasses.replace(
+        cfg, block_pattern=("rec",) * cfg.num_layers)
+    b = decompose.kv_bytes_per_chip(
+        rec_only, ParallelismConfig(tp=1, pp=1, ep=1), batch=8, seq=4096)
+    h = decompose.kv_bytes_per_chip(
+        rec_only, ParallelismConfig(tp=2, pp=1, ep=1), batch=8, seq=4096)
+    assert h == pytest.approx(b / 2, rel=1e-9)
+    # and the whole hybrid footprint strictly shrinks as tp grows
+    full_1 = decompose.kv_bytes_per_chip(
+        cfg, ParallelismConfig(tp=1, pp=1, ep=1), batch=8, seq=4096)
+    full_2 = decompose.kv_bytes_per_chip(
+        cfg, ParallelismConfig(tp=2, pp=1, ep=1), batch=8, seq=4096)
+    assert full_2 < full_1
+
+
+def test_resolve_kv_fraction_uses_candidate_max_num_tokens():
+    """The generator's activation budget follows the candidate's actual
+    RuntimeFlags.max_num_tokens, so the launch artifact agrees with the
+    memory model the search applied."""
+    from repro.core import generator
+    w = _workload("llama3.1-8b", modes=("aggregated",))
+    par = ParallelismConfig(tp=1, pp=1, ep=1)
+    small = generator.resolve_kv_fraction(w, par, 32, max_num_tokens=4096)
+    big = generator.resolve_kv_fraction(w, par, 32, max_num_tokens=16384)
+    default = generator.resolve_kv_fraction(w, par, 32)
+    assert big > small                    # less free HBM -> larger fraction
+    from repro.core.backends.base import get_backend
+    assert default == generator.resolve_kv_fraction(
+        w, par, 32, max_num_tokens=get_backend(w.backend).default_max_num_tokens)
+
+
+def test_generated_launch_consistent_with_searched_flags():
+    """End to end: a sweep_flags search's launch artifact resolves its KV
+    fraction from the winning candidate's max_num_tokens."""
+    from repro.core import generator
+    rep = (Configurator.for_model("llama3.1-8b")
+           .traffic(isl=256, osl=64)
+           .cluster(chips=8, platform="tpu_v5e")
+           .modes("aggregated")
+           .search(sweep_flags=True))
+    assert rep.best is not None and rep.launch is not None
+    mt = rep.best.config["flags"]["max_num_tokens"]
+    assert rep.launch.raw["runtime_flags"]["max_num_tokens"] == mt
+    par = ParallelismConfig(**rep.best.config["parallel"])
+    want = generator.resolve_kv_fraction(rep.workload, par,
+                                         rep.best.batch_size,
+                                         max_num_tokens=mt)
+    assert rep.launch.raw["runtime_flags"]["kv_cache_mem_fraction"] == want

@@ -1,0 +1,121 @@
+"""Comm.bytes_per_chip convention — unit-tested per call site.
+
+The convention (documented on ops.Comm): ring collectives (all_reduce /
+all_gather / reduce_scatter) take the FULL logical tensor — the cost
+model applies the (n-1)/n sharding factor itself — while all_to_all and
+p2p take the per-chip payload one rank actually sends.  Each decompose
+call site is pinned here so a payload regression (pre-sharded tensor
+passed to a gather, full tensor passed to an a2a) fails loudly.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.core import decompose
+from repro.core import operators as ops
+from repro.core.config import ParallelismConfig
+from repro.serving.sim import StepSpec
+
+SPEC = StepSpec(prefill=((256, 0),), decode=(64, 64))
+
+
+def _comms(model, par, *, backend="repro-jax", dtype="bf16", spec=SPEC):
+    cfg = get_config(model)
+    out = decompose.iteration_ops(cfg, par, spec, backend=backend,
+                                  dtype=dtype)
+    return cfg, [(op, n) for op, n in out if isinstance(op, ops.Comm)]
+
+
+def _tokens(spec, pp):
+    t = sum(c for c, _ in spec.prefill) + len(spec.decode)
+    return -(-t // pp) if pp > 1 else t
+
+
+def test_tp_all_reduce_takes_full_tensor():
+    par = ParallelismConfig(tp=4, pp=1, ep=1)
+    cfg, comms = _comms("llama3.1-8b", par)
+    T = _tokens(SPEC, 1)
+    full = T * cfg.d_model * ops.BYTES["bf16"]
+    ars = [c for c, _ in comms if c.kind == "all_reduce"]
+    assert ars, "tp>1 must emit all_reduce"
+    for c in ars:
+        assert c.bytes_per_chip == full     # never pre-divided by tp
+        assert c.n_chips == par.tp
+
+
+def test_lm_head_all_gather_full_fp32_logits():
+    par = ParallelismConfig(tp=4, pp=1, ep=1)
+    cfg, comms = _comms("llama3.1-8b", par)
+    n_emit = len(SPEC.decode) + len(SPEC.prefill)
+    v_loc = -(-cfg.vocab_size // par.tp)
+    ags = [c for c, _ in comms if c.kind == "all_gather"]
+    assert len(ags) == 1
+    # the full padded-vocab fp32 logits tensor, not the local shard
+    assert ags[0].bytes_per_chip == n_emit * v_loc * par.tp * 4
+    assert ags[0].n_chips == par.tp
+
+
+def _moe_comms(backend, par):
+    cfg = get_config("qwen3-moe-30b-a3b")
+    T = _tokens(SPEC, par.pp)
+    layer = decompose._moe_ops(cfg, par, T, "bf16", 1.2, backend, 0)
+    return cfg, T, [op for op in layer if isinstance(op, ops.Comm)
+                    and op.kind != "all_reduce"]     # EP dispatch/combine
+
+
+@pytest.mark.parametrize("backend", sorted(decompose.EP_A2A_BACKENDS))
+def test_moe_a2a_backends_send_per_chip_payload(backend):
+    par = ParallelismConfig(tp=4, pp=1, ep=4)
+    cfg, T, comms = _moe_comms(backend, par)
+    per_chip = T * cfg.top_k * cfg.d_model * ops.BYTES["bf16"] / par.ep
+    assert [c.kind for c in comms] == ["all_to_all", "all_to_all"]
+    for c in comms:                         # dispatch + combine
+        assert c.bytes_per_chip == pytest.approx(per_chip)
+        assert c.n_chips == par.ep
+
+
+@pytest.mark.parametrize("backend", ["repro-jax", "vllm"])
+def test_moe_gather_scatter_backends_send_full_tensor(backend):
+    par = ParallelismConfig(tp=4, pp=1, ep=4)
+    cfg, T, comms = _moe_comms(backend, par)
+    full = T * cfg.top_k * cfg.d_model * ops.BYTES["bf16"]
+    assert [c.kind for c in comms] == ["all_gather", "reduce_scatter"]
+    for c in comms:                         # dispatch gather, combine scatter
+        assert c.bytes_per_chip == full
+        assert c.n_chips == par.ep
+
+
+def test_pp_p2p_sends_one_stage_activation():
+    par = ParallelismConfig(tp=1, pp=2, ep=1)
+    cfg, comms = _comms("llama3.1-8b", par)
+    T = _tokens(SPEC, par.pp)
+    p2ps = [(c, n) for c, n in comms if c.kind == "p2p"]
+    assert len(p2ps) == 1
+    c, n = p2ps[0]
+    assert c.bytes_per_chip == T * cfg.d_model * ops.BYTES["bf16"]
+    assert c.n_chips == 2 and n == par.pp - 1
+
+
+def test_batch_encoder_uses_same_payloads():
+    """The struct-of-arrays encoder prices exactly the comm payloads the
+    scalar op list carries (per kind, per n_chips)."""
+    for backend in ("repro-jax", "trtllm"):
+        cfg = get_config("qwen3-moe-30b-a3b")
+        par = ParallelismConfig(tp=4, pp=2, ep=4)
+        scalar = {}
+        for op, n in decompose.iteration_ops(cfg, par, SPEC,
+                                             backend=backend):
+            if isinstance(op, ops.Comm):
+                key = (op.kind, op.n_chips)
+                scalar[key] = scalar.get(key, 0.0) + n * op.bytes_per_chip
+        batch = decompose.encode_iteration_batch([(cfg, par, SPEC)],
+                                                 backend=backend)
+        encoded = {}
+        for rows in batch.grid_rows:
+            if isinstance(rows.rep_op, ops.Comm):
+                key = (rows.rep_op.kind, rows.rep_op.n_chips)
+                encoded[key] = encoded.get(key, 0.0) + float(
+                    (rows.mult * rows.coords[rows.ridx, 0]).sum())
+        assert set(encoded) == set(scalar)
+        for key in scalar:
+            assert encoded[key] == pytest.approx(scalar[key], rel=1e-12), \
+                (backend, key)
