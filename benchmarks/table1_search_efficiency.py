@@ -12,7 +12,9 @@ whole candidate space it times the scalar per-operator walk
 against the fused batch kernel (``sequence_latency_batch`` over the
 pre-encoded ``OpBatch``), checks float parity and frontier identity of
 the two search paths, and gates on >=50x kernel speedup (>=10x under
-``--quick``).  Encode time is reported separately — the comparison
+``--quick``).  The batched search's own phase breakdown (encode / kernel /
+record / replay) comes from ``repro.obs`` tracing spans rather than ad-hoc
+timers — the same spans ``search --trace-out`` captures.  The comparison
 boundary is pricing, with op-list construction excluded from both arms.
 """
 from __future__ import annotations
@@ -28,6 +30,7 @@ from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
 from repro.core.config import CandidateConfig, ParallelismConfig, RuntimeFlags
 from repro.core.decompose import encode_iteration_batch, iteration_ops
 from repro.core.session import InferenceSession
+from repro.obs.trace import Tracer, disable_tracing, enable_tracing
 from repro.serving.scheduler import SchedulerConfig
 from repro.serving.sim import ServingSimulator
 
@@ -125,19 +128,25 @@ def run_batched(quick: bool = False):
         w = _workload(model, dtype)
         db = PerfDatabase("tpu_v5e", "repro-jax")
 
-        # the two search paths must agree exactly on what they find
+        # the two search paths must agree exactly on what they find;
+        # the batched arm runs traced, so its phase breakdown (encode /
+        # kernel / record / replay) falls out of the spans
         scalar_res = TaskRunner(w, db).run(batched=False)
-        with Timer() as tb:
-            batched_res = TaskRunner(w, db).run(batched=True)
+        tracer = enable_tracing(Tracer())
+        try:
+            with Timer() as tb:
+                batched_res = TaskRunner(w, db).run(batched=True)
+        finally:
+            disable_tracing()
+        wall = tracer.wall_by_name()
         if _frontier_key(scalar_res) != _frontier_key(batched_res):
             raise RuntimeError(f"{model}: batched search frontier diverged "
                                "from scalar")
 
         # pricing microbenchmark: same atoms, both arms, min over reps
         items = _record_atoms(w, db)
-        with Timer() as te:
-            batch = encode_iteration_batch(items, alpha=w.moe_alpha,
-                                           backend=w.backend, dtype=w.dtype)
+        batch = encode_iteration_batch(items, alpha=w.moe_alpha,
+                                       backend=w.backend, dtype=w.dtype)
         out = db.sequence_latency_batch(batch)      # warms any lazy grids
         t_kernel = min(
             (lambda t0: (db.sequence_latency_batch(batch),
@@ -165,23 +174,31 @@ def run_batched(quick: bool = False):
         n = len(items)
         speedup = t_scalar / t_kernel
         speedups.append(speedup)
+        phases = {k: wall.get(f, 0.0) for k, f in
+                  (("encode", "price.encode"), ("kernel", "price.kernel"),
+                   ("record", "search.record"), ("replay", "search.replay"))}
         rows.append([model, n, batch.n_rows,
                      f"{t_scalar / n * 1e6:.2f}",
                      f"{t_kernel / n * 1e6:.3f}",
-                     f"{te.seconds / n * 1e6:.2f}",
                      f"{speedup:.1f}x",
                      f"{tb.seconds:.2f}",
+                     f"{phases['encode']:.3f}",
+                     f"{phases['kernel']:.3f}",
+                     f"{phases['record']:.3f}",
+                     f"{phases['replay']:.3f}",
                      f"{maxrel:.2e}"])
         print(f"  {model}: {n} atoms ({batch.n_rows} rows) "
               f"scalar {t_scalar / n * 1e6:.1f}us -> kernel "
               f"{t_kernel / n * 1e6:.2f}us per atom "
-              f"({speedup:.1f}x, encode {te.seconds / n * 1e6:.1f}us, "
-              f"max rel {maxrel:.1e}); batched search {tb.seconds:.2f}s")
+              f"({speedup:.1f}x, max rel {maxrel:.1e}); batched search "
+              f"{tb.seconds:.2f}s [" +
+              ", ".join(f"{k} {v:.2f}s" for k, v in phases.items()) + "]")
     path = write_csv(
         "table1_batched_pricing.csv",
         ["model", "n_atoms", "n_rows", "scalar_us_per_atom",
-         "kernel_us_per_atom", "encode_us_per_atom", "pricing_speedup",
-         "batched_search_s", "max_rel_diff"],
+         "kernel_us_per_atom", "pricing_speedup", "batched_search_s",
+         "search_encode_s", "search_kernel_s", "search_record_s",
+         "search_replay_s", "max_rel_diff"],
         rows)
     gate = 10.0 if quick else 50.0
     if min(speedups) < gate:

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 CI: fast suite, slow suite, CLI JSON smoke test, streaming smoke,
-# calibration smoke, workload-trace smoke, capacity smoke, autoscale smoke.
+# calibration smoke, workload-trace smoke, capacity smoke, autoscale smoke,
+# observability smoke (trace/metrics determinism + explain attribution).
 # Run from the repo root: bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -22,7 +23,7 @@ report = json.load(sys.stdin)
 version = report["schema_version"]
 n_projections = len(report["projections"])
 best_index = report["best"]
-assert version == 5, version
+assert version == 6, version
 assert n_projections > 0, "search produced no projections"
 assert report["database"]["platform"] == "tpu_v5e", report["database"]
 assert len(report["memory"]["per_candidate_bytes_per_chip"]) \
@@ -265,5 +266,78 @@ print(f"ok: {len(scalar['projections'])} projections identical, "
       f"best index {scalar['best']}")
 PY
 rm -rf "$bp_dir"
+
+echo "=== smoke: obs — deterministic trace + metrics, zero-cost when off ==="
+# Two seeded instrumented searches must write byte-identical trace and
+# metrics artifacts; counters must be finite and nonzero; and enabling
+# tracing must not perturb a single candidate record.
+obs_dir=$(mktemp -d)
+for i in 1 2; do
+    PYTHONPATH=src python -m repro.core.cli search \
+        --model llama3.1-8b --isl 256 --osl 64 --chips 8 --dtype fp8 \
+        --modes aggregated --json \
+        --trace-out "$obs_dir/trace$i.jsonl" \
+        --metrics-out "$obs_dir/metrics$i.json" > /dev/null
+done
+cmp "$obs_dir/trace1.jsonl" "$obs_dir/trace2.jsonl" \
+    || { echo "trace artifact is not deterministic" >&2; exit 1; }
+cmp "$obs_dir/metrics1.json" "$obs_dir/metrics2.json" \
+    || { echo "metrics snapshot is not deterministic" >&2; exit 1; }
+PYTHONPATH=src python - "$obs_dir" <<'PY'
+import json
+import math
+import sys
+
+from repro.obs.trace import TraceArtifact
+
+d = sys.argv[1]
+art = TraceArtifact.load(f"{d}/trace1.jsonl")
+assert art.n_spans > 0, "trace captured no spans"
+names = {s.name for s in art.spans}
+assert {"search.chunk", "price.kernel"} <= names, names
+counters = json.load(open(f"{d}/metrics1.json"))["counters"]
+assert counters, "no counters recorded"
+assert all(math.isfinite(v) for v in counters.values()), counters
+chunks = sum(v for k, v in counters.items()
+             if k.startswith("repro_search_chunks_total"))
+priced = sum(v for k, v in counters.items()
+             if k.startswith("repro_search_candidates_priced_total"))
+assert chunks >= 1 and priced >= 1, (chunks, priced)
+print(f"ok: {art.n_spans} spans (digest {art.digest()}), "
+      f"{len(counters)} counters, {priced:.0f} candidates priced")
+PY
+PYTHONPATH=src python -m repro.core.cli search \
+    --model llama3.1-8b --isl 256 --osl 64 --chips 8 --dtype fp8 \
+    --modes aggregated --stream \
+  | grep '"type": "candidate"' > "$obs_dir/plain.jsonl"
+PYTHONPATH=src python -m repro.core.cli search \
+    --model llama3.1-8b --isl 256 --osl 64 --chips 8 --dtype fp8 \
+    --modes aggregated --stream --trace-out "$obs_dir/t.jsonl" \
+  | grep '"type": "candidate"' > "$obs_dir/traced.jsonl"
+cmp "$obs_dir/plain.jsonl" "$obs_dir/traced.jsonl" \
+    || { echo "enabling tracing perturbed the search output" >&2; exit 1; }
+echo "ok: candidate stream byte-identical with tracing on and off"
+
+echo "=== smoke: explain — the waterfall adds back up to the iteration ==="
+PYTHONPATH=src python -m repro.core.cli explain \
+    --model llama3.1-8b --isl 256 --osl 64 --chips 8 --dtype fp8 \
+    --modes aggregated --rank 0 --baseline 1 --json \
+  > "$obs_dir/explain.json"
+PYTHONPATH=src python - "$obs_dir/explain.json" <<'PY'
+import json
+import math
+import sys
+
+ex = json.load(open(sys.argv[1]))
+cand = ex["candidate"]
+total = sum(p["total_ms"] for p in cand["phases"])
+assert math.isfinite(total) and total > 0, total
+assert abs(total - cand["total_ms"]) <= 1e-9 * cand["total_ms"], \
+    (total, cand["total_ms"])
+assert ex["baseline"] is not None and ex["diff"] is not None
+print(f"ok: {cand['describe']} = {total:.3f} ms/iteration attributed, "
+      f"diff vs {ex['baseline']['describe']}")
+PY
+rm -rf "$obs_dir"
 
 echo "=== ci passed ==="

@@ -92,6 +92,24 @@ its chip-seconds against the static plan, recorded in the schema-v5
                            SLOSpec(ttft_p99_ms=2000, tpot_p99_ms=80),
                            policy=TargetQueueDepth(max_replicas=4))
     report.autoscale["savings"]         # chip-seconds vs the static plan
+
+Observability (``repro.obs``, docs/observability.md): install a tracer
+and a metrics registry to watch a search work — spans over the pricing
+chunks and replays, counters through the PerfDatabase and simulators —
+and attribute any candidate's latency to operator families with a
+per-phase waterfall and a two-candidate diff::
+
+    from repro.obs import enable_metrics, enable_tracing
+
+    tracer, registry = enable_tracing(), enable_metrics()
+    report = cfg.search()               # telemetry section attached (v6)
+    tracer.artifact().save("trace.jsonl")
+    print(registry.to_prometheus())
+    print(cfg.explain(rank=0, baseline=1, report=report).summary())
+
+Tracing is zero-cost until enabled: the default tracer is a shared
+no-op and every hot-path counter checks for an installed registry
+first, so un-instrumented runs price byte-identically.
 """
 from repro.api.configurator import Comparison, Configurator, StreamingSearch
 from repro.api.policies import (SearchEvent, callback, deadline_s,

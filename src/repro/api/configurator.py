@@ -498,6 +498,72 @@ class Configurator:
         report.autoscale = section
         return report
 
+    def explain(self, rank: int = 0, baseline: Optional[int] = None,
+                candidate=None, mode: Optional[str] = None,
+                report: Optional[SearchReport] = None,
+                top_k: int = 5):
+        """Attribute a candidate's projected latency to operator families.
+
+        Re-prices the candidate through the same decomposition atoms the
+        search used and buckets every operator's latency by family
+        (gemm / attention / comm / memory / ...) per serving phase — a
+        waterfall whose total reproduces ``sequence_latency`` exactly.
+
+        ``rank`` selects among the analytical leaders of ``report``
+        (0 = best replayable candidate; disaggregated composites are
+        skipped — their two pools price through different engines).
+        ``baseline`` names a second leader rank to diff against: the
+        returned :class:`~repro.obs.Explanation` then carries a
+        per-family delta and the parallelism changes that explain it.
+        Alternatively pass an explicit
+        :class:`~repro.core.config.CandidateConfig` as ``candidate``
+        (with ``mode``, default ``"aggregated"``).  Without ``report``,
+        runs :meth:`search` first on this instance's memoized
+        PerfDatabase/session.
+        """
+        from repro.obs import (Explanation, diff_explanations,
+                               explain_candidate)
+        from repro.workloads import (analytical_leaders,
+                                     candidate_from_projection)
+        if candidate is not None:
+            w = self.workload()
+            session = self._session_for(w)
+            expl = explain_candidate(session, candidate,
+                                     mode or "aggregated")
+            return Explanation(candidate=expl)
+        if rank < 0:
+            raise ValueError(f"rank must be >= 0, got {rank}")
+        if baseline is not None and baseline < 0:
+            raise ValueError(f"baseline must be >= 0, got {baseline}")
+        if report is None:
+            report = self.search(generate_launch=False)
+        w = report.workload
+        try:
+            own = self.workload()
+        except ValueError:
+            own = None
+        session = (self._session_for(w) if own == w
+                   else TaskRunner(w).session)
+        need = max(rank, baseline if baseline is not None else 0) + 1
+        k = max(top_k, need)
+        leaders = analytical_leaders(report.projections, w.sla, k)
+        replayable = [(p, candidate_from_projection(p)) for p in leaders]
+        replayable = [(p, c) for p, c in replayable if c is not None]
+        if len(replayable) < need:
+            raise ValueError(
+                f"need {need} explainable candidate(s) among the "
+                f"analytical top-{k} but found {len(replayable)} "
+                "(disaggregated composites are skipped); raise top_k or "
+                "search with modes('aggregated')")
+        p, cand = replayable[rank]
+        expl = explain_candidate(session, cand, p.mode)
+        base = diff = None
+        if baseline is not None:
+            bp, bcand = replayable[baseline]
+            base = explain_candidate(session, bcand, bp.mode)
+            diff = diff_explanations(expl, base)
+        return Explanation(candidate=expl, baseline=base, diff=diff)
+
     # -- internals -----------------------------------------------------------
     def _variant(self, overrides: Dict) -> "Configurator":
         c = copy.copy(self)          # shares self._dbs on purpose
@@ -680,13 +746,28 @@ class StreamingSearch:
             disagg_best=self._progress.disagg_best)
 
     def report(self, generate_launch: bool = True) -> SearchReport:
-        """Schema-v2 SearchReport over everything priced so far."""
+        """SearchReport over everything priced so far.  When a
+        ``repro.obs`` tracer or metrics registry is installed, the
+        schema-v6 ``telemetry`` section is attached (trace digest and
+        span count, metrics snapshot — no wall times, so it stays
+        deterministic across seeded runs)."""
         result = self.result()
         launch = (generate(self.workload, result.best)
                   if generate_launch and result.best is not None else None)
-        return SearchReport.from_result(
+        rep = SearchReport.from_result(
             self.workload, result, launch=launch,
             fingerprint=self._db.fingerprint(), early_exit=self.early_exit)
+        from repro.obs import telemetry_section
+        from repro.obs.metrics import get_metrics
+        from repro.obs.trace import NULL_TRACER, get_tracer
+        tracer, metrics = get_tracer(), get_metrics()
+        if tracer is not NULL_TRACER or metrics is not None:
+            # a tracer with spans still open (report() called inside a
+            # user span) can't freeze an artifact yet — skip its half
+            live = (tracer if tracer is not NULL_TRACER
+                    and not tracer._stack else None)
+            rep.telemetry = telemetry_section(live, metrics)
+        return rep
 
 
 @dataclasses.dataclass

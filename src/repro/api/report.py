@@ -38,7 +38,15 @@ autoscaling run next to the static min-chip baseline on the same trace
 timeline-artifact digest, and the chip-seconds saved while holding SLO
 attainment.
 
-``from_json`` still accepts v1 through v4 payloads and migrates them
+Schema v6 adds the observability axis: a ``telemetry`` section
+(written by ``Configurator.search`` when a ``repro.obs`` tracer or
+metrics registry is installed) records the deterministic trace identity
+— schema version, sha256 digest, and span count of the
+:class:`~repro.obs.TraceArtifact` — plus a flat snapshot of the
+counters/gauges/histograms the search incremented.  Wallclock timings
+never enter the section, so it is byte-stable across seeded runs.
+
+``from_json`` still accepts v1 through v5 payloads and migrates them
 losslessly (sections a version never carried default to empty/None).
 """
 from __future__ import annotations
@@ -57,9 +65,10 @@ from repro.core.generator import LaunchConfig
 #: early-exit record.  v3: + workload section (trace replay / SLO
 #: re-ranking).  v4: + capacity section (multi-replica ladder sweep /
 #: min-chip plan).  v5: + autoscale section (reactive autoscaling vs
-#: the static plan).  ``from_json`` reads every version listed here.
-SCHEMA_VERSION = 5
-SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5)
+#: the static plan).  v6: + telemetry section (trace digest + metrics
+#: snapshot).  ``from_json`` reads every version listed here.
+SCHEMA_VERSION = 6
+SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5, 6)
 
 
 def workload_to_dict(w: WorkloadDescriptor) -> Dict:
@@ -115,6 +124,7 @@ class SearchReport:
     workload_eval: Optional[Dict] = None   # trace replay / SLO re-rank (v3)
     capacity: Optional[Dict] = None        # replica-ladder min-chip plan (v4)
     autoscale: Optional[Dict] = None       # reactive autoscale vs static (v5)
+    telemetry: Optional[Dict] = None       # trace digest + metrics (v6)
     schema_version: int = SCHEMA_VERSION
 
     # -- construction --------------------------------------------------------
@@ -205,6 +215,17 @@ class SearchReport:
                          f"({sv['chip_seconds_pct']:.1f}%) vs the "
                          f"static plan")
             lines.append(line)
+        tel = self.telemetry
+        if tel:
+            tr = tel.get("trace")
+            met = tel.get("metrics") or {}
+            parts = []
+            if tr:
+                parts.append(f"trace {tr['digest']} ({tr['n_spans']} spans)")
+            if met.get("counters"):
+                parts.append(f"{len(met['counters'])} counters")
+            if parts:
+                lines.append("telemetry: " + ", ".join(parts))
         return "\n".join(lines)
 
     # -- serialization -------------------------------------------------------
@@ -235,6 +256,7 @@ class SearchReport:
             "workload_eval": self.workload_eval,
             "capacity": self.capacity,
             "autoscale": self.autoscale,
+            "telemetry": self.telemetry,
         }
 
     def to_json(self, indent: Optional[int] = 2) -> str:
@@ -277,6 +299,7 @@ class SearchReport:
             workload_eval=d.get("workload_eval") if version >= 3 else None,
             capacity=d.get("capacity") if version >= 4 else None,
             autoscale=d.get("autoscale") if version >= 5 else None,
+            telemetry=d.get("telemetry") if version >= 6 else None,
             schema_version=SCHEMA_VERSION)
 
     @classmethod

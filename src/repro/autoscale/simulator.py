@@ -36,6 +36,8 @@ from typing import Callable, Dict, List, Optional
 
 from repro.capacity.cluster import ReplicaEngine, aggregate_cluster_metrics
 from repro.capacity.routing import ROUTING_POLICIES, get_router
+from repro.obs.metrics import get_metrics
+from repro.obs.trace import get_tracer
 from repro.serving.scheduler import SchedulerConfig
 
 from repro.autoscale.policy import AutoscalerPolicy
@@ -176,6 +178,34 @@ class AutoscaleSimulator:
         until the fleet drains (one trailing sample covers the final
         partial window).
         """
+        tracer = get_tracer()
+        with tracer.span("autoscale.run", policy=self.policy.name,
+                         routing=self.routing, tick_s=self.tick_s) as sp:
+            report = self._run(trace, slo, max_steps)
+            tracer.virtual_time = sp.v_start + report.horizon_s
+            sp.set(horizon_s=report.horizon_s,
+                   peak_replicas=report.peak_replicas,
+                   scale_ups=report.n_scale_ups,
+                   scale_downs=report.n_scale_downs)
+        m = get_metrics()
+        if m is not None:
+            met = report.metrics
+            m.inc("repro_replay_iterations_total", met.steps)
+            m.inc("repro_replay_admissions_total",
+                  met.n_requests - met.rejected)
+            m.inc("repro_replay_rejections_total", met.rejected)
+            m.inc("repro_replay_completions_total", met.completed)
+            m.inc("repro_autoscale_ticks_total",
+                  report.timeline.n_samples)
+            m.inc("repro_autoscale_scale_ups_total", report.n_scale_ups)
+            m.inc("repro_autoscale_scale_downs_total",
+                  report.n_scale_downs)
+            m.inc("repro_autoscale_retires_total",
+                  sum(1 for e in report.events
+                      if e.get("action") == "retire"))
+        return report
+
+    def _run(self, trace, slo, max_steps: int) -> AutoscaleReport:
         policy = self.policy
         records = list(getattr(trace, "requests", trace))
         router = get_router(self.routing)

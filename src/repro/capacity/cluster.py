@@ -22,6 +22,8 @@ import dataclasses
 import statistics
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.obs.metrics import get_metrics
+from repro.obs.trace import get_tracer
 from repro.serving.request import Request
 from repro.serving.scheduler import (ContinuousBatchingScheduler,
                                      SchedulerConfig)
@@ -288,6 +290,26 @@ class ClusterSimulator:
         an uninstrumented replay executes (ticks never add or reorder
         work), so metrics are identical with or without it.
         """
+        tracer = get_tracer()
+        with tracer.span("cluster.replay", replicas=self.replicas,
+                         routing=self.routing) as sp:
+            metrics = self._replay(trace, slo, max_steps, tick_s, on_tick)
+            tracer.virtual_time = sp.v_start + metrics.duration_s
+            sp.set(n_requests=metrics.n_requests, steps=metrics.steps,
+                   completed=metrics.completed, rejected=metrics.rejected,
+                   truncated=metrics.truncated)
+        m = get_metrics()
+        if m is not None:
+            m.inc("repro_replay_iterations_total", metrics.steps)
+            m.inc("repro_replay_admissions_total",
+                  metrics.n_requests - metrics.rejected)
+            m.inc("repro_replay_rejections_total", metrics.rejected)
+            m.inc("repro_replay_completions_total", metrics.completed)
+        return metrics
+
+    def _replay(self, trace, slo, max_steps: int,
+                tick_s: Optional[float],
+                on_tick: Optional[Callable]) -> ClusterReplayMetrics:
         records = list(getattr(trace, "requests", trace))
         router = get_router(self.routing)
         engines = [ReplicaEngine(i, self.sched_cfg, self.latency_fn)

@@ -69,7 +69,7 @@ EXIT_NO_CONFIG = 1
 EXIT_USAGE = 2
 
 _SUBCOMMANDS = ("search", "generate", "compare", "list", "calibrate",
-                "workload", "capacity", "autoscale")
+                "workload", "capacity", "autoscale", "explain")
 
 
 # ---------------------------------------------------------------------------
@@ -213,6 +213,84 @@ def _silence_broken_pipe() -> None:
         pass   # stdout has no real fd (captured stream): nothing to salvage
 
 
+class _JsonLines:
+    """JSON-lines emitter shared by every streaming subcommand.
+
+    The first BrokenPipeError marks the emitter ``broken`` and silences
+    stdout; ``emit`` then refuses further records so the caller can stop
+    producing, still write its save files, and exit 0 — an early-exiting
+    consumer (``head``, an interactive UI) is the intended use."""
+
+    def __init__(self):
+        self.broken = False
+
+    def emit(self, obj, **dumps_kw) -> bool:
+        """Print one record; False once the consumer is gone."""
+        if self.broken:
+            return False
+        try:
+            print(json.dumps(obj, **dumps_kw), flush=True)
+            return True
+        except BrokenPipeError:
+            self.broken = True
+            _silence_broken_pipe()
+            return False
+
+    def emit_text(self, text: str) -> bool:
+        """Print pre-serialized lines (e.g. a JSONL artifact) verbatim."""
+        if self.broken:
+            return False
+        try:
+            sys.stdout.write(text)
+            sys.stdout.flush()
+            return True
+        except BrokenPipeError:
+            self.broken = True
+            _silence_broken_pipe()
+            return False
+
+
+class _ObsCapture:
+    """``--trace-out``/``--metrics-out``: install a ``repro.obs`` tracer
+    and/or metrics registry for the duration of the command, then write
+    the artifacts on the way out (``finish``).  The trace artifact keeps
+    wall times out, so seeded runs write byte-identical files;
+    ``--trace-out -`` streams the JSONL to stdout instead."""
+
+    def __init__(self, args):
+        self.trace_out = getattr(args, "trace_out", "")
+        self.metrics_out = getattr(args, "metrics_out", "")
+        self.meta = {"command": getattr(args, "command", None) or "search",
+                     "model": getattr(args, "model", None)}
+        self.tracer = self.registry = None
+        if self.trace_out:
+            from repro.obs import enable_tracing
+            self.tracer = enable_tracing()
+        if self.metrics_out:
+            from repro.obs import enable_metrics
+            self.registry = enable_metrics()
+
+    def finish(self) -> None:
+        if self.tracer is not None:
+            from repro.obs import disable_tracing
+            disable_tracing()
+            art = self.tracer.artifact(meta=self.meta)
+            if self.trace_out == "-":
+                _JsonLines().emit_text(art.to_jsonl())
+            else:
+                art.save(self.trace_out)
+        if self.registry is not None:
+            from repro.obs import disable_metrics
+            disable_metrics()
+            if self.metrics_out.endswith(".prom"):
+                text = self.registry.to_prometheus()
+            else:
+                text = json.dumps(self.registry.to_dict(), indent=2,
+                                  sort_keys=True) + "\n"
+            with open(self.metrics_out, "w") as f:
+                f.write(text)
+
+
 def _stream_search(args) -> int:
     """``search --stream``: JSON-lines progress records + summary record.
 
@@ -222,11 +300,10 @@ def _stream_search(args) -> int:
     """
     cfg = _configurator(args)
     stream = cfg.search_iter(policies=_search_policies(args))
-    broken_pipe = False
-    try:
-        for ev in stream:
-            p = ev.projection
-            print(json.dumps({
+    em = _JsonLines()
+    for ev in stream:
+        p = ev.projection
+        if not em.emit({
                 "type": "candidate", "index": ev.index, "mode": p.mode,
                 "describe": p.config.get("describe", ""),
                 "tokens_per_s_per_chip": p.tokens_per_s_per_chip,
@@ -235,55 +312,53 @@ def _stream_search(args) -> int:
                 "mem_bytes_per_chip": p.mem_bytes_per_chip,
                 "meets_sla": ev.meets_sla, "n_priced": ev.n_priced,
                 "n_valid": ev.n_valid, "frontier_size": ev.frontier_size,
-            }), flush=True)
-    except BrokenPipeError:
-        broken_pipe = True
-        stream.close()
-        _silence_broken_pipe()
+        }):
+            stream.close()
+            break
     report = stream.report(generate_launch=bool(args.save_launch))
     _attach_speculative(report, cfg, args)
     _attach_workload_eval(report, cfg, args)
-    if not broken_pipe:
+    if not em.broken:
         best = report.best
-        try:
-            print(json.dumps({
-                "type": "summary", "schema_version": report.schema_version,
-                "n_candidates": report.n_candidates,
-                "n_valid": stream.n_valid,
-                "elapsed_s": report.elapsed_s,
-                "early_exit": report.early_exit,
-                "database": report.fingerprint,
-                "speculative": report.speculative,
-                "workload_eval": (None if report.workload_eval is None else {
-                    "trace": report.workload_eval["trace"]["digest"],
-                    "ranking": report.workload_eval["ranking"],
-                    "reranked": report.workload_eval["reranked"],
-                }),
-                "best": (None if best is None else {
-                    "mode": best.mode,
-                    "describe": best.config.get("describe", ""),
-                    "tokens_per_s_per_chip": best.tokens_per_s_per_chip,
-                    "tokens_per_s_user": best.tokens_per_s_user,
-                    "ttft_ms": best.ttft_ms,
-                }),
-            }), flush=True)
-        except BrokenPipeError:
-            broken_pipe = True
-            _silence_broken_pipe()
+        em.emit({
+            "type": "summary", "schema_version": report.schema_version,
+            "n_candidates": report.n_candidates,
+            "n_valid": stream.n_valid,
+            "elapsed_s": report.elapsed_s,
+            "early_exit": report.early_exit,
+            "database": report.fingerprint,
+            "speculative": report.speculative,
+            "workload_eval": (None if report.workload_eval is None else {
+                "trace": report.workload_eval["trace"]["digest"],
+                "ranking": report.workload_eval["ranking"],
+                "reranked": report.workload_eval["reranked"],
+            }),
+            "best": (None if best is None else {
+                "mode": best.mode,
+                "describe": best.config.get("describe", ""),
+                "tokens_per_s_per_chip": best.tokens_per_s_per_chip,
+                "tokens_per_s_user": best.tokens_per_s_user,
+                "ttft_ms": best.ttft_ms,
+            }),
+        })
     if args.save_report:
         report.save(args.save_report)
     if args.save_launch and report.launch is not None:
         with open(args.save_launch, "w") as f:
             f.write(report.launch.to_json())
-    if broken_pipe:
+    if em.broken:
         return EXIT_OK
     return EXIT_OK if report.best is not None else EXIT_NO_CONFIG
 
 
 def cmd_search(args) -> int:
-    if args.stream:
-        return _stream_search(args)
-    report, _ = _run_search(args)
+    obs = _ObsCapture(args)
+    try:
+        if args.stream:
+            return _stream_search(args)
+        report, _ = _run_search(args)
+    finally:
+        obs.finish()
     if args.save_report:
         report.save(args.save_report)
     if args.json:
@@ -608,6 +683,7 @@ def cmd_capacity_sweep(args) -> int:
     runner = TaskRunner(w)
     best = None
     records = []
+    em = _JsonLines()
     for rec in iter_ladder(runner, [cand], trace, _slo_from_args(args),
                            ladder=ladder, routing=args.routing,
                            attain_target=args.attain_target,
@@ -621,16 +697,17 @@ def cmd_capacity_sweep(args) -> int:
             m = rec["metrics"]
             # "describe" is always the string form; the summary record's
             # "deployment" is always the full dict — one shape per key
-            print(json.dumps({
-                "type": "rung", "replicas": rec["replicas"],
-                "describe": rec["deployment"]["describe"],
-                "total_chips": rec["total_chips"],
-                "pruned": rec["pruned"], "attains": rec["attains"],
-                "goodput_tok_s": m["goodput_tok_s"] if m else None,
-                "slo_attainment": m["slo_attainment"] if m else None,
-                "p99_ttft_ms": m["ttft_ms"]["p99"] if m else None,
-                "imbalance": m["imbalance"] if m else None,
-            }), flush=True)
+            if not em.emit({
+                    "type": "rung", "replicas": rec["replicas"],
+                    "describe": rec["deployment"]["describe"],
+                    "total_chips": rec["total_chips"],
+                    "pruned": rec["pruned"], "attains": rec["attains"],
+                    "goodput_tok_s": m["goodput_tok_s"] if m else None,
+                    "slo_attainment": m["slo_attainment"] if m else None,
+                    "p99_ttft_ms": m["ttft_ms"]["p99"] if m else None,
+                    "imbalance": m["imbalance"] if m else None,
+            }):
+                break               # consumer gone: stop sweeping rungs
         else:
             if rec["pruned"]:
                 print(f"  {rec['deployment']['describe']:>16s} "
@@ -645,7 +722,7 @@ def cmd_capacity_sweep(args) -> int:
                       f"{m['ttft_ms']['p99']:8.1f}ms  "
                       f"{'ATTAINS' if rec['attains'] else 'misses SLO'}")
     if args.json:
-        print(json.dumps({
+        em.emit({
             "type": "summary", "trace": trace.digest(),
             "routing": args.routing, "ladder": list(ladder),
             "attain_target": args.attain_target,
@@ -656,7 +733,9 @@ def cmd_capacity_sweep(args) -> int:
                 "goodput_tok_s": best["metrics"]["goodput_tok_s"],
                 "slo_attainment": best["metrics"]["slo_attainment"],
             }),
-        }), flush=True)
+        })
+        if em.broken:
+            return EXIT_OK
     elif best is None:
         print(f"no rung on ladder {list(ladder)} attains "
               f"{100 * args.attain_target:.0f}% of the SLO")
@@ -725,13 +804,15 @@ def _policy_from_args(args):
     return get_policy(args.policy, **kw)
 
 
-def _emit_timeline(timeline, args) -> None:
+def _emit_timeline(timeline, args, em: _JsonLines) -> None:
     """Stream the timeline (JSON-lines sample records with ``--json``)
-    and honor ``--save-timeline``."""
+    and honor ``--save-timeline``.  A broken pipe stops the sample
+    stream but never the save file."""
     if args.json:
         for s in timeline.samples:
-            print(json.dumps({"type": "sample", **s.to_dict()},
-                             sort_keys=True), flush=True)
+            if not em.emit({"type": "sample", **s.to_dict()},
+                           sort_keys=True):
+                break
     if args.save_timeline:
         timeline.save(args.save_timeline)
 
@@ -752,14 +833,17 @@ def cmd_autoscale_run(args) -> int:
         cold_start_s=args.cold_start, max_queue=args.max_queue)
     report = sim.run(trace, slo=_slo_from_args(args),
                      max_steps=args.max_steps)
-    _emit_timeline(report.timeline, args)
+    em = _JsonLines()
+    _emit_timeline(report.timeline, args, em)
     if args.json:
-        print(json.dumps({"type": "summary",
-                          "trace": {"path": args.trace,
-                                    "digest": trace.digest()},
-                          "config": {"model": args.model,
-                                     "describe": cand.describe()},
-                          **report.to_dict()}, sort_keys=True), flush=True)
+        em.emit({"type": "summary",
+                 "trace": {"path": args.trace,
+                           "digest": trace.digest()},
+                 "config": {"model": args.model,
+                            "describe": cand.describe()},
+                 **report.to_dict()}, sort_keys=True)
+        if em.broken:
+            return EXIT_OK
     else:
         m = report.metrics
         print(report.summary())
@@ -795,13 +879,13 @@ def cmd_autoscale_compare(args) -> int:
         tick_s=args.tick, cold_start_s=args.cold_start,
         initial_replicas=args.initial_replicas, max_steps=args.max_steps,
         max_queue=args.max_queue)
-    _emit_timeline(run.timeline, args)
+    em = _JsonLines()
+    _emit_timeline(run.timeline, args, em)
     ok = (section["static"] is not None
           and section["savings"]["holds_attainment"])
     if args.json:
-        print(json.dumps({"type": "summary", **section}, sort_keys=True),
-              flush=True)
-        return EXIT_OK if ok else EXIT_NO_CONFIG
+        em.emit({"type": "summary", **section}, sort_keys=True)
+        return EXIT_OK if (ok or em.broken) else EXIT_NO_CONFIG
     static = section["static"]
     if static is None:
         print(f"no rung on ladder {list(ladder)} attains "
@@ -821,6 +905,53 @@ def cmd_autoscale_compare(args) -> int:
           f"({sv['chip_seconds_pct']:.1f}%), {verdict} "
           f"({100 * args.attain_target:.0f}% target)")
     return EXIT_OK if ok else EXIT_NO_CONFIG
+
+
+# ---------------------------------------------------------------------------
+# explain
+# ---------------------------------------------------------------------------
+
+def _configurator_from_workload(w) -> Configurator:
+    """Rebuild a Configurator from a report's workload descriptor so
+    ``explain --from-report`` prices through the exact same workload."""
+    return (Configurator.for_model(w.model)
+            .traffic(w.isl, w.osl, w.prefix_len)
+            .sla(ttft_ms=w.sla.ttft_ms,
+                 min_tokens_per_s_user=w.sla.min_tokens_per_s_user,
+                 tpot_ms=w.sla.tpot_ms)
+            .cluster(chips=w.cluster.n_chips, platform=w.cluster.platform,
+                     chips_per_host=w.cluster.chips_per_host)
+            .backend(w.backend).dtype(w.dtype)
+            .modes(*w.modes).moe_alpha(w.moe_alpha))
+
+
+def cmd_explain(args) -> int:
+    """Per-candidate cost attribution: the operator-family latency
+    waterfall for an analytical leader, optionally diffed against a
+    second leader rank."""
+    if args.from_report:
+        report = SearchReport.load(args.from_report)
+        cfg = _configurator_from_workload(report.workload)
+    else:
+        if args.model is None or args.isl is None or args.osl is None:
+            print("error: explain needs --from-report or "
+                  "--model/--isl/--osl", file=sys.stderr)
+            return EXIT_USAGE
+        cfg = _configurator(args)
+        report = None
+    try:
+        ex = cfg.explain(rank=args.rank, baseline=args.baseline,
+                         report=report, top_k=args.top_k)
+    except ValueError as e:
+        if "explainable candidate" not in str(e):
+            raise
+        print(f"error: {e}", file=sys.stderr)
+        return EXIT_NO_CONFIG
+    if args.json:
+        print(json.dumps(ex.to_dict(), indent=2))
+    else:
+        print(ex.summary())
+    return EXIT_OK
 
 
 # ---------------------------------------------------------------------------
@@ -912,6 +1043,14 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="how many analytical leaders to replay "
                          "(disaggregated composites are skipped, not "
                          "replayed)")
+    sp.add_argument("--trace-out", default="", metavar="PATH",
+                    help="trace the search with repro.obs spans and write "
+                         "the TraceArtifact JSONL here ('-' streams it to "
+                         "stdout); deterministic across seeded runs")
+    sp.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="collect repro.obs counters during the search and "
+                         "write the registry snapshot here (JSON, or "
+                         "Prometheus text format with a .prom suffix)")
     sp.set_defaults(func=cmd_search)
 
     gp = sub.add_parser("generate", help="emit the launch artifact")
@@ -1140,6 +1279,25 @@ def _build_parser() -> argparse.ArgumentParser:
     ac.add_argument("--ladder", default="1,2,4", metavar="N,N,...",
                     help="replica ladder for the static baseline plan")
     ac.set_defaults(func=cmd_autoscale_compare)
+
+    ep = sub.add_parser(
+        "explain",
+        help="attribute a candidate's projected latency to operator "
+             "families (per-phase waterfall, optional two-rank diff)")
+    _add_workload_args(ep, required=False)
+    ep.add_argument("--from-report", default="",
+                    help="SearchReport JSON from `search --save-report` "
+                         "(skips the fresh search)")
+    ep.add_argument("--rank", type=int, default=0,
+                    help="analytical-leader rank to explain (0 = best "
+                         "explainable candidate)")
+    ep.add_argument("--baseline", type=int, default=None, metavar="RANK",
+                    help="second leader rank to diff against (per-family "
+                         "deltas + the parallelism changes behind them)")
+    ep.add_argument("--top-k", type=int, default=5,
+                    help="how many analytical leaders to consider")
+    ep.add_argument("--json", action="store_true")
+    ep.set_defaults(func=cmd_explain)
 
     lp = sub.add_parser("list", help="enumerate models/backends/platforms")
     lp.add_argument("what", nargs="?", default="all",

@@ -29,6 +29,7 @@ import numpy as np
 from repro.core import analytical
 from repro.core import operators as ops
 from repro.core.hardware import Platform, get_platform
+from repro.obs.metrics import get_metrics
 
 # Grid axes ------------------------------------------------------------------
 
@@ -395,9 +396,24 @@ class PerfDatabase:
             self._memo[op] = t
         return t
 
+    def _obs_op(self, family: str, path: str, n: float = 1.0,
+                mode: str = "scalar") -> None:
+        """Per-family query accounting into the installed MetricsRegistry
+        (one `get_metrics()` check at each call site keeps the disabled
+        path free).  `path` distinguishes grid interpolation from the
+        roofline fallback; a fitted calibration correction upgrades
+        "grid" to "grid_corrected"."""
+        m = get_metrics()
+        if m is None:
+            return
+        if path == "grid" and family in self._corrections:
+            path = "grid_corrected"
+        m.inc("repro_db_ops_total", n, family=family, path=path, mode=mode)
+
     def _op_latency_uncached(self, op) -> float:
         if not self.use_grid:
             self.stats.sol_fallbacks += 1
+            self._obs_op(ops.op_family(op), "sol")
             return analytical.sol_latency(self.platform, op)
 
         # grid-backed paths apply the calibration correction to the grid
@@ -410,8 +426,10 @@ class PerfDatabase:
             g = self._grids.get(("gemm", op.dtype))
             if g is None:
                 self.stats.sol_fallbacks += 1
+                self._obs_op("gemm", "sol")
                 return analytical.sol_latency(self.platform, op)
             self.stats.grid_hits += 1
+            self._obs_op("gemm", "grid")
             return self._correct(ops.op_family(op),
                                  g.query((op.m, op.n, op.k)))
 
@@ -420,6 +438,7 @@ class PerfDatabase:
             self.stats.grid_hits += 1
             kv = op.effective_kv()
             family = ops.op_family(op)
+            self._obs_op(family, "grid")
             if op.phase == "prefill":
                 # batch folds linearly (flash tiles over batch)
                 return op.batch * self._correct(
@@ -430,12 +449,14 @@ class PerfDatabase:
         if isinstance(op, ops.MoEOp):
             grid = self._moe_grid(op)
             self.stats.grid_hits += 1
+            self._obs_op("moe", "grid")
             return self._correct(
                 ops.op_family(op), grid.query((max(op.rank_tokens(), 1),)))
 
         if isinstance(op, ops.RecurrentOp):
             grid = self._rec_grid(op)
             self.stats.grid_hits += 1
+            self._obs_op("recurrent", "grid")
             return op.batch * self._correct(
                 ops.op_family(op), grid.query((max(op.seq, 1),)))
 
@@ -444,12 +465,14 @@ class PerfDatabase:
                 return 0.0
             grid = self._comm_grid(op.kind, op.n_chips, op.inter_pod)
             self.stats.grid_hits += 1
+            self._obs_op("comm", "grid")
             return self._correct(
                 ops.op_family(op),
                 grid.query((max(op.bytes_per_chip, 1.0),)))
 
         # embedding / mem ops: speed-of-light path (paper: unprofiled ops)
         self.stats.sol_fallbacks += 1
+        self._obs_op(ops.op_family(op), "sol")
         return analytical.latency(self.platform, op)
 
     def sequence_latency(self, op_list: List) -> float:
@@ -462,6 +485,9 @@ class PerfDatabase:
         without re-walking the operator list.
         """
         self.stats.seq_queries += 1
+        m = get_metrics()
+        if m is not None:
+            m.inc("repro_db_seq_total", mode="scalar")
         key: Optional[Tuple] = None
         try:
             key = tuple(op_list)
@@ -471,6 +497,8 @@ class PerfDatabase:
             cached = None
         if cached is not None:
             self.stats.seq_hits += 1
+            if m is not None:
+                m.inc("repro_db_seq_hits_total", mode="scalar")
             return cached
         total = 0.0
         for item in op_list:
@@ -499,6 +527,9 @@ class PerfDatabase:
         n = batch.n_items
         total = np.zeros(n, np.float64)
         self.stats.seq_queries += n
+        m = get_metrics()
+        if m is not None:
+            m.inc("repro_db_seq_total", n, mode="batched")
         # bucket groups by operator family — every grid of a family shares
         # axes, so a whole family prices in ONE stacked interpolation pass
         # (per-grid numpy overhead is what separates ~20x from ~100x here)
@@ -519,6 +550,8 @@ class PerfDatabase:
                     t_m = (b * (m * k + k * nn + m * nn)) / self.platform.hbm_bw
                     vals = np.maximum(t_c, t_m)[rows.ridx]
                     self.stats.sol_fallbacks += len(rows.item)
+                    self._obs_op("gemm", "sol", len(rows.item),
+                                 mode="batched")
                     total += np.bincount(rows.item,
                                          weights=rows.mult * vals,
                                          minlength=n)
@@ -546,6 +579,8 @@ class PerfDatabase:
                     vals = self._correct_batch(
                         family, grid.query_batch_jax(rows.coords))[rows.ridx]
                     self.stats.grid_hits += len(rows.item)
+                    self._obs_op(family, "grid", len(rows.item),
+                                 mode="batched")
                     total += np.bincount(rows.item,
                                          weights=rows.mult * vals,
                                          minlength=n)
@@ -570,6 +605,7 @@ class PerfDatabase:
                 item = np.concatenate([r.item for _, r in group])
                 mult = np.concatenate([r.mult for _, r in group])
             self.stats.grid_hits += len(item)
+            self._obs_op(family, "grid", len(item), mode="batched")
             total += np.bincount(item, weights=mult * vals, minlength=n)
         sol = batch.sol_rows
         if sol is not None and len(sol.item):
@@ -581,6 +617,12 @@ class PerfDatabase:
                 sol.value / (p.hbm_bw * analytical.GATHER_EFF)
                 + p.launch_overhead)
             self.stats.sol_fallbacks += len(sol.item)
+            n_mem = int(np.count_nonzero(sol.kind == 0))
+            if n_mem:
+                self._obs_op("mem", "sol", n_mem, mode="batched")
+            if len(sol.item) - n_mem:
+                self._obs_op("embedding", "sol", len(sol.item) - n_mem,
+                             mode="batched")
             total += np.bincount(sol.item, weights=sol.mult * t, minlength=n)
         return total
 

@@ -21,6 +21,8 @@ from repro.core.config import (CandidateConfig, ParallelismConfig, Projection,
                                RuntimeFlags, SLA, WorkloadDescriptor)
 from repro.core.hardware import get_platform
 from repro.core.perf_database import PerfDatabase
+from repro.obs.metrics import get_metrics
+from repro.obs.trace import get_tracer
 from repro.serving.sim import StepSpec
 
 
@@ -171,10 +173,12 @@ class InferenceSession:
             to_price.append((key, par, spec))
         local: Dict[Tuple, float] = {}
         if to_price:
-            batch = decompose.encode_iteration_batch(
-                [(self.cfg, par, spec) for _, par, spec in to_price],
-                alpha=self.w.moe_alpha, backend=self.w.backend,
-                dtype=self.w.dtype)
+            tracer = get_tracer()
+            with tracer.span("price.encode", atoms=len(to_price)):
+                batch = decompose.encode_iteration_batch(
+                    [(self.cfg, par, spec) for _, par, spec in to_price],
+                    alpha=self.w.moe_alpha, backend=self.w.backend,
+                    dtype=self.w.dtype)
             if batch is None:            # scalar fallback (encoder-decoder)
                 for key, par, spec in to_price:
                     op_list = decompose.iteration_ops(
@@ -182,8 +186,10 @@ class InferenceSession:
                         backend=self.w.backend, dtype=self.w.dtype)
                     local[key] = self.db.sequence_latency(op_list)
             else:
-                vals = self.db.sequence_latency_batch(
-                    batch, backend=backend_kernel)
+                with tracer.span("price.kernel", atoms=batch.n_items,
+                                 rows=batch.n_rows):
+                    vals = self.db.sequence_latency_batch(
+                        batch, backend=backend_kernel)
                 for (key, _, _), v in zip(to_price, vals):
                     local[key] = float(v)
             if len(memo) < 500_000:
@@ -191,6 +197,10 @@ class InferenceSession:
         if hits:
             self.db.stats.seq_queries += hits
             self.db.stats.seq_hits += hits
+            m = get_metrics()
+            if m is not None:
+                m.inc("repro_db_seq_total", hits, mode="batched")
+                m.inc("repro_db_seq_hits_total", hits, mode="batched")
         out = [0.0] * len(atoms)
         for i, par, spec in flat:
             key = (par.tp, par.pp, par.ep, par.dp, spec)

@@ -23,6 +23,8 @@ from repro.core.config import (CandidateConfig, DisaggConfig,
                                WorkloadDescriptor)
 from repro.core.perf_database import PerfDatabase
 from repro.core.session import InferenceSession
+from repro.obs.metrics import get_metrics
+from repro.obs.trace import get_tracer
 
 BATCH_SWEEP = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 MAX_TOKENS_SWEEP = (4096, 8192, 16384)
@@ -240,23 +242,47 @@ class TaskRunner:
             if batched:
                 yield from self._iter_modes_batched(sweep_flags, progress)
             else:
+                m = get_metrics()
                 for cand in self.iter_candidates(sweep_flags):
+                    if m is not None:
+                        m.inc("repro_search_candidates_enumerated_total",
+                              path="scalar")
                     if "static" in self.w.modes:
                         p = self.session.evaluate_static(cand)
                         progress.n_evaluated += 1
+                        if m is not None:
+                            m.inc("repro_search_candidates_priced_total"
+                                  if p else
+                                  "repro_search_candidates_pruned_total",
+                                  path="scalar", mode="static")
                         if p:
                             progress.n_yielded += 1
                             yield cand, p
                     if "aggregated" in self.w.modes:
                         p = self.session.evaluate_aggregated(cand)
                         progress.n_evaluated += 1
+                        if m is not None:
+                            m.inc("repro_search_candidates_priced_total"
+                                  if p else
+                                  "repro_search_candidates_pruned_total",
+                                  path="scalar", mode="aggregated")
                         if p:
                             progress.n_yielded += 1
                             yield cand, p
 
         if "disaggregated" in self.w.modes:
-            disagg_best, disagg_all = self._run_disagg(keep_all_disagg,
-                                                       progress)
+            pool_before = progress.disagg_pool_evaluated
+            with get_tracer().span("search.disagg") as sp:
+                disagg_best, disagg_all = self._run_disagg(keep_all_disagg,
+                                                           progress)
+                sp.set(pool_evaluated=progress.disagg_pool_evaluated
+                       - pool_before,
+                       preempted=progress.disagg_preempted,
+                       matched=disagg_best is not None)
+            m = get_metrics()
+            if m is not None:
+                m.inc("repro_search_disagg_pool_total",
+                      progress.disagg_pool_evaluated - pool_before)
             progress.disagg_best = disagg_best
             progress.disagg_done = True
             if disagg_best:
@@ -286,36 +312,71 @@ class TaskRunner:
                      else session.evaluate_aggregated)
                     for m in ("static", "aggregated") if m in self.w.modes]
         cand_it = self.iter_candidates(sweep_flags)
+        metrics = get_metrics()
+        tracer = get_tracer()
+        chunk_idx = 0
         while True:
             cands = list(itertools.islice(cand_it, chunk_n))
             if not cands:
                 return
             # record pass: plan = (cand, fn, mem, atom offset, n_atoms)
-            plans, atoms = [], []
-            for cand in cands:
-                mem = session._mem_ok(cand)
-                for _mode, fn in mode_fns:
-                    if not mem[0]:
-                        plans.append((cand, fn, mem, 0, 0))
-                        continue
-                    _, rec = session.record_specs(
-                        lambda _f=fn, _c=cand, _m=mem:
-                        _f(_c, _mem=_m, _plan_only=True))
-                    plans.append((cand, fn, mem, len(atoms), len(rec)))
-                    atoms.extend(rec)
-            values = session.price_specs(atoms, backend_kernel=kernel) \
-                if atoms else []
+            # (the whole record→price block nests under one chunk span;
+            # replay spans stay outside it so no span is open at a yield)
+            with tracer.span("search.chunk", index=chunk_idx,
+                             candidates=len(cands)) as sp:
+                plans, atoms = [], []
+                with tracer.span("search.record"):
+                    for cand in cands:
+                        mem = session._mem_ok(cand)
+                        for _mode, fn in mode_fns:
+                            if not mem[0]:
+                                plans.append((cand, fn, mem, 0, 0))
+                                continue
+                            _, rec = session.record_specs(
+                                lambda _f=fn, _c=cand, _m=mem:
+                                _f(_c, _mem=_m, _plan_only=True))
+                            plans.append((cand, fn, mem, len(atoms),
+                                          len(rec)))
+                            atoms.extend(rec)
+                values = session.price_specs(atoms, backend_kernel=kernel) \
+                    if atoms else []
+                sp.set(atoms=len(atoms))
+            if metrics is not None:
+                metrics.inc("repro_search_chunks_total")
+                metrics.inc("repro_search_candidates_enumerated_total",
+                            len(cands), path="batched")
+            chunk_idx += 1
             # replay pass, in the scalar loop's candidate × mode order
-            for cand, fn, mem, start, n in plans:
-                progress.n_evaluated += 1
-                if not mem[0]:
-                    continue
-                p = session.replay_specs(
-                    lambda _f=fn, _c=cand, _m=mem: _f(_c, _mem=_m),
-                    values[start:start + n])
-                if p:
-                    progress.n_yielded += 1
-                    yield cand, p
+            pi = -1
+            try:
+                for pi, (cand, fn, mem, start, n) in enumerate(plans):
+                    progress.n_evaluated += 1
+                    if not mem[0]:
+                        if metrics is not None:
+                            metrics.inc(
+                                "repro_search_candidates_pruned_total",
+                                path="batched")
+                        continue
+                    with tracer.span("search.replay"):
+                        p = session.replay_specs(
+                            lambda _f=fn, _c=cand, _m=mem: _f(_c, _mem=_m),
+                            values[start:start + n])
+                    if metrics is not None:
+                        metrics.inc("repro_search_candidates_priced_total"
+                                    if p else
+                                    "repro_search_candidates_pruned_total",
+                                    path="batched")
+                    if p:
+                        progress.n_yielded += 1
+                        yield cand, p
+            except GeneratorExit:
+                # the chunk was priced whole but the consumer stopped
+                # mid-replay: everything after the current plan is work
+                # early exit could not skip (the cost of chunking)
+                if metrics is not None and len(plans) - pi - 1 > 0:
+                    metrics.inc("repro_search_chunk_overrun_total",
+                                len(plans) - pi - 1)
+                raise
 
     def run(self, sweep_flags: bool = False,
             keep_all_disagg: bool = False,

@@ -1,0 +1,60 @@
+"""repro.obs — observability for the configurator: tracing spans, a
+process-local metrics registry, and per-candidate cost attribution.
+
+Three layers, all zero-cost until installed:
+
+* :mod:`repro.obs.trace` — ``Tracer`` / ``span(name, **attrs)`` with a
+  deterministic virtual clock plus wallclock timers, frozen into a
+  versioned JSONL ``TraceArtifact`` (sha256 digest, lossless
+  round-trip).  The default :data:`NULL_TRACER` makes every span a
+  shared no-op.
+* :mod:`repro.obs.metrics` — ``MetricsRegistry`` counters / gauges /
+  histograms threaded through ``TaskRunner``, ``PerfDatabase`` and the
+  simulators; exports JSON and Prometheus text format.
+* :mod:`repro.obs.explain` — the operator-family latency waterfall per
+  serving phase, and a two-candidate diff (surfaced as
+  ``Configurator.explain`` and the ``explain`` CLI subcommand).
+
+``trace``/``metrics`` are import-light (stdlib only); ``explain`` pulls
+in the pricing stack and loads lazily so the core modules can import
+this package without a cycle.
+"""
+from repro.obs.metrics import (MetricsRegistry, disable_metrics,
+                               enable_metrics, get_metrics)
+from repro.obs.trace import (NULL_TRACER, SUPPORTED_TRACE_SCHEMA_VERSIONS,
+                             TRACE_SCHEMA_VERSION, NullTracer, SpanRecord,
+                             TraceArtifact, Tracer, disable_tracing,
+                             enable_tracing, get_tracer, set_tracer)
+
+_EXPLAIN_NAMES = ("CandidateExplanation", "Explanation", "ExplanationDiff",
+                  "PhaseWaterfall", "diff_explanations", "explain_candidate",
+                  "explain_spec")
+
+__all__ = [
+    "MetricsRegistry", "NULL_TRACER", "NullTracer", "SpanRecord",
+    "SUPPORTED_TRACE_SCHEMA_VERSIONS", "TRACE_SCHEMA_VERSION",
+    "TraceArtifact", "Tracer", "disable_metrics", "disable_tracing",
+    "enable_metrics", "enable_tracing", "get_metrics", "get_tracer",
+    "set_tracer", "telemetry_section", *_EXPLAIN_NAMES,
+]
+
+
+def telemetry_section(tracer=None, metrics=None) -> dict:
+    """The schema-v6 ``telemetry`` report section: deterministic trace
+    identity (digest + span count, no wall times) and a metrics snapshot."""
+    section = {"trace": None, "metrics": None}
+    if tracer is not None and tracer is not NULL_TRACER:
+        art = tracer.artifact()
+        section["trace"] = {"schema_version": TRACE_SCHEMA_VERSION,
+                            "digest": art.digest(),
+                            "n_spans": art.n_spans}
+    if metrics is not None:
+        section["metrics"] = metrics.to_dict()
+    return section
+
+
+def __getattr__(name):
+    if name in _EXPLAIN_NAMES:
+        from repro.obs import explain as _explain
+        return getattr(_explain, name)
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

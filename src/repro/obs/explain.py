@@ -1,0 +1,275 @@
+"""Per-candidate cost attribution: where an iteration's milliseconds go.
+
+The pricing model already decomposes every candidate into operator atoms
+(``decompose.iteration_ops``) before summing them through
+``PerfDatabase.sequence_latency`` — ``explain`` re-walks exactly that
+list and buckets ``count * op_latency(op)`` by kernel family
+(:func:`repro.core.operators.op_family`: gemm / attn_prefill /
+attn_decode / moe / recurrent / comm / embedding / mem) per serving
+phase (prefill / decode / mixed).  Because both walks price through the
+same memoized oracle, the waterfall is conservative by construction:
+per-phase family sums reproduce ``spec_latency_ms`` to float-summation
+noise (tested ≤ 1e-9 relative across the model zoo, scalar and batched).
+
+``diff_explanations`` compares two candidates family-by-family and names
+the parallelism change responsible ("winner spends 38% less in comm
+because tp=4→2").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import decompose
+from repro.core import operators as ops
+from repro.core.config import CandidateConfig
+from repro.serving.sim import StepSpec
+
+__all__ = [
+    "CandidateExplanation", "Explanation", "ExplanationDiff",
+    "PhaseWaterfall", "diff_explanations", "explain_candidate",
+    "explain_spec",
+]
+
+_PHASE_ORDER = ("prefill", "mixed", "decode")
+
+
+def _phase_of(spec: StepSpec) -> str:
+    if spec.prefill and spec.decode:
+        return "mixed"
+    return "prefill" if spec.prefill else "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseWaterfall:
+    """Family-bucketed latency of one serving phase, in ms per iteration."""
+    phase: str
+    families: Dict[str, float]
+    overhead_ms: float                  # backend launch/framework overhead
+    n_atoms: int                        # pricing atoms merged into this phase
+
+    @property
+    def total_ms(self) -> float:
+        return sum(self.families.values()) + self.overhead_ms
+
+    def to_dict(self) -> Dict:
+        return {"phase": self.phase,
+                "families": {k: self.families[k]
+                             for k in sorted(self.families)},
+                "overhead_ms": self.overhead_ms,
+                "total_ms": self.total_ms,
+                "n_atoms": self.n_atoms}
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateExplanation:
+    """The full waterfall for one candidate in one serving mode."""
+    model: str
+    mode: str
+    describe: str
+    parallel: Dict
+    batch_size: int
+    phases: Tuple[PhaseWaterfall, ...]
+
+    @property
+    def families(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for ph in self.phases:
+            for fam, ms in ph.families.items():
+                out[fam] = out.get(fam, 0.0) + ms
+        return out
+
+    @property
+    def total_ms(self) -> float:
+        return sum(ph.total_ms for ph in self.phases)
+
+    def to_dict(self) -> Dict:
+        return {"model": self.model, "mode": self.mode,
+                "describe": self.describe, "parallel": dict(self.parallel),
+                "batch_size": self.batch_size,
+                "phases": [ph.to_dict() for ph in self.phases],
+                "families": {k: v for k, v
+                             in sorted(self.families.items())},
+                "total_ms": self.total_ms}
+
+    def summary(self) -> str:
+        lines = [f"{self.model} {self.describe} [{self.mode}] — "
+                 f"{self.total_ms:.3f} ms/iteration"]
+        for ph in self.phases:
+            lines.append(f"  {ph.phase}: {ph.total_ms:.3f} ms")
+            ranked = sorted(ph.families.items(), key=lambda kv: -kv[1])
+            for fam, ms in ranked:
+                share = ms / ph.total_ms * 100 if ph.total_ms else 0.0
+                lines.append(f"    {fam:<13} {ms:10.4f} ms  {share:5.1f}%")
+            if ph.overhead_ms:
+                share = ph.overhead_ms / ph.total_ms * 100
+                lines.append(f"    {'overhead':<13} {ph.overhead_ms:10.4f} ms"
+                             f"  {share:5.1f}%")
+        return "\n".join(lines)
+
+
+def explain_spec(session, par, spec: StepSpec, flags
+                 ) -> Tuple[Dict[str, float], float]:
+    """Family buckets (ms) + overhead (ms) for one pricing atom.
+
+    Mirrors ``InferenceSession.spec_latency_ms`` exactly, including the
+    sequential-prefill split, so bucket sums reconcile with the scalar
+    oracle (and with the fused batch kernel, which prices the same
+    atoms).
+    """
+    fam: Dict[str, float] = {}
+    overhead = 0.0
+
+    def add(sub: StepSpec):
+        nonlocal overhead
+        op_list = decompose.iteration_ops(
+            session.cfg, par, sub, alpha=session.w.moe_alpha,
+            backend=session.w.backend, dtype=session.w.dtype)
+        for item in op_list:
+            if isinstance(item, tuple):
+                op, count = item
+            else:
+                op, count = item, 1
+            f = ops.op_family(op)
+            fam[f] = fam.get(f, 0.0) + 1e3 * count * session.db.op_latency(op)
+        overhead += 1e3 * session.backend.iteration_overhead(
+            len(sub.prefill), len(sub.decode), flags.enable_graph_capture)
+
+    if session.backend.sequential_prefill and len(spec.prefill) > 1:
+        for chunk in spec.prefill:
+            add(StepSpec(prefill=(chunk,), decode=()))
+        if spec.decode:
+            add(StepSpec(prefill=(), decode=spec.decode))
+    else:
+        add(spec)
+    return fam, overhead
+
+
+def explain_candidate(session, cand: CandidateConfig,
+                      mode: str) -> CandidateExplanation:
+    """Waterfall for one (candidate, mode), built from the exact atoms the
+    mode algorithm prices (recorded via ``InferenceSession.record_specs``)."""
+    if mode == "static":
+        fn = session.evaluate_static
+    elif mode == "aggregated":
+        fn = session.evaluate_aggregated
+    else:
+        raise ValueError(f"explain supports single-engine modes "
+                         f"('static', 'aggregated'), not {mode!r}")
+    mem = session._mem_ok(cand)
+    if not mem[0]:
+        raise ValueError(f"candidate {cand.describe()} does not fit memory "
+                         f"on {session.platform.name}")
+    _, atoms = session.record_specs(
+        lambda: fn(cand, _mem=mem, _plan_only=True))
+    acc: Dict[str, List] = {}       # phase -> [families, overhead, n_atoms]
+    for par, spec, flags in atoms:
+        ph = _phase_of(spec)
+        fam, ov = explain_spec(session, par, spec, flags)
+        slot = acc.setdefault(ph, [{}, 0.0, 0])
+        for f, ms in fam.items():
+            slot[0][f] = slot[0].get(f, 0.0) + ms
+        slot[1] += ov
+        slot[2] += 1
+    phases = tuple(
+        PhaseWaterfall(phase=ph, families=acc[ph][0],
+                       overhead_ms=acc[ph][1], n_atoms=acc[ph][2])
+        for ph in _PHASE_ORDER if ph in acc)
+    return CandidateExplanation(
+        model=session.w.model, mode=mode, describe=cand.describe(),
+        parallel=dataclasses.asdict(cand.parallel),
+        batch_size=cand.batch_size, phases=phases)
+
+
+# ---------------------------------------------------------------------------
+# two-candidate diff
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExplanationDiff:
+    """Family-by-family comparison of two explained candidates."""
+    candidate: str                   # describe() strings
+    baseline: str
+    families: Dict[str, Dict]        # fam -> {candidate_ms, baseline_ms, ...}
+    parallel_changes: Dict[str, Tuple[int, int]]   # axis -> (cand, base)
+    total_candidate_ms: float
+    total_baseline_ms: float
+
+    def to_dict(self) -> Dict:
+        return {"candidate": self.candidate, "baseline": self.baseline,
+                "families": {k: dict(v) for k, v
+                             in sorted(self.families.items())},
+                "parallel_changes": {k: list(v) for k, v
+                                     in sorted(self.parallel_changes.items())},
+                "total_candidate_ms": self.total_candidate_ms,
+                "total_baseline_ms": self.total_baseline_ms}
+
+    def summary(self) -> str:
+        because = ""
+        if self.parallel_changes:
+            because = " because " + ", ".join(
+                f"{ax}={b}→{a}" for ax, (a, b)
+                in sorted(self.parallel_changes.items()))
+        lines = [f"{self.candidate} vs {self.baseline}: "
+                 f"{self.total_candidate_ms:.3f} ms vs "
+                 f"{self.total_baseline_ms:.3f} ms per iteration{because}"]
+        ranked = sorted(self.families.items(),
+                        key=lambda kv: -abs(kv[1]["delta_ms"]))
+        for fam, d in ranked:
+            if d["baseline_ms"] <= 0 and d["candidate_ms"] <= 0:
+                continue
+            if d["baseline_ms"] > 0:
+                pct = -d["delta_ms"] / d["baseline_ms"] * 100
+                verb = "less" if pct >= 0 else "more"
+                lines.append(
+                    f"  {self.candidate} spends {abs(pct):.0f}% {verb} in "
+                    f"{fam} ({d['candidate_ms']:.4f} vs "
+                    f"{d['baseline_ms']:.4f} ms){because}")
+                because = ""         # attribute the cause once, on top
+            else:
+                lines.append(f"  {fam}: {d['candidate_ms']:.4f} ms "
+                             f"(absent in baseline)")
+        return "\n".join(lines)
+
+
+def diff_explanations(cand: CandidateExplanation,
+                      base: CandidateExplanation) -> ExplanationDiff:
+    fams = sorted(set(cand.families) | set(base.families))
+    table = {}
+    for fam in fams:
+        a = cand.families.get(fam, 0.0)
+        b = base.families.get(fam, 0.0)
+        table[fam] = {"candidate_ms": a, "baseline_ms": b,
+                      "delta_ms": a - b,
+                      "ratio": a / b if b > 0 else float("inf")}
+    changes = {ax: (cand.parallel[ax], base.parallel[ax])
+               for ax in cand.parallel
+               if cand.parallel[ax] != base.parallel[ax]}
+    return ExplanationDiff(
+        candidate=cand.describe, baseline=base.describe,
+        families=table, parallel_changes=changes,
+        total_candidate_ms=cand.total_ms,
+        total_baseline_ms=base.total_ms)
+
+
+@dataclasses.dataclass(frozen=True)
+class Explanation:
+    """What ``Configurator.explain`` returns: the explained candidate,
+    optionally a baseline and their diff."""
+    candidate: CandidateExplanation
+    baseline: Optional[CandidateExplanation] = None
+    diff: Optional[ExplanationDiff] = None
+
+    def to_dict(self) -> Dict:
+        return {"candidate": self.candidate.to_dict(),
+                "baseline": (self.baseline.to_dict()
+                             if self.baseline else None),
+                "diff": self.diff.to_dict() if self.diff else None}
+
+    def summary(self) -> str:
+        parts = [self.candidate.summary()]
+        if self.baseline is not None:
+            parts.append(self.baseline.summary())
+        if self.diff is not None:
+            parts.append(self.diff.summary())
+        return "\n\n".join(parts)

@@ -29,6 +29,8 @@ import dataclasses
 import statistics
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.metrics import get_metrics
+from repro.obs.trace import get_tracer
 from repro.serving.request import Request
 from repro.serving.scheduler import ContinuousBatchingScheduler, SchedulerConfig
 
@@ -231,6 +233,24 @@ class ServingSimulator:
         turns on goodput accounting: rejected and unfinished requests
         count as SLO misses.
         """
+        tracer = get_tracer()
+        with tracer.span("serving.replay") as sp:
+            metrics = self._replay(trace, slo, max_steps)
+            # advance the tracer's virtual clock by the simulated makespan
+            # so the span's v_start/v_end bracket sim time, not wall time
+            tracer.virtual_time = sp.v_start + metrics.duration_s
+            sp.set(n_requests=metrics.n_requests, steps=metrics.steps,
+                   completed=metrics.completed, rejected=metrics.rejected)
+        m = get_metrics()
+        if m is not None:
+            m.inc("repro_replay_iterations_total", metrics.steps)
+            m.inc("repro_replay_admissions_total",
+                  metrics.n_requests - metrics.rejected)
+            m.inc("repro_replay_rejections_total", metrics.rejected)
+            m.inc("repro_replay_completions_total", metrics.completed)
+        return metrics
+
+    def _replay(self, trace, slo, max_steps: int) -> ReplayMetrics:
         records = list(getattr(trace, "requests", trace))
         sched = ContinuousBatchingScheduler(self.sched_cfg)
         t = 0.0

@@ -481,7 +481,8 @@ def test_configurator_autoscale_records_v5_section():
                                 window_s=3.0),
         ladder=(1, 2, 4), tick_s=0.5, cold_start_s=1.0)
     a = report.autoscale
-    assert report.schema_version == 5
+    from repro.api import SCHEMA_VERSION
+    assert report.schema_version == SCHEMA_VERSION
     assert a["trace"]["digest"] == trace.digest()
     assert a["candidate"]["describe"]
     assert a["candidate"]["index"] >= 0

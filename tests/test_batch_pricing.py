@@ -253,6 +253,36 @@ def test_batched_early_exit_prices_at_most_one_chunk():
     assert progress.n_evaluated <= jaxenv.pricing_chunk() + 3
 
 
+def test_seq_queries_parity_scalar_vs_batched():
+    """``DatabaseStats.seq_queries`` counts pricing *demand*, not path
+    mechanics: a full search must report the identical count (and memo-hit
+    count) whether it priced through the scalar oracle or the fused batch
+    kernel — the probe the streaming-search tests calibrate against."""
+    counts = {}
+    for batched in (False, True):
+        runner = TaskRunner(_workload("llama3.1-8b", modes=("aggregated",)))
+        n = len(list(runner.iter_search(batched=batched)))
+        stats = runner.session.db.stats
+        counts[batched] = (n, stats.seq_queries, stats.seq_hits)
+        assert stats.seq_queries > 0
+    assert counts[False] == counts[True]
+
+
+def test_seq_queries_early_exit_differential_both_paths():
+    """Abandoning a stream early must register as fewer priced sequences
+    than a drained one, under both pricing paths."""
+    for batched in (False, True):
+        full = TaskRunner(_workload("llama3.1-8b", modes=("aggregated",)))
+        list(full.iter_search(batched=batched))
+        early = TaskRunner(_workload("llama3.1-8b", modes=("aggregated",)))
+        it = early.iter_search(batched=batched)
+        for _ in range(3):
+            next(it)
+        it.close()
+        assert 0 < early.session.db.stats.seq_queries \
+            < full.session.db.stats.seq_queries, f"batched={batched}"
+
+
 def test_sol_database_falls_back_to_scalar():
     """use_grid=False databases cannot batch: the cursor must transparently
     price through the scalar path and still yield projections."""

@@ -412,7 +412,8 @@ def test_plan_capacity_min_chip_attains_while_next_cheaper_misses():
     assert cap["slo"] == _E2E_SLO.to_dict()
     assert cap["database"]["platform"] == "tpu_v5e"
     assert cap["candidates"][0]["analytical_rank"] == 0
-    assert report.schema_version == 5
+    from repro.api import SCHEMA_VERSION
+    assert report.schema_version == SCHEMA_VERSION
     assert "capacity plan" in report.summary()
 
 

@@ -97,7 +97,8 @@ def test_capacity_plan_json_schema_v4_report(trace_path, capsys, tmp_path):
                    "--save-report", saved, "--json"])
     report = json.loads(capsys.readouterr().out)
     assert rc == 0
-    assert report["schema_version"] == 5
+    from repro.api import SCHEMA_VERSION
+    assert report["schema_version"] == SCHEMA_VERSION
     cap = report["capacity"]
     assert cap["plan"]["attained"] is True
     assert cap["plan"]["total_chips"] is not None

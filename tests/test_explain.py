@@ -1,0 +1,212 @@
+"""Conservation tests for repro.obs.explain — the per-candidate waterfall
+must reconcile with the pricing oracles it claims to attribute.
+
+The load-bearing property: for every model in the zoo, under both the
+scalar oracle (``InferenceSession.spec_latency_ms``) and the fused batch
+kernel (``InferenceSession.price_specs``), the explained candidate's
+family buckets + overhead sum back to the exact per-iteration latency the
+search priced, to ≤ 1e-9 relative.  A waterfall that doesn't add up is
+worse than no waterfall.
+"""
+import pytest
+
+from repro.calibrate import DeterministicTimer, run_calibration
+from repro.configs import list_archs
+from repro.core.config import SLA, ClusterSpec, WorkloadDescriptor
+from repro.core.perf_database import PerfDatabase
+from repro.core.session import InferenceSession
+from repro.core.task_runner import TaskRunner
+from repro.obs.explain import diff_explanations, explain_candidate
+
+ZOO = tuple(list_archs(True))
+
+
+def _workload(model, chips=8, modes=("aggregated",)):
+    return WorkloadDescriptor(
+        model=model, isl=256, osl=64, sla=SLA(),
+        cluster=ClusterSpec(n_chips=chips, platform="tpu_v5e"),
+        backend="repro-jax", modes=modes, dtype="fp8")
+
+
+_FIT_CACHE = {}
+
+
+def _session_and_candidate(model):
+    """A warm session plus the first memory-fitting candidate, growing the
+    cluster until the big MoE checkpoints fit."""
+    if model not in _FIT_CACHE:
+        for chips in (8, 64, 256):
+            runner = TaskRunner(_workload(model, chips=chips))
+            for cand in runner.iter_candidates():
+                if runner.session._mem_ok(cand)[0]:
+                    _FIT_CACHE[model] = (runner.session, cand)
+                    break
+            if model in _FIT_CACHE:
+                break
+        else:
+            pytest.fail(f"no candidate fits {model} on ≤256 chips")
+    return _FIT_CACHE[model]
+
+
+def _recorded_atoms(session, cand, mode):
+    fn = (session.evaluate_static if mode == "static"
+          else session.evaluate_aggregated)
+    mem = session._mem_ok(cand)
+    _, atoms = session.record_specs(
+        lambda: fn(cand, _mem=mem, _plan_only=True))
+    return atoms
+
+
+# ---------------------------------------------------------------------------
+# conservation: scalar and batched, across the zoo
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ZOO)
+def test_waterfall_conserves_scalar_latency(model):
+    session, cand = _session_and_candidate(model)
+    atoms = _recorded_atoms(session, cand, "aggregated")
+    ref_ms = sum(session.spec_latency_ms(p, s, f) for p, s, f in atoms)
+    expl = explain_candidate(session, cand, "aggregated")
+    assert expl.total_ms == pytest.approx(ref_ms, rel=1e-9)
+    assert sum(ph.n_atoms for ph in expl.phases) == len(atoms)
+    # per-phase totals are internally consistent too
+    for ph in expl.phases:
+        assert ph.total_ms == pytest.approx(
+            sum(ph.families.values()) + ph.overhead_ms, rel=1e-12)
+
+
+@pytest.mark.parametrize("model", ZOO)
+def test_waterfall_conserves_batched_latency(model):
+    session, cand = _session_and_candidate(model)
+    if not session.batch_pricing_ok():
+        pytest.skip("architecture prices through the scalar path only")
+    atoms = _recorded_atoms(session, cand, "aggregated")
+    batched_ms = sum(session.price_specs(atoms))
+    expl = explain_candidate(session, cand, "aggregated")
+    assert expl.total_ms == pytest.approx(batched_ms, rel=1e-9)
+
+
+def test_waterfall_conserves_static_mode():
+    session, cand = _session_and_candidate("llama3.1-8b")
+    atoms = _recorded_atoms(session, cand, "static")
+    ref_ms = sum(session.spec_latency_ms(p, s, f) for p, s, f in atoms)
+    expl = explain_candidate(session, cand, "static")
+    assert expl.mode == "static"
+    assert expl.total_ms == pytest.approx(ref_ms, rel=1e-9)
+
+
+def test_waterfall_conserves_with_calibration():
+    """Calibration corrections flow through op_latency, so the explained
+    buckets must reconcile against the corrected oracle unchanged."""
+    art = run_calibration("tpu_v5e", "repro-jax",
+                          timer=DeterministicTimer("tpu_v5e"),
+                          created_at="2026-07-28T00:00:00Z",
+                          points_per_axis=2)
+    db = PerfDatabase("tpu_v5e", "repro-jax", calibration=art)
+    w = _workload("llama3.1-8b")
+    runner = TaskRunner(w, db=db)
+    session = runner.session
+    cand = next(c for c in runner.iter_candidates()
+                if session._mem_ok(c)[0])
+    atoms = _recorded_atoms(session, cand, "aggregated")
+    scalar_ms = sum(session.spec_latency_ms(p, s, f) for p, s, f in atoms)
+    batched_ms = sum(session.price_specs(atoms))
+    expl = explain_candidate(session, cand, "aggregated")
+    assert expl.total_ms == pytest.approx(scalar_ms, rel=1e-9)
+    assert expl.total_ms == pytest.approx(batched_ms, rel=1e-9)
+    # and the calibrated oracle actually differs from the uncalibrated one
+    plain = InferenceSession(w)
+    plain_ms = sum(plain.spec_latency_ms(p, s, f) for p, s, f in atoms)
+    assert plain_ms != pytest.approx(scalar_ms, rel=1e-6)
+
+
+def test_moe_waterfall_attributes_expert_family():
+    session, cand = _session_and_candidate("qwen3-moe-30b-a3b")
+    expl = explain_candidate(session, cand, "aggregated")
+    assert "moe" in expl.families and expl.families["moe"] > 0
+    assert expl.total_ms > 0
+
+
+# ---------------------------------------------------------------------------
+# waterfall shape + diff
+# ---------------------------------------------------------------------------
+
+def test_waterfall_phases_and_to_dict():
+    session, cand = _session_and_candidate("llama3.1-8b")
+    expl = explain_candidate(session, cand, "aggregated")
+    assert {ph.phase for ph in expl.phases} <= {"prefill", "mixed", "decode"}
+    d = expl.to_dict()
+    assert d["model"] == "llama3.1-8b" and d["mode"] == "aggregated"
+    assert d["total_ms"] == pytest.approx(expl.total_ms)
+    assert sum(p["total_ms"] for p in d["phases"]) == pytest.approx(
+        expl.total_ms, rel=1e-12)
+    assert "ms/iteration" in expl.summary()
+
+
+def test_diff_explanations_family_table_and_parallel_changes():
+    session, cand = _session_and_candidate("llama3.1-8b")
+    runner = TaskRunner(_workload("llama3.1-8b"), session=session)
+    other = next(c for c in runner.iter_candidates()
+                 if session._mem_ok(c)[0]
+                 and c.parallel.tp != cand.parallel.tp
+                 and c.batch_size == cand.batch_size)
+    a = explain_candidate(session, cand, "aggregated")
+    b = explain_candidate(session, other, "aggregated")
+    d = diff_explanations(a, b)
+    assert d.total_candidate_ms == pytest.approx(a.total_ms)
+    assert d.total_baseline_ms == pytest.approx(b.total_ms)
+    assert set(d.families) == set(a.families) | set(b.families)
+    for fam, row in d.families.items():
+        assert row["delta_ms"] == pytest.approx(
+            row["candidate_ms"] - row["baseline_ms"], abs=1e-15)
+    assert d.parallel_changes["tp"] == (cand.parallel.tp, other.parallel.tp)
+    assert "tp=" in d.summary() and " vs " in d.summary()
+
+
+def test_diff_identical_candidates_has_no_changes():
+    session, cand = _session_and_candidate("llama3.1-8b")
+    a = explain_candidate(session, cand, "aggregated")
+    d = diff_explanations(a, a)
+    assert d.parallel_changes == {}
+    for row in d.families.values():
+        assert row["delta_ms"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# error surface
+# ---------------------------------------------------------------------------
+
+def test_explain_rejects_composite_modes():
+    session, cand = _session_and_candidate("llama3.1-8b")
+    with pytest.raises(ValueError, match="single-engine modes"):
+        explain_candidate(session, cand, "disaggregated")
+
+
+def test_explain_rejects_non_fitting_candidate():
+    runner = TaskRunner(_workload("deepseek-v3", chips=8))
+    session = runner.session
+    cand = next(c for c in runner.iter_candidates()
+                if not session._mem_ok(c)[0])
+    with pytest.raises(ValueError, match="does not fit memory"):
+        explain_candidate(session, cand, "aggregated")
+
+
+# ---------------------------------------------------------------------------
+# Configurator.explain end-to-end
+# ---------------------------------------------------------------------------
+
+def test_configurator_explain_with_baseline():
+    from repro.api import Configurator
+    cfg = (Configurator.for_model("llama3.1-8b")
+           .traffic(isl=256, osl=64)
+           .cluster(chips=8, platform="tpu_v5e")
+           .backend("repro-jax").dtype("fp8").modes("aggregated"))
+    ex = cfg.explain(rank=0, baseline=1)
+    assert ex.candidate.total_ms > 0
+    assert ex.baseline is not None and ex.diff is not None
+    assert ex.diff.total_candidate_ms == pytest.approx(
+        ex.candidate.total_ms)
+    d = ex.to_dict()
+    assert set(d) == {"candidate", "baseline", "diff"}
+    # leaders come back fastest-first, so the waterfall explains why
+    assert ex.candidate.describe != ex.baseline.describe

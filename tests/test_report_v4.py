@@ -74,7 +74,7 @@ def test_capacity_section_structure(planned):
 
 def test_v4_roundtrip_preserves_capacity(planned):
     blob = planned.to_json()
-    assert json.loads(blob)["schema_version"] == 5
+    assert json.loads(blob)["schema_version"] == SCHEMA_VERSION
     back = SearchReport.from_json(blob)
     assert back == planned
     assert back.capacity == planned.capacity

@@ -70,7 +70,7 @@ def test_autoscale_section_structure(autoscaled):
 
 def test_v5_roundtrip_preserves_autoscale(autoscaled):
     blob = autoscaled.to_json()
-    assert json.loads(blob)["schema_version"] == 5
+    assert json.loads(blob)["schema_version"] == SCHEMA_VERSION
     back = SearchReport.from_json(blob)
     assert back == autoscaled
     assert back.autoscale == autoscaled.autoscale

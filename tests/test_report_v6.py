@@ -1,0 +1,153 @@
+"""SearchReport schema v6: the ``telemetry`` section round-trips, stays
+``None`` on uninstrumented runs, the new v5 golden fixture migrates
+losslessly — its ``capacity`` and ``autoscale`` sections byte-for-byte —
+and every older golden still loads."""
+import json
+import os
+
+import pytest
+
+from repro.api import Configurator, SCHEMA_VERSION, SearchReport
+from repro.obs import (disable_metrics, disable_tracing, enable_metrics,
+                       enable_tracing)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+V5_FIXTURE = os.path.join(FIXTURES, "search_report_v5.json")
+
+
+def _configurator():
+    return (Configurator.for_model("llama3.1-8b")
+            .traffic(isl=256, osl=64)
+            .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+            .cluster(chips=8).backend("repro-jax").dtype("fp8")
+            .modes("aggregated"))
+
+
+@pytest.fixture(autouse=True)
+def _clean_instrumentation():
+    disable_tracing()
+    disable_metrics()
+    yield
+    disable_tracing()
+    disable_metrics()
+
+
+@pytest.fixture(scope="module")
+def instrumented():
+    tracer, registry = enable_tracing(), enable_metrics()
+    try:
+        report = _configurator().search(generate_launch=False)
+    finally:
+        disable_tracing()
+        disable_metrics()
+    return report, tracer, registry
+
+
+# ---------------------------------------------------------------------------
+# the v6 telemetry section
+# ---------------------------------------------------------------------------
+
+def test_telemetry_section_structure(instrumented):
+    report, tracer, registry = instrumented
+    t = report.telemetry
+    assert t is not None
+    assert set(t) == {"trace", "metrics"}
+    assert t["trace"]["schema_version"] == 1
+    assert t["trace"]["n_spans"] == len(tracer.spans) > 0
+    assert t["trace"]["digest"] == tracer.artifact().digest()
+    counters = t["metrics"]["counters"]
+    assert counters == registry.to_dict()["counters"]
+    assert any(k.startswith("repro_db_ops_total") for k in counters)
+    assert any(k.startswith("repro_search_candidates_priced_total")
+               for k in counters)
+
+
+def test_v6_roundtrip_preserves_telemetry(instrumented):
+    report, _, _ = instrumented
+    blob = report.to_json()
+    assert json.loads(blob)["schema_version"] == SCHEMA_VERSION
+    back = SearchReport.from_json(blob)
+    assert back == report
+    assert back.telemetry == report.telemetry
+    assert back.to_json() == blob            # byte-stable second hop
+
+
+def test_summary_mentions_telemetry(instrumented):
+    report, _, _ = instrumented
+    text = report.summary()
+    assert "telemetry" in text
+    assert report.telemetry["trace"]["digest"] in text
+
+
+def test_uninstrumented_search_has_no_telemetry():
+    report = _configurator().search(generate_launch=False)
+    assert report.telemetry is None
+    assert '"telemetry": null' in report.to_json()
+    assert "telemetry" not in report.summary()
+
+
+def test_metrics_only_telemetry():
+    """A registry without a tracer still lands in the report; the trace
+    half stays None."""
+    enable_metrics()
+    try:
+        report = _configurator().search(generate_launch=False)
+    finally:
+        disable_metrics()
+    assert report.telemetry is not None
+    assert report.telemetry["trace"] is None
+    assert report.telemetry["metrics"]["counters"]
+
+
+# ---------------------------------------------------------------------------
+# golden fixture: v5 migrates losslessly, sections byte-for-byte
+# ---------------------------------------------------------------------------
+
+def test_v5_golden_fixture_migrates_losslessly():
+    with open(V5_FIXTURE) as f:
+        payload = json.load(f)
+    assert payload["schema_version"] == 5
+    rep = SearchReport.load(V5_FIXTURE)
+    assert rep.schema_version == SCHEMA_VERSION
+    assert rep.n_candidates == payload["search"]["n_candidates"]
+    assert rep.elapsed_s == payload["search"]["elapsed_s"]
+    assert rep.frontier_indices == payload["frontier"]
+    assert rep.best_index == payload["best"]
+    assert rep.fingerprint == payload["database"]
+    assert len(rep.projections) == len(payload["projections"])
+    for proj, raw in zip(rep.projections, payload["projections"]):
+        assert proj.tokens_per_s_per_chip == raw["tokens_per_s_per_chip"]
+        assert proj.config == raw["config"]
+    # v5 never carried a telemetry section: it defaults to None
+    assert rep.telemetry is None
+
+
+def test_v5_golden_migration_preserves_sections_bytes():
+    """The v5 fixture's capacity and autoscale sections must survive the
+    v5→v6 migration byte-for-byte: identical JSON serialization, not
+    merely equal-ish."""
+    with open(V5_FIXTURE) as f:
+        payload = json.load(f)
+    assert payload["capacity"] is not None
+    assert payload["autoscale"] is not None
+    rep = SearchReport.load(V5_FIXTURE)
+    reserialized = rep.to_dict()
+    for section in ("capacity", "autoscale"):
+        assert json.dumps(reserialized[section], sort_keys=True) \
+            == json.dumps(payload[section], sort_keys=True), section
+    again = SearchReport.from_json(rep.to_json())
+    assert again == rep
+
+
+def test_all_golden_fixtures_still_load():
+    for name, version in (("search_report_v1.json", 1),
+                          ("search_report_v2.json", 2),
+                          ("search_report_v3.json", 3),
+                          ("search_report_v4.json", 4),
+                          ("search_report_v5.json", 5)):
+        path = os.path.join(FIXTURES, name)
+        with open(path) as f:
+            assert json.load(f)["schema_version"] == version
+        rep = SearchReport.load(path)
+        assert rep.schema_version == SCHEMA_VERSION
+        assert rep.telemetry is None
