@@ -23,7 +23,7 @@ report = json.load(sys.stdin)
 version = report["schema_version"]
 n_projections = len(report["projections"])
 best_index = report["best"]
-assert version == 6, version
+assert version == 7, version
 assert n_projections > 0, "search produced no projections"
 assert report["database"]["platform"] == "tpu_v5e", report["database"]
 assert len(report["memory"]["per_candidate_bytes_per_chip"]) \
@@ -317,6 +317,107 @@ PYTHONPATH=src python -m repro.core.cli search \
 cmp "$obs_dir/plain.jsonl" "$obs_dir/traced.jsonl" \
     || { echo "enabling tracing perturbed the search output" >&2; exit 1; }
 echo "ok: candidate stream byte-identical with tracing on and off"
+
+echo "=== smoke: flight recorder — Chrome trace valid + replay byte-identity ==="
+# A seeded replay with the flight recorder on must (a) write a valid,
+# byte-deterministic Chrome trace_event export with per-request lanes,
+# (b) leave the replay JSON byte-identical to an uninstrumented run,
+# and (c) record sampled spans within a generous wallclock factor of
+# the tracing-off replay.
+fr_dir=$(mktemp -d)
+PYTHONPATH=src python -m repro.core.cli workload generate \
+    --arrivals poisson --rate 6 --n 80 --lengths fixed \
+    --isl 128 --osl 32 --seed 5 --out "$fr_dir/trace.jsonl" > /dev/null
+for i in 1 2; do
+    PYTHONPATH=src python -m repro.core.cli workload replay \
+        --trace "$fr_dir/trace.jsonl" --model llama3.1-8b \
+        --tp 1 --batch 16 --dtype fp8 --json \
+        --trace-out "$fr_dir/t$i.chrome.json" \
+        --metrics-out "$fr_dir/m$i.json" \
+      > "$fr_dir/replay$i.json"
+done
+cmp "$fr_dir/t1.chrome.json" "$fr_dir/t2.chrome.json" \
+    || { echo "chrome trace export is not deterministic" >&2; exit 1; }
+cmp "$fr_dir/m1.json" "$fr_dir/m2.json" \
+    || { echo "replay metrics snapshot is not deterministic" >&2; exit 1; }
+PYTHONPATH=src python -m repro.core.cli workload replay \
+    --trace "$fr_dir/trace.jsonl" --model llama3.1-8b \
+    --tp 1 --batch 16 --dtype fp8 --json > "$fr_dir/replay_plain.json"
+cmp "$fr_dir/replay1.json" "$fr_dir/replay_plain.json" \
+    || { echo "flight recorder perturbed the replay output" >&2; exit 1; }
+PYTHONPATH=src python - "$fr_dir" <<'PY'
+import json
+import sys
+import time
+
+d = sys.argv[1]
+ct = json.load(open(f"{d}/t1.chrome.json"))
+events = [e for e in ct["traceEvents"] if e["ph"] == "X"]
+assert events, "chrome export carries no complete events"
+for e in events:
+    missing = {"name", "ph", "ts", "dur", "pid", "tid"} - set(e)
+    assert not missing, (e["name"], missing)
+    assert e["dur"] >= 0, e
+reqs = [e for e in events if e["name"] == "request"]
+assert len(reqs) == 80, len(reqs)
+lanes = {(e["pid"], e["tid"]) for e in reqs}
+assert len(lanes) == 80, "expected one lane per request"
+hists = json.load(open(f"{d}/m1.json"))["histograms"]
+h = hists["repro_request_ttft_ms{sim=serving}"]
+assert sum(h["counts"]) == h["count"] == 80, h["count"]
+
+# overhead: sampled span recording must stay within a generous factor
+# of the tracing-off replay (it runs after the simulation loop, so the
+# bound is loose by design — this guards against quadratic blowups)
+sys.path.insert(0, "src")
+from repro.obs import disable_tracing, enable_tracing
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.sim import ServingSimulator
+from repro.workloads import WorkloadTrace
+
+trace = WorkloadTrace.load(f"{d}/trace.jsonl")
+cfg = SchedulerConfig(max_batch=16)
+lat = lambda s: 1e-3 + 1e-5 * len(s.decode)
+def bench(instrumented):
+    best = float("inf")
+    for _ in range(3):
+        if instrumented:
+            enable_tracing()
+        t0 = time.perf_counter()
+        ServingSimulator(cfg, lat).replay(trace)
+        best = min(best, time.perf_counter() - t0)
+        disable_tracing()
+    return best
+off, on = bench(False), bench(True)
+assert on <= 25 * off + 0.05, f"span recording overhead: {on:.4f}s vs {off:.4f}s"
+print(f"ok: 80 request lanes, deterministic chrome export, replay "
+      f"byte-identical; span overhead {on / max(off, 1e-9):.1f}x "
+      f"(bound 25x)")
+PY
+rm -rf "$fr_dir"
+
+echo "=== smoke: obs diff — regression detection on replay snapshots ==="
+od_dir=$(mktemp -d)
+PYTHONPATH=src python -m repro.core.cli workload generate \
+    --arrivals poisson --rate 6 --n 40 --lengths fixed \
+    --isl 128 --osl 32 --seed 5 --out "$od_dir/trace.jsonl" > /dev/null
+PYTHONPATH=src python -m repro.core.cli workload replay \
+    --trace "$od_dir/trace.jsonl" --model llama3.1-8b --tp 1 --batch 16 \
+    --dtype fp8 --json --metrics-out "$od_dir/a.json" > /dev/null
+PYTHONPATH=src python -m repro.core.cli workload replay \
+    --trace "$od_dir/trace.jsonl" --model llama3.1-8b --tp 1 --batch 1 \
+    --dtype fp8 --json --metrics-out "$od_dir/b.json" > /dev/null
+PYTHONPATH=src python -m repro.core.cli obs diff \
+    "$od_dir/a.json" "$od_dir/a.json" > /dev/null \
+    || { echo "obs diff flagged identical snapshots" >&2; exit 1; }
+if PYTHONPATH=src python -m repro.core.cli obs diff \
+    "$od_dir/a.json" "$od_dir/b.json" > "$od_dir/diff.txt"; then
+    echo "obs diff missed a real regression" >&2; exit 1
+fi
+grep -q "repro_request_ttft_ms" "$od_dir/diff.txt" \
+    || { echo "obs diff did not report the TTFT shift" >&2; exit 1; }
+echo "ok: obs diff exits 0 on identical, 1 with the TTFT shift reported"
+rm -rf "$od_dir"
 
 echo "=== smoke: explain — the waterfall adds back up to the iteration ==="
 PYTHONPATH=src python -m repro.core.cli explain \

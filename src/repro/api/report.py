@@ -46,7 +46,16 @@ metrics registry is installed) records the deterministic trace identity
 counters/gauges/histograms the search incremented.  Wallclock timings
 never enter the section, so it is byte-stable across seeded runs.
 
-``from_json`` still accepts v1 through v5 payloads and migrates them
+Schema v7 adds the request-level flight recorder: the replay-carrying
+sections (``workload_eval`` candidate replays, ``capacity`` rungs, the
+``autoscale`` run) each gain a ``histograms`` block — fixed
+log2-ms-bucket TTFT/TPOT/queue-wait/e2e distributions
+(:data:`~repro.obs.metrics.LATENCY_MS_BUCKETS`) folded from every
+finished request, so the report carries full latency distributions
+rather than just precomputed percentiles.  The section layout is
+otherwise unchanged; v6 reports migrate with the block absent.
+
+``from_json`` still accepts v1 through v6 payloads and migrates them
 losslessly (sections a version never carried default to empty/None).
 """
 from __future__ import annotations
@@ -66,9 +75,10 @@ from repro.core.generator import LaunchConfig
 #: re-ranking).  v4: + capacity section (multi-replica ladder sweep /
 #: min-chip plan).  v5: + autoscale section (reactive autoscaling vs
 #: the static plan).  v6: + telemetry section (trace digest + metrics
-#: snapshot).  ``from_json`` reads every version listed here.
-SCHEMA_VERSION = 6
-SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5, 6)
+#: snapshot).  v7: + per-replay latency histograms (request-level
+#: flight recorder).  ``from_json`` reads every version listed here.
+SCHEMA_VERSION = 7
+SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5, 6, 7)
 
 
 def workload_to_dict(w: WorkloadDescriptor) -> Dict:

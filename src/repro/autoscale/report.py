@@ -102,7 +102,7 @@ def build_autoscale_section(runner, candidate, trace: WorkloadTrace,
             "holds_attainment": (run.metrics.slo_attainment or 0.0)
             >= attain_target,
         }
-    return {
+    section = {
         "schema_version": AUTOSCALE_SCHEMA_VERSION,
         "trace": {"digest": trace.digest(),
                   "n_requests": trace.n_requests,
@@ -120,4 +120,6 @@ def build_autoscale_section(runner, candidate, trace: WorkloadTrace,
         "static": static,
         "run": run.to_dict(),
         "savings": savings,
-    }, run
+    }
+    section["run"]["metrics"]["histograms"] = run.metrics.histograms
+    return section, run

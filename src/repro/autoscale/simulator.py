@@ -36,6 +36,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.capacity.cluster import ReplicaEngine, aggregate_cluster_metrics
 from repro.capacity.routing import ROUTING_POLICIES, get_router
+from repro.obs.flight import emit_engine_request_spans
 from repro.obs.metrics import get_metrics
 from repro.obs.trace import get_tracer
 from repro.serving.scheduler import SchedulerConfig
@@ -181,7 +182,8 @@ class AutoscaleSimulator:
         tracer = get_tracer()
         with tracer.span("autoscale.run", policy=self.policy.name,
                          routing=self.routing, tick_s=self.tick_s) as sp:
-            report = self._run(trace, slo, max_steps)
+            report, engines = self._run(trace, slo, max_steps)
+            emit_engine_request_spans(tracer, engines, base=sp.v_start)
             tracer.virtual_time = sp.v_start + report.horizon_s
             sp.set(horizon_s=report.horizon_s,
                    peak_replicas=report.peak_replicas,
@@ -203,9 +205,12 @@ class AutoscaleSimulator:
             m.inc("repro_autoscale_retires_total",
                   sum(1 for e in report.events
                       if e.get("action") == "retire"))
+            if met.slo_attainment is not None:
+                m.set_gauge("repro_replay_slo_attainment",
+                            met.slo_attainment, sim="autoscale")
         return report
 
-    def _run(self, trace, slo, max_steps: int) -> AutoscaleReport:
+    def _run(self, trace, slo, max_steps: int):
         policy = self.policy
         records = list(getattr(trace, "requests", trace))
         router = get_router(self.routing)
@@ -316,14 +321,15 @@ class AutoscaleSimulator:
             or any(e.outstanding > 0 for e in all_engines))
         metrics = aggregate_cluster_metrics(
             all_engines, n_requests=len(records), routing=self.routing,
-            replicas=len(all_engines), truncated=truncated, slo=slo)
+            replicas=len(all_engines), truncated=truncated, slo=slo,
+            sim="autoscale")
         chip_seconds = self.chips_per_replica * sum(
             (e.retired_at if e.retired_at is not None else horizon)
             - e.spawned_at
             for e in all_engines)
         mean_replicas = (chip_seconds / self.chips_per_replica / horizon
                          if horizon > 0 else float(self.initial_replicas))
-        return AutoscaleReport(
+        report = AutoscaleReport(
             policy=policy.to_dict(),
             routing=self.routing,
             tick_s=self.tick_s,
@@ -345,3 +351,4 @@ class AutoscaleSimulator:
                 "initial_replicas": self.initial_replicas,
             }),
         )
+        return report, all_engines

@@ -22,6 +22,7 @@ import dataclasses
 import statistics
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.obs.flight import emit_engine_request_spans, latency_histograms
 from repro.obs.metrics import get_metrics
 from repro.obs.trace import get_tracer
 from repro.serving.request import Request
@@ -55,6 +56,7 @@ class ReplicaEngine:
         self.routed = 0
         self.rejected = 0
         self.done: List[Request] = []
+        self.rejected_reqs: List[Request] = []   # flight-recorder spans
 
     @property
     def outstanding(self) -> int:
@@ -69,6 +71,7 @@ class ReplicaEngine:
                       priority=getattr(record, "priority", 0))
         if not self.sched.add(req):
             self.rejected += 1
+            self.rejected_reqs.append(req)
 
     def step(self) -> bool:
         """Execute one iteration (the shared ``run_iteration`` body, so
@@ -154,10 +157,16 @@ class ClusterReplayMetrics:
     slo: Optional[Dict] = None
     slo_attainment: Optional[float] = None
     goodput_tok_s: Optional[float] = None
+    #: cluster-wide TTFT/TPOT/queue-wait/e2e distributions (fixed
+    #: log2-ms buckets); popped from ``to_dict`` like ``per_request``
+    #: so replay/autoscale CLI bytes are unchanged — report builders
+    #: attach it explicitly (schema-v7 sections)
+    histograms: Optional[Dict] = None
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
         d.pop("per_request")               # raw samples stay in-process
+        d.pop("histograms")
         return d
 
 
@@ -187,7 +196,8 @@ def _imbalance(rows: List[Dict]) -> Dict:
 def aggregate_cluster_metrics(engines: List[ReplicaEngine],
                               n_requests: int, routing: str,
                               replicas: int, truncated: bool,
-                              slo=None) -> ClusterReplayMetrics:
+                              slo=None, sim: str = "cluster"
+                              ) -> ClusterReplayMetrics:
     """Fold a list of (possibly retired) replica engines into one
     :class:`ClusterReplayMetrics` — shared by the static
     :meth:`ClusterSimulator.replay` and the autoscale control loop, so
@@ -233,6 +243,7 @@ def aggregate_cluster_metrics(engines: List[ReplicaEngine],
         imbalance=_imbalance(per_replica),
         per_request=[(r.tenant, idx, r.ttft, r.tpot)
                      for idx, r in completed],
+        histograms=latency_histograms([r for _, r in completed], sim=sim),
     )
     if slo is not None:
         attaining = [r for _, r in completed
@@ -293,7 +304,9 @@ class ClusterSimulator:
         tracer = get_tracer()
         with tracer.span("cluster.replay", replicas=self.replicas,
                          routing=self.routing) as sp:
-            metrics = self._replay(trace, slo, max_steps, tick_s, on_tick)
+            metrics, engines = self._replay(trace, slo, max_steps,
+                                            tick_s, on_tick)
+            emit_engine_request_spans(tracer, engines, base=sp.v_start)
             tracer.virtual_time = sp.v_start + metrics.duration_s
             sp.set(n_requests=metrics.n_requests, steps=metrics.steps,
                    completed=metrics.completed, rejected=metrics.rejected,
@@ -305,11 +318,14 @@ class ClusterSimulator:
                   metrics.n_requests - metrics.rejected)
             m.inc("repro_replay_rejections_total", metrics.rejected)
             m.inc("repro_replay_completions_total", metrics.completed)
+            if metrics.slo_attainment is not None:
+                m.set_gauge("repro_replay_slo_attainment",
+                            metrics.slo_attainment, sim="cluster")
         return metrics
 
     def _replay(self, trace, slo, max_steps: int,
                 tick_s: Optional[float],
-                on_tick: Optional[Callable]) -> ClusterReplayMetrics:
+                on_tick: Optional[Callable]):
         records = list(getattr(trace, "requests", trace))
         router = get_router(self.routing)
         engines = [ReplicaEngine(i, self.sched_cfg, self.latency_fn)
@@ -355,6 +371,7 @@ class ClusterSimulator:
         truncated = budget <= 0 and (
             routed < len(records)
             or any(eng.outstanding > 0 for eng in engines))
-        return aggregate_cluster_metrics(
+        metrics = aggregate_cluster_metrics(
             engines, n_requests=len(records), routing=self.routing,
             replicas=self.replicas, truncated=truncated, slo=slo)
+        return metrics, engines

@@ -114,6 +114,7 @@ def iter_ladder(runner, candidates: Sequence[CandidateConfig],
                 priority_admission=priority_admission, max_queue=max_queue)
             metrics = sim.replay(trace, slo=slo, max_steps=max_steps)
             record["metrics"] = metrics.to_dict()
+            record["metrics"]["histograms"] = metrics.histograms
             record["truncated"] = metrics.truncated
             record["attains"] = (metrics.slo_attainment or 0.0) \
                 >= attain_target

@@ -69,7 +69,7 @@ EXIT_NO_CONFIG = 1
 EXIT_USAGE = 2
 
 _SUBCOMMANDS = ("search", "generate", "compare", "list", "calibrate",
-                "workload", "capacity", "autoscale", "explain")
+                "workload", "capacity", "autoscale", "explain", "obs")
 
 
 # ---------------------------------------------------------------------------
@@ -255,7 +255,11 @@ class _ObsCapture:
     and/or metrics registry for the duration of the command, then write
     the artifacts on the way out (``finish``).  The trace artifact keeps
     wall times out, so seeded runs write byte-identical files;
-    ``--trace-out -`` streams the JSONL to stdout instead."""
+    ``--trace-out -`` streams the JSONL to stdout, a ``.chrome.json``
+    suffix writes the Chrome ``trace_event`` export instead (load it in
+    chrome://tracing or Perfetto).  The flight-recorder sampling knobs
+    (``--span-sample-every``/``--max-request-spans``) bound per-request
+    span volume on big traces."""
 
     def __init__(self, args):
         self.trace_out = getattr(args, "trace_out", "")
@@ -263,6 +267,17 @@ class _ObsCapture:
         self.meta = {"command": getattr(args, "command", None) or "search",
                      "model": getattr(args, "model", None)}
         self.tracer = self.registry = None
+        self._flight_restore = None
+        sample = getattr(args, "span_sample_every", None)
+        cap = getattr(args, "max_request_spans", None)
+        if sample is not None or cap is not None:
+            from repro.obs import configure_flight_recorder, flight_config
+            prev = flight_config()
+            self._flight_restore = (prev.sample_every,
+                                    prev.max_request_spans)
+            configure_flight_recorder(
+                sample_every=sample if sample is not None else 1,
+                max_request_spans=cap if cap is not None else 512)
         if self.trace_out:
             from repro.obs import enable_tracing
             self.tracer = enable_tracing()
@@ -271,12 +286,19 @@ class _ObsCapture:
             self.registry = enable_metrics()
 
     def finish(self) -> None:
+        if self._flight_restore is not None:
+            from repro.obs import configure_flight_recorder
+            configure_flight_recorder(*self._flight_restore)
         if self.tracer is not None:
             from repro.obs import disable_tracing
             disable_tracing()
             art = self.tracer.artifact(meta=self.meta)
             if self.trace_out == "-":
                 _JsonLines().emit_text(art.to_jsonl())
+            elif self.trace_out.endswith(".chrome.json"):
+                with open(self.trace_out, "w") as f:
+                    f.write(json.dumps(art.to_chrome_trace(),
+                                       sort_keys=True) + "\n")
             else:
                 art.save(self.trace_out)
         if self.registry is not None:
@@ -631,8 +653,12 @@ def cmd_workload_replay(args) -> int:
     runner = TaskRunner(w)
     sim = runner.simulator(cand, priority_admission=True,
                            max_queue=args.max_queue)
-    metrics = sim.replay(trace, slo=_slo_from_args(args),
-                         max_steps=args.max_steps)
+    obs = _ObsCapture(args)
+    try:
+        metrics = sim.replay(trace, slo=_slo_from_args(args),
+                             max_steps=args.max_steps)
+    finally:
+        obs.finish()
     payload = {"trace": {"path": args.trace, "digest": trace.digest()},
                "config": {"model": args.model, "describe": cand.describe(),
                           "platform": args.platform,
@@ -684,43 +710,48 @@ def cmd_capacity_sweep(args) -> int:
     best = None
     records = []
     em = _JsonLines()
-    for rec in iter_ladder(runner, [cand], trace, _slo_from_args(args),
-                           ladder=ladder, routing=args.routing,
-                           attain_target=args.attain_target,
-                           max_steps=args.max_steps,
-                           max_queue=args.max_queue):
-        records.append(rec)
-        if rec["attains"] and (best is None
-                               or rec["total_chips"] < best["total_chips"]):
-            best = rec
-        if args.json:
-            m = rec["metrics"]
-            # "describe" is always the string form; the summary record's
-            # "deployment" is always the full dict — one shape per key
-            if not em.emit({
-                    "type": "rung", "replicas": rec["replicas"],
-                    "describe": rec["deployment"]["describe"],
-                    "total_chips": rec["total_chips"],
-                    "pruned": rec["pruned"], "attains": rec["attains"],
-                    "goodput_tok_s": m["goodput_tok_s"] if m else None,
-                    "slo_attainment": m["slo_attainment"] if m else None,
-                    "p99_ttft_ms": m["ttft_ms"]["p99"] if m else None,
-                    "imbalance": m["imbalance"] if m else None,
-            }):
-                break               # consumer gone: stop sweeping rungs
-        else:
-            if rec["pruned"]:
-                print(f"  {rec['deployment']['describe']:>16s} "
-                      f"{rec['total_chips']:4d} chips  pruned "
-                      f"({rec['pruned']})")
-            else:
+    obs = _ObsCapture(args)
+    try:
+        for rec in iter_ladder(runner, [cand], trace, _slo_from_args(args),
+                               ladder=ladder, routing=args.routing,
+                               attain_target=args.attain_target,
+                               max_steps=args.max_steps,
+                               max_queue=args.max_queue):
+            records.append(rec)
+            if rec["attains"] and (best is None or rec["total_chips"]
+                                   < best["total_chips"]):
+                best = rec
+            if args.json:
                 m = rec["metrics"]
-                print(f"  {rec['deployment']['describe']:>16s} "
-                      f"{rec['total_chips']:4d} chips  goodput "
-                      f"{m['goodput_tok_s']:9.1f} tok/s  attainment "
-                      f"{100 * m['slo_attainment']:5.1f}%  p99 TTFT "
-                      f"{m['ttft_ms']['p99']:8.1f}ms  "
-                      f"{'ATTAINS' if rec['attains'] else 'misses SLO'}")
+                # "describe" is always the string form; the summary
+                # record's "deployment" is always the full dict — one
+                # shape per key
+                if not em.emit({
+                        "type": "rung", "replicas": rec["replicas"],
+                        "describe": rec["deployment"]["describe"],
+                        "total_chips": rec["total_chips"],
+                        "pruned": rec["pruned"], "attains": rec["attains"],
+                        "goodput_tok_s": m["goodput_tok_s"] if m else None,
+                        "slo_attainment": m["slo_attainment"] if m else None,
+                        "p99_ttft_ms": m["ttft_ms"]["p99"] if m else None,
+                        "imbalance": m["imbalance"] if m else None,
+                }):
+                    break           # consumer gone: stop sweeping rungs
+            else:
+                if rec["pruned"]:
+                    print(f"  {rec['deployment']['describe']:>16s} "
+                          f"{rec['total_chips']:4d} chips  pruned "
+                          f"({rec['pruned']})")
+                else:
+                    m = rec["metrics"]
+                    print(f"  {rec['deployment']['describe']:>16s} "
+                          f"{rec['total_chips']:4d} chips  goodput "
+                          f"{m['goodput_tok_s']:9.1f} tok/s  attainment "
+                          f"{100 * m['slo_attainment']:5.1f}%  p99 TTFT "
+                          f"{m['ttft_ms']['p99']:8.1f}ms  "
+                          f"{'ATTAINS' if rec['attains'] else 'misses SLO'}")
+    finally:
+        obs.finish()
     if args.json:
         em.emit({
             "type": "summary", "trace": trace.digest(),
@@ -750,10 +781,15 @@ def cmd_capacity_plan(args) -> int:
     """Search, then size the deployment: analytical top-K × ladder →
     min-chip plan, recorded in the schema-v4 SearchReport."""
     cfg = _configurator(args)
-    report = cfg.plan_capacity(
-        args.trace, _slo_from_args(args), ladder=_parse_ladder(args.ladder),
-        top_k=args.top_k, routing=args.routing,
-        attain_target=args.attain_target, max_steps=args.max_steps)
+    obs = _ObsCapture(args)
+    try:
+        report = cfg.plan_capacity(
+            args.trace, _slo_from_args(args),
+            ladder=_parse_ladder(args.ladder),
+            top_k=args.top_k, routing=args.routing,
+            attain_target=args.attain_target, max_steps=args.max_steps)
+    finally:
+        obs.finish()
     if args.save_report:
         report.save(args.save_report)
     if args.json:
@@ -831,8 +867,12 @@ def cmd_autoscale_run(args) -> int:
         cand, policy, routing=args.routing,
         initial_replicas=args.initial_replicas, tick_s=args.tick,
         cold_start_s=args.cold_start, max_queue=args.max_queue)
-    report = sim.run(trace, slo=_slo_from_args(args),
-                     max_steps=args.max_steps)
+    obs = _ObsCapture(args)
+    try:
+        report = sim.run(trace, slo=_slo_from_args(args),
+                         max_steps=args.max_steps)
+    finally:
+        obs.finish()
     em = _JsonLines()
     _emit_timeline(report.timeline, args, em)
     if args.json:
@@ -873,17 +913,25 @@ def cmd_autoscale_compare(args) -> int:
         args, trace,
         n_chips=args.tp * args.pp * max(max(ladder), policy.max_replicas))
     runner = TaskRunner(w)
-    section, run = build_autoscale_section(
-        runner, cand, trace, _slo_from_args(args), policy, ladder=ladder,
-        routing=args.routing, attain_target=args.attain_target,
-        tick_s=args.tick, cold_start_s=args.cold_start,
-        initial_replicas=args.initial_replicas, max_steps=args.max_steps,
-        max_queue=args.max_queue)
+    obs = _ObsCapture(args)
+    try:
+        section, run = build_autoscale_section(
+            runner, cand, trace, _slo_from_args(args), policy,
+            ladder=ladder, routing=args.routing,
+            attain_target=args.attain_target,
+            tick_s=args.tick, cold_start_s=args.cold_start,
+            initial_replicas=args.initial_replicas,
+            max_steps=args.max_steps, max_queue=args.max_queue)
+    finally:
+        obs.finish()
     em = _JsonLines()
     _emit_timeline(run.timeline, args, em)
     ok = (section["static"] is not None
           and section["savings"]["holds_attainment"])
     if args.json:
+        # the histogram block travels in the schema-v7 report (and
+        # --metrics-out); the JSON-lines stream stays pre-v7 stable
+        section["run"]["metrics"].pop("histograms", None)
         em.emit({"type": "summary", **section}, sort_keys=True)
         return EXIT_OK if (ok or em.broken) else EXIT_NO_CONFIG
     static = section["static"]
@@ -905,6 +953,42 @@ def cmd_autoscale_compare(args) -> int:
           f"({sv['chip_seconds_pct']:.1f}%), {verdict} "
           f"({100 * args.attain_target:.0f}% target)")
     return EXIT_OK if ok else EXIT_NO_CONFIG
+
+
+# ---------------------------------------------------------------------------
+# obs
+# ---------------------------------------------------------------------------
+
+def cmd_obs_export(args) -> int:
+    """Re-encode a saved TraceArtifact: Chrome ``trace_event`` JSON for
+    chrome://tracing / Perfetto, or the canonical JSONL."""
+    from repro.obs import TraceArtifact
+    art = TraceArtifact.load(args.trace)
+    if args.format == "chrome":
+        text = json.dumps(art.to_chrome_trace(), sort_keys=True) + "\n"
+    else:
+        text = art.to_jsonl()
+    if args.out == "-":
+        _JsonLines().emit_text(text)
+    else:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"{args.format} export ({art.n_spans} spans) -> {args.out}")
+    return EXIT_OK
+
+
+def cmd_obs_diff(args) -> int:
+    """Diff two telemetry snapshots (registry dumps, SearchReports with
+    telemetry, or bare replay histogram sections).  Exit 0 when
+    identical, 1 when they differ — diff semantics."""
+    from repro.obs import diff_metrics, format_diff
+    d = diff_metrics(args.a, args.b)
+    if args.json:
+        _JsonLines().emit_text(json.dumps(d, indent=2, sort_keys=True)
+                               + "\n")
+    else:
+        _JsonLines().emit_text(format_diff(d) + "\n")
+    return EXIT_OK if d["identical"] else EXIT_NO_CONFIG
 
 
 # ---------------------------------------------------------------------------
@@ -1010,6 +1094,31 @@ def _add_candidate_args(ap: argparse.ArgumentParser):
                     choices=["bf16", "fp16", "fp8"])
 
 
+def _add_obs_args(ap: argparse.ArgumentParser):
+    """The ``repro.obs`` capture flags every instrumented command shares
+    (search plus the replay family: workload replay, capacity
+    sweep/plan, autoscale run/compare)."""
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="record repro.obs spans and write the "
+                         "TraceArtifact JSONL here ('-' streams it to "
+                         "stdout; a .chrome.json suffix writes the Chrome "
+                         "trace_event export for chrome://tracing / "
+                         "Perfetto); deterministic across seeded runs")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="collect repro.obs counters during the command "
+                         "and write the registry snapshot here (JSON, or "
+                         "Prometheus text format with a .prom suffix)")
+    ap.add_argument("--span-sample-every", type=int, default=None,
+                    metavar="N",
+                    help="flight recorder: keep every N-th request's "
+                         "lifecycle spans (default 1 = all sampled "
+                         "requests; histograms always see every request)")
+    ap.add_argument("--max-request-spans", type=int, default=None,
+                    metavar="N",
+                    help="flight recorder: cap request span trees per "
+                         "replay (default 512)")
+
+
 def _build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(
         prog="repro.core.cli",
@@ -1043,14 +1152,7 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="how many analytical leaders to replay "
                          "(disaggregated composites are skipped, not "
                          "replayed)")
-    sp.add_argument("--trace-out", default="", metavar="PATH",
-                    help="trace the search with repro.obs spans and write "
-                         "the TraceArtifact JSONL here ('-' streams it to "
-                         "stdout); deterministic across seeded runs")
-    sp.add_argument("--metrics-out", default="", metavar="PATH",
-                    help="collect repro.obs counters during the search and "
-                         "write the registry snapshot here (JSON, or "
-                         "Prometheus text format with a .prom suffix)")
+    _add_obs_args(sp)
     sp.set_defaults(func=cmd_search)
 
     gp = sub.add_parser("generate", help="emit the launch artifact")
@@ -1166,6 +1268,7 @@ def _build_parser() -> argparse.ArgumentParser:
     wr.add_argument("--max-steps", type=int, default=200_000)
     _add_slo_args(wr)
     wr.add_argument("--json", action="store_true")
+    _add_obs_args(wr)
     wr.set_defaults(func=cmd_workload_replay)
 
     cap = sub.add_parser(
@@ -1188,6 +1291,7 @@ def _build_parser() -> argparse.ArgumentParser:
                        help="total iteration budget across all replicas")
         _add_slo_args(p)
         p.add_argument("--json", action="store_true")
+        _add_obs_args(p)
 
     cs = capsub.add_parser(
         "sweep", help="replay one explicit candidate up the replica "
@@ -1263,6 +1367,7 @@ def _build_parser() -> argparse.ArgumentParser:
         p.add_argument("--json", action="store_true",
                        help="JSON-lines: one record per timeline sample, "
                             "then a terminal summary record")
+        _add_obs_args(p)
 
     ar = ascsub.add_parser(
         "run", help="autoscaled replay of one explicit candidate; "
@@ -1304,6 +1409,34 @@ def _build_parser() -> argparse.ArgumentParser:
                     choices=["models", "backends", "platforms", "all"])
     lp.add_argument("--json", action="store_true")
     lp.set_defaults(func=cmd_list)
+
+    ob = sub.add_parser(
+        "obs", help="observability artifacts: export | diff")
+    obsub = ob.add_subparsers(dest="action")
+
+    oe = obsub.add_parser(
+        "export", help="re-encode a saved TraceArtifact (Chrome "
+                       "trace_event JSON or canonical JSONL)")
+    oe.add_argument("--trace", required=True,
+                    help="TraceArtifact JSONL (from --trace-out)")
+    oe.add_argument("--format", default="chrome",
+                    choices=["chrome", "jsonl"],
+                    help="chrome: trace_event JSON for chrome://tracing "
+                         "and Perfetto; jsonl: the canonical artifact")
+    oe.add_argument("--out", default="-",
+                    help="output path ('-' = stdout)")
+    oe.set_defaults(func=cmd_obs_export)
+
+    od = obsub.add_parser(
+        "diff", help="diff two telemetry snapshots: counter/gauge "
+                     "deltas, per-histogram distribution shifts, the "
+                     "SLO-attainment delta (exit 1 when they differ)")
+    od.add_argument("a", help="baseline: metrics snapshot JSON, a "
+                              "SearchReport with telemetry, or a replay "
+                              "histogram section")
+    od.add_argument("b", help="comparison snapshot (same shapes)")
+    od.add_argument("--json", action="store_true")
+    od.set_defaults(func=cmd_obs_diff)
     return ap
 
 

@@ -11,16 +11,30 @@ Three layers, all zero-cost until installed:
 * :mod:`repro.obs.metrics` — ``MetricsRegistry`` counters / gauges /
   histograms threaded through ``TaskRunner``, ``PerfDatabase`` and the
   simulators; exports JSON and Prometheus text format.
+* :mod:`repro.obs.flight` — the request-level flight recorder:
+  per-request lifecycle spans (arrival → queued → prefill → decode)
+  and fixed log2-bucket latency histograms, emitted by every replay
+  simulator and sampled through ``configure_flight_recorder``.
+* :mod:`repro.obs.diff` — telemetry diffing: counter/gauge deltas and
+  per-histogram distribution shifts between two snapshots (surfaced as
+  the ``obs diff`` CLI subcommand).
 * :mod:`repro.obs.explain` — the operator-family latency waterfall per
   serving phase, and a two-candidate diff (surfaced as
   ``Configurator.explain`` and the ``explain`` CLI subcommand).
 
-``trace``/``metrics`` are import-light (stdlib only); ``explain`` pulls
-in the pricing stack and loads lazily so the core modules can import
-this package without a cycle.
+``trace``/``metrics``/``flight``/``diff`` are import-light (stdlib
+only); ``explain`` pulls in the pricing stack and loads lazily so the
+core modules can import this package without a cycle.
 """
-from repro.obs.metrics import (MetricsRegistry, disable_metrics,
-                               enable_metrics, get_metrics)
+from repro.obs.diff import diff_metrics, format_diff, load_metrics_snapshot
+from repro.obs.flight import (FlightRecorderConfig,
+                              configure_flight_recorder,
+                              emit_engine_request_spans, emit_request_spans,
+                              flight_config, latency_histograms,
+                              request_latencies_ms)
+from repro.obs.metrics import (LATENCY_MS_BUCKETS, MetricsRegistry,
+                               disable_metrics, enable_metrics, get_metrics,
+                               histogram_quantile)
 from repro.obs.trace import (NULL_TRACER, SUPPORTED_TRACE_SCHEMA_VERSIONS,
                              TRACE_SCHEMA_VERSION, NullTracer, SpanRecord,
                              TraceArtifact, Tracer, disable_tracing,
@@ -31,11 +45,17 @@ _EXPLAIN_NAMES = ("CandidateExplanation", "Explanation", "ExplanationDiff",
                   "explain_spec")
 
 __all__ = [
-    "MetricsRegistry", "NULL_TRACER", "NullTracer", "SpanRecord",
+    "FlightRecorderConfig", "LATENCY_MS_BUCKETS", "MetricsRegistry",
+    "NULL_TRACER", "NullTracer", "SpanRecord",
     "SUPPORTED_TRACE_SCHEMA_VERSIONS", "TRACE_SCHEMA_VERSION",
-    "TraceArtifact", "Tracer", "disable_metrics", "disable_tracing",
-    "enable_metrics", "enable_tracing", "get_metrics", "get_tracer",
-    "set_tracer", "telemetry_section", *_EXPLAIN_NAMES,
+    "TraceArtifact", "Tracer", "configure_flight_recorder",
+    "diff_metrics", "disable_metrics", "disable_tracing",
+    "emit_engine_request_spans", "emit_request_spans", "enable_metrics",
+    "enable_tracing",
+    "flight_config", "format_diff", "get_metrics", "get_tracer",
+    "histogram_quantile", "latency_histograms", "load_metrics_snapshot",
+    "request_latencies_ms", "set_tracer", "telemetry_section",
+    *_EXPLAIN_NAMES,
 ]
 
 

@@ -1,0 +1,189 @@
+"""Telemetry diffing: compare two metrics snapshots distribution-to-
+distribution.
+
+The regression-detection primitive the ISSUE-era benchmarks gate on:
+given two ``MetricsRegistry.to_dict()`` snapshots (or two SearchReport
+files carrying ``telemetry.metrics``, or two bare replay histogram
+sections), :func:`diff_metrics` reports
+
+* counter deltas (added / removed / changed, with signed deltas),
+* gauge deltas,
+* a per-histogram distribution-shift summary — count/mean deltas plus
+  p50/p95/p99 shifts estimated with
+  :func:`~repro.obs.metrics.histogram_quantile`,
+* the SLO-attainment delta, read from the
+  ``repro_replay_slo_attainment`` gauges the simulators export.
+
+Everything is plain dict-in / dict-out and deterministic, surfaced on
+the CLI as ``obs diff a.json b.json [--json]``.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from repro.obs.metrics import histogram_quantile
+
+__all__ = ["diff_metrics", "format_diff", "load_metrics_snapshot"]
+
+_QUANTILES = (("p50", 0.50), ("p95", 0.95), ("p99", 0.99))
+_ATTAINMENT_GAUGE = "repro_replay_slo_attainment"
+
+
+def _is_histogram(v) -> bool:
+    return (isinstance(v, dict)
+            and {"buckets", "counts", "sum", "count"} <= set(v))
+
+
+def load_metrics_snapshot(source) -> Dict:
+    """Normalize a diffable payload into snapshot shape.
+
+    ``source`` is a path or an already-loaded dict, holding one of:
+
+    * a ``MetricsRegistry.to_dict()`` snapshot
+      (``{"counters", "gauges", "histograms"}``),
+    * a ``SearchReport`` JSON with a non-null ``telemetry.metrics``,
+    * a bare replay histogram section (every value a
+      ``{"buckets", "counts", "sum", "count"}`` dict), wrapped as
+      histograms-only.
+    """
+    d = source
+    if isinstance(source, str):
+        with open(source) as f:
+            d = json.load(f)
+    if not isinstance(d, dict):
+        raise ValueError("metrics snapshot must be a JSON object")
+    if "schema_version" in d and "telemetry" in d:
+        tel = d.get("telemetry") or {}
+        metrics = tel.get("metrics")
+        if metrics is None:
+            raise ValueError(
+                "report carries no telemetry.metrics section (search ran "
+                "without a metrics registry installed)")
+        d = metrics
+    if {"counters", "gauges", "histograms"} <= set(d):
+        return {"counters": dict(d["counters"]),
+                "gauges": dict(d["gauges"]),
+                "histograms": dict(d["histograms"])}
+    if d and all(_is_histogram(v) for v in d.values()):
+        return {"counters": {}, "gauges": {}, "histograms": dict(d)}
+    raise ValueError(
+        "unrecognized snapshot shape: expected a metrics registry dump, "
+        "a SearchReport with telemetry, or a replay histogram section")
+
+
+def _diff_scalars(a: Dict, b: Dict) -> Dict:
+    added = {k: b[k] for k in sorted(set(b) - set(a))}
+    removed = {k: a[k] for k in sorted(set(a) - set(b))}
+    changed = {k: {"a": a[k], "b": b[k], "delta": b[k] - a[k]}
+               for k in sorted(set(a) & set(b)) if a[k] != b[k]}
+    return {"added": added, "removed": removed, "changed": changed}
+
+
+def _hist_stats(h: Dict) -> Dict:
+    count = h["count"]
+    stats = {"count": count,
+             "mean": h["sum"] / count if count else None}
+    for label, p in _QUANTILES:
+        stats[label] = histogram_quantile(h["buckets"], h["counts"], p)
+    return stats
+
+
+def _diff_histograms(a: Dict, b: Dict) -> Dict:
+    out: Dict = {"added": sorted(set(b) - set(a)),
+                 "removed": sorted(set(a) - set(b)),
+                 "changed": {}}
+    for k in sorted(set(a) & set(b)):
+        ha, hb = a[k], b[k]
+        if ha == hb:
+            continue
+        sa, sb = _hist_stats(ha), _hist_stats(hb)
+        entry: Dict = {
+            "count": {"a": sa["count"], "b": sb["count"],
+                      "delta": sb["count"] - sa["count"]},
+            "mean": {"a": sa["mean"], "b": sb["mean"],
+                     "delta": (sb["mean"] - sa["mean"]
+                               if sa["mean"] is not None
+                               and sb["mean"] is not None else None)},
+            "schema_changed": ha["buckets"] != hb["buckets"],
+        }
+        for label, _ in _QUANTILES:
+            qa, qb = sa[label], sb[label]
+            entry[label] = {
+                "a": qa, "b": qb,
+                "shift": (qb - qa if qa is not None and qb is not None
+                          else None)}
+        out["changed"][k] = entry
+    return out
+
+
+def _attainment(gauges: Dict) -> Optional[float]:
+    """Mean over every ``repro_replay_slo_attainment`` gauge variant (a
+    snapshot may carry one per simulator label)."""
+    vals = [v for k, v in gauges.items()
+            if k == _ATTAINMENT_GAUGE or k.startswith(_ATTAINMENT_GAUGE + "{")]
+    return sum(vals) / len(vals) if vals else None
+
+
+def diff_metrics(a, b) -> Dict:
+    """Diff two snapshots (any :func:`load_metrics_snapshot` shape)."""
+    sa, sb = load_metrics_snapshot(a), load_metrics_snapshot(b)
+    att_a, att_b = _attainment(sa["gauges"]), _attainment(sb["gauges"])
+    d = {
+        "counters": _diff_scalars(sa["counters"], sb["counters"]),
+        "gauges": _diff_scalars(sa["gauges"], sb["gauges"]),
+        "histograms": _diff_histograms(sa["histograms"],
+                                       sb["histograms"]),
+        "slo_attainment": (
+            None if att_a is None and att_b is None
+            else {"a": att_a, "b": att_b,
+                  "delta": (att_b - att_a
+                            if att_a is not None and att_b is not None
+                            else None)}),
+    }
+    d["identical"] = (not any(d["counters"].values())
+                      and not any(d["gauges"].values())
+                      and not any(d["histograms"].values()))
+    return d
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "n/a"
+    if isinstance(v, float):
+        return f"{v:+.3f}" if abs(v) < 1e6 else f"{v:+.3e}"
+    return f"{v:+d}" if isinstance(v, int) else str(v)
+
+
+def format_diff(d: Dict) -> str:
+    """Human-readable rendering of a :func:`diff_metrics` result."""
+    if d["identical"]:
+        return "snapshots are identical"
+    lines: List[str] = []
+    for kind in ("counters", "gauges"):
+        sec = d[kind]
+        for k, v in sec["added"].items():
+            lines.append(f"{kind[:-1]} {k}: added (b = {v})")
+        for k, v in sec["removed"].items():
+            lines.append(f"{kind[:-1]} {k}: removed (a = {v})")
+        for k, c in sec["changed"].items():
+            lines.append(f"{kind[:-1]} {k}: {c['a']} -> {c['b']} "
+                         f"({_fmt(c['delta'])})")
+    hsec = d["histograms"]
+    for k in hsec["added"]:
+        lines.append(f"histogram {k}: added")
+    for k in hsec["removed"]:
+        lines.append(f"histogram {k}: removed")
+    for k, h in hsec["changed"].items():
+        shifts = "  ".join(
+            f"{q} {_fmt(h[q]['shift'])}" for q, _ in _QUANTILES)
+        lines.append(f"histogram {k}: count {h['count']['a']} -> "
+                     f"{h['count']['b']}, mean {_fmt(h['mean']['delta'])}, "
+                     f"{shifts}"
+                     + (" [bucket schema changed]"
+                        if h["schema_changed"] else ""))
+    att = d["slo_attainment"]
+    if att is not None:
+        lines.append(f"slo attainment: {att['a']} -> {att['b']} "
+                     f"({_fmt(att['delta'])})")
+    return "\n".join(lines)

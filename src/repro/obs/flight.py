@@ -1,0 +1,204 @@
+"""The request-level flight recorder: per-request lifecycle spans and
+latency histograms, emitted by every replay simulator.
+
+Each finished (or rejected) request becomes a small span tree on the
+tracer's virtual timeline, anchored at the enclosing replay span::
+
+    request (rid, tenant, priority, isl, osl, outcome[, replica])
+      request.queued    arrival       -> first schedule
+      request.prefill   first sched   -> first token
+      request.decode    first token   -> finish        (osl > 1 only)
+
+Emission happens *after* the replay body, so it can never perturb the
+simulation: the simulators run exactly the iterations an uninstrumented
+replay runs, then the recorder walks the finished requests and writes
+their spans in rid order.  Under :data:`~repro.obs.trace.NULL_TRACER`
+(``records_spans`` False) the walk is skipped outright — byte-free.
+
+Big traces stay bounded through two sampling knobs
+(:func:`configure_flight_recorder`): ``sample_every`` keeps every n-th
+request id, ``max_request_spans`` caps the total span-tree count per
+replay.
+
+The same per-request walk feeds the latency histograms: fixed
+log2-bucket (:data:`~repro.obs.metrics.LATENCY_MS_BUCKETS`) TTFT /
+TPOT / queue-wait / e2e distributions, serialized compactly into
+``ReplayMetrics.histograms`` for the schema-v7 report and observed into
+the installed :class:`~repro.obs.metrics.MetricsRegistry` (when any).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.obs.metrics import LATENCY_MS_BUCKETS, get_metrics
+
+__all__ = [
+    "FlightRecorderConfig", "configure_flight_recorder",
+    "emit_engine_request_spans", "emit_request_spans", "flight_config",
+    "latency_histograms", "request_latencies_ms",
+]
+
+#: The four lifecycle latencies every replay distributes, in emission
+#: order (one histogram each in ``ReplayMetrics.histograms`` and one
+#: ``repro_request_<name>`` registry histogram).
+HISTOGRAM_METRICS = ("ttft_ms", "tpot_ms", "queue_wait_ms", "e2e_ms")
+
+
+@dataclasses.dataclass
+class FlightRecorderConfig:
+    """Span-sampling knobs (histograms always see every request)."""
+    sample_every: int = 1            # keep request ids where rid % n == 0
+    max_request_spans: int = 512     # per-replay span-tree cap
+
+    def __post_init__(self):
+        if self.sample_every < 1:
+            raise ValueError(f"sample_every must be >= 1, got "
+                             f"{self.sample_every}")
+        if self.max_request_spans < 0:
+            raise ValueError(f"max_request_spans must be >= 0, got "
+                             f"{self.max_request_spans}")
+
+
+_CONFIG = FlightRecorderConfig()
+
+
+def flight_config() -> FlightRecorderConfig:
+    return _CONFIG
+
+
+def configure_flight_recorder(sample_every: int = 1,
+                              max_request_spans: int = 512
+                              ) -> FlightRecorderConfig:
+    """Install (and return) the process-local sampling configuration."""
+    global _CONFIG
+    _CONFIG = FlightRecorderConfig(sample_every=sample_every,
+                                   max_request_spans=max_request_spans)
+    return _CONFIG
+
+
+# ---------------------------------------------------------------------------
+# per-request latencies
+# ---------------------------------------------------------------------------
+
+def request_latencies_ms(req) -> Dict[str, Optional[float]]:
+    """The ms-scale lifecycle latencies of one request (None where the
+    lifecycle stage never happened: rejected requests have no TTFT,
+    ``osl == 1`` requests no TPOT)."""
+    ttft = req.ttft
+    tpot = req.tpot
+    queue = (req.t_first_sched - req.arrival
+             if req.t_first_sched is not None else None)
+    e2e = (req.t_finish - req.arrival
+           if req.t_finish is not None else None)
+    return {
+        "ttft_ms": 1e3 * ttft if ttft is not None else None,
+        "tpot_ms": 1e3 * tpot if tpot is not None else None,
+        "queue_wait_ms": 1e3 * queue if queue is not None else None,
+        "e2e_ms": 1e3 * e2e if e2e is not None else None,
+    }
+
+
+def latency_histograms(completed: Iterable, sim: str) -> Dict[str, Dict]:
+    """Fold finished requests into the compact serialized histogram
+    section (one ``{"buckets", "counts", "sum", "count"}`` entry per
+    lifecycle latency — the same shape a ``MetricsRegistry`` snapshot
+    uses, so the two diff with one code path).
+
+    When a metrics registry is installed, the same observations land in
+    its ``repro_request_<metric>{sim=...}`` histograms.
+    """
+    buckets = LATENCY_MS_BUCKETS
+    section = {name: {"buckets": list(buckets),
+                      "counts": [0] * (len(buckets) + 1),
+                      "sum": 0.0, "count": 0}
+               for name in HISTOGRAM_METRICS}
+    registry = get_metrics()
+    for req in completed:
+        for name, value in request_latencies_ms(req).items():
+            if value is None:
+                continue
+            h = section[name]
+            for i, le in enumerate(buckets):
+                if value <= le:
+                    h["counts"][i] += 1
+                    break
+            else:
+                h["counts"][-1] += 1
+            h["sum"] += value
+            h["count"] += 1
+            if registry is not None:
+                registry.observe(f"repro_request_{name}", value,
+                                 buckets=buckets, sim=sim)
+    return section
+
+
+# ---------------------------------------------------------------------------
+# span emission
+# ---------------------------------------------------------------------------
+
+def emit_request_spans(tracer, completed: Sequence, rejected: Sequence,
+                       base: float, replica_of=None) -> int:
+    """Write the per-request span trees for one finished replay.
+
+    ``completed``/``rejected`` are :class:`~repro.serving.request.Request`
+    objects (rejected ones never scheduled: their spans are zero-length
+    with ``outcome="rejected"``); ``base`` is the enclosing replay
+    span's virtual start, so request timelines nest correctly under it;
+    ``replica_of`` optionally maps ``id(request) -> replica index`` for
+    the multi-engine simulators.  Returns the number of request trees
+    emitted (0, without touching the tracer's clock, when the tracer
+    does not record spans).
+    """
+    if not getattr(tracer, "records_spans", False):
+        return 0
+    cfg = _CONFIG
+    reqs: List[Tuple[int, object, str]] = \
+        [(r.rid, r, "completed") for r in completed] \
+        + [(r.rid, r, "rejected") for r in rejected]
+    reqs.sort(key=lambda t: t[0])
+    emitted = 0
+    for rid, req, outcome in reqs:
+        if emitted >= cfg.max_request_spans:
+            break
+        if cfg.sample_every > 1 and rid % cfg.sample_every != 0:
+            continue
+        attrs = {"rid": rid, "tenant": req.tenant,
+                 "priority": req.priority, "isl": req.isl, "osl": req.osl,
+                 "outcome": outcome}
+        if replica_of is not None:
+            replica = replica_of.get(id(req))
+            if replica is not None:
+                attrs["replica"] = replica
+        tracer.virtual_time = base + req.arrival
+        with tracer.span("request", **attrs):
+            if outcome == "completed" and req.t_first_token is not None:
+                if req.t_first_sched is not None:
+                    with tracer.span("request.queued"):
+                        tracer.virtual_time = base + req.t_first_sched
+                with tracer.span("request.prefill"):
+                    tracer.virtual_time = base + req.t_first_token
+                if req.t_finish is not None \
+                        and req.t_finish > req.t_first_token:
+                    with tracer.span("request.decode"):
+                        tracer.virtual_time = base + req.t_finish
+                if req.t_finish is not None:
+                    tracer.virtual_time = base + req.t_finish
+        emitted += 1
+    return emitted
+
+
+def emit_engine_request_spans(tracer, engines: Sequence,
+                              base: float) -> int:
+    """Multi-engine variant: gather every replica's finished and
+    rejected requests and emit them with replica attribution.  Shared
+    by the cluster and autoscale simulators (any object with ``idx``,
+    ``done`` and ``rejected_reqs`` qualifies as an engine)."""
+    if not getattr(tracer, "records_spans", False):
+        return 0
+    completed = [r for eng in engines for r in eng.done]
+    rejected = [r for eng in engines for r in eng.rejected_reqs]
+    replica_of = {id(r): eng.idx for eng in engines
+                  for r in list(eng.done) + list(eng.rejected_reqs)}
+    return emit_request_spans(tracer, completed, rejected, base=base,
+                              replica_of=replica_of)

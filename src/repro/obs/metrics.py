@@ -23,16 +23,24 @@ serialize byte-identically.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
-    "DEFAULT_BUCKETS", "MetricsRegistry", "disable_metrics",
-    "enable_metrics", "get_metrics",
+    "DEFAULT_BUCKETS", "LATENCY_MS_BUCKETS", "MetricsRegistry",
+    "disable_metrics", "enable_metrics", "get_metrics",
+    "histogram_quantile",
 ]
 
 # log-spaced seconds: 1us .. 100s, the span of a kernel to a whole search
 DEFAULT_BUCKETS: Tuple[float, ...] = (
     1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0)
+
+#: Fixed log2-spaced milliseconds for request-latency histograms:
+#: 0.25 ms .. ~35 min (0.25 * 2**i, i < 24).  One shared schema means
+#: every replay's TTFT/TPOT/queue-wait/e2e distribution is directly
+#: comparable (and diffable) bucket-for-bucket.
+LATENCY_MS_BUCKETS: Tuple[float, ...] = tuple(
+    0.25 * 2.0 ** i for i in range(24))
 
 _LabelKey = Tuple[Tuple[str, str], ...]
 
@@ -48,13 +56,54 @@ def _flat_name(name: str, key: _LabelKey) -> str:
     return f"{name}{{{inner}}}"
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus text exposition format: label values escape backslash,
+    double-quote, and line-feed (in that order — backslash first, or the
+    other escapes would be double-escaped)."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
 def _prom_labels(key: _LabelKey, extra: Tuple[Tuple[str, str], ...] = ()
                  ) -> str:
     pairs = key + extra
     if not pairs:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in pairs)
+    inner = ",".join(f'{k}="{_escape_label_value(v)}"' for k, v in pairs)
     return f"{{{inner}}}"
+
+
+def histogram_quantile(buckets: Sequence[float], counts: Sequence[int],
+                       p: float) -> Optional[float]:
+    """Estimate the p-quantile (p in [0, 1]) of a bucketed histogram.
+
+    ``counts`` has ``len(buckets) + 1`` entries (the last is the +Inf
+    overflow).  The estimator locates the bucket holding the sample at
+    rank ``p * (count - 1)`` — the same rank convention as the exact
+    :func:`repro.serving.sim.percentile` — and interpolates linearly
+    inside it, so the estimate always lands within one bucket of the
+    exact sample percentile.  The first bucket interpolates from 0, the
+    overflow bucket clamps to the last finite edge.  Empty histograms
+    return None (never NaN).
+    """
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"quantile p must be in [0, 1], got {p}")
+    if len(counts) != len(buckets) + 1:
+        raise ValueError(f"expected {len(buckets) + 1} counts "
+                         f"(+Inf overflow slot), got {len(counts)}")
+    total = sum(counts)
+    if total == 0:
+        return None
+    rank = p * (total - 1)
+    cum = 0
+    for i, c in enumerate(counts):
+        if cum + c > rank:
+            if i >= len(buckets):          # overflow: clamp, no far edge
+                return float(buckets[-1])
+            lo = float(buckets[i - 1]) if i > 0 else 0.0
+            hi = float(buckets[i])
+            return lo + (hi - lo) * ((rank - cum + 0.5) / c)
+        cum += c
+    return float(buckets[-1])
 
 
 def _fmt(v: float) -> str:
@@ -74,7 +123,9 @@ class MetricsRegistry:
         self.buckets = tuple(float(b) for b in buckets)
         self._counters: Dict[Tuple[str, _LabelKey], float] = {}
         self._gauges: Dict[Tuple[str, _LabelKey], float] = {}
-        # histogram value: [bucket counts..., +Inf count] , sum, count
+        # histogram value: [[bucket counts..., +Inf count], sum, count,
+        # bucket schema] — the schema is pinned per metric key at first
+        # observation (registry default unless ``observe(buckets=...)``)
         self._hists: Dict[Tuple[str, _LabelKey], List] = {}
 
     # -- write side ------------------------------------------------------
@@ -87,14 +138,27 @@ class MetricsRegistry:
     def set_gauge(self, name: str, value: float, **labels) -> None:
         self._gauges[(name, _labels_key(labels))] = float(value)
 
-    def observe(self, name: str, value: float, **labels) -> None:
+    def observe(self, name: str, value: float,
+                buckets: Optional[Sequence[float]] = None,
+                **labels) -> None:
         k = (name, _labels_key(labels))
         h = self._hists.get(k)
         if h is None:
-            h = [[0] * (len(self.buckets) + 1), 0.0, 0]
+            schema = (self.buckets if buckets is None
+                      else tuple(float(b) for b in buckets))
+            if not schema or any(b <= a
+                                 for a, b in zip(schema, schema[1:])):
+                raise ValueError(
+                    "histogram buckets must be strictly increasing")
+            h = [[0] * (len(schema) + 1), 0.0, 0, schema]
             self._hists[k] = h
+        elif buckets is not None and tuple(float(b) for b in buckets) \
+                != h[3]:
+            raise ValueError(
+                f"histogram {name!r} already pinned to a different "
+                f"bucket schema")
         v = float(value)
-        for i, le in enumerate(self.buckets):
+        for i, le in enumerate(h[3]):
             if v <= le:
                 h[0][i] += 1
                 break
@@ -116,6 +180,15 @@ class MetricsRegistry:
         """Sum of a counter across every label combination."""
         return sum(v for (n, _), v in self._counters.items() if n == name)
 
+    def quantile(self, name: str, p: float, **labels) -> Optional[float]:
+        """Estimate the p-quantile of a recorded histogram via
+        :func:`histogram_quantile`; None when the histogram does not
+        exist or holds no observations."""
+        h = self._hists.get((name, _labels_key(labels)))
+        if h is None:
+            return None
+        return histogram_quantile(h[3], h[0], p)
+
     def to_dict(self) -> Dict:
         counters = {_flat_name(n, k): self._counters[(n, k)]
                     for n, k in sorted(self._counters)}
@@ -123,9 +196,9 @@ class MetricsRegistry:
                   for n, k in sorted(self._gauges)}
         hists = {}
         for n, k in sorted(self._hists):
-            cum, total, count = self._hists[(n, k)]
+            cum, total, count, schema = self._hists[(n, k)]
             hists[_flat_name(n, k)] = {
-                "buckets": list(self.buckets), "counts": list(cum),
+                "buckets": list(schema), "counts": list(cum),
                 "sum": total, "count": count}
         return {"counters": counters, "gauges": gauges,
                 "histograms": hists}
@@ -149,9 +222,9 @@ class MetricsRegistry:
             lines.append(f"{n}{_prom_labels(k)} {_fmt(self._gauges[(n, k)])}")
         for n, k in sorted(self._hists):
             typed(n, "histogram")
-            per_bucket, total, count = self._hists[(n, k)]
+            per_bucket, total, count, schema = self._hists[(n, k)]
             cum = 0
-            for le, c in zip(self.buckets, per_bucket[:-1]):
+            for le, c in zip(schema, per_bucket[:-1]):
                 cum += c
                 lines.append(f"{n}_bucket{_prom_labels(k, (('le', _fmt(le)),))}"
                              f" {cum}")
@@ -165,7 +238,7 @@ class MetricsRegistry:
     def finite(self) -> bool:
         """Every exported value is finite (CI sanity probe)."""
         vals = list(self._counters.values()) + list(self._gauges.values())
-        for _, total, _ in self._hists.values():
+        for _, total, _, _ in self._hists.values():
             vals.append(total)
         return all(math.isfinite(v) for v in vals)
 

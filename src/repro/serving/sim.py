@@ -29,6 +29,7 @@ import dataclasses
 import statistics
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.flight import emit_request_spans, latency_histograms
 from repro.obs.metrics import get_metrics
 from repro.obs.trace import get_tracer
 from repro.serving.request import Request
@@ -145,10 +146,16 @@ class ReplayMetrics:
     slo: Optional[Dict] = None
     slo_attainment: Optional[float] = None  # attaining / submitted
     goodput_tok_s: Optional[float] = None   # tokens from attaining reqs / s
+    #: full TTFT/TPOT/queue-wait/e2e distributions over finished
+    #: requests (fixed log2-ms buckets, see ``repro.obs.flight``);
+    #: popped from ``to_dict`` so CLI replay bytes stay pre-flight-
+    #: recorder identical — report builders attach it explicitly
+    histograms: Optional[Dict] = None
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
         d.pop("per_request")           # raw samples stay in-process
+        d.pop("histograms")
         return d
 
 
@@ -235,7 +242,13 @@ class ServingSimulator:
         """
         tracer = get_tracer()
         with tracer.span("serving.replay") as sp:
-            metrics = self._replay(trace, slo, max_steps)
+            metrics, completed, rejected = self._replay(trace, slo,
+                                                        max_steps)
+            # the flight recorder writes per-request span trees after
+            # the simulation body, anchored at this span's start — it
+            # can never perturb the iteration sequence
+            emit_request_spans(tracer, completed, rejected,
+                               base=sp.v_start)
             # advance the tracer's virtual clock by the simulated makespan
             # so the span's v_start/v_end bracket sim time, not wall time
             tracer.virtual_time = sp.v_start + metrics.duration_s
@@ -248,14 +261,17 @@ class ServingSimulator:
                   metrics.n_requests - metrics.rejected)
             m.inc("repro_replay_rejections_total", metrics.rejected)
             m.inc("repro_replay_completions_total", metrics.completed)
+            if metrics.slo_attainment is not None:
+                m.set_gauge("repro_replay_slo_attainment",
+                            metrics.slo_attainment, sim="serving")
         return metrics
 
-    def _replay(self, trace, slo, max_steps: int) -> ReplayMetrics:
+    def _replay(self, trace, slo, max_steps: int):
         records = list(getattr(trace, "requests", trace))
         sched = ContinuousBatchingScheduler(self.sched_cfg)
         t = 0.0
         i = 0
-        rejected = 0
+        rejected_reqs: List[Request] = []
         done: List[Request] = []
         steps = 0
         gen_total = 0
@@ -263,7 +279,7 @@ class ServingSimulator:
         depth_max = 0
 
         def admit_arrived():
-            nonlocal i, rejected
+            nonlocal i
             while i < len(records) and records[i].arrival_s <= t:
                 r = records[i]
                 req = Request(rid=i, isl=r.isl, osl=r.osl,
@@ -271,7 +287,7 @@ class ServingSimulator:
                               tenant=getattr(r, "tenant", "default"),
                               priority=getattr(r, "priority", 0))
                 if not sched.add(req):
-                    rejected += 1
+                    rejected_reqs.append(req)
                 i += 1
 
         admit_arrived()
@@ -293,6 +309,7 @@ class ServingSimulator:
             admit_arrived()
 
         completed = [r for r in done if r.ttft is not None]
+        rejected = len(rejected_reqs)
         unfinished = len(records) - rejected - len(completed)
         truncated = steps >= max_steps \
             and (i < len(records) or sched.active > 0)
@@ -317,6 +334,7 @@ class ServingSimulator:
             queue_depth_max=depth_max,
             truncated=truncated,
             per_request=[(r.tenant, r.ttft, r.tpot) for r in completed],
+            histograms=latency_histograms(completed, sim="serving"),
         )
         if slo is not None:
             attaining = [r for r in completed
@@ -327,7 +345,7 @@ class ServingSimulator:
                                       if records else 0.0)
             metrics.goodput_tok_s = (sum(r.osl for r in attaining) / t
                                      if t > 0 else 0.0)
-        return metrics
+        return metrics, completed, rejected_reqs
 
 
 LatencyFn = Callable[[StepSpec], float]

@@ -101,6 +101,7 @@ def replay_frontier(runner, projections: Sequence[Projection],
         metrics: ReplayMetrics = sim.replay(trace, slo=slo,
                                             max_steps=max_steps)
         entry["replay"] = metrics.to_dict()
+        entry["replay"]["histograms"] = metrics.histograms
         candidates.append(entry)
         ranked.append((metrics.goodput_tok_s or 0.0,
                        metrics.slo_attainment or 0.0, rank, entry["index"]))

@@ -1,0 +1,570 @@
+"""The request-level flight recorder: lifecycle spans from every replay
+simulator, latency histograms and the quantile estimator, Chrome
+trace_event export, telemetry diffing, and the byte-identity guarantee
+under the null tracer."""
+import json
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, st
+
+from repro.autoscale.policy import StaticPolicy, TargetQueueDepth
+from repro.autoscale.simulator import AutoscaleSimulator
+from repro.capacity.cluster import ClusterSimulator
+from repro.obs import (disable_metrics, disable_tracing, enable_metrics,
+                       enable_tracing)
+from repro.obs.diff import diff_metrics, format_diff, load_metrics_snapshot
+from repro.obs.flight import (HISTOGRAM_METRICS, FlightRecorderConfig,
+                              configure_flight_recorder, emit_request_spans,
+                              flight_config, latency_histograms,
+                              request_latencies_ms)
+from repro.obs.metrics import (LATENCY_MS_BUCKETS, MetricsRegistry,
+                               histogram_quantile)
+from repro.obs.trace import NULL_TRACER, Tracer
+from repro.serving.request import Request
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.sim import ServingSimulator, percentile
+from repro.workloads import (ArrivalSpec, LengthSpec, SLOSpec, TenantSpec,
+                             TraceSpec, generate_trace)
+
+
+@pytest.fixture(autouse=True)
+def _clean_globals():
+    disable_tracing()
+    disable_metrics()
+    configure_flight_recorder()            # back to defaults
+    yield
+    disable_tracing()
+    disable_metrics()
+    configure_flight_recorder()
+
+
+def _lat(spec):
+    return 1e-3 + 1e-6 * sum(c for c, _ in spec.prefill) \
+        + 1e-5 * len(spec.decode)
+
+
+def _trace(kind="poisson", n=40, seed=7, rate=2.0):
+    arrivals = {"poisson": ArrivalSpec(kind="poisson", rate_rps=rate),
+                "bursty": ArrivalSpec(kind="bursty", rate_rps=rate,
+                                      burst_factor=4.0),
+                "diurnal": ArrivalSpec(kind="diurnal", rate_rps=rate,
+                                       period_s=12.0, amplitude=0.8)}[kind]
+    return generate_trace(TraceSpec(
+        n_requests=n, arrivals=arrivals,
+        tenants=(TenantSpec(lengths=LengthSpec(kind="fixed",
+                                               isl=64, osl=8)),)),
+        seed=seed)
+
+
+_SLO = SLOSpec(ttft_p99_ms=2000.0, tpot_p99_ms=100.0)
+_SCHED = SchedulerConfig(max_batch=4, max_queue=64)
+
+
+def _fake_request(rid, arrival=0.0, sched=0.1, first=0.2, finish=0.5,
+                  osl=8):
+    r = Request(rid=rid, isl=64, osl=osl, arrival=arrival)
+    r.t_first_sched = sched
+    r.t_first_token = first
+    r.t_finish = finish
+    return r
+
+
+# ---------------------------------------------------------------------------
+# histogram_quantile — the estimator the v7 report relies on
+# ---------------------------------------------------------------------------
+
+def _fold(values, buckets=LATENCY_MS_BUCKETS):
+    counts = [0] * (len(buckets) + 1)
+    for v in values:
+        for i, le in enumerate(buckets):
+            if v <= le:
+                counts[i] += 1
+                break
+        else:
+            counts[-1] += 1
+    return counts
+
+
+def _bucket_width_at(value, buckets=LATENCY_MS_BUCKETS):
+    idx = next((i for i, le in enumerate(buckets) if value <= le),
+               len(buckets) - 1)
+    lo = buckets[idx - 1] if idx > 0 else 0.0
+    return buckets[min(idx, len(buckets) - 1)] - lo
+
+
+def test_quantile_empty_histogram_is_none_not_nan():
+    counts = [0] * (len(LATENCY_MS_BUCKETS) + 1)
+    est = histogram_quantile(LATENCY_MS_BUCKETS, counts, 0.5)
+    assert est is None
+    assert est is not float("nan")
+
+
+def test_quantile_validates_inputs():
+    counts = [0] * (len(LATENCY_MS_BUCKETS) + 1)
+    with pytest.raises(ValueError):
+        histogram_quantile(LATENCY_MS_BUCKETS, counts, 1.5)
+    with pytest.raises(ValueError):
+        histogram_quantile(LATENCY_MS_BUCKETS, counts[:-1], 0.5)
+
+
+def test_quantile_single_sample_lands_in_its_bucket():
+    counts = _fold([3.0])
+    for p in (0.0, 0.5, 0.99, 1.0):
+        est = histogram_quantile(LATENCY_MS_BUCKETS, counts, p)
+        assert 2.0 < est <= 4.0               # the (2, 4] bucket
+
+
+def test_quantile_constant_sample():
+    counts = _fold([10.0] * 500)
+    for p in (0.01, 0.5, 0.99):
+        est = histogram_quantile(LATENCY_MS_BUCKETS, counts, p)
+        assert 8.0 < est <= 16.0              # all mass in (8, 16]
+
+
+def test_quantile_overflow_clamps_to_last_finite_edge():
+    top = LATENCY_MS_BUCKETS[-1]
+    counts = _fold([top * 10] * 5)
+    assert histogram_quantile(LATENCY_MS_BUCKETS, counts, 0.99) == top
+
+
+@given(st.lists(st.floats(0.1, 1e6), min_size=1, max_size=200),
+       st.floats(0.0, 1.0))
+def test_quantile_within_one_bucket_of_exact(values, p):
+    counts = _fold(values)
+    est = histogram_quantile(LATENCY_MS_BUCKETS, counts, p)
+    exact = percentile(values, p)
+    assert est is not None
+    # the estimate interpolates inside the bucket holding the rank-th
+    # sample, so it can be off by at most that bucket's width
+    assert abs(est - exact) <= _bucket_width_at(exact) + 1e-9
+
+
+@given(st.lists(st.floats(0.1, 1e5), min_size=1, max_size=100))
+def test_quantile_monotone_in_p(values):
+    counts = _fold(values)
+    grid = [i / 20 for i in range(21)]
+    ests = [histogram_quantile(LATENCY_MS_BUCKETS, counts, p)
+            for p in grid]
+    assert all(a <= b + 1e-12 for a, b in zip(ests, ests[1:]))
+
+
+def test_quantile_lognormal_sample():
+    import random
+    rng = random.Random(42)
+    values = [math.exp(rng.gauss(3.0, 1.0)) for _ in range(1000)]
+    counts = _fold(values)
+    for p in (0.5, 0.95, 0.99):
+        est = histogram_quantile(LATENCY_MS_BUCKETS, counts, p)
+        exact = percentile(values, p)
+        assert abs(est - exact) <= _bucket_width_at(exact)
+
+
+def test_registry_quantile_method():
+    reg = MetricsRegistry()
+    for v in (1.0, 2.0, 3.0, 100.0):
+        reg.observe("lat_ms", v, buckets=LATENCY_MS_BUCKETS, sim="t")
+    assert reg.quantile("lat_ms", 0.0, sim="t") <= 1.0
+    assert reg.quantile("lat_ms", 1.0, sim="t") > 64.0
+    assert reg.quantile("missing", 0.5) is None
+
+
+def test_registry_pins_bucket_schema():
+    reg = MetricsRegistry()
+    reg.observe("lat_ms", 1.0, buckets=(1.0, 2.0))
+    with pytest.raises(ValueError, match="pinned"):
+        reg.observe("lat_ms", 1.0, buckets=(1.0, 4.0))
+    with pytest.raises(ValueError, match="increasing"):
+        reg.observe("other", 1.0, buckets=(2.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Prometheus label escaping (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_prometheus_escapes_hostile_label_values():
+    reg = MetricsRegistry()
+    hostile = 'he said "hi"\nback\\slash'
+    reg.inc("requests_total", model=hostile)
+    text = reg.to_prometheus()
+    line = next(l for l in text.splitlines()
+                if l.startswith("requests_total"))
+    assert '\n' not in line                  # newline must be escaped
+    assert '\\n' in line
+    assert '\\"' in line
+    assert '\\\\slash' in line
+    # escaping must be unambiguous: backslash first, then quote/newline
+    assert 'model="he said \\"hi\\"\\nback\\\\slash"' in line
+
+
+def test_prometheus_plain_labels_unchanged():
+    reg = MetricsRegistry()
+    reg.inc("requests_total", model="llama")
+    assert 'requests_total{model="llama"} 1' in reg.to_prometheus()
+
+
+# ---------------------------------------------------------------------------
+# per-request latencies + histogram folding
+# ---------------------------------------------------------------------------
+
+def test_request_latencies_ms():
+    r = _fake_request(0, arrival=0.0, sched=0.1, first=0.2, finish=0.5)
+    lat = request_latencies_ms(r)
+    assert lat["queue_wait_ms"] == pytest.approx(100.0)
+    assert lat["ttft_ms"] == pytest.approx(200.0)
+    assert lat["e2e_ms"] == pytest.approx(500.0)
+    assert lat["tpot_ms"] == pytest.approx(1e3 * 0.3 / 7)
+
+
+def test_request_latencies_partial_lifecycle():
+    r = Request(rid=1, isl=64, osl=1, arrival=0.0)
+    assert all(v is None for v in request_latencies_ms(r).values())
+    r.t_first_sched = 0.1
+    r.t_first_token = 0.2
+    r.t_finish = 0.2
+    lat = request_latencies_ms(r)
+    assert lat["tpot_ms"] is None            # osl == 1: no decode steps
+    assert lat["ttft_ms"] == pytest.approx(200.0)
+
+
+def test_latency_histograms_section_shape():
+    reqs = [_fake_request(i, finish=0.5 + 0.1 * i) for i in range(10)]
+    section = latency_histograms(reqs, sim="test")
+    assert set(section) == set(HISTOGRAM_METRICS)
+    for hist in section.values():
+        assert hist["buckets"] == list(LATENCY_MS_BUCKETS)
+        assert sum(hist["counts"]) == hist["count"] == 10
+
+
+def test_latency_histograms_feed_installed_registry():
+    reg = enable_metrics()
+    latency_histograms([_fake_request(0)], sim="test")
+    snap = reg.to_dict()["histograms"]
+    assert "repro_request_ttft_ms{sim=test}" in snap
+    assert snap["repro_request_e2e_ms{sim=test}"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# span emission
+# ---------------------------------------------------------------------------
+
+def test_emit_request_spans_structure():
+    tracer = Tracer()
+    n = emit_request_spans(
+        tracer, [_fake_request(0)], [Request(rid=1, isl=8, osl=4,
+                                             arrival=1.0)], base=100.0)
+    assert n == 2
+    spans = {s.name: s for s in tracer.spans}
+    req = [s for s in tracer.spans if s.name == "request"]
+    assert [s.attrs["rid"] for s in req] == [0, 1]
+    assert req[0].attrs["outcome"] == "completed"
+    assert req[1].attrs["outcome"] == "rejected"
+    assert req[0].v_start == pytest.approx(100.0)
+    assert req[0].v_end == pytest.approx(100.5)
+    assert req[1].v_start == req[1].v_end == pytest.approx(101.0)
+    assert spans["request.queued"].v_end == pytest.approx(100.1)
+    assert spans["request.prefill"].v_end == pytest.approx(100.2)
+    assert spans["request.decode"].v_end == pytest.approx(100.5)
+
+
+def test_emit_request_spans_replica_attrs():
+    tracer = Tracer()
+    r = _fake_request(0)
+    emit_request_spans(tracer, [r], [], base=0.0,
+                       replica_of={id(r): 3})
+    req = next(s for s in tracer.spans if s.name == "request")
+    assert req.attrs["replica"] == 3
+
+
+def test_emit_request_spans_null_tracer_is_byte_free():
+    assert emit_request_spans(NULL_TRACER, [_fake_request(0)], [],
+                              base=0.0) == 0
+
+
+def test_sampling_knobs():
+    reqs = [_fake_request(i) for i in range(20)]
+    configure_flight_recorder(sample_every=3)
+    tracer = Tracer()
+    emit_request_spans(tracer, reqs, [], base=0.0)
+    rids = [s.attrs["rid"] for s in tracer.spans if s.name == "request"]
+    assert rids == [0, 3, 6, 9, 12, 15, 18]
+
+    configure_flight_recorder(max_request_spans=5)
+    tracer = Tracer()
+    emit_request_spans(tracer, reqs, [], base=0.0)
+    rids = [s.attrs["rid"] for s in tracer.spans if s.name == "request"]
+    assert rids == [0, 1, 2, 3, 4]
+
+
+def test_flight_config_validation():
+    with pytest.raises(ValueError):
+        FlightRecorderConfig(sample_every=0)
+    with pytest.raises(ValueError):
+        FlightRecorderConfig(max_request_spans=-1)
+    cfg = configure_flight_recorder(sample_every=2, max_request_spans=9)
+    assert flight_config() is cfg
+
+
+# ---------------------------------------------------------------------------
+# the three simulators emit the same span taxonomy
+# ---------------------------------------------------------------------------
+
+def _span_names(tracer):
+    names = {}
+    for s in tracer.spans:
+        names[s.name] = names.get(s.name, 0) + 1
+    return names
+
+
+def test_serving_replay_emits_request_spans():
+    tracer = enable_tracing()
+    metrics = ServingSimulator(_SCHED, _lat).replay(_trace(), slo=_SLO)
+    names = _span_names(tracer)
+    assert names["request"] == metrics.completed + metrics.rejected == 40
+    assert names["request.queued"] == names["request.prefill"] \
+        == names["request.decode"] == metrics.completed
+    # request timelines nest inside the replay span
+    replay = next(s for s in tracer.spans if s.name == "serving.replay")
+    for s in tracer.spans:
+        if s.name == "request":
+            assert replay.v_start <= s.v_start
+            assert s.v_end <= replay.v_end + 1e-9
+
+
+def test_cluster_replay_emits_replica_attributed_spans():
+    tracer = enable_tracing()
+    ClusterSimulator(_SCHED, _lat, replicas=2).replay(_trace(), slo=_SLO)
+    req = [s for s in tracer.spans if s.name == "request"]
+    assert len(req) == 40
+    assert {s.attrs["replica"] for s in req} == {0, 1}
+    assert [s.attrs["rid"] for s in req] == sorted(
+        s.attrs["rid"] for s in req)          # global rid order
+
+
+def test_autoscale_run_emits_request_spans():
+    tracer = enable_tracing()
+    sim = AutoscaleSimulator(_SCHED, _lat,
+                             TargetQueueDepth(min_replicas=1,
+                                              max_replicas=3))
+    rep = sim.run(_trace(rate=8.0, n=80), slo=_SLO)
+    req = [s for s in tracer.spans if s.name == "request"]
+    assert len(req) == rep.metrics.completed + rep.metrics.rejected
+    assert all("replica" in s.attrs for s in req)
+
+
+def test_rejected_requests_get_zero_length_spans():
+    tracer = enable_tracing()
+    tight = SchedulerConfig(max_batch=1, max_queue=1)
+    metrics = ServingSimulator(tight, _lat).replay(
+        _trace(rate=50.0), slo=_SLO)
+    assert metrics.rejected > 0
+    rejected = [s for s in tracer.spans if s.name == "request"
+                and s.attrs["outcome"] == "rejected"]
+    assert len(rejected) == metrics.rejected
+    for s in rejected:
+        assert s.v_start == s.v_end
+
+
+def test_tracing_off_replay_is_unchanged():
+    """The flight recorder must not perturb the simulation: metrics are
+    identical with and without span recording."""
+    with_spans_tracer = enable_tracing()
+    m_on = ServingSimulator(_SCHED, _lat).replay(_trace(), slo=_SLO)
+    disable_tracing()
+    m_off = ServingSimulator(_SCHED, _lat).replay(_trace(), slo=_SLO)
+    assert m_on.to_dict() == m_off.to_dict()
+    assert m_on.histograms == m_off.histograms
+    assert any(s.name == "request" for s in with_spans_tracer.spans)
+
+
+def test_histograms_absent_from_to_dict():
+    m = ServingSimulator(_SCHED, _lat).replay(_trace(), slo=_SLO)
+    assert m.histograms is not None
+    assert "histograms" not in m.to_dict()
+    cm = ClusterSimulator(_SCHED, _lat, replicas=2).replay(_trace(),
+                                                           slo=_SLO)
+    assert cm.histograms is not None
+    assert "histograms" not in cm.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# histogram percentiles vs exact — every trace shape × every simulator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["poisson", "bursty", "diurnal"])
+@pytest.mark.parametrize("sim_name", ["serving", "cluster", "autoscale"])
+def test_histogram_quantiles_track_exact_percentiles(kind, sim_name):
+    trace = _trace(kind=kind, n=60, rate=6.0)
+    if sim_name == "serving":
+        metrics = ServingSimulator(_SCHED, _lat).replay(trace, slo=_SLO)
+    elif sim_name == "cluster":
+        metrics = ClusterSimulator(_SCHED, _lat, replicas=2).replay(
+            trace, slo=_SLO)
+    else:
+        metrics = AutoscaleSimulator(
+            _SCHED, _lat, StaticPolicy(min_replicas=2, max_replicas=2)
+        ).run(trace, slo=_SLO).metrics
+    assert metrics.completed > 0
+    for name in ("ttft_ms", "tpot_ms"):
+        h = metrics.histograms[name]
+        exact = getattr(metrics, name)
+        for label, p in (("p50", 0.50), ("p95", 0.95), ("p99", 0.99)):
+            est = histogram_quantile(h["buckets"], h["counts"], p)
+            if h["count"] == 0:
+                assert est is None
+                continue
+            width = _bucket_width_at(exact[label])
+            assert abs(est - exact[label]) <= width + 1e-9, \
+                (sim_name, kind, name, label)
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export
+# ---------------------------------------------------------------------------
+
+def _chrome_trace():
+    tracer = enable_tracing()
+    ClusterSimulator(_SCHED, _lat, replicas=2).replay(_trace(), slo=_SLO)
+    disable_tracing()
+    return tracer.artifact(meta={"command": "test"})
+
+
+def test_chrome_trace_event_structure():
+    ct = _chrome_trace().to_chrome_trace()
+    assert set(ct) == {"traceEvents", "displayTimeUnit", "otherData"}
+    events = [e for e in ct["traceEvents"] if e["ph"] == "X"]
+    assert events
+    for e in events:
+        assert {"name", "cat", "ph", "ts", "dur", "pid", "tid",
+                "args"} <= set(e)
+        assert e["dur"] >= 0
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+
+
+def test_chrome_trace_request_lanes():
+    ct = _chrome_trace().to_chrome_trace()
+    meta = [e for e in ct["traceEvents"] if e["ph"] == "M"]
+    thread_names = {(e["pid"], e["tid"]): e["args"]["name"]
+                    for e in meta if e["name"] == "thread_name"}
+    reqs = [e for e in ct["traceEvents"] if e.get("name") == "request"]
+    assert len(reqs) == 40
+    lanes = {thread_names[(e["pid"], e["tid"])] for e in reqs}
+    assert all(l.startswith("request ") for l in lanes)
+    assert len(lanes) == 40                  # one lane per request
+    # child spans land in their parent request's lane
+    children = [e for e in ct["traceEvents"]
+                if e.get("name") == "request.prefill"]
+    assert {(e["pid"], e["tid"]) for e in children} \
+        <= {(e["pid"], e["tid"]) for e in reqs}
+
+
+def test_chrome_trace_timestamps_are_virtual_micros():
+    art = _chrome_trace()
+    ct = art.to_chrome_trace()
+    req_span = next(s for s in art.spans if s.name == "request")
+    req_event = next(e for e in ct["traceEvents"]
+                     if e.get("name") == "request")
+    assert req_event["ts"] == pytest.approx(req_span.v_start * 1e6)
+    assert req_event["dur"] == pytest.approx(
+        (req_span.v_end - req_span.v_start) * 1e6)
+
+
+def test_chrome_trace_carries_digest_and_meta():
+    art = _chrome_trace()
+    ct = art.to_chrome_trace()
+    assert ct["otherData"]["digest"] == art.digest()
+    assert ct["otherData"]["meta"]["command"] == "test"
+
+
+def test_chrome_trace_deterministic():
+    a = json.dumps(_chrome_trace().to_chrome_trace(), sort_keys=True)
+    b = json.dumps(_chrome_trace().to_chrome_trace(), sort_keys=True)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# telemetry diffing
+# ---------------------------------------------------------------------------
+
+def _snapshot(batch=4, queue=64, n=40):
+    reg = enable_metrics()
+    ServingSimulator(SchedulerConfig(max_batch=batch, max_queue=queue),
+                     _lat).replay(_trace(n=n, rate=8.0), slo=_SLO)
+    disable_metrics()
+    return reg.to_dict()
+
+
+def test_diff_identical_snapshots():
+    a = _snapshot()
+    d = diff_metrics(a, a)
+    assert d["identical"]
+    assert format_diff(d) == "snapshots are identical"
+
+
+def test_diff_detects_counter_and_histogram_shifts():
+    a, b = _snapshot(batch=4), _snapshot(batch=1)
+    d = diff_metrics(a, b)
+    assert not d["identical"]
+    key = "repro_request_ttft_ms{sim=serving}"
+    assert key in d["histograms"]["changed"]
+    entry = d["histograms"]["changed"][key]
+    # batch 1 queues harder: the p99 TTFT shift is positive
+    assert entry["p99"]["shift"] > 0
+    assert entry["schema_changed"] is False
+    text = format_diff(d)
+    assert key in text
+
+
+def test_diff_slo_attainment_delta():
+    a = _snapshot(batch=4)
+    b = _snapshot(batch=1, queue=2)
+    d = diff_metrics(a, b)
+    att = d["slo_attainment"]
+    assert att is not None
+    assert att["a"] == pytest.approx(1.0)
+    assert att["delta"] <= 0.0
+
+
+def test_diff_added_removed_keys():
+    a = {"counters": {"x": 1.0}, "gauges": {}, "histograms": {}}
+    b = {"counters": {"y": 2.0}, "gauges": {}, "histograms": {}}
+    d = diff_metrics(a, b)
+    assert d["counters"]["added"] == {"y": 2.0}
+    assert d["counters"]["removed"] == {"x": 1.0}
+
+
+def test_load_snapshot_accepts_bare_histogram_section():
+    m = ServingSimulator(_SCHED, _lat).replay(_trace(), slo=_SLO)
+    snap = load_metrics_snapshot(m.histograms)
+    assert snap["counters"] == {}
+    assert set(snap["histograms"]) == set(HISTOGRAM_METRICS)
+    d = diff_metrics(m.histograms, m.histograms)
+    assert d["identical"]
+
+
+def test_load_snapshot_accepts_report_with_telemetry(tmp_path):
+    from repro.api import Configurator
+    enable_metrics()
+    report = (Configurator.for_model("llama3.1-8b")
+              .traffic(isl=64, osl=16).sla(ttft_ms=2000)
+              .cluster(chips=4).backend("repro-jax").dtype("fp8")
+              .modes("aggregated").search(generate_launch=False))
+    disable_metrics()
+    path = tmp_path / "report.json"
+    report.save(str(path))
+    snap = load_metrics_snapshot(str(path))
+    assert snap["counters"]
+
+
+def test_load_snapshot_rejects_garbage():
+    with pytest.raises(ValueError):
+        load_metrics_snapshot({"whatever": 1})
+    with pytest.raises(ValueError):
+        load_metrics_snapshot([1, 2, 3])
+    with pytest.raises(ValueError):
+        # report without telemetry
+        load_metrics_snapshot({"schema_version": 7, "telemetry": None})

@@ -1,0 +1,163 @@
+"""CLI surface of the observability layer: the ``obs export | diff``
+subcommand, ``--trace-out``/``--metrics-out`` on the replay family
+(workload replay, capacity sweep/plan, autoscale run/compare), the
+``.chrome.json`` suffix routing, the flight-recorder sampling flags,
+and the byte-identity of replay output with and without capture."""
+import json
+
+import pytest
+
+from repro.core import cli
+from repro.obs import TraceArtifact
+
+_GEN = ["workload", "generate", "--arrivals", "poisson", "--rate", "4",
+        "--n", "30", "--lengths", "fixed", "--isl", "64", "--osl", "8",
+        "--seed", "3"]
+_REPLAY = ["workload", "replay", "--model", "llama3.1-8b",
+           "--tp", "1", "--batch", "8"]
+
+
+@pytest.fixture()
+def trace_path(tmp_path, capsys):
+    path = str(tmp_path / "trace.jsonl")
+    assert cli.main(_GEN + ["--out", path]) == 0
+    capsys.readouterr()
+    return path
+
+
+def _replay(trace_path, capsys, *extra):
+    rc = cli.main(_REPLAY + ["--trace", trace_path, "--json",
+                             *extra])
+    out = capsys.readouterr().out
+    assert rc == 0
+    return out
+
+
+def test_replay_output_identical_with_and_without_capture(
+        tmp_path, trace_path, capsys):
+    plain = _replay(trace_path, capsys)
+    captured = _replay(trace_path, capsys,
+                       "--trace-out", str(tmp_path / "t.jsonl"),
+                       "--metrics-out", str(tmp_path / "m.json"))
+    assert plain == captured
+    assert "histograms" not in json.loads(plain)["metrics"]
+
+
+def test_replay_chrome_suffix_routing(tmp_path, trace_path, capsys):
+    chrome = tmp_path / "t.chrome.json"
+    _replay(trace_path, capsys, "--trace-out", str(chrome))
+    ct = json.loads(chrome.read_text())
+    events = [e for e in ct["traceEvents"] if e["ph"] == "X"]
+    reqs = [e for e in events if e["name"] == "request"]
+    assert len(reqs) == 30
+    for e in events:
+        assert {"name", "ph", "ts", "dur", "pid", "tid"} <= set(e)
+        assert e["dur"] >= 0
+
+
+def test_replay_metrics_out_carries_request_histograms(
+        tmp_path, trace_path, capsys):
+    out = tmp_path / "m.json"
+    _replay(trace_path, capsys, "--metrics-out", str(out))
+    snap = json.loads(out.read_text())
+    assert "repro_request_ttft_ms{sim=serving}" in snap["histograms"]
+    assert "repro_replay_slo_attainment{sim=serving}" in snap["gauges"]
+
+
+def test_replay_sampling_flags(tmp_path, trace_path, capsys):
+    chrome = tmp_path / "t.chrome.json"
+    _replay(trace_path, capsys, "--trace-out", str(chrome),
+            "--span-sample-every", "2", "--max-request-spans", "5")
+    ct = json.loads(chrome.read_text())
+    rids = [e["args"]["rid"] for e in ct["traceEvents"]
+            if e.get("name") == "request"]
+    assert rids == [0, 2, 4, 6, 8]
+    # the knobs are restored after the command
+    from repro.obs import flight_config
+    assert flight_config().sample_every == 1
+    assert flight_config().max_request_spans == 512
+
+
+def test_capacity_sweep_capture(tmp_path, trace_path, capsys):
+    chrome = tmp_path / "c.chrome.json"
+    rc = cli.main(["capacity", "sweep", "--trace", trace_path,
+                   "--model", "llama3.1-8b", "--tp", "1", "--batch", "8",
+                   "--ladder", "1,2", "--json",
+                   "--trace-out", str(chrome),
+                   "--metrics-out", str(tmp_path / "c.json")])
+    capsys.readouterr()
+    assert rc == 0
+    ct = json.loads(chrome.read_text())
+    reqs = [e for e in ct["traceEvents"] if e.get("name") == "request"]
+    assert reqs
+    assert any("replica" in e["args"] for e in reqs)
+    snap = json.loads((tmp_path / "c.json").read_text())
+    assert "repro_request_e2e_ms{sim=cluster}" in snap["histograms"]
+
+
+def test_autoscale_run_capture(tmp_path, trace_path, capsys):
+    rc = cli.main(["autoscale", "run", "--trace", trace_path,
+                   "--model", "llama3.1-8b", "--tp", "1", "--batch", "8",
+                   "--policy", "target_queue_depth",
+                   "--max-replicas", "2", "--json",
+                   "--metrics-out", str(tmp_path / "a.json")])
+    out = capsys.readouterr().out
+    assert rc == 0
+    summary = json.loads(out.strip().splitlines()[-1])
+    assert "histograms" not in summary["metrics"]
+    snap = json.loads((tmp_path / "a.json").read_text())
+    assert "repro_request_e2e_ms{sim=autoscale}" in snap["histograms"]
+
+
+def test_obs_export_chrome_matches_trace_out(tmp_path, trace_path,
+                                             capsys):
+    jsonl = tmp_path / "t.jsonl"
+    chrome = tmp_path / "t.chrome.json"
+    _replay(trace_path, capsys, "--trace-out", str(jsonl))
+    _replay(trace_path, capsys, "--trace-out", str(chrome))
+    exported = tmp_path / "exported.json"
+    rc = cli.main(["obs", "export", "--trace", str(jsonl),
+                   "--format", "chrome", "--out", str(exported)])
+    capsys.readouterr()
+    assert rc == 0
+    assert exported.read_text() == chrome.read_text()
+
+
+def test_obs_export_jsonl_roundtrip(tmp_path, trace_path, capsys):
+    jsonl = tmp_path / "t.jsonl"
+    _replay(trace_path, capsys, "--trace-out", str(jsonl))
+    rc = cli.main(["obs", "export", "--trace", str(jsonl),
+                   "--format", "jsonl", "--out", "-"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert TraceArtifact.from_jsonl(out).digest() \
+        == TraceArtifact.load(str(jsonl)).digest()
+
+
+def test_obs_diff_cli(tmp_path, trace_path, capsys):
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    _replay(trace_path, capsys, "--metrics-out", str(a))
+    rc = cli.main(_REPLAY[:-2] + ["--batch", "1", "--trace", trace_path,
+                                  "--json", "--metrics-out", str(b)])
+    capsys.readouterr()
+    assert rc == 0
+    assert cli.main(["obs", "diff", str(a), str(a)]) == 0
+    assert "identical" in capsys.readouterr().out
+    assert cli.main(["obs", "diff", str(a), str(b)]) == 1
+    assert "repro_request_ttft_ms" in capsys.readouterr().out
+    assert cli.main(["obs", "diff", str(a), str(b), "--json"]) == 1
+    d = json.loads(capsys.readouterr().out)
+    assert not d["identical"]
+    assert d["slo_attainment"] is not None
+
+
+def test_obs_diff_bad_input_is_usage_error(tmp_path, capsys):
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"nonsense": true}')
+    assert cli.main(["obs", "diff", str(bad), str(bad)]) == 2
+    assert "error:" in capsys.readouterr().err
+
+
+def test_obs_without_action_prints_help(capsys):
+    assert cli.main(["obs"]) == 2
+    capsys.readouterr()

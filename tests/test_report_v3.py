@@ -50,8 +50,8 @@ def evaluated():
 # ---------------------------------------------------------------------------
 
 def test_schema_versions_supported():
-    assert SCHEMA_VERSION == 6
-    assert set(SUPPORTED_SCHEMA_VERSIONS) == {1, 2, 3, 4, 5, 6}
+    assert SCHEMA_VERSION == 7
+    assert set(SUPPORTED_SCHEMA_VERSIONS) == {1, 2, 3, 4, 5, 6, 7}
 
 
 def test_workload_eval_section_structure(evaluated):

@@ -1,0 +1,190 @@
+"""SearchReport schema v7: the replay-carrying sections gain latency
+histogram blocks (request-level flight recorder), the new v6 golden
+fixture migrates losslessly — its ``workload_eval``, ``capacity``,
+``autoscale``, and ``telemetry`` sections byte-for-byte, with no
+histogram block invented for them — and every older golden still
+loads."""
+import json
+import os
+
+import pytest
+
+from repro.api import Configurator, SCHEMA_VERSION, SearchReport
+from repro.obs import disable_metrics, disable_tracing
+from repro.obs.flight import HISTOGRAM_METRICS
+from repro.obs.metrics import LATENCY_MS_BUCKETS
+from repro.workloads import (ArrivalSpec, LengthSpec, SLOSpec, TenantSpec,
+                             TraceSpec, generate_trace)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+V6_FIXTURE = os.path.join(FIXTURES, "search_report_v6.json")
+
+
+def _configurator():
+    return (Configurator.for_model("llama3.1-8b")
+            .traffic(isl=256, osl=64)
+            .sla(ttft_ms=2000, min_tokens_per_s_user=10)
+            .cluster(chips=8).backend("repro-jax").dtype("fp8")
+            .modes("aggregated"))
+
+
+def _trace():
+    return generate_trace(TraceSpec(
+        n_requests=40,
+        arrivals=ArrivalSpec(kind="poisson", rate_rps=2.0),
+        tenants=(TenantSpec(lengths=LengthSpec(kind="fixed",
+                                               isl=256, osl=64)),)),
+        seed=7)
+
+
+_SLO = SLOSpec(ttft_p99_ms=2000.0, tpot_p99_ms=100.0)
+
+
+@pytest.fixture(autouse=True)
+def _clean_instrumentation():
+    disable_tracing()
+    disable_metrics()
+    yield
+    disable_tracing()
+    disable_metrics()
+
+
+@pytest.fixture(scope="module")
+def full_report():
+    """One search carried through every replay-backed section."""
+    cfg = _configurator()
+    trace = _trace()
+    report = cfg.search(generate_launch=False)
+    cfg.evaluate_frontier(trace, _SLO, top_k=2, report=report)
+    cfg.plan_capacity(trace, _SLO, ladder=(1, 2), report=report)
+    cfg.autoscale(trace, _SLO, ladder=(1, 2), report=report)
+    return report
+
+
+def _assert_histogram_block(h):
+    assert set(h) == set(HISTOGRAM_METRICS)
+    for name, hist in h.items():
+        assert hist["buckets"] == list(LATENCY_MS_BUCKETS), name
+        assert len(hist["counts"]) == len(LATENCY_MS_BUCKETS) + 1
+        assert sum(hist["counts"]) == hist["count"]
+        assert hist["sum"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# the v7 histogram blocks
+# ---------------------------------------------------------------------------
+
+def test_schema_version_is_7():
+    assert SCHEMA_VERSION == 7
+
+
+def test_workload_eval_carries_histograms(full_report):
+    replayed = [c for c in full_report.workload_eval["candidates"]
+                if c["replay"] is not None]
+    assert replayed
+    for cand in replayed:
+        _assert_histogram_block(cand["replay"]["histograms"])
+        assert cand["replay"]["histograms"]["e2e_ms"]["count"] > 0
+
+
+def test_capacity_rungs_carry_histograms(full_report):
+    rungs = [r for r in full_report.capacity["rungs"]
+             if r["metrics"] is not None]
+    assert rungs
+    for rung in rungs:
+        _assert_histogram_block(rung["metrics"]["histograms"])
+
+
+def test_autoscale_run_carries_histograms(full_report):
+    _assert_histogram_block(
+        full_report.autoscale["run"]["metrics"]["histograms"])
+
+
+def test_histograms_survive_roundtrip(full_report):
+    blob = full_report.to_json()
+    assert json.loads(blob)["schema_version"] == SCHEMA_VERSION
+    back = SearchReport.from_json(blob)
+    assert back == full_report
+    assert back.to_json() == blob            # byte-stable second hop
+    _assert_histogram_block(
+        back.autoscale["run"]["metrics"]["histograms"])
+
+
+def test_histogram_percentiles_consistent_with_exact(full_report):
+    """The serialized distribution must agree with the exact percentile
+    the same section already records (within one bucket)."""
+    from repro.obs.metrics import histogram_quantile
+    for cand in full_report.workload_eval["candidates"]:
+        if cand["replay"] is None:
+            continue
+        h = cand["replay"]["histograms"]["ttft_ms"]
+        exact_p99 = cand["replay"]["ttft_ms"]["p99"]
+        est = histogram_quantile(h["buckets"], h["counts"], 0.99)
+        idx = next((i for i, le in enumerate(h["buckets"])
+                    if exact_p99 <= le), len(h["buckets"]))
+        lo = h["buckets"][idx - 1] if idx > 0 else 0.0
+        hi = h["buckets"][idx] if idx < len(h["buckets"]) \
+            else h["buckets"][-1]
+        assert lo <= est <= hi or abs(est - exact_p99) <= hi - lo
+
+
+# ---------------------------------------------------------------------------
+# golden fixture: v6 migrates losslessly, sections byte-for-byte
+# ---------------------------------------------------------------------------
+
+def test_v6_golden_fixture_migrates_losslessly():
+    with open(V6_FIXTURE) as f:
+        payload = json.load(f)
+    assert payload["schema_version"] == 6
+    rep = SearchReport.load(V6_FIXTURE)
+    assert rep.schema_version == SCHEMA_VERSION
+    assert rep.n_candidates == payload["search"]["n_candidates"]
+    assert rep.frontier_indices == payload["frontier"]
+    assert rep.best_index == payload["best"]
+    assert rep.fingerprint == payload["database"]
+    assert rep.telemetry == payload["telemetry"]
+
+
+def test_v6_golden_migration_preserves_sections_bytes():
+    """Every v6 section must survive the v6→v7 migration byte-for-byte:
+    identical JSON serialization, not merely equal-ish — and no
+    histogram block may be invented for a report that never carried
+    one."""
+    with open(V6_FIXTURE) as f:
+        payload = json.load(f)
+    for section in ("workload_eval", "capacity", "autoscale", "telemetry"):
+        assert payload[section] is not None, section
+    rep = SearchReport.load(V6_FIXTURE)
+    reserialized = rep.to_dict()
+    for section in ("workload_eval", "capacity", "autoscale", "telemetry"):
+        assert json.dumps(reserialized[section], sort_keys=True) \
+            == json.dumps(payload[section], sort_keys=True), section
+    again = SearchReport.from_json(rep.to_json())
+    assert again == rep
+
+
+def test_migrated_v6_report_has_no_histograms():
+    rep = SearchReport.load(V6_FIXTURE)
+    for cand in rep.workload_eval["candidates"]:
+        if cand["replay"] is not None:
+            assert "histograms" not in cand["replay"]
+    for rung in rep.capacity["rungs"]:
+        if rung["metrics"] is not None:
+            assert "histograms" not in rung["metrics"]
+    assert "histograms" not in rep.autoscale["run"]["metrics"]
+
+
+def test_all_golden_fixtures_still_load():
+    for name, version in (("search_report_v1.json", 1),
+                          ("search_report_v2.json", 2),
+                          ("search_report_v3.json", 3),
+                          ("search_report_v4.json", 4),
+                          ("search_report_v5.json", 5),
+                          ("search_report_v6.json", 6)):
+        path = os.path.join(FIXTURES, name)
+        with open(path) as f:
+            assert json.load(f)["schema_version"] == version
+        rep = SearchReport.load(path)
+        assert rep.schema_version == SCHEMA_VERSION
+        if version < 6:
+            assert rep.telemetry is None
