@@ -28,7 +28,8 @@ import json
 import os
 import statistics
 
-from benchmarks.common import mape, sim_latency_fn, write_csv
+from benchmarks.common import (bench_main, finalize_result, mape,
+                               sim_latency_fn, write_csv)
 from repro.core import ClusterSpec, PerfDatabase, SLA, WorkloadDescriptor
 from repro.core.config import CandidateConfig, ParallelismConfig, RuntimeFlags
 from repro.core.session import InferenceSession
@@ -134,8 +135,8 @@ def run(quick: bool = False):
     out["csv"] = write_csv("ablation_sol.csv",
                            ["part", "case", "calibrated", "sol", "reference"],
                            rows)
-    return out
+    return finalize_result(out)
 
 
 if __name__ == "__main__":
-    run()
+    bench_main(run)

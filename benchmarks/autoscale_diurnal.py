@@ -16,7 +16,7 @@ baseline on chip-seconds and SLO attainment.  Two knobs are swept:
 """
 from __future__ import annotations
 
-from benchmarks.common import write_csv
+from benchmarks.common import bench_main, finalize_result, write_csv
 from repro.autoscale import build_autoscale_section, get_policy
 from repro.core.config import (CandidateConfig, ClusterSpec,
                                ParallelismConfig, RuntimeFlags, SLA,
@@ -95,9 +95,9 @@ def run(quick: bool = False):
          "slo_attainment_pct", "holds_attainment"], rows)
     print(f"  best saving that holds attainment: "
           f"{f'{best_pct:.1f}%' if best_pct is not None else 'none'}")
-    return {"csv": path, "best_saved_pct": best_pct, "n_points": len(rows)}
+    return finalize_result(
+        {"csv": path, "best_saved_pct": best_pct, "n_points": len(rows)})
 
 
 if __name__ == "__main__":
-    import sys
-    run(quick="--quick" in sys.argv)
+    bench_main(run)

@@ -12,7 +12,7 @@ trade-off ``plan_min_chips`` automates.
 """
 from __future__ import annotations
 
-from benchmarks.common import write_csv
+from benchmarks.common import bench_main, finalize_result, write_csv
 from repro.api import Configurator
 from repro.capacity import DeploymentSpec, ROUTING_POLICIES
 from repro.core.task_runner import TaskRunner
@@ -85,9 +85,9 @@ def run(quick: bool = False):
          "chip_s_per_ktok", "attains"], rows)
     print(f"  min-chip deployment ({routings[0]}): "
           f"{min_chips if min_chips is not None else 'none on ladder'}")
-    return {"csv": path, "min_chips": min_chips, "n_points": len(rows)}
+    return finalize_result(
+        {"csv": path, "min_chips": min_chips, "n_points": len(rows)})
 
 
 if __name__ == "__main__":
-    import sys
-    run(quick="--quick" in sys.argv)
+    bench_main(run)

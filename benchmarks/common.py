@@ -1,4 +1,5 @@
-"""Shared benchmark utilities: CSV emission, MAPE, simulator adapters."""
+"""Shared benchmark utilities: CSV emission, MAPE, simulator adapters,
+and the environment fingerprint every result dict is stamped with."""
 from __future__ import annotations
 
 import csv
@@ -10,6 +11,38 @@ from typing import Dict, Iterable, List, Optional, Sequence
 import numpy as np
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+_ENV_FINGERPRINT: Optional[Dict] = None
+
+
+def bench_environment() -> Dict:
+    """The suite-wide environment fingerprint (platform, python,
+    ``REPRO_*`` pricing knobs, PerfDatabase grid hash), computed once
+    per process — wallclock numbers are only comparable within it."""
+    global _ENV_FINGERPRINT
+    if _ENV_FINGERPRINT is None:
+        from repro.obs.bench import environment_fingerprint
+        _ENV_FINGERPRINT = environment_fingerprint()
+    return _ENV_FINGERPRINT
+
+
+def finalize_result(result: Optional[Dict]) -> Dict:
+    """Stamp a benchmark's result dict with the environment
+    fingerprint; every ``run()`` returns through this."""
+    out = dict(result or {})
+    out.setdefault("environment", bench_environment())
+    return out
+
+
+def bench_main(run_fn) -> None:
+    """Uniform ``__main__`` entry for per-table modules: every
+    benchmark accepts ``--quick`` the same way."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized variant")
+    args = ap.parse_args()
+    run_fn(quick=args.quick)
 
 
 def write_csv(name: str, header: Sequence[str], rows: Iterable[Sequence]):

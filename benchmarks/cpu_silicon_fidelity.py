@@ -24,7 +24,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import mape, write_csv
+from benchmarks.common import bench_main, finalize_result, mape, write_csv
 from repro import models
 from repro.calibrate.host import (calibrate_cpu_platform,
                                   measure_engine_overheads)
@@ -120,8 +120,9 @@ def run(quick: bool = False):
     path = write_csv("cpu_silicon_fidelity.csv",
                      ["isl", "osl", "conc", "tpot_pred_ms", "tpot_real_ms",
                       "ttft_pred_ms", "ttft_real_ms"], rows)
-    return {"csv": path, "tpot_mape": m_tpot, "ttft_mape": m_ttft}
+    return finalize_result(
+        {"csv": path, "tpot_mape": m_tpot, "ttft_mape": m_ttft})
 
 
 if __name__ == "__main__":
-    run()
+    bench_main(run)

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import jax
 
-from benchmarks.common import write_csv
+from benchmarks.common import bench_main, finalize_result, write_csv
 from repro import models
 from repro.calibrate.host import measure_engine_iteration
 from repro.configs import get_config
@@ -29,8 +29,9 @@ def run(quick: bool = False):
                      [["iteration_p50", m["iteration_p50"]],
                       ["jit_compute", m["jit_compute"]],
                       ["host_overhead", m["host_overhead"]]])
-    return {"csv": path, "overhead_us": m["host_overhead"] * 1e6}
+    return finalize_result(
+        {"csv": path, "overhead_us": m["host_overhead"] * 1e6})
 
 
 if __name__ == "__main__":
-    run()
+    bench_main(run)

@@ -7,7 +7,7 @@ serving at ISL 4096 / OSL 1024, and stars the best config above
 """
 from __future__ import annotations
 
-from benchmarks.common import write_csv
+from benchmarks.common import bench_main, finalize_result, write_csv
 from repro.api import Configurator
 
 
@@ -49,8 +49,8 @@ def run(quick: bool = False):
               f"({best['disaggregated'].config.get('describe')})")
         print(f"  disaggregation gain under SLA: {gain:+.1f}% "
               f"(paper: ~+53%)")
-    return out
+    return finalize_result(out)
 
 
 if __name__ == "__main__":
-    run()
+    bench_main(run)

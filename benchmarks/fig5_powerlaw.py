@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import write_csv
+from benchmarks.common import bench_main, finalize_result, write_csv
 from repro.core import PerfDatabase, powerlaw
 from repro.core import operators as ops
 
@@ -37,8 +37,8 @@ def run(quick: bool = False):
                      ["alpha", "top20pct_token_share_pct",
                       "hot_rank_tokens", "balanced_rank_tokens",
                       "moe_latency_us"], rows)
-    return {"csv": path}
+    return finalize_result({"csv": path})
 
 
 if __name__ == "__main__":
-    run()
+    bench_main(run)

@@ -9,7 +9,8 @@ simulator (the silicon stand-in).  Reports MAPE + Pearson r per
 """
 from __future__ import annotations
 
-from benchmarks.common import mape, pearson, sim_latency_fn, write_csv
+from benchmarks.common import (bench_main, finalize_result, mape,
+                               pearson, sim_latency_fn, write_csv)
 from repro.core import ClusterSpec, PerfDatabase, SLA, WorkloadDescriptor
 from repro.core.config import CandidateConfig, ParallelismConfig, RuntimeFlags
 from repro.core.session import InferenceSession
@@ -97,8 +98,8 @@ def run(quick: bool = False):
     path = write_csv("fig6_fidelity_summary.csv",
                      ["model", "backend", "n_configs", "tpot_mape_pct",
                       "tpot_r", "ttft_mape_pct", "ttft_r"], summary)
-    return {"csv": path, "summary": summary}
+    return finalize_result({"csv": path, "summary": summary})
 
 
 if __name__ == "__main__":
-    run()
+    bench_main(run)

@@ -17,7 +17,7 @@ import dataclasses
 import heapq
 from typing import List
 
-from benchmarks.common import mape, pearson, write_csv
+from benchmarks.common import bench_main, finalize_result, mape, pearson, write_csv
 from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
                         WorkloadDescriptor)
 from repro.core import operators as ops
@@ -154,7 +154,8 @@ def run(quick: bool = False):
                      ["isl", "xPyD", "prefill_cfg", "decode_cfg",
                       "thru_pred", "thru_true", "speed_pred", "speed_true"],
                      rows)
-    return {"csv": path, "thru_mape": m_t, "speed_mape": m_s}
+    return finalize_result(
+        {"csv": path, "thru_mape": m_t, "speed_mape": m_s})
 
 
 def _sample_composites(res, k):
@@ -188,4 +189,4 @@ def _sample_composites(res, k):
 
 
 if __name__ == "__main__":
-    run()
+    bench_main(run)

@@ -18,7 +18,7 @@ import json
 import os
 from typing import Dict, List, Optional
 
-from benchmarks.common import write_csv
+from benchmarks.common import bench_main, finalize_result, write_csv
 from repro.configs import INPUT_SHAPES, get_config
 
 PEAK = 197e12
@@ -119,7 +119,7 @@ def run(quick: bool = False, path: str = DRYRUN):
     if not os.path.exists(path):
         print(f"  no dry-run artifact at {path}; run "
               "`python -m repro.launch.dryrun --all` first")
-        return {"csv": None}
+        return finalize_result({"csv": None})
     rows = []
     for r in load(path):
         a = analyze_record(r)
@@ -146,8 +146,8 @@ def run(quick: bool = False, path: str = DRYRUN):
         doms[r[7]] = doms.get(r[7], 0) + 1
     print(f"  {len(rows)} (arch x shape x mesh) rooflines -> {out}")
     print(f"  dominant terms: {doms}")
-    return {"csv": out, "dominants": doms}
+    return finalize_result({"csv": out, "dominants": doms})
 
 
 if __name__ == "__main__":
-    run()
+    bench_main(run)

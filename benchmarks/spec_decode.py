@@ -3,7 +3,7 @@ work).  Projects the draft-γ trade-off for qwen3-32b with a llama3.1-8b
 draft on 8 chips across acceptance rates."""
 from __future__ import annotations
 
-from benchmarks.common import write_csv
+from benchmarks.common import bench_main, finalize_result, write_csv
 from repro.core import ClusterSpec, PerfDatabase, SLA, WorkloadDescriptor
 from repro.core.config import ParallelismConfig
 from repro.core.speculative import SpeculativeEstimator
@@ -34,9 +34,10 @@ def run(quick: bool = False):
     path = write_csv("spec_decode.csv",
                      ["acceptance", "gamma", "tpot_ms", "speedup",
                       "accepted_per_round"], rows)
-    return {"csv": path,
-            "best_speedup": best_overall.speedup_vs_autoregressive}
+    return finalize_result(
+        {"csv": path,
+         "best_speedup": best_overall.speedup_vs_autoregressive})
 
 
 if __name__ == "__main__":
-    run()
+    bench_main(run)

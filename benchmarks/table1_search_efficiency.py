@@ -24,7 +24,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import Timer, sim_latency_fn, write_csv
+from benchmarks.common import (Timer, finalize_result, sim_latency_fn,
+                               write_csv)
 from repro.core import (ClusterSpec, PerfDatabase, SLA, TaskRunner,
                         WorkloadDescriptor)
 from repro.core.config import CandidateConfig, ParallelismConfig, RuntimeFlags
@@ -83,9 +84,10 @@ def run(quick: bool = False):
          "sim_baseline_s_per_config", "sim_total_h", "paper_gpu_total_h",
          "speedup_vs_gpu"],
         rows)
-    return {"csv": path,
-            "per_config_ms": statistics.median(
-                float(r[3]) for r in rows)}
+    return finalize_result(
+        {"csv": path,
+         "per_config_ms": statistics.median(
+             float(r[3]) for r in rows)})
 
 
 def _workload(model, dtype):
@@ -205,8 +207,9 @@ def run_batched(quick: bool = False):
         raise RuntimeError(
             f"batched pricing speedup {min(speedups):.1f}x below the "
             f"{gate:.0f}x gate")
-    return {"csv": path, "pricing_speedup_min": min(speedups),
-            "pricing_speedup_median": statistics.median(speedups)}
+    return finalize_result(
+        {"csv": path, "pricing_speedup_min": min(speedups),
+         "pricing_speedup_median": statistics.median(speedups)})
 
 
 def main(argv=None):

@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import os
 
-from benchmarks.common import RESULTS_DIR, write_csv
+from benchmarks.common import (RESULTS_DIR, bench_main, finalize_result,
+                               write_csv)
 from repro.api import Configurator
 from repro.core.generator import generate
 
@@ -59,8 +60,8 @@ def run(quick: bool = False):
         out["gain_pct"] = 100.0 * (dis - agg) / agg
         print(f"  disaggregation gain: {out['gain_pct']:+.1f}% "
               f"(paper: +101.6%)")
-    return out
+    return finalize_result(out)
 
 
 if __name__ == "__main__":
-    run()
+    bench_main(run)

@@ -12,7 +12,7 @@ column.
 """
 from __future__ import annotations
 
-from benchmarks.common import write_csv
+from benchmarks.common import bench_main, finalize_result, write_csv
 from repro.api import Configurator
 from repro.workloads import (ArrivalSpec, LengthSpec, SLOSpec, TenantSpec,
                              TraceSpec, generate_trace)
@@ -82,9 +82,9 @@ def run(quick: bool = False):
          "reranked", "goodput_tok_s", "slo_attainment_pct",
          "p99_ttft_ms", "queue_depth_max"], rows)
     print(f"  {n_reranked}/{len(rows)} points re-ranked the frontier")
-    return {"csv": path, "n_reranked": n_reranked, "n_points": len(rows)}
+    return finalize_result(
+        {"csv": path, "n_reranked": n_reranked, "n_points": len(rows)})
 
 
 if __name__ == "__main__":
-    import sys
-    run(quick="--quick" in sys.argv)
+    bench_main(run)

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 CI: fast suite, slow suite, CLI JSON smoke test, streaming smoke,
 # calibration smoke, workload-trace smoke, capacity smoke, autoscale smoke,
-# observability smoke (trace/metrics determinism + explain attribution).
+# observability smoke (trace/metrics determinism + explain attribution),
+# bench sentinel (deterministic work counters + regression gate).
 # Run from the repo root: bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -440,5 +441,47 @@ print(f"ok: {cand['describe']} = {total:.3f} ms/iteration attributed, "
       f"diff vs {ex['baseline']['describe']}")
 PY
 rm -rf "$obs_dir"
+
+echo "=== smoke: bench sentinel — deterministic counters + regression gate ==="
+# Two identical quick-suite runs must produce byte-identical work
+# counters (compare exit 0); the current run must hold the committed
+# counter baseline (gate exit 0); and an injected pricing regression
+# (REPRO_PRICING_CHUNK=1 inflates repro_search_chunks_total) must fail
+# the gate (exit 1). See docs/benchmarking.md.
+bsn_dir=$(mktemp -d)
+for i in 1 2; do
+    PYTHONPATH=src python -m benchmarks.run --quick \
+        --timestamp 2026-01-01T00:00:00Z \
+        --out "$bsn_dir/run$i.json" --history "$bsn_dir/history.jsonl" \
+      > /dev/null
+done
+PYTHONPATH=src python -m repro.core.cli obs bench compare \
+    "$bsn_dir/run1.json" "$bsn_dir/run2.json" > /dev/null \
+  || { echo "quick-suite work counters drifted between identical runs" >&2
+       exit 1; }
+PYTHONPATH=src python -m repro.core.cli obs bench gate \
+    --baseline results/baselines/bench_quick.json \
+    --current "$bsn_dir/run1.json" --hard-only > /dev/null \
+  || { echo "work counters regressed vs results/baselines/bench_quick.json" \
+       >&2
+       echo "(if intentional, refresh the baseline per docs/benchmarking.md)" \
+       >&2
+       exit 1; }
+REPRO_PRICING_CHUNK=1 PYTHONPATH=src python -m benchmarks.run --quick \
+    --only workload_goodput --timestamp 2026-01-01T00:00:00Z \
+    --out "$bsn_dir/regressed.json" --history "" > /dev/null
+if PYTHONPATH=src python -m repro.core.cli obs bench gate \
+    --baseline results/baselines/bench_quick.json \
+    --current "$bsn_dir/regressed.json" --hard-only > "$bsn_dir/gate.txt"
+then
+    echo "bench gate missed the injected chunk regression" >&2; exit 1
+fi
+grep -q "repro_search_chunks_total" "$bsn_dir/gate.txt" \
+  || { echo "bench gate did not name the inflated counter" >&2; exit 1; }
+PYTHONPATH=src python -m repro.core.cli obs bench trend \
+    --history "$bsn_dir/history.jsonl" > /dev/null
+echo "ok: counters byte-stable across runs, baseline held," \
+     "injected regression caught"
+rm -rf "$bsn_dir"
 
 echo "=== ci passed ==="

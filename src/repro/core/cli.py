@@ -991,6 +991,92 @@ def cmd_obs_diff(args) -> int:
     return EXIT_OK if d["identical"] else EXIT_NO_CONFIG
 
 
+def cmd_obs_bench_run(args) -> int:
+    """Run the benchmark suite through ``benchmarks/run.py`` and emit a
+    versioned BenchArtifact (plus the history append).  The benchmarks
+    package is not installed — it lives at the repo root — so this
+    resolves it from the current directory when needed."""
+    try:
+        from benchmarks.run import main as bench_run_main
+    except ImportError:
+        if os.path.isdir(os.path.join(os.getcwd(), "benchmarks")):
+            sys.path.insert(0, os.getcwd())
+        try:
+            from benchmarks.run import main as bench_run_main
+        except ImportError:
+            raise ValueError(
+                "obs bench run needs the repo's benchmarks/ package on "
+                "sys.path — run from the repo root")
+    argv = []
+    if args.quick:
+        argv.append("--quick")
+    if args.only:
+        argv += ["--only", args.only]
+    argv += ["--repeat", str(args.repeat)]
+    if args.out:
+        argv += ["--out", args.out]
+    if args.history is not None:
+        argv += ["--history", args.history]
+    if args.timestamp:
+        argv += ["--timestamp", args.timestamp]
+    return EXIT_NO_CONFIG if bench_run_main(argv) else EXIT_OK
+
+
+def cmd_obs_bench_compare(args) -> int:
+    """Strict determinism check between two suite runs: identical work
+    counters -> exit 0, any drift -> exit 1, mismatched environment
+    fingerprints -> exit 2 (refusing to produce a misleading delta)."""
+    from repro.obs.bench import (BenchArtifact, compare_artifacts,
+                                 format_compare)
+    a = BenchArtifact.load(args.a)
+    b = BenchArtifact.load(args.b)
+    # EnvironmentMismatch is a ValueError: main() maps it to exit 2.
+    cmp = compare_artifacts(a, b)
+    if args.json:
+        _JsonLines().emit_text(json.dumps(cmp, indent=2, sort_keys=True)
+                               + "\n")
+    else:
+        _JsonLines().emit_text(format_compare(cmp) + "\n")
+    return EXIT_OK if cmp["identical"] else EXIT_NO_CONFIG
+
+
+def cmd_obs_bench_gate(args) -> int:
+    """Gate a current run against a baseline artifact: hard gates on
+    work counters always run (a ``REPRO_*`` knob regression is exactly
+    what they hunt); soft wallclock gates run only when the environment
+    fingerprints match.  Exit 0 pass / 1 fail."""
+    from repro.obs.bench import (DEFAULT_ABS_TOL_US, DEFAULT_REL_TOL,
+                                 BenchArtifact, gate_artifacts)
+    baseline = BenchArtifact.load(args.baseline)
+    current = BenchArtifact.load(args.current)
+    res = gate_artifacts(
+        baseline, current,
+        rel_tol=DEFAULT_REL_TOL if args.rel_tol is None else args.rel_tol,
+        abs_tol_us=(DEFAULT_ABS_TOL_US if args.abs_tol_us is None
+                    else args.abs_tol_us),
+        hard_only=args.hard_only)
+    if args.json:
+        _JsonLines().emit_text(
+            json.dumps(res.to_dict(), indent=2, sort_keys=True) + "\n")
+    else:
+        _JsonLines().emit_text(res.format() + "\n")
+    return EXIT_OK if res.ok else EXIT_NO_CONFIG
+
+
+def cmd_obs_bench_trend(args) -> int:
+    """Summarize the append-only bench history: per-benchmark wallclock
+    trajectory and how often the work-counter digest changed."""
+    from repro.obs.bench import format_trend, load_history, trend_summary
+    entries = load_history(args.history)
+    summary = trend_summary(entries, suite=args.suite or None)
+    if args.json:
+        _JsonLines().emit_text(
+            json.dumps(summary, indent=2, sort_keys=True) + "\n")
+    else:
+        _JsonLines().emit_text(format_trend(summary) + "\n")
+    return EXIT_OK
+
+
 # ---------------------------------------------------------------------------
 # explain
 # ---------------------------------------------------------------------------
@@ -1411,7 +1497,7 @@ def _build_parser() -> argparse.ArgumentParser:
     lp.set_defaults(func=cmd_list)
 
     ob = sub.add_parser(
-        "obs", help="observability artifacts: export | diff")
+        "obs", help="observability artifacts: export | diff | bench")
     obsub = ob.add_subparsers(dest="action")
 
     oe = obsub.add_parser(
@@ -1437,6 +1523,68 @@ def _build_parser() -> argparse.ArgumentParser:
     od.add_argument("b", help="comparison snapshot (same shapes)")
     od.add_argument("--json", action="store_true")
     od.set_defaults(func=cmd_obs_diff)
+
+    obb = obsub.add_parser(
+        "bench", help="performance-regression sentinel: "
+                      "run | compare | gate | trend")
+    bsub = obb.add_subparsers(dest="bench_action")
+
+    br = bsub.add_parser(
+        "run", help="run the benchmark suite and emit a versioned "
+                    "BenchArtifact (work counters, phase breakdown, "
+                    "repeat timings, environment fingerprint)")
+    br.add_argument("--quick", action="store_true",
+                    help="CI-sized variants of every benchmark")
+    br.add_argument("--only", default="",
+                    help="comma-separated substrings of benchmark names")
+    br.add_argument("--repeat", type=int, default=1,
+                    help="timing repeats per benchmark")
+    br.add_argument("--out", default="",
+                    help="artifact path (default results/bench_<suite>"
+                         ".json)")
+    br.add_argument("--history", default=None, metavar="JSONL",
+                    help="history file to append ('' disables; default "
+                         "results/bench_history.jsonl)")
+    br.add_argument("--timestamp", default="",
+                    help="created_at override for deterministic artifacts")
+    br.set_defaults(func=cmd_obs_bench_run)
+
+    bc = bsub.add_parser(
+        "compare", help="strict determinism check between two suite "
+                        "runs (exit 0 identical work, 1 drift, 2 "
+                        "mismatched environments)")
+    bc.add_argument("a", help="first BenchArtifact JSON")
+    bc.add_argument("b", help="second BenchArtifact JSON")
+    bc.add_argument("--json", action="store_true")
+    bc.set_defaults(func=cmd_obs_bench_compare)
+
+    bg = bsub.add_parser(
+        "gate", help="two-tier regression gate vs a baseline artifact: "
+                     "hard (exact work counters) + soft (min-of-k "
+                     "wallclock under tolerance); exit 1 on violation")
+    bg.add_argument("--baseline", required=True,
+                    help="baseline BenchArtifact (e.g. "
+                         "results/baselines/bench_quick.json)")
+    bg.add_argument("--current", required=True,
+                    help="current-run BenchArtifact")
+    bg.add_argument("--rel-tol", type=float, default=None,
+                    help="soft-gate relative tolerance (default 0.5)")
+    bg.add_argument("--abs-tol-us", type=float, default=None,
+                    help="soft-gate absolute slack in us (default 5000)")
+    bg.add_argument("--hard-only", action="store_true",
+                    help="skip the wallclock tier (deterministic "
+                         "cross-machine gating)")
+    bg.add_argument("--json", action="store_true")
+    bg.set_defaults(func=cmd_obs_bench_gate)
+
+    bt = bsub.add_parser(
+        "trend", help="summarize the append-only bench history "
+                      "(wallclock trajectory + work-digest changes)")
+    bt.add_argument("--history", default="results/bench_history.jsonl")
+    bt.add_argument("--suite", default="",
+                    help="filter to one suite (quick | full)")
+    bt.add_argument("--json", action="store_true")
+    bt.set_defaults(func=cmd_obs_bench_trend)
     return ap
 
 

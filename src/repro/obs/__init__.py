@@ -18,6 +18,12 @@ Three layers, all zero-cost until installed:
 * :mod:`repro.obs.diff` — telemetry diffing: counter/gauge deltas and
   per-histogram distribution shifts between two snapshots (surfaced as
   the ``obs diff`` CLI subcommand).
+* :mod:`repro.obs.bench` — the performance-regression sentinel:
+  versioned ``BenchArtifact`` suite runs (repeat timings, work-counter
+  snapshots, phase breakdowns, environment fingerprints) and the
+  two-tier hard/soft comparator behind ``obs bench run|compare|gate|
+  trend``.  Loads lazily — it reaches into the pricing stack for the
+  PerfDatabase fingerprint.
 * :mod:`repro.obs.explain` — the operator-family latency waterfall per
   serving phase, and a two-candidate diff (surfaced as
   ``Configurator.explain`` and the ``explain`` CLI subcommand).
@@ -44,6 +50,11 @@ _EXPLAIN_NAMES = ("CandidateExplanation", "Explanation", "ExplanationDiff",
                   "PhaseWaterfall", "diff_explanations", "explain_candidate",
                   "explain_spec")
 
+_BENCH_NAMES = ("BenchArtifact", "BenchRecord", "BenchTiming",
+                "EnvironmentMismatch", "GateResult", "compare_artifacts",
+                "environment_fingerprint", "gate_artifacts", "soft_exceeds",
+                "trend_summary")
+
 __all__ = [
     "FlightRecorderConfig", "LATENCY_MS_BUCKETS", "MetricsRegistry",
     "NULL_TRACER", "NullTracer", "SpanRecord",
@@ -56,6 +67,7 @@ __all__ = [
     "histogram_quantile", "latency_histograms", "load_metrics_snapshot",
     "request_latencies_ms", "set_tracer", "telemetry_section",
     *_EXPLAIN_NAMES,
+    *_BENCH_NAMES,
 ]
 
 
@@ -77,4 +89,7 @@ def __getattr__(name):
     if name in _EXPLAIN_NAMES:
         from repro.obs import explain as _explain
         return getattr(_explain, name)
+    if name in _BENCH_NAMES:
+        from repro.obs import bench as _bench
+        return getattr(_bench, name)
     raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

@@ -1,0 +1,27 @@
+"""repro.obs.bench — versioned bench artifacts + regression gates.
+
+See :mod:`repro.obs.bench.artifact` for the ``BenchArtifact`` schema
+and :mod:`repro.obs.bench.gate` for the two-tier comparator behind
+``obs bench compare|gate|trend``.  ``docs/benchmarking.md`` documents
+the workflow.
+"""
+from repro.obs.bench.artifact import (
+    BENCH_KIND, BENCH_SCHEMA_VERSION, SUPPORTED_BENCH_SCHEMA_VERSIONS,
+    BenchArtifact, BenchRecord, BenchTiming, environment_fingerprint,
+)
+from repro.obs.bench.gate import (
+    DEFAULT_ABS_TOL_US, DEFAULT_REL_TOL, EnvironmentMismatch, GateResult,
+    append_history, compare_artifacts, diff_environment, format_compare,
+    format_trend, gate_artifacts, history_entry, load_history, soft_exceeds,
+    trend_summary,
+)
+
+__all__ = [
+    "BENCH_KIND", "BENCH_SCHEMA_VERSION", "BenchArtifact", "BenchRecord",
+    "BenchTiming", "DEFAULT_ABS_TOL_US", "DEFAULT_REL_TOL",
+    "EnvironmentMismatch", "GateResult", "SUPPORTED_BENCH_SCHEMA_VERSIONS",
+    "append_history", "compare_artifacts", "diff_environment",
+    "environment_fingerprint", "format_compare", "format_trend",
+    "gate_artifacts", "history_entry", "load_history", "soft_exceeds",
+    "trend_summary",
+]

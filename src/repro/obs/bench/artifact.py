@@ -1,0 +1,271 @@
+"""Versioned benchmark artifact — one suite run as a file.
+
+A :class:`BenchArtifact` is what ``benchmarks/run.py`` (and the CLI's
+``obs bench run``) produces and what the two-tier regression comparator
+in :mod:`repro.obs.bench.gate` consumes: per-benchmark records carrying
+
+* **repeat-timing stats** (:class:`BenchTiming` — median/min/IQR of
+  ``us_per_call`` over ``--repeat`` samples),
+* a **work-counter snapshot** — the ``MetricsRegistry`` counters the
+  instrumented run incremented (grid queries, candidates priced/pruned,
+  pricing chunks, replay iterations, …).  Work counters are a pure
+  function of code + seeds + ``REPRO_*`` knobs, so they are
+  byte-stable across runs and machines: *any* drift is a real
+  algorithmic change, never noise,
+* a tracer-span-derived **phase breakdown** (wall seconds per span
+  name — the same ``search.chunk``/``price.kernel``/``serving.replay``
+  spans ``search --trace-out`` captures), and
+* an **environment fingerprint** (platform, python, ``REPRO_*`` pricing
+  knobs, PerfDatabase grid hash) stamped once per suite run so the
+  comparator can refuse to gate wallclock across mismatched setups.
+
+Like :class:`repro.calibrate.artifact.CalibrationArtifact`, the
+artifact is Date-free — ``created_at`` is caller-supplied, never
+ambient wall-clock — and round-trips losslessly:
+``BenchArtifact.from_json(a.to_json()) == a`` (golden fixture under
+``tests/fixtures/``).  The :meth:`BenchArtifact.digest` covers only the
+**canonical** view — suite, environment, and per-record (name, status,
+counters) — with every wallclock-derived field (timing stats, phase
+breakdown, derived strings, ``created_at``) excluded, so two
+deterministic runs share a digest no matter how fast they ran.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import statistics
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "BENCH_KIND", "BENCH_SCHEMA_VERSION", "BenchArtifact", "BenchRecord",
+    "BenchTiming", "SUPPORTED_BENCH_SCHEMA_VERSIONS",
+    "environment_fingerprint",
+]
+
+#: Bump on any backwards-incompatible change to the artifact JSON layout.
+BENCH_SCHEMA_VERSION = 1
+SUPPORTED_BENCH_SCHEMA_VERSIONS = (1,)
+
+#: Sanity marker so a SearchReport / calibration blob is never loaded
+#: as a bench artifact (house convention, see CalibrationArtifact.KIND).
+BENCH_KIND = "repro-bench"
+
+
+def environment_fingerprint(include_perf_db: bool = True) -> Dict:
+    """The setup a benchmark's wallclock numbers are only comparable
+    within: host platform + python, the resolved ``REPRO_*`` pricing
+    knobs (resolved through :mod:`repro.core.jaxenv`, so defaults and
+    explicit settings fingerprint identically), and the default
+    PerfDatabase's grid hash (any change to the operator data changes
+    every measured number downstream).
+    """
+    import platform as _platform
+    from repro.core import jaxenv
+
+    env: Dict = {
+        "platform": _platform.platform(),
+        "machine": _platform.machine(),
+        "python": _platform.python_version(),
+        "repro": {
+            "REPRO_BATCHED_PRICING": jaxenv.batched_pricing_default(),
+            "REPRO_PRICING_BACKEND": jaxenv.pricing_backend(),
+            "REPRO_PRICING_CHUNK": jaxenv.pricing_chunk(),
+        },
+    }
+    try:
+        import numpy
+        env["numpy"] = numpy.__version__
+    except ImportError:                      # pragma: no cover - numpy is a dep
+        env["numpy"] = None
+    if include_perf_db:
+        from repro.core.perf_database import PerfDatabase
+        fp = PerfDatabase("tpu_v5e", "repro-jax").fingerprint()
+        env["perf_db"] = {"platform": fp["platform"],
+                          "backend": fp["backend"],
+                          "grid_hash": fp["grid_hash"]}
+    else:
+        env["perf_db"] = None
+    return env
+
+
+def _digest12(blob: Dict) -> str:
+    return hashlib.sha256(
+        json.dumps(blob, sort_keys=True).encode()).hexdigest()[:12]
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchTiming:
+    """Repeat-timing stats for one benchmark: ``us_per_call`` samples
+    plus the order statistics the soft (wallclock) gate reads —
+    ``min_us`` is the min-of-k the comparator trusts most."""
+    n: int
+    samples_us: Tuple[float, ...]
+    median_us: float
+    min_us: float
+    iqr_us: float
+
+    @classmethod
+    def from_samples(cls, samples_us: Sequence[float]) -> "BenchTiming":
+        s = tuple(float(x) for x in samples_us)
+        if not s:
+            raise ValueError("timing needs at least one sample")
+        srt = sorted(s)
+        if len(srt) >= 4:
+            q = statistics.quantiles(srt, n=4)
+            iqr = q[2] - q[0]
+        elif len(srt) > 1:
+            iqr = srt[-1] - srt[0]
+        else:
+            iqr = 0.0
+        return cls(n=len(s), samples_us=s,
+                   median_us=float(statistics.median(srt)),
+                   min_us=float(srt[0]), iqr_us=float(iqr))
+
+    def to_dict(self) -> Dict:
+        return {"n": self.n, "samples_us": list(self.samples_us),
+                "median_us": self.median_us, "min_us": self.min_us,
+                "iqr_us": self.iqr_us}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "BenchTiming":
+        return cls(n=d["n"], samples_us=tuple(d["samples_us"]),
+                   median_us=d["median_us"], min_us=d["min_us"],
+                   iqr_us=d["iqr_us"])
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchRecord:
+    """One benchmark's result inside a suite run."""
+    name: str
+    status: str                    # "ok" | "error"
+    timing: BenchTiming
+    counters: Dict[str, float]     # MetricsRegistry counter snapshot
+    phases: Dict[str, float]       # wall seconds per tracer span name
+    derived: str = ""              # the CSV line's human headline
+    error: str = ""
+
+    def __post_init__(self):
+        if self.status not in ("ok", "error"):
+            raise ValueError(f"bad record status {self.status!r}")
+        object.__setattr__(self, "counters", dict(self.counters))
+        object.__setattr__(self, "phases", dict(self.phases))
+
+    def canonical_dict(self) -> Dict:
+        """The deterministic view: name, status, work counters — no
+        wallclock-derived field survives into the digest."""
+        return {"name": self.name, "status": self.status,
+                "counters": {k: self.counters[k]
+                             for k in sorted(self.counters)}}
+
+    def counters_digest(self) -> str:
+        """12-hex digest over this record's counter snapshot (the
+        per-bench work identity ``bench_history.jsonl`` tracks)."""
+        return _digest12(self.canonical_dict()["counters"])
+
+    def to_dict(self) -> Dict:
+        return {"name": self.name, "status": self.status,
+                "derived": self.derived, "error": self.error,
+                "counters": {k: self.counters[k]
+                             for k in sorted(self.counters)},
+                "phases": {k: self.phases[k]
+                           for k in sorted(self.phases)},
+                "timing": self.timing.to_dict()}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "BenchRecord":
+        return cls(name=d["name"], status=d["status"],
+                   derived=d.get("derived", ""), error=d.get("error", ""),
+                   counters=dict(d["counters"]), phases=dict(d["phases"]),
+                   timing=BenchTiming.from_dict(d["timing"]))
+
+
+@dataclasses.dataclass
+class BenchArtifact:
+    """The suite-run artifact: environment + per-benchmark records,
+    versioned, digestable, losslessly JSON round-trippable."""
+    suite: str                     # "quick" | "full"
+    created_at: str                # ISO-8601, supplied by the caller
+    environment: Dict
+    records: List[BenchRecord]
+    notes: str = ""
+    schema_version: int = BENCH_SCHEMA_VERSION
+
+    def __post_init__(self):
+        names = [r.name for r in self.records]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate benchmark records: {names}")
+
+    # -- lookups -------------------------------------------------------------
+    def record(self, name: str) -> Optional[BenchRecord]:
+        for r in self.records:
+            if r.name == name:
+                return r
+        return None
+
+    @property
+    def names(self) -> List[str]:
+        return [r.name for r in self.records]
+
+    # -- identity ------------------------------------------------------------
+    def canonical_dict(self) -> Dict:
+        """Everything deterministic about the run (and nothing
+        wallclock): suite, environment, per-record (name, status,
+        counters).  ``created_at``/timing/phases/derived stay out."""
+        return {"kind": BENCH_KIND,
+                "schema_version": self.schema_version,
+                "suite": self.suite,
+                "environment": self.environment,
+                "records": [r.canonical_dict() for r in self.records]}
+
+    def digest(self) -> str:
+        blob = json.dumps(self.canonical_dict(), sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def environment_digest(self) -> str:
+        return _digest12(self.environment)
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return {"kind": BENCH_KIND,
+                "schema_version": self.schema_version,
+                "suite": self.suite,
+                "created_at": self.created_at,
+                "notes": self.notes,
+                "environment": self.environment,
+                "records": [r.to_dict() for r in self.records]}
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "BenchArtifact":
+        if d.get("kind") != BENCH_KIND:
+            raise ValueError(
+                f"not a bench artifact (kind={d.get('kind')!r}; "
+                f"expected {BENCH_KIND!r})")
+        version = d.get("schema_version")
+        if version not in SUPPORTED_BENCH_SCHEMA_VERSIONS:
+            raise ValueError(
+                f"unsupported bench schema_version {version!r}; this "
+                f"build reads versions "
+                f"{', '.join(map(str, SUPPORTED_BENCH_SCHEMA_VERSIONS))}")
+        return cls(suite=d["suite"], created_at=d["created_at"],
+                   notes=d.get("notes", ""),
+                   environment=dict(d["environment"]),
+                   records=[BenchRecord.from_dict(r) for r in d["records"]],
+                   schema_version=version)
+
+    @classmethod
+    def from_json(cls, text: str) -> "BenchArtifact":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "BenchArtifact":
+        with open(path) as f:
+            return cls.from_json(f.read())

@@ -1,0 +1,391 @@
+"""Two-tier benchmark regression comparator + history trend diffing.
+
+Tier 1 — **hard gates on work counters**.  A ``MetricsRegistry``
+counter snapshot is a pure function of code + seeds + ``REPRO_*``
+knobs: two runs of the same suite on any machines produce identical
+counters, byte for byte.  So the hard tier compares them exactly —
+a counter that *grew*, *appeared*, or *vanished* versus the baseline
+is a real algorithmic change (more grid queries per candidate, more
+pricing chunks, more replay iterations), never noise, and fails the
+gate.  Shrinks are reported as improvements, not violations.
+
+Tier 2 — **soft gates on wallclock**.  ``us_per_call`` is noisy, so
+the soft tier compares min-of-k (``BenchTiming.min_us``) under a
+relative tolerance plus an absolute floor, and *refuses to run at all*
+when the two artifacts carry different environment fingerprints —
+cross-machine or cross-knob wallclock deltas are meaningless.  The
+hard tier still runs on an environment mismatch caused by ``REPRO_*``
+knobs: that is exactly the synthetic-regression case
+(``REPRO_PRICING_CHUNK=1`` inflates ``repro_search_chunks_total``)
+the CI sentinel injects.
+
+``compare_artifacts`` is the strict determinism check behind
+``obs bench compare`` (two identical runs → identical canonical
+records); ``gate_artifacts`` is the baseline gate behind
+``obs bench gate``; ``append_history``/``load_history``/
+``trend_summary`` maintain and summarize the append-only
+``results/bench_history.jsonl`` trajectory behind ``obs bench trend``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs.bench.artifact import BenchArtifact
+
+__all__ = [
+    "EnvironmentMismatch", "GateResult", "append_history",
+    "compare_artifacts", "diff_environment", "format_compare",
+    "gate_artifacts", "load_history", "soft_exceeds", "trend_summary",
+]
+
+#: Default soft-gate tolerances: flag only when the current min-of-k is
+#: more than 50% above baseline *and* the excess tops 5 ms — generous
+#: enough for shared-CI noise, tight enough to catch an order of
+#: magnitude given back.
+DEFAULT_REL_TOL = 0.50
+DEFAULT_ABS_TOL_US = 5000.0
+
+
+class EnvironmentMismatch(ValueError):
+    """Raised by :func:`compare_artifacts` when the two artifacts were
+    produced under different environment fingerprints — comparing them
+    would produce a misleading delta (CLI maps this to exit 2)."""
+
+
+def _flatten(env: Dict, prefix: str = "") -> Dict[str, object]:
+    out: Dict[str, object] = {}
+    for k in sorted(env):
+        v = env[k]
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, key + "."))
+        else:
+            out[key] = v
+    return out
+
+
+def diff_environment(a: Dict, b: Dict) -> Dict[str, Tuple[object, object]]:
+    """Flattened ``key -> (a_value, b_value)`` for every fingerprint
+    entry that differs (missing keys show as ``None``)."""
+    fa, fb = _flatten(a), _flatten(b)
+    out: Dict[str, Tuple[object, object]] = {}
+    for k in sorted(set(fa) | set(fb)):
+        va, vb = fa.get(k), fb.get(k)
+        if va != vb:
+            out[k] = (va, vb)
+    return out
+
+
+def _counter_delta(base: Dict[str, float], cur: Dict[str, float]) -> Dict:
+    """Exact counter-snapshot diff: added/removed names and changed
+    values, or ``{}`` when identical."""
+    added = sorted(set(cur) - set(base))
+    removed = sorted(set(base) - set(cur))
+    changed = {k: (base[k], cur[k])
+               for k in sorted(set(base) & set(cur)) if base[k] != cur[k]}
+    if not (added or removed or changed):
+        return {}
+    return {"added": added, "removed": removed, "changed": changed}
+
+
+# ---------------------------------------------------------------------------
+# compare — strict determinism check between two runs
+# ---------------------------------------------------------------------------
+
+def compare_artifacts(a: BenchArtifact, b: BenchArtifact) -> Dict:
+    """Strict comparison of two suite runs (the ``obs bench compare``
+    engine).  Raises :class:`EnvironmentMismatch` when the environment
+    fingerprints differ; otherwise returns a dict whose ``identical``
+    flag is True iff the canonical views match: same record names, and
+    for every record the same status and byte-identical counters.
+    Wallclock deltas are reported informationally, never judged."""
+    env_delta = diff_environment(a.environment, b.environment)
+    if env_delta:
+        lines = [f"  {k}: {va!r} != {vb!r}" for k, (va, vb) in env_delta.items()]
+        raise EnvironmentMismatch(
+            "environment fingerprints differ — refusing to compare "
+            "(wallclock and knob-sensitive counters are not comparable):\n"
+            + "\n".join(lines))
+
+    only_a = sorted(set(a.names) - set(b.names))
+    only_b = sorted(set(b.names) - set(a.names))
+    records: Dict[str, Dict] = {}
+    wallclock: Dict[str, Dict] = {}
+    for ra in a.records:
+        rb = b.record(ra.name)
+        if rb is None:
+            continue
+        delta: Dict = {}
+        if ra.status != rb.status:
+            delta["status"] = (ra.status, rb.status)
+        cdelta = _counter_delta(ra.counters, rb.counters)
+        if cdelta:
+            delta["counters"] = cdelta
+        if delta:
+            records[ra.name] = delta
+        wallclock[ra.name] = {
+            "a_median_us": ra.timing.median_us,
+            "b_median_us": rb.timing.median_us,
+        }
+    identical = not (records or only_a or only_b)
+    return {"identical": identical, "records": records,
+            "only_a": only_a, "only_b": only_b,
+            "wallclock": wallclock,
+            "digest_a": a.digest(), "digest_b": b.digest()}
+
+
+def format_compare(cmp: Dict) -> str:
+    lines: List[str] = []
+    if cmp["identical"]:
+        lines.append(f"identical work (digest {cmp['digest_a']})")
+    else:
+        lines.append("NOT identical:")
+        for name in cmp["only_a"]:
+            lines.append(f"  only in first:  {name}")
+        for name in cmp["only_b"]:
+            lines.append(f"  only in second: {name}")
+        for name, delta in sorted(cmp["records"].items()):
+            if "status" in delta:
+                sa, sb = delta["status"]
+                lines.append(f"  {name}: status {sa} -> {sb}")
+            cd = delta.get("counters", {})
+            for k in cd.get("added", []):
+                lines.append(f"  {name}: counter appeared  {k}")
+            for k in cd.get("removed", []):
+                lines.append(f"  {name}: counter vanished  {k}")
+            for k, (va, vb) in cd.get("changed", {}).items():
+                lines.append(f"  {name}: {k}  {va:g} -> {vb:g}")
+    for name, w in sorted(cmp["wallclock"].items()):
+        lines.append(f"  wall {name}: {w['a_median_us']:.0f}us vs "
+                     f"{w['b_median_us']:.0f}us (informational)")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# gate — baseline vs current, two tiers
+# ---------------------------------------------------------------------------
+
+def soft_exceeds(base_us: float, cur_us: float,
+                 rel_tol: float = DEFAULT_REL_TOL,
+                 abs_tol_us: float = DEFAULT_ABS_TOL_US) -> bool:
+    """The soft-gate predicate, kept pure for property testing: flag
+    iff ``cur_us > base_us * (1 + rel_tol) + abs_tol_us``.  Monotone in
+    ``cur_us`` and antitone in both tolerances."""
+    return cur_us > base_us * (1.0 + rel_tol) + abs_tol_us
+
+
+@dataclasses.dataclass
+class GateResult:
+    """Outcome of gating a current run against a baseline artifact."""
+    hard_violations: List[Dict]          # counter grew/appeared/vanished
+    improvements: List[Dict]             # counter shrank (not a failure)
+    soft_violations: List[Dict]          # wallclock beyond tolerance
+    soft_skipped: str = ""               # reason the soft tier did not run
+    uncovered: List[str] = dataclasses.field(default_factory=list)
+    new_benches: List[str] = dataclasses.field(default_factory=list)
+    errored: List[str] = dataclasses.field(default_factory=list)
+    rel_tol: float = DEFAULT_REL_TOL
+    abs_tol_us: float = DEFAULT_ABS_TOL_US
+
+    @property
+    def ok(self) -> bool:
+        return not self.hard_violations and not self.soft_violations
+
+    def to_dict(self) -> Dict:
+        return {"ok": self.ok,
+                "hard_violations": self.hard_violations,
+                "improvements": self.improvements,
+                "soft_violations": self.soft_violations,
+                "soft_skipped": self.soft_skipped,
+                "uncovered": self.uncovered,
+                "new_benches": self.new_benches,
+                "errored": self.errored,
+                "rel_tol": self.rel_tol,
+                "abs_tol_us": self.abs_tol_us}
+
+    def format(self) -> str:
+        lines: List[str] = []
+        verdict = "PASS" if self.ok else "FAIL"
+        lines.append(f"bench gate: {verdict}  "
+                     f"({len(self.hard_violations)} hard, "
+                     f"{len(self.soft_violations)} soft violations)")
+        for v in self.hard_violations:
+            lines.append(f"  HARD {v['bench']}: {v['counter']} {v['kind']}  "
+                         f"{v['baseline']:g} -> {v['current']:g}")
+        for v in self.soft_violations:
+            lines.append(f"  SOFT {v['bench']}: min {v['baseline_us']:.0f}us "
+                         f"-> {v['current_us']:.0f}us "
+                         f"({v['ratio']:.2f}x, tol {self.rel_tol:+.0%} "
+                         f"+ {self.abs_tol_us:.0f}us)")
+        for v in self.improvements:
+            lines.append(f"  good {v['bench']}: {v['counter']}  "
+                         f"{v['baseline']:g} -> {v['current']:g}")
+        if self.soft_skipped:
+            lines.append(f"  note: soft (wallclock) tier skipped: "
+                         f"{self.soft_skipped}")
+        if self.errored:
+            lines.append(f"  note: skipped errored benches: "
+                         f"{', '.join(self.errored)}")
+        if self.uncovered:
+            lines.append(f"  note: baseline benches not in current run: "
+                         f"{', '.join(self.uncovered)}")
+        if self.new_benches:
+            lines.append(f"  note: benches without a baseline: "
+                         f"{', '.join(self.new_benches)}")
+        return "\n".join(lines)
+
+
+def gate_artifacts(baseline: BenchArtifact, current: BenchArtifact,
+                   rel_tol: float = DEFAULT_REL_TOL,
+                   abs_tol_us: float = DEFAULT_ABS_TOL_US,
+                   hard_only: bool = False) -> GateResult:
+    """Gate ``current`` against ``baseline`` over the benchmarks both
+    runs cover (a ``--only`` run gates against the full committed
+    baseline).  The hard counter tier always runs — even across
+    mismatched environments, where counter drift caused by a ``REPRO_*``
+    knob is precisely the regression being hunted.  The soft wallclock
+    tier runs only when the fingerprints match (and ``hard_only`` is
+    False); otherwise it is skipped with a reason naming the first
+    differing keys."""
+    res = GateResult(hard_violations=[], improvements=[],
+                     soft_violations=[], rel_tol=rel_tol,
+                     abs_tol_us=abs_tol_us)
+    res.uncovered = sorted(set(baseline.names) - set(current.names))
+    res.new_benches = sorted(set(current.names) - set(baseline.names))
+
+    env_delta = diff_environment(baseline.environment, current.environment)
+    soft_enabled = not hard_only
+    if hard_only:
+        res.soft_skipped = "--hard-only"
+    elif env_delta:
+        keys = ", ".join(list(env_delta)[:4])
+        res.soft_skipped = (f"environment fingerprints differ ({keys}) — "
+                            "wallclock not comparable")
+        soft_enabled = False
+
+    for rb in baseline.records:
+        rc = current.record(rb.name)
+        if rc is None:
+            continue
+        if rb.status != "ok" or rc.status != "ok":
+            res.errored.append(rb.name)
+            continue
+        # hard tier: exact counter comparison
+        for k in sorted(set(rb.counters) | set(rc.counters)):
+            vb, vc = rb.counters.get(k), rc.counters.get(k)
+            if vb is None:
+                res.hard_violations.append(
+                    {"bench": rb.name, "counter": k, "kind": "appeared",
+                     "baseline": 0.0, "current": vc})
+            elif vc is None:
+                res.hard_violations.append(
+                    {"bench": rb.name, "counter": k, "kind": "vanished",
+                     "baseline": vb, "current": 0.0})
+            elif vc > vb:
+                res.hard_violations.append(
+                    {"bench": rb.name, "counter": k, "kind": "grew",
+                     "baseline": vb, "current": vc})
+            elif vc < vb:
+                res.improvements.append(
+                    {"bench": rb.name, "counter": k,
+                     "baseline": vb, "current": vc})
+        # soft tier: min-of-k wallclock under tolerance
+        if soft_enabled and soft_exceeds(rb.timing.min_us, rc.timing.min_us,
+                                         rel_tol, abs_tol_us):
+            base_us = rb.timing.min_us
+            res.soft_violations.append(
+                {"bench": rb.name, "baseline_us": base_us,
+                 "current_us": rc.timing.min_us,
+                 "ratio": (rc.timing.min_us / base_us
+                           if base_us > 0 else float("inf"))})
+    return res
+
+
+# ---------------------------------------------------------------------------
+# history — append-only trajectory + trend summary
+# ---------------------------------------------------------------------------
+
+def history_entry(art: BenchArtifact) -> Dict:
+    """One JSONL line: run identity plus the per-bench work digest and
+    headline timings the trend view tracks."""
+    return {"created_at": art.created_at,
+            "suite": art.suite,
+            "digest": art.digest(),
+            "env_digest": art.environment_digest(),
+            "benches": {r.name: {"status": r.status,
+                                 "median_us": r.timing.median_us,
+                                 "min_us": r.timing.min_us,
+                                 "counters_digest": r.counters_digest()}
+                        for r in art.records}}
+
+
+def append_history(path: str, art: BenchArtifact) -> Dict:
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    entry = history_entry(art)
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def load_history(path: str) -> List[Dict]:
+    entries: List[Dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                entries.append(json.loads(line))
+    return entries
+
+
+def trend_summary(entries: List[Dict], suite: Optional[str] = None) -> Dict:
+    """Per-benchmark trajectory across history entries (in file order):
+    first/last median, relative wallclock change, best min-of-k ever,
+    and how many times the work-counter digest changed — the count that
+    matters, because each change is a real algorithmic shift."""
+    if suite:
+        entries = [e for e in entries if e.get("suite") == suite]
+    benches: Dict[str, Dict] = {}
+    for e in entries:
+        for name, b in e.get("benches", {}).items():
+            if b.get("status") != "ok":
+                continue
+            t = benches.setdefault(name, {
+                "runs": 0, "first_median_us": b["median_us"],
+                "last_median_us": b["median_us"],
+                "best_min_us": b["min_us"],
+                "work_changes": 0, "_last_work": None})
+            t["runs"] += 1
+            t["last_median_us"] = b["median_us"]
+            t["best_min_us"] = min(t["best_min_us"], b["min_us"])
+            if (t["_last_work"] is not None
+                    and b["counters_digest"] != t["_last_work"]):
+                t["work_changes"] += 1
+            t["_last_work"] = b["counters_digest"]
+    for t in benches.values():
+        del t["_last_work"]
+        first = t["first_median_us"]
+        t["median_change_pct"] = (
+            100.0 * (t["last_median_us"] - first) / first if first > 0 else 0.0)
+    return {"n_entries": len(entries),
+            "benches": {k: benches[k] for k in sorted(benches)}}
+
+
+def format_trend(summary: Dict) -> str:
+    lines = [f"bench history: {summary['n_entries']} runs"]
+    if not summary["benches"]:
+        lines.append("  (no ok benchmark entries)")
+        return "\n".join(lines)
+    width = max(len(n) for n in summary["benches"])
+    for name, t in summary["benches"].items():
+        lines.append(
+            f"  {name:<{width}}  runs {t['runs']:>3}  "
+            f"median {t['first_median_us']:>10.0f}us -> "
+            f"{t['last_median_us']:>10.0f}us ({t['median_change_pct']:+6.1f}%)  "
+            f"best {t['best_min_us']:>10.0f}us  "
+            f"work-changes {t['work_changes']}")
+    return "\n".join(lines)

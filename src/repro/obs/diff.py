@@ -43,6 +43,9 @@ def load_metrics_snapshot(source) -> Dict:
     * a ``MetricsRegistry.to_dict()`` snapshot
       (``{"counters", "gauges", "histograms"}``),
     * a ``SearchReport`` JSON with a non-null ``telemetry.metrics``,
+    * a ``BenchArtifact`` JSON (``kind == "repro-bench"``) — each
+      record's work counters are flattened to
+      ``<bench_name>/<counter>`` so two suite runs diff per-benchmark,
     * a bare replay histogram section (every value a
       ``{"buckets", "counts", "sum", "count"}`` dict), wrapped as
       histograms-only.
@@ -53,6 +56,11 @@ def load_metrics_snapshot(source) -> Dict:
             d = json.load(f)
     if not isinstance(d, dict):
         raise ValueError("metrics snapshot must be a JSON object")
+    if d.get("kind") == "repro-bench":
+        counters = {f"{r['name']}/{k}": v
+                    for r in d.get("records", [])
+                    for k, v in r.get("counters", {}).items()}
+        return {"counters": counters, "gauges": {}, "histograms": {}}
     if "schema_version" in d and "telemetry" in d:
         tel = d.get("telemetry") or {}
         metrics = tel.get("metrics")

@@ -1,0 +1,195 @@
+"""BenchArtifact schema v1: lossless round-trip, golden fixture, and
+the wallclock-free canonical digest."""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.obs.bench import (BENCH_KIND, BENCH_SCHEMA_VERSION, BenchArtifact,
+                             BenchRecord, BenchTiming)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "bench_quick_v1.json")
+GOLDEN_DIGEST = "e5add6d213f71f45"
+
+
+def _record(name="bench_a", status="ok", counters=None, samples=(1000.0,),
+            phases=None, derived="x=1", error=""):
+    return BenchRecord(name=name, status=status,
+                       timing=BenchTiming.from_samples(samples),
+                       counters={"work_total": 7.0} if counters is None
+                       else counters,
+                       phases={"phase.a": 0.5} if phases is None else phases,
+                       derived=derived, error=error)
+
+
+def _artifact(records=None, env=None, created_at="2026-01-01T00:00:00Z"):
+    return BenchArtifact(
+        suite="quick", created_at=created_at,
+        environment={"platform": "test", "repro": {"CHUNK": 64}}
+        if env is None else env,
+        records=[_record()] if records is None else records)
+
+
+# ---------------------------------------------------------------------------
+# round trip
+# ---------------------------------------------------------------------------
+
+def test_round_trip_equality():
+    art = _artifact(records=[_record("a"), _record("b", counters={"k": 1.0})])
+    again = BenchArtifact.from_json(art.to_json())
+    assert again == art
+    assert again.digest() == art.digest()
+
+
+def test_save_load(tmp_path):
+    art = _artifact()
+    path = str(tmp_path / "bench.json")
+    art.save(path)
+    assert BenchArtifact.load(path) == art
+
+
+def test_timing_round_trip_preserves_samples():
+    t = BenchTiming.from_samples([3.0, 1.0, 2.0, 10.0])
+    again = BenchTiming.from_dict(t.to_dict())
+    assert again == t
+    assert again.samples_us == (3.0, 1.0, 2.0, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# golden fixture
+# ---------------------------------------------------------------------------
+
+def test_golden_fixture_loads():
+    art = BenchArtifact.load(FIXTURE)
+    assert art.schema_version == BENCH_SCHEMA_VERSION
+    assert art.suite == "quick"
+    assert art.names == ["table1_search_efficiency",
+                         "workload_goodput_rerank", "roofline_from_dryrun"]
+    err = art.record("roofline_from_dryrun")
+    assert err.status == "error" and "FileNotFoundError" in err.error
+    ok = art.record("table1_search_efficiency")
+    assert ok.timing.n == 3
+    assert ok.counters["repro_search_chunks_total"] == 2.0
+    assert ok.phases["search.chunk"] == pytest.approx(0.084)
+
+
+def test_golden_fixture_byte_stable():
+    """from_json(text).to_json() reproduces the file byte for byte —
+    the lossless-round-trip acceptance criterion."""
+    with open(FIXTURE) as f:
+        text = f.read()
+    assert BenchArtifact.from_json(text).to_json() + "\n" == text
+
+
+def test_golden_fixture_digest_pinned():
+    """The canonical digest is part of the v1 contract: it may only
+    change with a schema bump."""
+    assert BenchArtifact.load(FIXTURE).digest() == GOLDEN_DIGEST
+
+
+# ---------------------------------------------------------------------------
+# canonical digest excludes wallclock
+# ---------------------------------------------------------------------------
+
+def test_digest_ignores_wallclock_fields():
+    art = _artifact()
+    noisy = BenchArtifact(
+        suite=art.suite, created_at="2031-12-31T23:59:59Z",
+        environment=art.environment, notes="a different note",
+        records=[dataclasses.replace(
+            art.records[0],
+            timing=BenchTiming.from_samples([99999.0, 1.0]),
+            phases={"phase.a": 123.0, "phase.b": 4.0},
+            derived="totally different")])
+    assert noisy.digest() == art.digest()
+    assert noisy.to_dict() != art.to_dict()
+
+
+def test_digest_sees_counters_and_status():
+    art = _artifact()
+    bumped = BenchArtifact(
+        suite=art.suite, created_at=art.created_at,
+        environment=art.environment,
+        records=[dataclasses.replace(art.records[0],
+                                     counters={"work_total": 8.0})])
+    assert bumped.digest() != art.digest()
+    errored = BenchArtifact(
+        suite=art.suite, created_at=art.created_at,
+        environment=art.environment,
+        records=[dataclasses.replace(art.records[0], status="error",
+                                     error="boom")])
+    assert errored.digest() != art.digest()
+
+
+def test_digest_sees_environment():
+    art = _artifact()
+    other = _artifact(env={"platform": "test", "repro": {"CHUNK": 1}})
+    assert other.digest() != art.digest()
+
+
+def test_counters_digest_tracks_only_counters():
+    a = _record(counters={"k": 1.0})
+    b = dataclasses.replace(a, timing=BenchTiming.from_samples([5.0]),
+                            phases={}, derived="other")
+    assert a.counters_digest() == b.counters_digest()
+    c = dataclasses.replace(a, counters={"k": 2.0})
+    assert c.counters_digest() != a.counters_digest()
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_rejects_wrong_kind():
+    d = _artifact().to_dict()
+    d["kind"] = "repro-calibration"
+    with pytest.raises(ValueError, match="not a bench artifact"):
+        BenchArtifact.from_dict(d)
+
+
+def test_rejects_unknown_schema_version():
+    d = _artifact().to_dict()
+    d["schema_version"] = 99
+    with pytest.raises(ValueError, match="unsupported bench schema_version"):
+        BenchArtifact.from_dict(d)
+
+
+def test_rejects_duplicate_records():
+    with pytest.raises(ValueError, match="duplicate"):
+        _artifact(records=[_record("a"), _record("a")])
+
+
+def test_rejects_bad_status():
+    with pytest.raises(ValueError, match="status"):
+        _record(status="flaky")
+
+
+def test_timing_requires_samples():
+    with pytest.raises(ValueError):
+        BenchTiming.from_samples([])
+
+
+# ---------------------------------------------------------------------------
+# timing stats
+# ---------------------------------------------------------------------------
+
+def test_timing_stats():
+    t = BenchTiming.from_samples([40.0, 10.0, 30.0, 20.0])
+    assert t.n == 4
+    assert t.min_us == 10.0
+    assert t.median_us == 25.0
+    # statistics.quantiles exclusive method: q1=12.5, q3=37.5
+    assert t.iqr_us == pytest.approx(25.0)
+    single = BenchTiming.from_samples([42.0])
+    assert single.median_us == single.min_us == 42.0
+    assert single.iqr_us == 0.0
+
+
+def test_artifact_json_is_sorted_and_plain():
+    blob = json.loads(_artifact().to_json())
+    assert blob["kind"] == BENCH_KIND
+    rec = blob["records"][0]
+    assert list(rec["counters"]) == sorted(rec["counters"])
+    assert list(rec["phases"]) == sorted(rec["phases"])

@@ -1,0 +1,251 @@
+"""CLI surface of the bench sentinel: ``obs bench compare|gate|trend``
+exit codes (0 pass / 1 violation / 2 environment mismatch), ``obs
+diff`` on bench artifacts, and the ``run_suite`` harness machinery
+driven by fake benchmarks (fresh registry + tracer per repeat, error
+capture, --only selection)."""
+import dataclasses
+import json
+import os
+import sys
+
+import pytest
+
+from repro.core import cli
+from repro.obs.bench import (BenchArtifact, BenchRecord, BenchTiming,
+                             append_history)
+
+ENV = {"platform": "test-host", "repro": {"REPRO_PRICING_CHUNK": 64}}
+
+
+def _record(name, counters, min_us=1000.0, status="ok"):
+    return BenchRecord(name=name, status=status,
+                       timing=BenchTiming.from_samples([min_us]),
+                       counters=counters, phases={})
+
+
+def _save(tmp_path, filename, records, env=None):
+    art = BenchArtifact(suite="quick", created_at="2026-01-01T00:00:00Z",
+                        environment=env or ENV, records=records)
+    path = str(tmp_path / filename)
+    art.save(path)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# obs bench compare
+# ---------------------------------------------------------------------------
+
+def test_compare_identical_exit_0(tmp_path, capsys):
+    a = _save(tmp_path, "a.json", [_record("b", {"w": 1.0})])
+    b = _save(tmp_path, "b.json", [_record("b", {"w": 1.0}, min_us=999.0)])
+    assert cli.main(["obs", "bench", "compare", a, b]) == 0
+    assert "identical work" in capsys.readouterr().out
+
+
+def test_compare_drift_exit_1(tmp_path, capsys):
+    a = _save(tmp_path, "a.json", [_record("b", {"w": 1.0})])
+    b = _save(tmp_path, "b.json", [_record("b", {"w": 2.0})])
+    assert cli.main(["obs", "bench", "compare", a, b]) == 1
+    assert "NOT identical" in capsys.readouterr().out
+
+
+def test_compare_env_mismatch_exit_2(tmp_path, capsys):
+    a = _save(tmp_path, "a.json", [_record("b", {"w": 1.0})])
+    b = _save(tmp_path, "b.json", [_record("b", {"w": 1.0})],
+              env={"platform": "test-host",
+                   "repro": {"REPRO_PRICING_CHUNK": 1}})
+    assert cli.main(["obs", "bench", "compare", a, b]) == 2
+    err = capsys.readouterr().err
+    assert "environment fingerprints differ" in err
+    assert "REPRO_PRICING_CHUNK" in err
+
+
+def test_compare_json_output(tmp_path, capsys):
+    a = _save(tmp_path, "a.json", [_record("b", {"w": 1.0})])
+    assert cli.main(["obs", "bench", "compare", a, a, "--json"]) == 0
+    blob = json.loads(capsys.readouterr().out)
+    assert blob["identical"] and blob["digest_a"] == blob["digest_b"]
+
+
+def test_compare_rejects_non_bench_json(tmp_path, capsys):
+    bogus = tmp_path / "report.json"
+    bogus.write_text(json.dumps({"schema_version": 7, "telemetry": None}))
+    a = _save(tmp_path, "a.json", [_record("b", {"w": 1.0})])
+    assert cli.main(["obs", "bench", "compare", a, str(bogus)]) == 2
+    assert "not a bench artifact" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# obs bench gate
+# ---------------------------------------------------------------------------
+
+def test_gate_pass_exit_0(tmp_path, capsys):
+    base = _save(tmp_path, "base.json", [_record("b", {"w": 5.0})])
+    cur = _save(tmp_path, "cur.json", [_record("b", {"w": 5.0})])
+    assert cli.main(["obs", "bench", "gate", "--baseline", base,
+                     "--current", cur]) == 0
+    assert "PASS" in capsys.readouterr().out
+
+
+def test_gate_counter_growth_exit_1(tmp_path, capsys):
+    base = _save(tmp_path, "base.json", [_record("b", {"w": 5.0})])
+    cur = _save(tmp_path, "cur.json", [_record("b", {"w": 6.0})])
+    assert cli.main(["obs", "bench", "gate", "--baseline", base,
+                     "--current", cur, "--hard-only"]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "grew" in out
+
+
+def test_gate_soft_violation_and_hard_only_escape(tmp_path, capsys):
+    base = _save(tmp_path, "base.json",
+                 [_record("b", {"w": 1.0}, min_us=100.0)])
+    cur = _save(tmp_path, "cur.json",
+                [_record("b", {"w": 1.0}, min_us=10_000_000.0)])
+    assert cli.main(["obs", "bench", "gate", "--baseline", base,
+                     "--current", cur]) == 1
+    assert "SOFT" in capsys.readouterr().out
+    assert cli.main(["obs", "bench", "gate", "--baseline", base,
+                     "--current", cur, "--hard-only"]) == 0
+    capsys.readouterr()
+
+
+def test_gate_rel_tol_flag(tmp_path, capsys):
+    base = _save(tmp_path, "base.json",
+                 [_record("b", {}, min_us=1000.0)])
+    cur = _save(tmp_path, "cur.json",
+                [_record("b", {}, min_us=1400.0)])
+    common = ["obs", "bench", "gate", "--baseline", base, "--current", cur,
+              "--abs-tol-us", "0"]
+    assert cli.main(common + ["--rel-tol", "0.5"]) == 0
+    assert cli.main(common + ["--rel-tol", "0.2"]) == 1
+    capsys.readouterr()
+
+
+def test_gate_json_output(tmp_path, capsys):
+    base = _save(tmp_path, "base.json", [_record("b", {"w": 2.0})])
+    cur = _save(tmp_path, "cur.json", [_record("b", {"w": 1.0})])
+    assert cli.main(["obs", "bench", "gate", "--baseline", base,
+                     "--current", cur, "--json"]) == 0
+    blob = json.loads(capsys.readouterr().out)
+    assert blob["ok"] and blob["improvements"][0]["counter"] == "w"
+
+
+# ---------------------------------------------------------------------------
+# obs bench trend
+# ---------------------------------------------------------------------------
+
+def test_trend_cli(tmp_path, capsys):
+    history = str(tmp_path / "h.jsonl")
+    for w, us in ((1.0, 100.0), (1.0, 90.0), (3.0, 80.0)):
+        append_history(history, BenchArtifact(
+            suite="quick", created_at="2026-01-01T00:00:00Z",
+            environment=ENV, records=[_record("b", {"w": w}, min_us=us)]))
+    assert cli.main(["obs", "bench", "trend", "--history", history]) == 0
+    out = capsys.readouterr().out
+    assert "3 runs" in out and "work-changes 1" in out
+    assert cli.main(["obs", "bench", "trend", "--history", history,
+                     "--json"]) == 0
+    blob = json.loads(capsys.readouterr().out)
+    assert blob["benches"]["b"]["best_min_us"] == 80.0
+
+
+def test_trend_missing_history_exit_2(tmp_path, capsys):
+    assert cli.main(["obs", "bench", "trend", "--history",
+                     str(tmp_path / "nope.jsonl")]) == 2
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# obs diff understands bench artifacts
+# ---------------------------------------------------------------------------
+
+def test_obs_diff_flattens_bench_counters(tmp_path, capsys):
+    a = _save(tmp_path, "a.json", [_record("bench_x", {"w": 1.0})])
+    b = _save(tmp_path, "b.json", [_record("bench_x", {"w": 4.0})])
+    assert cli.main(["obs", "diff", a, b, "--json"]) == 1
+    blob = json.loads(capsys.readouterr().out)
+    assert blob["counters"]["changed"]["bench_x/w"]["delta"] == 3.0
+    assert cli.main(["obs", "diff", a, a]) == 0
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# run_suite harness (fake benches — no real benchmarks run)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def run_suite():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    try:
+        from benchmarks.run import run_suite as rs
+    finally:
+        sys.path.pop(0)
+    return rs
+
+
+def _fake_benches():
+    from repro.obs import get_metrics, get_tracer
+
+    def counting(quick=False):
+        get_metrics().inc("fake_work_total", 7)
+        with get_tracer().span("fake.phase"):
+            pass
+        return {"x": 2 if quick else 9}
+
+    def failing(quick=False):
+        raise RuntimeError("nope")
+
+    return [("counting", counting, lambda r: f"x={r['x']}"),
+            ("failing", failing, lambda r: "")]
+
+
+def test_run_suite_captures_counters_phases_and_errors(run_suite):
+    lines = []
+    art, failures = run_suite(quick=True, repeat=3,
+                              created_at="2026-01-01T00:00:00Z",
+                              benches=_fake_benches(), emit=lines.append)
+    assert failures == 1
+    ok = art.record("counting")
+    assert ok.status == "ok"
+    assert ok.counters == {"fake_work_total": 7.0}  # fresh registry per rep
+    assert "fake.phase" in ok.phases
+    assert ok.timing.n == 3 and ok.derived == "x=2"
+    bad = art.record("failing")
+    assert bad.status == "error" and "RuntimeError" in bad.error
+    assert art.suite == "quick"
+    assert "repro" in art.environment
+    assert lines[0] == "name,us_per_call,derived"
+    assert any(line.startswith("counting,") for line in lines)
+    assert any("ERROR:RuntimeError" in line for line in lines)
+    # registry/tracer are uninstalled after the suite
+    from repro.obs.metrics import get_metrics
+    from repro.obs.trace import NULL_TRACER, get_tracer
+    assert get_tracer() is NULL_TRACER
+    assert get_metrics() is None
+
+
+def test_run_suite_only_selection(run_suite):
+    art, failures = run_suite(quick=True, only="count",
+                              created_at="t", benches=_fake_benches(),
+                              emit=lambda s: None)
+    assert failures == 0 and art.names == ["counting"]
+
+
+def test_run_suite_round_trips(run_suite):
+    art, _ = run_suite(quick=True, created_at="t",
+                       benches=_fake_benches(), emit=lambda s: None)
+    assert BenchArtifact.from_json(art.to_json()) == art
+
+
+def test_result_dicts_carry_environment(run_suite):
+    """Satellite: every benchmark result dict is stamped with the
+    environment fingerprint via common.finalize_result."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    try:
+        from benchmarks.common import bench_environment, finalize_result
+    finally:
+        sys.path.pop(0)
+    out = finalize_result({"csv": "x.csv"})
+    assert out["csv"] == "x.csv"
+    assert out["environment"] is bench_environment()
+    assert out["environment"]["repro"]["REPRO_PRICING_CHUNK"] == 64

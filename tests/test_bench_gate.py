@@ -1,0 +1,236 @@
+"""Two-tier bench gate: hard counter gates (property: identical
+snapshots never flag), the soft wallclock comparator (property: never
+flags within tolerance, always flags beyond, tolerance monotonicity),
+and environment-fingerprint refusal."""
+import dataclasses
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.obs.bench import (BenchArtifact, BenchRecord, BenchTiming,
+                             EnvironmentMismatch, compare_artifacts,
+                             diff_environment, format_compare,
+                             gate_artifacts, history_entry, soft_exceeds,
+                             trend_summary)
+
+ENV = {"platform": "test-host", "python": "3.11.0",
+       "repro": {"REPRO_PRICING_CHUNK": 64}}
+
+
+def _art(counters_by_bench, min_us_by_bench=None, env=None, status=None):
+    """Build an artifact from ``{bench: {counter: value}}`` (+ optional
+    per-bench min-of-k wallclock and statuses)."""
+    min_us_by_bench = min_us_by_bench or {}
+    status = status or {}
+    records = [
+        BenchRecord(
+            name=name, status=status.get(name, "ok"),
+            timing=BenchTiming.from_samples(
+                [float(min_us_by_bench.get(name, 1000.0))]),
+            counters={k: float(v) for k, v in counters.items()},
+            phases={}, error="boom" if status.get(name) == "error" else "")
+        for name, counters in sorted(counters_by_bench.items())]
+    return BenchArtifact(suite="quick", created_at="2026-01-01T00:00:00Z",
+                         environment=ENV if env is None else env,
+                         records=records)
+
+
+# ---------------------------------------------------------------------------
+# hard tier — properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50)
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=8),
+       st.floats(1.0, 1e7))
+def test_hard_identical_snapshots_never_flag(values, min_us):
+    """Gating any artifact against itself (same counters, any
+    wallclock) never produces a violation of either tier."""
+    counters = {f"repro_work_{i}_total": v for i, v in enumerate(values)}
+    art = _art({"bench_a": counters}, {"bench_a": min_us})
+    res = gate_artifacts(art, art)
+    assert res.ok
+    assert res.hard_violations == []
+    assert res.soft_violations == []
+    assert res.improvements == []
+
+
+@settings(max_examples=50)
+@given(st.integers(0, 10_000), st.integers(1, 10_000))
+def test_hard_growth_always_flags(base, delta):
+    baseline = _art({"b": {"repro_work_total": base}})
+    current = _art({"b": {"repro_work_total": base + delta}})
+    res = gate_artifacts(baseline, current)
+    assert not res.ok
+    v, = res.hard_violations
+    assert v["kind"] == "grew" and v["bench"] == "b"
+    assert v["baseline"] == base and v["current"] == base + delta
+
+
+def test_hard_shrink_is_improvement_not_violation():
+    res = gate_artifacts(_art({"b": {"w": 10}}), _art({"b": {"w": 4}}))
+    assert res.ok
+    assert res.improvements == [
+        {"bench": "b", "counter": "w", "baseline": 10.0, "current": 4.0}]
+
+
+def test_hard_appeared_and_vanished_counters_flag():
+    res = gate_artifacts(_art({"b": {"w": 1, "gone": 2}}),
+                         _art({"b": {"w": 1, "new": 3}}))
+    kinds = {(v["counter"], v["kind"]) for v in res.hard_violations}
+    assert kinds == {("new", "appeared"), ("gone", "vanished")}
+
+
+def test_errored_records_are_skipped_not_gated():
+    baseline = _art({"b": {"w": 1}}, status={"b": "error"})
+    current = _art({"b": {"w": 999}})
+    res = gate_artifacts(baseline, current)
+    assert res.ok and res.errored == ["b"]
+
+
+def test_subset_run_gates_against_shared_records_only():
+    """A --only run gates against the full committed baseline: shared
+    benches are gated, the rest are reported as uncovered/new."""
+    baseline = _art({"a": {"w": 1}, "b": {"w": 2}})
+    current = _art({"b": {"w": 2}, "c": {"w": 3}})
+    res = gate_artifacts(baseline, current)
+    assert res.ok
+    assert res.uncovered == ["a"] and res.new_benches == ["c"]
+
+
+# ---------------------------------------------------------------------------
+# soft tier — properties on the pure predicate and through the gate
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=100)
+@given(st.floats(1.0, 1e6), st.floats(0.0, 1.0), st.floats(0.0, 2.0))
+def test_soft_never_flags_within_tolerance(base_us, frac, rel_tol):
+    """cur <= base*(1+rel_tol) (reached via frac of the allowance) is
+    never flagged, at any tolerance — through the full gate."""
+    cur_us = base_us * (1.0 + frac * rel_tol)
+    assert not soft_exceeds(base_us, cur_us, rel_tol, abs_tol_us=0.0)
+    res = gate_artifacts(_art({"b": {}}, {"b": base_us}),
+                         _art({"b": {}}, {"b": cur_us}),
+                         rel_tol=rel_tol, abs_tol_us=0.0)
+    assert res.soft_violations == [] and res.ok
+
+
+@settings(max_examples=100)
+@given(st.floats(1.0, 1e6), st.floats(1e-6, 1.0), st.floats(0.0, 2.0),
+       st.floats(0.0, 5000.0))
+def test_soft_always_flags_beyond_tolerance(base_us, eps, rel_tol,
+                                            abs_tol_us):
+    """Anything strictly beyond base*(1+rel_tol)+abs_tol is flagged."""
+    threshold = base_us * (1.0 + rel_tol) + abs_tol_us
+    cur_us = threshold * (1.0 + eps) + eps
+    assert soft_exceeds(base_us, cur_us, rel_tol, abs_tol_us)
+    res = gate_artifacts(_art({"b": {}}, {"b": base_us}),
+                         _art({"b": {}}, {"b": cur_us}),
+                         rel_tol=rel_tol, abs_tol_us=abs_tol_us)
+    assert len(res.soft_violations) == 1 and not res.ok
+
+
+@settings(max_examples=100)
+@given(st.floats(1.0, 1e6), st.floats(1.0, 5e6),
+       st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_soft_tolerance_boundary_monotonicity(base_us, cur_us, tol_a, tol_b):
+    """Flagging is antitone in the tolerance: flagged at the looser
+    tolerance implies flagged at the tighter one."""
+    lo, hi = sorted((tol_a, tol_b))
+    if soft_exceeds(base_us, cur_us, hi, abs_tol_us=0.0):
+        assert soft_exceeds(base_us, cur_us, lo, abs_tol_us=0.0)
+
+
+@settings(max_examples=100)
+@given(st.floats(1.0, 1e6), st.floats(1.0, 5e6), st.floats(1.0, 5e6),
+       st.floats(0.0, 1.0))
+def test_soft_monotone_in_current(base_us, cur_a, cur_b, rel_tol):
+    """Flagging is monotone in the current time: if a faster run flags,
+    every slower run flags too."""
+    lo, hi = sorted((cur_a, cur_b))
+    if soft_exceeds(base_us, lo, rel_tol):
+        assert soft_exceeds(base_us, hi, rel_tol)
+
+
+def test_hard_only_skips_soft_tier():
+    res = gate_artifacts(_art({"b": {}}, {"b": 100.0}),
+                         _art({"b": {}}, {"b": 1e9}), hard_only=True)
+    assert res.ok and res.soft_skipped == "--hard-only"
+
+
+# ---------------------------------------------------------------------------
+# environment fingerprints
+# ---------------------------------------------------------------------------
+
+def _other_env():
+    return {"platform": "test-host", "python": "3.11.0",
+            "repro": {"REPRO_PRICING_CHUNK": 1}}
+
+
+def test_diff_environment_flattens_nested_keys():
+    delta = diff_environment(ENV, _other_env())
+    assert delta == {"repro.REPRO_PRICING_CHUNK": (64, 1)}
+
+
+def test_compare_refuses_mismatched_environments():
+    a = _art({"b": {"w": 1}})
+    b = _art({"b": {"w": 1}}, env=_other_env())
+    with pytest.raises(EnvironmentMismatch,
+                       match="REPRO_PRICING_CHUNK"):
+        compare_artifacts(a, b)
+
+
+def test_gate_env_mismatch_skips_soft_but_keeps_hard():
+    """The CI injection scenario: a REPRO_* knob changes the
+    fingerprint AND inflates a work counter — the soft tier is skipped
+    with a reason, the hard tier still fails the gate."""
+    baseline = _art({"b": {"repro_search_chunks_total": 2}}, {"b": 100.0})
+    current = _art({"b": {"repro_search_chunks_total": 90}}, {"b": 1e9},
+                   env=_other_env())
+    res = gate_artifacts(baseline, current)
+    assert not res.ok
+    assert res.soft_violations == []
+    assert "REPRO_PRICING_CHUNK" in res.soft_skipped
+    assert res.hard_violations[0]["counter"] == "repro_search_chunks_total"
+
+
+# ---------------------------------------------------------------------------
+# compare + trend
+# ---------------------------------------------------------------------------
+
+def test_compare_identical_and_drifted():
+    a = _art({"b": {"w": 1}})
+    assert compare_artifacts(a, a)["identical"]
+    drift = compare_artifacts(a, _art({"b": {"w": 2}}))
+    assert not drift["identical"]
+    assert drift["records"]["b"]["counters"]["changed"] == {"w": (1.0, 2.0)}
+    assert "w  1 -> 2" in format_compare(drift)
+
+
+def test_compare_reports_record_set_drift():
+    cmp = compare_artifacts(_art({"a": {}, "b": {}}), _art({"b": {}}))
+    assert not cmp["identical"]
+    assert cmp["only_a"] == ["a"] and cmp["only_b"] == []
+
+
+def test_trend_counts_work_changes_not_wallclock():
+    arts = [_art({"b": {"w": 1}}, {"b": 100.0}),
+            _art({"b": {"w": 1}}, {"b": 900.0}),
+            _art({"b": {"w": 5}}, {"b": 50.0})]
+    summary = trend_summary([history_entry(a) for a in arts])
+    t = summary["benches"]["b"]
+    assert t["runs"] == 3
+    assert t["work_changes"] == 1
+    assert t["best_min_us"] == 50.0
+    assert t["first_median_us"] == 100.0 and t["last_median_us"] == 50.0
+
+
+def test_trend_filters_by_suite_and_skips_errors():
+    ok = history_entry(_art({"b": {"w": 1}}))
+    err = history_entry(_art({"b": {"w": 1}}, status={"b": "error"}))
+    summary = trend_summary([ok, err])
+    assert summary["benches"]["b"]["runs"] == 1
+    assert trend_summary([ok], suite="full")["benches"] == {}
